@@ -1,0 +1,51 @@
+//! Quickstart: load the AOT-compiled demo model and generate text through
+//! an asymmetric TP×PP pipeline — the minimal end-to-end path.
+//!
+//! ```bash
+//! make artifacts            # once: python lowers the model to HLO
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use hexgen::coordinator::{plan_from_strategy, PipelineExecutor};
+use hexgen::runtime::tokenizer;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // An asymmetric plan in the paper's Appendix-F notation: two pipeline
+    // stages, the first serving 4 layers at TP=2, the second 2 layers at
+    // TP=1 — exactly the kind of layout symmetric systems cannot express.
+    let plan = plan_from_strategy(&[2, 1], &[4, 2])?;
+    let exec = PipelineExecutor::new(dir, plan)?;
+    println!(
+        "loaded demo model ({} layers, strategy {})",
+        exec.runtime().manifest.model.layers,
+        exec.strategy_string()
+    );
+
+    let prompt = "the quick brown fox jumps over the lazy dog";
+    let tokens = tokenizer::encode(prompt, exec.runtime().manifest.model.prompt_len);
+    let result = exec.generate(&[tokens], 12)?;
+
+    println!("prompt : {prompt}");
+    println!("tokens : {:?}", result.tokens[0]);
+    println!("text   : {:?}", tokenizer::decode(&result.tokens[0]));
+    println!(
+        "prefill {:.1}ms | decode {:.1}ms for {} tokens ({:.1}ms/token)",
+        result.prefill_seconds * 1e3,
+        result.decode_seconds * 1e3,
+        result.decode_steps,
+        result.decode_seconds * 1e3 / result.decode_steps.max(1) as f64,
+    );
+    println!(
+        "collectives: {} all-reduces, {} stage hand-offs",
+        result.comm.allreduce_ops, result.comm.pp_sends
+    );
+    Ok(())
+}

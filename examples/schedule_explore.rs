@@ -1,0 +1,60 @@
+//! Run the two-phase scheduler (Algorithm-1 DP inside a genetic search)
+//! on the paper's full-price heterogeneous cluster and print the
+//! Table-4-style deployment, then compare against the homogeneous pool.
+//!
+//! ```bash
+//! cargo run --release --example schedule_explore -- [--iterations 40]
+//! ```
+
+use anyhow::Result;
+
+use hexgen::cluster;
+use hexgen::model::ModelSpec;
+use hexgen::scheduler::{GaConfig, GeneticScheduler, PipelinePlanner};
+use hexgen::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let m = ModelSpec::llama2_70b();
+    let ga = GaConfig {
+        population: args.get_usize("population", 12),
+        iterations: args.get_usize("iterations", 30),
+        patience: args.get_usize("patience", 12),
+        seed: args.get_u64("seed", 42),
+        fitness_requests: args.get_usize("fitness-requests", 120),
+        ..GaConfig::default()
+    };
+
+    for preset in ["full-price", "half-price"] {
+        let c = cluster::preset(preset).unwrap();
+        println!(
+            "== {} — {} GPUs, {} machines, {} regions, ${:.2}/hour ==",
+            c.name,
+            c.devices.len(),
+            c.machines.len(),
+            c.regions.len(),
+            c.budget_per_hour
+        );
+        let res = GeneticScheduler::new(&c, &m, ga.clone()).run();
+        println!(
+            "search: {} iterations in {:.1}s; est. SLO attainment {:.3} (init {:.3})",
+            res.iterations_run, res.wall_time, res.fitness, res.init_fitness
+        );
+        print!("{}", res.deployment.describe(&c));
+        println!();
+    }
+
+    // The same budget's homogeneous alternative, symmetric-only.
+    let c = cluster::homogeneous_a100();
+    println!(
+        "== {} — {} GPUs, ${:.2}/hour (symmetric baseline) ==",
+        c.name,
+        c.devices.len(),
+        c.budget_per_hour
+    );
+    let mut sym = ga;
+    sym.planner = PipelinePlanner::Symmetric;
+    let res = GeneticScheduler::new(&c, &m, sym).run();
+    print!("{}", res.deployment.describe(&c));
+    Ok(())
+}

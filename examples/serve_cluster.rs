@@ -1,0 +1,126 @@
+//! End-to-end serving driver (the DESIGN.md §5 validation run): start the
+//! threaded HexGen service with two asymmetric replicas of the real demo
+//! model, replay a Poisson request trace through the router/batcher, and
+//! report latency percentiles, throughput and SLO attainment.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example serve_cluster -- [--rate 4] [--requests 60]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use hexgen::coordinator::{
+    collect_all, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+};
+use hexgen::util::cli::Args;
+use hexgen::util::rng::Xoshiro256pp;
+use hexgen::util::stats::{fraction_within, Summary};
+
+const PROMPTS: [&str; 8] = [
+    "the quick brown fox jumps over the lazy dog",
+    "in a hole in the ground there lived a hobbit",
+    "it was the best of times, it was the worst of times",
+    "call me ishmael. some years ago - never mind how long",
+    "happy families are all alike; every unhappy family",
+    "it is a truth universally acknowledged, that a single",
+    "the sky above the port was the color of television",
+    "we were somewhere around barstow on the edge of the desert",
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rate = args.get_f64("rate", 4.0);
+    let n_requests = args.get_usize("requests", 60);
+    let max_new = args.get_usize("max-new", 8);
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // Two model replicas with *different asymmetric plans*, as HexGen's
+    // scheduler would deploy on unequal hardware.
+    let cfg = ServiceConfig {
+        artifacts_dir: dir,
+        replicas: vec![
+            plan_from_strategy(&[2, 1], &[4, 2])?, // TP2→TP1, 4+2 layers
+            plan_from_strategy(&[1, 1], &[3, 3])?, // TP1 pipeline, 3+3
+        ],
+        batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(15) },
+        route: RoutePolicy::LeastLoaded,
+        max_new_tokens: max_new,
+    };
+    println!("starting HexGen service: 2 replicas ([2,1] 4/2 and [1,1] 3/3)...");
+    let t_start = Instant::now();
+    let service = HexGenService::start(cfg)?;
+    println!("service up in {:.1}s (compile + warm-up)\n", t_start.elapsed().as_secs_f64());
+
+    // Poisson arrivals at `rate` req/s.
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    println!("replaying {n_requests} requests at {rate} req/s (Poisson)...");
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let gap = rng.exponential(rate);
+        std::thread::sleep(Duration::from_secs_f64(gap));
+        let prompt = PROMPTS[i % PROMPTS.len()];
+        rxs.push(service.submit(prompt, Some(max_new)));
+    }
+    let results = collect_all(rxs, Duration::from_secs(600));
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies = Vec::new();
+    let mut per_replica = vec![0usize; service.replicas()];
+    let mut batch_sizes = Vec::new();
+    let mut failures = 0;
+    let mut tokens_out = 0usize;
+    for r in &results {
+        match r {
+            Ok(c) => {
+                latencies.push(c.latency);
+                per_replica[c.replica] += 1;
+                batch_sizes.push(c.batch_size as f64);
+                tokens_out += c.tokens.len();
+            }
+            Err(e) => {
+                eprintln!("request failed: {e}");
+                failures += 1;
+            }
+        }
+    }
+    let s = Summary::from_samples(&latencies).expect("no successful requests");
+    println!("\n== results ==");
+    println!("requests     : {} ok, {failures} failed", latencies.len());
+    println!("wall time    : {wall:.1}s");
+    println!(
+        "throughput   : {:.2} req/s, {:.1} tok/s",
+        latencies.len() as f64 / wall,
+        tokens_out as f64 / wall
+    );
+    println!(
+        "latency      : p50 {:.0}ms  p90 {:.0}ms  p95 {:.0}ms  p99 {:.0}ms  max {:.0}ms",
+        s.p50 * 1e3, s.p90 * 1e3, s.p95 * 1e3, s.p99 * 1e3, s.max * 1e3
+    );
+    let mean_batch = batch_sizes.iter().sum::<f64>() / batch_sizes.len() as f64;
+    println!("mean batch   : {mean_batch:.2}");
+    println!("per replica  : {per_replica:?}");
+    for slo in [0.5, 1.0, 2.0, 4.0] {
+        println!(
+            "SLO {slo:>4.1}s    : {:.1}% attainment",
+            fraction_within(&latencies, slo) * 100.0
+        );
+    }
+    let comm = service.comm_stats();
+    println!(
+        "collectives  : {} all-reduces ({}), {} hand-offs ({})",
+        comm.allreduce_ops,
+        hexgen::util::fmt_bytes(comm.allreduce_bytes),
+        comm.pp_sends,
+        hexgen::util::fmt_bytes(comm.pp_bytes)
+    );
+    service.shutdown();
+    Ok(())
+}

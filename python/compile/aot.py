@@ -1,0 +1,301 @@
+"""AOT lowering: JAX stage functions → HLO text + weights + manifest.
+
+This is the only place Python touches the model. It runs once
+(``make artifacts``) and emits, under ``artifacts/``:
+
+* ``<name>.hlo.txt`` — one HLO-text module per (role × phase × TP degree ×
+  batch bucket) stage variant, plus fused whole-model variants. HLO
+  **text** is the interchange format: the ``xla`` crate's xla_extension
+  0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit instruction ids), but
+  its text parser reassigns ids cleanly (see /opt/xla-example/README.md).
+* ``weights.bin`` — seeded model weights plus every TP shard slice, in a
+  simple named-tensor format (parsed by ``rust/src/runtime/weights.rs``).
+* ``manifest.json`` — shapes and parameter order of every artifact.
+
+Weights are *runtime parameters* of the HLO modules (not baked
+constants), so each shape-class compiles once and all layers/shards reuse
+the executable.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .model import CFG
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function to HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_entry(name, s):
+    return {
+        "name": name,
+        "shape": list(s.shape),
+        "dtype": str(s.dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Artifact definitions
+# --------------------------------------------------------------------------
+
+def artifact_defs(cfg=CFG):
+    """Yield (name, fn, [(param_name, ShapeDtypeStruct)], [output names])."""
+    h, v, f = cfg.hidden, cfg.vocab, cfg.ffn
+    s_in, s_max, dh = cfg.prompt_len, cfg.max_seq, cfg.head_dim
+    i32 = jnp.int32
+
+    for b in cfg.batch_buckets:
+        yield (
+            f"embed_prefill_b{b}",
+            M.embed,
+            [("tokens", spec((b, s_in), i32)), ("embed", spec((v, h)))],
+            ["x"],
+        )
+        yield (
+            f"embed_decode_b{b}",
+            M.embed,
+            [("tokens", spec((b, 1), i32)), ("embed", spec((v, h)))],
+            ["x"],
+        )
+        yield (
+            f"lm_head_prefill_b{b}",
+            M.lm_head_last,
+            [("x", spec((b, s_in, h))), ("final_ln", spec((h,))),
+             ("lm_head", spec((h, v)))],
+            ["logits"],
+        )
+        yield (
+            f"lm_head_decode_b{b}",
+            M.lm_head_last,
+            [("x", spec((b, 1, h))), ("final_ln", spec((h,))),
+             ("lm_head", spec((h, v)))],
+            ["logits"],
+        )
+        for tp in cfg.tp_degrees:
+            hs, fs, nhs = h // tp, f // tp, cfg.heads // tp
+
+            def attn_pre(x, ln, wq, wk, wv, wo, _tp=tp):
+                return M.attn_prefill_partial(
+                    x, ln, wq, wk, wv, wo, cfg=cfg, tp=_tp)
+
+            yield (
+                f"attn_prefill_tp{tp}_b{b}",
+                attn_pre,
+                [("x", spec((b, s_in, h))), ("ln1", spec((h,))),
+                 ("wq", spec((h, hs))), ("wk", spec((h, hs))),
+                 ("wv", spec((h, hs))), ("wo", spec((hs, h)))],
+                ["partial", "k_cache", "v_cache"],
+            )
+
+            def attn_dec(x, kc, vc, pos, ln, wq, wk, wv, wo, _tp=tp):
+                return M.attn_decode_partial(
+                    x, kc, vc, pos, ln, wq, wk, wv, wo, cfg=cfg, tp=_tp)
+
+            yield (
+                f"attn_decode_tp{tp}_b{b}",
+                attn_dec,
+                [("x", spec((b, 1, h))),
+                 ("k_cache", spec((b, nhs, s_max, dh))),
+                 ("v_cache", spec((b, nhs, s_max, dh))),
+                 ("pos", spec((), i32)),
+                 ("ln1", spec((h,))), ("wq", spec((h, hs))),
+                 ("wk", spec((h, hs))), ("wv", spec((h, hs))),
+                 ("wo", spec((hs, h)))],
+                ["partial", "k_cache", "v_cache"],
+            )
+            yield (
+                f"mlp_prefill_tp{tp}_b{b}",
+                M.mlp_partial,
+                [("x", spec((b, s_in, h))), ("ln2", spec((h,))),
+                 ("w1", spec((h, fs))), ("w2", spec((fs, h)))],
+                ["partial"],
+            )
+            yield (
+                f"mlp_decode_tp{tp}_b{b}",
+                M.mlp_partial,
+                [("x", spec((b, 1, h))), ("ln2", spec((h,))),
+                 ("w1", spec((h, fs))), ("w2", spec((fs, h)))],
+                ["partial"],
+            )
+
+        # Fused whole-model (TP=1) variants: the quickstart path and the
+        # composition oracle for integration tests.
+        wnames = weight_order(cfg)
+        wspecs = [(n, spec(weight_shape(n, cfg))) for n in wnames]
+
+        def full_pre(tokens, *ws):
+            params = dict(zip(wnames, ws))
+            return M.forward_prefill_full(tokens, params, cfg=cfg)
+
+        yield (
+            f"full_prefill_b{b}",
+            full_pre,
+            [("tokens", spec((b, s_in), i32))] + wspecs,
+            ["logits", "k_caches", "v_caches"],
+        )
+
+        def full_dec(token, kc, vc, pos, *ws):
+            params = dict(zip(wnames, ws))
+            return M.forward_decode_full(token, kc, vc, pos, params, cfg=cfg)
+
+        yield (
+            f"full_decode_b{b}",
+            full_dec,
+            [("token", spec((b, 1), i32)),
+             ("k_caches", spec((cfg.layers, b, cfg.heads, s_max, dh))),
+             ("v_caches", spec((cfg.layers, b, cfg.heads, s_max, dh))),
+             ("pos", spec((), i32))] + wspecs,
+            ["logits", "k_caches", "v_caches"],
+        )
+
+
+def weight_order(cfg=CFG):
+    """Canonical unsharded weight name order (manifest + weights.bin)."""
+    names = ["embed"]
+    for i in range(cfg.layers):
+        names += [f"layers.{i}.{w}"
+                  for w in ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")]
+    names += ["final_ln", "lm_head"]
+    return names
+
+
+def weight_shape(name, cfg=CFG):
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    if name == "embed":
+        return (v, h)
+    if name == "final_ln":
+        return (h,)
+    if name == "lm_head":
+        return (h, v)
+    leaf = name.split(".")[-1]
+    return {
+        "ln1": (h,), "ln2": (h,),
+        "wq": (h, h), "wk": (h, h), "wv": (h, h), "wo": (h, h),
+        "w1": (h, f), "w2": (f, h),
+    }[leaf]
+
+
+# --------------------------------------------------------------------------
+# weights.bin
+# --------------------------------------------------------------------------
+
+MAGIC = b"HXGW"
+VERSION = 1
+
+
+def write_weights(path: str, params: dict, cfg=CFG):
+    """Serialize unsharded weights + all TP shard slices.
+
+    Format (little endian): magic ``HXGW``, u32 version, u32 count, then
+    per tensor: u16 name_len, name utf-8, u8 ndim, u32 dims…, f32 data.
+    """
+    tensors = {}
+    for name in weight_order(cfg):
+        tensors[name] = np.asarray(params[name], np.float32)
+    for tp in cfg.tp_degrees:
+        if tp == 1:
+            continue
+        for i in range(cfg.layers):
+            for r in range(tp):
+                (ln1, wq, wk, wv, wo), (ln2, w1, w2) = M.shard_layer(
+                    params, i, tp, r, cfg)
+                base = f"layers.{i}"
+                tensors[f"{base}.wq.tp{tp}.r{r}"] = np.asarray(wq, np.float32)
+                tensors[f"{base}.wk.tp{tp}.r{r}"] = np.asarray(wk, np.float32)
+                tensors[f"{base}.wv.tp{tp}.r{r}"] = np.asarray(wv, np.float32)
+                tensors[f"{base}.wo.tp{tp}.r{r}"] = np.asarray(wo, np.float32)
+                tensors[f"{base}.w1.tp{tp}.r{r}"] = np.asarray(w1, np.float32)
+                tensors[f"{base}.w2.tp{tp}.r{r}"] = np.asarray(w2, np.float32)
+
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            nb = name.encode("utf-8")
+            fh.write(struct.pack("<H", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                fh.write(struct.pack("<I", d))
+            fh.write(arr.astype("<f4").tobytes())
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = CFG
+    manifest = {
+        "model": {
+            "name": "demo-6l-128h",
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "vocab": cfg.vocab,
+            "prompt_len": cfg.prompt_len,
+            "max_seq": cfg.max_seq,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+        },
+        "tp_degrees": list(cfg.tp_degrees),
+        "batch_buckets": list(cfg.batch_buckets),
+        "weight_order": weight_order(cfg),
+        "seed": args.seed,
+        "artifacts": {},
+    }
+
+    for name, fn, params, outputs in artifact_defs(cfg):
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "params": [shape_entry(n, s) for n, s in params],
+            "outputs": outputs,
+        }
+        if args.only and args.only not in name:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        specs = [s for _, s in params]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"  lowered {name}: {len(text)} chars")
+
+    weights = M.init_params(args.seed, cfg)
+    write_weights(os.path.join(args.out_dir, "weights.bin"), weights, cfg)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifact defs, weights.bin, "
+          f"manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Flash-attention-style Pallas kernels (Layer 1).
+
+The paper builds its runtime on FlashAttention; the insight — never
+materialize the ``S×S`` score matrix in slow memory — is re-expressed here
+for the TPU model rather than ported CUDA-style:
+
+* the grid tiles queries into blocks (``block_q``), one grid step per
+  ``(batch·head, q-block)``;
+* K/V are streamed block-by-block (``block_k``) from the stage input —
+  on a real TPU the BlockSpecs below place each tile in VMEM and the two
+  matmuls (``q·kᵀ``, ``p·v``) on the MXU;
+* the online-softmax state (running max ``m``, normalizer ``l``, output
+  accumulator) lives in registers/VMEM scratch across the K loop.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls, so the kernels lower to plain HLO through the Pallas
+interpreter and are validated numerically against ``ref.py``.
+
+VMEM budget per grid step (see DESIGN.md §7): ``(block_q + 2·block_k)·dh``
+floats plus the ``block_q×block_k`` score tile — with the default 16/16
+blocks and ``dh=32`` under 8 KiB, far below the ~16 MiB VMEM of a TPU
+core, leaving room to raise blocks to MXU-optimal 128×128 on real
+hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Finite stand-in for -inf: keeps exp/max NaN-free for fully-masked rows.
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k,
+                    s_k, causal):
+    """One (batch·head, q-block) grid step of causal flash attention."""
+    qb = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)  # [BQ, dh]
+    q_pos = qb * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    num_kb = s_k // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale  # [BQ, BK]
+        if causal:
+            k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows → zeros, not NaN
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=16, block_k=16,
+                    interpret=True):
+    """Tiled online-softmax attention.
+
+    Args:
+        q, k, v: ``[B, nh, S, dh]`` (``S`` divisible by the block sizes).
+        causal: lower-triangular masking (requires ``S_q == S_k``).
+
+    Returns:
+        ``[B, nh, S, dh]``, same dtype as ``q``.
+    """
+    b, nh, s_q, dh = q.shape
+    s_k = k.shape[2]
+    assert k.shape == (b, nh, s_k, dh) and v.shape == (b, nh, s_k, dh)
+    assert s_q % block_q == 0, f"S_q={s_q} not divisible by block_q={block_q}"
+    assert s_k % block_k == 0, f"S_k={s_k} not divisible by block_k={block_k}"
+    if causal:
+        assert s_q == s_k, "causal mask assumes aligned q/k positions"
+
+    bh = b * nh
+    qf = q.reshape(bh, s_q, dh)
+    kf = k.reshape(bh, s_k, dh)
+    vf = v.reshape(bh, s_k, dh)
+
+    kernel = functools.partial(
+        _prefill_kernel,
+        scale=1.0 / (dh ** 0.5),
+        block_q=block_q,
+        block_k=block_k,
+        s_k=s_k,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, s_q // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s_k, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s_k, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_q, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, nh, s_q, dh)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, scale, block_k,
+                   s_max):
+    """One (batch·head) grid step of single-token cache attention."""
+    q = q_ref[0].astype(jnp.float32)  # [1, dh]
+    length = len_ref[0]
+
+    num_kb = s_max // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale  # [1, BK]
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where((k_pos < length)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((1,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc0 = jnp.zeros((1, q.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, length, *, block_k=16, interpret=True):
+    """Decode-step attention against a partially-filled KV cache.
+
+    Args:
+        q: ``[B, nh, 1, dh]``.
+        k_cache, v_cache: ``[B, nh, S_max, dh]``, valid up to ``length``.
+        length: scalar int32 (traced OK) — number of valid positions.
+
+    Returns:
+        ``[B, nh, 1, dh]``.
+    """
+    b, nh, s_max, dh = k_cache.shape
+    assert q.shape == (b, nh, 1, dh)
+    assert s_max % block_k == 0
+
+    bh = b * nh
+    qf = q.reshape(bh, 1, dh)
+    kf = k_cache.reshape(bh, s_max, dh)
+    vf = v_cache.reshape(bh, s_max, dh)
+    len_arr = jnp.asarray(length, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=1.0 / (dh ** 0.5),
+        block_k=block_k,
+        s_max=s_max,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, 1, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s_max, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s_max, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, dh), q.dtype),
+        interpret=interpret,
+    )(len_arr, qf, kf, vf)
+    return out.reshape(b, nh, 1, dh)

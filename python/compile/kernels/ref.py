@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contracts: every Pallas kernel in this package
+must match its reference here to float32 tolerance across the shape/dtype
+sweeps in ``python/tests/``.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Naive softmax attention.
+
+    Args:
+        q, k, v: ``[B, nh, S, dh]``.
+        causal: apply a lower-triangular mask.
+
+    Returns:
+        ``[B, nh, S, dh]`` attention output.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    if causal:
+        s_q, s_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((s_q, s_k), dtype=bool), k=s_k - s_q)
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """Single-token attention against a (partially filled) KV cache.
+
+    Args:
+        q: ``[B, nh, 1, dh]`` query of the current token.
+        k_cache, v_cache: ``[B, nh, S_max, dh]``; positions ``>= length``
+            are garbage and must be masked out.
+        length: scalar int — number of valid cache positions (the current
+            token's K/V must already be written at ``length - 1``).
+
+    Returns:
+        ``[B, nh, 1, dh]``.
+    """
+    dh = q.shape[-1]
+    s_max = k_cache.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype)
+    )
+    mask = (jnp.arange(s_max) < length)[None, None, None, :]
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v_cache)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * scale / jnp.sqrt(var + eps)

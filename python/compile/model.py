@@ -1,0 +1,249 @@
+"""Layer 2: the demo transformer as TP-shardable stage functions.
+
+The model follows the paper's §2 formulation (MHA + ReLU MLP with 4H
+inner width, pre-norm residuals) at a small scale the CPU PJRT client can
+serve. Every function here is *stage-granular* so the Rust coordinator
+can compose arbitrary asymmetric TP×PP plans:
+
+* TP sharding is Megatron-style: ``wq/wk/wv`` column-sharded by head
+  groups, ``wo`` row-sharded; ``w1`` column-, ``w2`` row-sharded. Each
+  shard computes a **partial** projection output (no residual); the Rust
+  side all-reduces partials and adds the residual — two all-reduces per
+  layer, exactly the communication the paper's Eq. 5 models.
+* RMSNorm is computed redundantly per shard (input is replicated).
+* KV caches are per-shard (head-group slice) and owned by Rust between
+  steps; decode functions return functionally-updated caches.
+
+These functions must match ``DemoConfig`` ↔ ``ModelSpec::demo()`` on the
+Rust side.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention, flash_decode
+from .kernels.ref import rmsnorm_ref
+
+
+@dataclass(frozen=True)
+class DemoConfig:
+    """Architecture of the served demo model (mirror of ModelSpec::demo)."""
+
+    layers: int = 6
+    hidden: int = 128
+    heads: int = 4
+    vocab: int = 256
+    # Serving shape contract (fixed, padded):
+    prompt_len: int = 32
+    max_seq: int = 64  # prompt + up to 32 generated tokens
+    # TP degrees artifacts are emitted for:
+    tp_degrees: tuple = (1, 2, 4)
+    # Batch-size buckets artifacts are emitted for:
+    batch_buckets: tuple = (1, 4)
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def ffn(self) -> int:
+        return 4 * self.hidden
+
+
+CFG = DemoConfig()
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(seed: int, cfg: DemoConfig = CFG) -> dict:
+    """Seeded dense weights, scaled for stable activations at init."""
+    key = jax.random.PRNGKey(seed)
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    p = {}
+
+    def normal(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+    keys = iter(jax.random.split(key, 4 + cfg.layers * 6))
+    p["embed"] = normal(next(keys), (v, h), 0.02)
+    for i in range(cfg.layers):
+        p[f"layers.{i}.ln1"] = jnp.ones((h,), jnp.float32)
+        p[f"layers.{i}.wq"] = normal(next(keys), (h, h), h ** -0.5)
+        p[f"layers.{i}.wk"] = normal(next(keys), (h, h), h ** -0.5)
+        p[f"layers.{i}.wv"] = normal(next(keys), (h, h), h ** -0.5)
+        p[f"layers.{i}.wo"] = normal(next(keys), (h, h), h ** -0.5)
+        p[f"layers.{i}.ln2"] = jnp.ones((h,), jnp.float32)
+        p[f"layers.{i}.w1"] = normal(next(keys), (h, f), h ** -0.5)
+        p[f"layers.{i}.w2"] = normal(next(keys), (f, h), f ** -0.5)
+    p["final_ln"] = jnp.ones((h,), jnp.float32)
+    p["lm_head"] = normal(next(keys), (h, v), h ** -0.5)
+    return p
+
+
+def shard_layer(p: dict, layer: int, tp: int, rank: int, cfg: DemoConfig = CFG):
+    """Megatron slices of one layer's weights for shard ``rank`` of ``tp``.
+
+    Returns ``(attn_weights, mlp_weights)`` tuples as consumed by
+    :func:`attn_prefill_partial` / :func:`mlp_partial`.
+    """
+    assert cfg.heads % tp == 0, "tp must divide heads"
+    h = cfg.hidden
+    hs = h // tp  # sharded projection width (head-group columns)
+    fs = cfg.ffn // tp
+    pre = f"layers.{layer}."
+    sl = slice(rank * hs, (rank + 1) * hs)
+    fsl = slice(rank * fs, (rank + 1) * fs)
+    attn = (
+        p[pre + "ln1"],
+        p[pre + "wq"][:, sl],
+        p[pre + "wk"][:, sl],
+        p[pre + "wv"][:, sl],
+        p[pre + "wo"][sl, :],
+    )
+    mlp = (p[pre + "ln2"], p[pre + "w1"][:, fsl], p[pre + "w2"][fsl, :])
+    return attn, mlp
+
+
+# --------------------------------------------------------------------------
+# Stage functions (AOT-lowered individually; weights are runtime params)
+# --------------------------------------------------------------------------
+
+def embed(tokens, emb):
+    """Token embedding lookup. tokens ``[B, S]`` int32 → ``[B, S, H]``."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def _split_heads(x, nh_shard, dh):
+    """[B, S, hs] → [B, nh_shard, S, dh]."""
+    b, s, _ = x.shape
+    return x.reshape(b, s, nh_shard, dh).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    """[B, nh_shard, S, dh] → [B, S, hs]."""
+    b, nh, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+
+
+def attn_prefill_partial(x, ln, wq, wk, wv, wo, *, cfg: DemoConfig = CFG,
+                         tp: int = 1, interpret: bool = True):
+    """Prefill attention, one TP shard.
+
+    Args:
+        x: ``[B, S, H]`` replicated stage input.
+        ln: ``[H]`` RMSNorm scale; ``wq/wk/wv``: ``[H, H/tp]``;
+        ``wo``: ``[H/tp, H]``.
+
+    Returns:
+        ``(partial_out [B,S,H], k_cache [B,nh/tp,S_max,dh],
+        v_cache [B,nh/tp,S_max,dh])`` — caches zero-padded to ``max_seq``,
+        filled in ``[0, S)``.
+    """
+    b, s, h = x.shape
+    nh_shard = (cfg.heads // tp)
+    dh = cfg.head_dim
+    xn = rmsnorm_ref(x, ln)
+    q = _split_heads(xn @ wq, nh_shard, dh)
+    k = _split_heads(xn @ wk, nh_shard, dh)
+    v = _split_heads(xn @ wv, nh_shard, dh)
+    attn = flash_attention(q, k, v, causal=True, interpret=interpret)
+    partial = _merge_heads(attn) @ wo  # [B, S, H] partial sum
+    k_cache = jnp.zeros((b, nh_shard, cfg.max_seq, dh), x.dtype)
+    v_cache = jnp.zeros((b, nh_shard, cfg.max_seq, dh), x.dtype)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, 0, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, 0, 0, 0))
+    return partial, k_cache, v_cache
+
+
+def attn_decode_partial(x, k_cache, v_cache, pos, ln, wq, wk, wv, wo, *,
+                        cfg: DemoConfig = CFG, tp: int = 1,
+                        interpret: bool = True):
+    """Decode-step attention, one TP shard.
+
+    Args:
+        x: ``[B, 1, H]`` current-token hidden state.
+        k_cache/v_cache: ``[B, nh/tp, S_max, dh]`` shard caches.
+        pos: scalar int32 — write position of the current token
+            (= number of tokens already cached).
+
+    Returns:
+        ``(partial_out [B,1,H], k_cache', v_cache')``.
+    """
+    nh_shard = cfg.heads // tp
+    dh = cfg.head_dim
+    xn = rmsnorm_ref(x, ln)
+    q = _split_heads(xn @ wq, nh_shard, dh)      # [B, nh, 1, dh]
+    k_new = _split_heads(xn @ wk, nh_shard, dh)
+    v_new = _split_heads(xn @ wv, nh_shard, dh)
+    pos = jnp.asarray(pos, jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, 0, pos, 0))
+    attn = flash_decode(q, k_cache, v_cache, pos + 1, interpret=interpret)
+    partial = _merge_heads(attn) @ wo
+    return partial, k_cache, v_cache
+
+
+def mlp_partial(x, ln, w1, w2):
+    """ReLU MLP (paper §2), one TP shard: partial of the down-projection."""
+    xn = rmsnorm_ref(x, ln)
+    return jax.nn.relu(xn @ w1) @ w2
+
+
+def lm_head_last(x, ln, w):
+    """Logits of the last position: ``[B, S, H] → [B, V]``."""
+    xl = rmsnorm_ref(x[:, -1, :], ln)
+    return xl @ w
+
+
+# --------------------------------------------------------------------------
+# Full-model reference (tests + fused single-executable artifacts)
+# --------------------------------------------------------------------------
+
+def forward_prefill_full(tokens, params, *, cfg: DemoConfig = CFG,
+                         interpret: bool = True):
+    """Whole-model prefill, TP=1 (the composition oracle).
+
+    Returns ``(logits [B,V], k_caches, v_caches)`` with per-layer caches
+    stacked on axis 0: ``[L, B, nh, S_max, dh]``.
+    """
+    x = embed(tokens, params["embed"])
+    kcs, vcs = [], []
+    for i in range(cfg.layers):
+        (ln1, wq, wk, wv, wo), (ln2, w1, w2) = shard_layer(params, i, 1, 0, cfg)
+        part, kc, vc = attn_prefill_partial(
+            x, ln1, wq, wk, wv, wo, cfg=cfg, tp=1, interpret=interpret)
+        x = x + part
+        x = x + mlp_partial(x, ln2, w1, w2)
+        kcs.append(kc)
+        vcs.append(vc)
+    logits = lm_head_last(x, params["final_ln"], params["lm_head"])
+    return logits, jnp.stack(kcs), jnp.stack(vcs)
+
+
+def forward_decode_full(token, k_caches, v_caches, pos, params, *,
+                        cfg: DemoConfig = CFG, interpret: bool = True):
+    """Whole-model decode step, TP=1.
+
+    Args:
+        token: ``[B, 1]`` int32; ``k_caches/v_caches``:
+        ``[L, B, nh, S_max, dh]``; pos: scalar int32.
+
+    Returns ``(logits [B,V], k_caches', v_caches')``.
+    """
+    x = embed(token, params["embed"])
+    new_k, new_v = [], []
+    for i in range(cfg.layers):
+        (ln1, wq, wk, wv, wo), (ln2, w1, w2) = shard_layer(params, i, 1, 0, cfg)
+        part, kc, vc = attn_decode_partial(
+            x, k_caches[i], v_caches[i], pos, ln1, wq, wk, wv, wo,
+            cfg=cfg, tp=1, interpret=interpret)
+        x = x + part
+        x = x + mlp_partial(x, ln2, w1, w2)
+        new_k.append(kc)
+        new_v.append(vc)
+    logits = lm_head_last(x, params["final_ln"], params["lm_head"])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

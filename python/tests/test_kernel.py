@@ -1,0 +1,161 @@
+"""Pallas kernel correctness: flash_attention / flash_decode vs ref.py.
+
+Hypothesis sweeps shapes and dtypes; fixed cases pin the serving shapes
+the AOT artifacts use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, flash_decode
+from compile.kernels.ref import attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype) * scale
+
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+class TestPrefillFixed:
+    def test_serving_shape(self):
+        # the exact prefill shape the artifacts use
+        q = rand(0, (4, 4, 32, 32))
+        k = rand(1, (4, 4, 32, 32))
+        v = rand(2, (4, 4, 32, 32))
+        out = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, attention_ref(q, k, v, True), **TOL)
+
+    def test_non_causal(self):
+        q = rand(3, (2, 2, 32, 16))
+        k = rand(4, (2, 2, 64, 16))
+        v = rand(5, (2, 2, 64, 16))
+        out = flash_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(out, attention_ref(q, k, v, False), **TOL)
+
+    def test_single_head_single_batch(self):
+        q = rand(6, (1, 1, 16, 8))
+        k = rand(7, (1, 1, 16, 8))
+        v = rand(8, (1, 1, 16, 8))
+        out = flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, attention_ref(q, k, v, True), **TOL)
+
+    def test_block_sizes_equivalent(self):
+        q = rand(9, (2, 2, 64, 32))
+        k = rand(10, (2, 2, 64, 32))
+        v = rand(11, (2, 2, 64, 32))
+        ref = attention_ref(q, k, v, True)
+        for bq, bk in [(16, 16), (32, 16), (16, 32), (64, 64), (8, 8)]:
+            out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(out, ref, **TOL)
+
+    def test_large_magnitude_stability(self):
+        # online softmax must survive large score magnitudes
+        q = rand(12, (1, 2, 32, 32), scale=30.0)
+        k = rand(13, (1, 2, 32, 32), scale=30.0)
+        v = rand(14, (1, 2, 32, 32))
+        out = flash_attention(q, k, v, causal=True)
+        ref = attention_ref(q, k, v, True)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_under_jit(self):
+        q = rand(15, (2, 4, 32, 32))
+        k = rand(16, (2, 4, 32, 32))
+        v = rand(17, (2, 4, 32, 32))
+        out = jax.jit(lambda a, b, c: flash_attention(a, b, c, causal=True))(q, k, v)
+        np.testing.assert_allclose(out, attention_ref(q, k, v, True), **TOL)
+
+
+class TestDecodeFixed:
+    def test_serving_shape(self):
+        kc = rand(20, (4, 4, 64, 32))
+        vc = rand(21, (4, 4, 64, 32))
+        q = rand(22, (4, 4, 1, 32))
+        for length in (1, 16, 33, 64):
+            out = flash_decode(q, kc, vc, length)
+            ref = decode_attention_ref(q, kc, vc, length)
+            np.testing.assert_allclose(out, ref, **TOL, err_msg=f"len={length}")
+
+    def test_garbage_beyond_length_ignored(self):
+        kc = rand(23, (1, 2, 32, 16))
+        vc = rand(24, (1, 2, 32, 16))
+        q = rand(25, (1, 2, 1, 16))
+        out1 = flash_decode(q, kc, vc, 10)
+        # poison the tail — result must be identical
+        kc2 = kc.at[:, :, 10:, :].set(1e6)
+        vc2 = vc.at[:, :, 10:, :].set(-1e6)
+        out2 = flash_decode(q, kc2, vc2, 10)
+        np.testing.assert_allclose(out1, out2, rtol=0, atol=0)
+
+    def test_traced_length(self):
+        kc = rand(26, (2, 2, 32, 16))
+        vc = rand(27, (2, 2, 32, 16))
+        q = rand(28, (2, 2, 1, 16))
+        f = jax.jit(lambda q, k, v, n: flash_decode(q, k, v, n))
+        for n in (1, 7, 32):
+            np.testing.assert_allclose(
+                f(q, kc, vc, jnp.int32(n)),
+                decode_attention_ref(q, kc, vc, n),
+                **TOL,
+            )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    nh=st.sampled_from([1, 2, 4]),
+    s_blocks=st.integers(1, 4),
+    dh=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_hypothesis(b, nh, s_blocks, dh, causal, seed):
+    s = 16 * s_blocks
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, nh, s, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, nh, s, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, nh, s, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, attention_ref(q, k, v, causal), **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    nh=st.sampled_from([1, 2, 4]),
+    s_blocks=st.integers(1, 4),
+    dh=st.sampled_from([8, 16, 32]),
+    data=st.data(),
+)
+def test_decode_hypothesis(b, nh, s_blocks, dh, data):
+    s_max = 16 * s_blocks
+    length = data.draw(st.integers(1, s_max))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, nh, 1, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, nh, s_max, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, nh, s_max, dh), jnp.float32)
+    out = flash_decode(q, kc, vc, length)
+    np.testing.assert_allclose(out, decode_attention_ref(q, kc, vc, length), **TOL)
+
+
+class TestShapeValidation:
+    def test_misaligned_seq_rejected(self):
+        q = rand(30, (1, 1, 20, 8))
+        with pytest.raises(AssertionError):
+            flash_attention(q, q, q, causal=True)
+
+    def test_causal_requires_square(self):
+        q = rand(31, (1, 1, 16, 8))
+        k = rand(32, (1, 1, 32, 8))
+        with pytest.raises(AssertionError):
+            flash_attention(q, k, k, causal=True)

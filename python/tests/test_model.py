@@ -1,0 +1,192 @@
+"""Layer-2 model tests: TP shard algebra, prefill/decode consistency, and
+the stage-composition oracle the Rust coordinator relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.model import CFG
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(0)
+
+
+def rand_x(seed, b, s=CFG.prompt_len):
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (b, s, CFG.hidden), jnp.float32)
+
+
+class TestSharding:
+    @pytest.mark.parametrize("tp", [2, 4])
+    @pytest.mark.parametrize("layer", [0, 3, 5])
+    def test_attn_shard_sum_equals_full(self, params, tp, layer):
+        x = rand_x(1, 2)
+        a1, _ = M.shard_layer(params, layer, 1, 0)
+        full, _, _ = M.attn_prefill_partial(x, *a1, tp=1)
+        parts = []
+        for r in range(tp):
+            aw, _ = M.shard_layer(params, layer, tp, r)
+            p, _, _ = M.attn_prefill_partial(x, *aw, tp=tp)
+            parts.append(p)
+        np.testing.assert_allclose(sum(parts), full, **TOL)
+
+    @pytest.mark.parametrize("tp", [2, 4])
+    def test_mlp_shard_sum_equals_full(self, params, tp):
+        x = rand_x(2, 2)
+        _, m1 = M.shard_layer(params, 0, 1, 0)
+        full = M.mlp_partial(x, *m1)
+        parts = [
+            M.mlp_partial(x, *M.shard_layer(params, 0, tp, r)[1])
+            for r in range(tp)
+        ]
+        np.testing.assert_allclose(sum(parts), full, **TOL)
+
+    def test_shard_shapes(self, params):
+        for tp in CFG.tp_degrees:
+            (ln1, wq, wk, wv, wo), (ln2, w1, w2) = M.shard_layer(
+                params, 0, tp, 0)
+            h = CFG.hidden
+            assert wq.shape == (h, h // tp)
+            assert wo.shape == (h // tp, h)
+            assert w1.shape == (h, CFG.ffn // tp)
+            assert w2.shape == (CFG.ffn // tp, h)
+
+    def test_shards_cover_weights(self, params):
+        # concatenating shard columns reconstructs the full matrix
+        wq = params["layers.2.wq"]
+        for tp in (2, 4):
+            cols = [M.shard_layer(params, 2, tp, r)[0][1] for r in range(tp)]
+            np.testing.assert_array_equal(jnp.concatenate(cols, axis=1), wq)
+
+    def test_bad_tp_rejected(self, params):
+        with pytest.raises(AssertionError):
+            M.shard_layer(params, 0, 3, 0)
+
+
+class TestDecodeConsistency:
+    def test_decode_matches_prefill_extension(self, params):
+        """Prefill over S+1 tokens == prefill over S + one decode step."""
+        b = 1
+        key = jax.random.PRNGKey(3)
+        tokens = jax.random.randint(
+            key, (b, CFG.prompt_len), 0, CFG.vocab, jnp.int32)
+        logits_p, kc, vc = M.forward_prefill_full(tokens, params)
+        next_tok = jnp.argmax(logits_p, axis=-1).astype(jnp.int32)[:, None]
+
+        logits_d, kc2, vc2 = M.forward_decode_full(
+            next_tok, kc, vc, jnp.int32(CFG.prompt_len), params)
+
+        # oracle: re-run prefill over prompt+next with a causal window of
+        # prompt_len+1 — compare last-position logits.
+        ext = jnp.concatenate([tokens, next_tok], axis=1)
+        # pad to a block multiple (prompt_len+16)
+        pad = 15
+        ext_p = jnp.pad(ext, ((0, 0), (0, pad)))
+        x = M.embed(ext_p, params["embed"])
+        for i in range(CFG.layers):
+            (ln1, wq, wk, wv, wo), (ln2, w1, w2) = M.shard_layer(
+                params, i, 1, 0)
+            part, _, _ = M.attn_prefill_partial(x, ln1, wq, wk, wv, wo, tp=1)
+            x = x + part
+            x = x + M.mlp_partial(x, ln2, w1, w2)
+        from compile.kernels.ref import rmsnorm_ref
+        xl = rmsnorm_ref(x[:, CFG.prompt_len, :], params["final_ln"])
+        ref_logits = xl @ params["lm_head"]
+        np.testing.assert_allclose(logits_d, ref_logits, **TOL)
+        # caches advanced by exactly one position
+        np.testing.assert_array_equal(
+            kc2[:, :, :, : CFG.prompt_len, :], kc[:, :, :, : CFG.prompt_len, :])
+
+    def test_multi_step_decode_runs(self, params):
+        b = 2
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(4), (b, CFG.prompt_len), 0, CFG.vocab, jnp.int32)
+        logits, kc, vc = M.forward_prefill_full(tokens, params)
+        pos = CFG.prompt_len
+        for step in range(4):
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            logits, kc, vc = M.forward_decode_full(
+                tok, kc, vc, jnp.int32(pos + step), params)
+            assert logits.shape == (b, CFG.vocab)
+            assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestStageComposition:
+    def test_stagewise_equals_full(self, params):
+        """Composing per-stage partials with host-side all-reduce+residual
+        reproduces the fused full model — the contract the Rust
+        coordinator depends on."""
+        b = 1
+        tokens = jax.random.randint(
+            jax.random.PRNGKey(5), (b, CFG.prompt_len), 0, CFG.vocab, jnp.int32)
+        full_logits, full_kc, _ = M.forward_prefill_full(tokens, params)
+
+        # Asymmetric plan: stage0 = layers 0-3 at TP2; stage1 = 4-5 at TP1.
+        x = M.embed(tokens, params["embed"])
+        for i in range(4):
+            parts = []
+            for r in range(2):
+                aw, _ = M.shard_layer(params, i, 2, r)
+                p, _, _ = M.attn_prefill_partial(x, *aw, tp=2)
+                parts.append(p)
+            x = x + sum(parts)  # host all-reduce + residual
+            mparts = [
+                M.mlp_partial(x, *M.shard_layer(params, i, 2, r)[1])
+                for r in range(2)
+            ]
+            x = x + sum(mparts)
+        for i in range(4, 6):
+            aw, mw = M.shard_layer(params, i, 1, 0)
+            p, _, _ = M.attn_prefill_partial(x, *aw, tp=1)
+            x = x + p
+            x = x + M.mlp_partial(x, *mw)
+        logits = M.lm_head_last(x, params["final_ln"], params["lm_head"])
+        np.testing.assert_allclose(logits, full_logits, **TOL)
+
+    def test_embed_lookup(self, params):
+        tokens = jnp.array([[0, 1, 255]], jnp.int32)
+        x = M.embed(tokens, params["embed"])
+        np.testing.assert_array_equal(x[0, 0], params["embed"][0])
+        np.testing.assert_array_equal(x[0, 2], params["embed"][255])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), tp=st.sampled_from([2, 4]),
+       layer=st.integers(0, CFG.layers - 1))
+def test_decode_shard_sum_hypothesis(seed, tp, layer):
+    """Decode-phase shard-partial sums also reconstruct the full layer."""
+    params = M.init_params(0)
+    key = jax.random.PRNGKey(seed)
+    b = 1
+    x = jax.random.normal(key, (b, 1, CFG.hidden), jnp.float32)
+    pos = int(jax.random.randint(key, (), CFG.prompt_len, CFG.max_seq - 1))
+
+    def caches(nh):
+        kc = jax.random.normal(
+            jax.random.fold_in(key, 1), (b, nh, CFG.max_seq, CFG.head_dim))
+        vc = jax.random.normal(
+            jax.random.fold_in(key, 2), (b, nh, CFG.max_seq, CFG.head_dim))
+        return kc, vc
+
+    kc_full, vc_full = caches(CFG.heads)
+    a1, _ = M.shard_layer(params, layer, 1, 0)
+    full, _, _ = M.attn_decode_partial(x, kc_full, vc_full, pos, *a1, tp=1)
+
+    nh_s = CFG.heads // tp
+    parts = []
+    for r in range(tp):
+        aw, _ = M.shard_layer(params, layer, tp, r)
+        kc_s = kc_full[:, r * nh_s:(r + 1) * nh_s]
+        vc_s = vc_full[:, r * nh_s:(r + 1) * nh_s]
+        p, _, _ = M.attn_decode_partial(x, kc_s, vc_s, pos, *aw, tp=tp)
+        parts.append(p)
+    np.testing.assert_allclose(sum(parts), full, **TOL)

@@ -1,0 +1,53 @@
+//! Figure-harness timing: how long each paper-experiment regeneration
+//! takes at the reduced default budget. One timed run per experiment
+//! (these are end-to-end sweeps, not micro-benches).
+
+use std::time::Instant;
+
+use hexgen::experiments;
+use hexgen::util::cli::Args;
+
+fn main() {
+    // quiet, tiny budgets: this measures harness cost, not statistics
+    let args = Args::parse(
+        [
+            "--requests".to_string(),
+            "80".to_string(),
+            "--population".to_string(),
+            "6".to_string(),
+            "--iterations".to_string(),
+            "8".to_string(),
+            "--patience".to_string(),
+            "6".to_string(),
+            "--fitness-requests".to_string(),
+            "60".to_string(),
+            "--rates".to_string(),
+            "1".to_string(),
+            "--s-out".to_string(),
+            "32".to_string(),
+        ]
+        .into_iter(),
+    );
+    println!("timing each experiment harness at reduced budget:\n");
+    let runs: Vec<(&str, fn(&Args) -> anyhow::Result<()>)> = vec![
+        ("figure1", experiments::figure1::run),
+        ("figure3", experiments::figure3::run),
+        ("figure4", experiments::figure4::run),
+        ("figure6", experiments::figure6::run),
+        ("figure7", experiments::figure7::run),
+        ("table3", experiments::table3::run),
+        ("table4", experiments::table4::run),
+    ];
+    let mut rows = Vec::new();
+    for (name, f) in runs {
+        let t0 = Instant::now();
+        // Swallow the harness's own stdout? No — keep it, benches are logs.
+        f(&args).unwrap();
+        rows.push((name, t0.elapsed().as_secs_f64()));
+    }
+    println!("\n== harness timing summary ==");
+    for (name, secs) in rows {
+        println!("{name:<10} {secs:>8.1}s");
+    }
+    println!("(figure2/figure5 excluded: they are figure3-shaped sweeps at 4x the points)");
+}

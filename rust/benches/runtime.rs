@@ -1,0 +1,92 @@
+//! Runtime benchmarks over the real AOT artifacts: PJRT execute latency
+//! per stage kernel, all-reduce, and whole prefill/decode steps across
+//! plan shapes. Skipped (with a message) when artifacts are not built.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hexgen::coordinator::{all_reduce_sum, plan_from_strategy, CommStats, PipelineExecutor};
+use hexgen::runtime::{tokenizer, InputArg, ModelRuntime, Tensor};
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ not built — run `make artifacts` first; skipping runtime benches");
+        return;
+    }
+    let budget = Duration::from_millis(1000);
+
+    hexgen::util::bench::group("PJRT stage executions (b=1)");
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let info = rt.manifest.model.clone();
+    let x_prefill = Tensor {
+        dims: vec![1, info.prompt_len, info.hidden],
+        data: vec![0.1; info.prompt_len * info.hidden],
+    };
+    let ln = rt.weights.get("layers.0.ln1").unwrap().clone();
+    for tp in [1usize, 2, 4] {
+        let wq = rt.weights.get(&shard("wq", tp)).unwrap().clone();
+        let wk = rt.weights.get(&shard("wk", tp)).unwrap().clone();
+        let wv = rt.weights.get(&shard("wv", tp)).unwrap().clone();
+        let wo = rt.weights.get(&shard("wo", tp)).unwrap().clone();
+        let name = format!("attn_prefill_tp{tp}_b1");
+        // compile outside the timed region
+        rt.executable(&name).unwrap();
+        hexgen::util::bench::bench(&format!("attn_prefill/tp{tp}"), 3, budget, || {
+            std::hint::black_box(
+                rt.execute_t(
+                    &name,
+                    &[
+                        InputArg::F32(&x_prefill),
+                        InputArg::F32(&ln),
+                        InputArg::F32(&wq),
+                        InputArg::F32(&wk),
+                        InputArg::F32(&wv),
+                        InputArg::F32(&wo),
+                    ],
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    hexgen::util::bench::group("host collectives");
+    let parts: Vec<Tensor> = (0..4)
+        .map(|_| Tensor {
+            dims: vec![1, info.prompt_len, info.hidden],
+            data: vec![0.25; info.prompt_len * info.hidden],
+        })
+        .collect();
+    hexgen::util::bench::bench("all_reduce_sum/4x(32x128)", 5, budget, || {
+        let mut stats = CommStats::default();
+        std::hint::black_box(all_reduce_sum(parts.clone(), &mut stats));
+    });
+
+    hexgen::util::bench::group("end-to-end generation (prefill + 4 decode steps)");
+    let prompt = tokenizer::encode("benchmark prompt for the demo model", 32);
+    for (name, tps, layers) in [
+        ("tp1-fused-stage", vec![1usize], vec![6usize]),
+        ("tp2-pp2-asym", vec![2, 1], vec![4, 2]),
+        ("tp1-pp2", vec![1, 1], vec![3, 3]),
+    ] {
+        let exec =
+            PipelineExecutor::new(&dir, plan_from_strategy(&tps, &layers).unwrap()).unwrap();
+        let _ = exec.generate(&[prompt.clone()], 2).unwrap(); // warm compile
+        hexgen::util::bench::bench(
+            &format!("generate/{name}"),
+            1,
+            Duration::from_millis(2500),
+            || {
+                std::hint::black_box(exec.generate(&[prompt.clone()], 4).unwrap());
+            },
+        );
+    }
+}
+
+fn shard(w: &str, tp: usize) -> String {
+    if tp == 1 {
+        format!("layers.0.{w}")
+    } else {
+        format!("layers.0.{w}.tp{tp}.r0")
+    }
+}

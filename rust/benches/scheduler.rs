@@ -1,0 +1,87 @@
+//! Scheduler benchmarks: Algorithm-1 DP, layer partitioning, k-means
+//! init, full GA iterations. The paper's headline is 2.1 min / 1.5 min
+//! wall-clock to schedule the full/half-price clusters — these benches
+//! track the components that budget is spent on.
+
+use std::time::Duration;
+
+use hexgen::cluster;
+use hexgen::costmodel::{CostModel, InferenceTask};
+use hexgen::model::ModelSpec;
+use hexgen::scheduler::{
+    kmeans, solve_dp, optimal_pipeline, GaConfig, GeneticScheduler, GroupPool,
+};
+use hexgen::util::bench::{bench, group};
+use hexgen::util::rng::Xoshiro256pp;
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    let m = ModelSpec::llama2_70b();
+
+    group("Algorithm-1 DP (solve_dp, fixed partition)");
+    {
+        let c = cluster::case_study();
+        let cm = CostModel::new(&c, &m);
+        let pool = GroupPool::new(&c, &(0..8).collect::<Vec<_>>());
+        let t = InferenceTask::case_study();
+        bench("dp/case-study-8gpu-3stage", 3, budget, || {
+            std::hint::black_box(solve_dp(&cm, &pool, &[48, 20, 12], &t, 8, false));
+        });
+    }
+    {
+        let c = cluster::heterogeneous_full_price();
+        let cm = CostModel::new(&c, &m);
+        let devs: Vec<usize> = (0..16).collect(); // one Iceland 16-GPU group
+        let pool = GroupPool::new(&c, &devs);
+        let t = InferenceTask::new(1, 64, 32);
+        bench("dp/16x3090Ti-4stage", 3, budget, || {
+            std::hint::black_box(solve_dp(&cm, &pool, &[20, 20, 20, 20], &t, 8, false));
+        });
+    }
+
+    group("full pipeline optimizer (S sweep + EM)");
+    {
+        let c = cluster::heterogeneous_full_price();
+        let cm = CostModel::new(&c, &m);
+        let t = InferenceTask::new(1, 64, 32);
+        for n in [8usize, 16, 24] {
+            let devs: Vec<usize> = (0..n).collect();
+            bench(&format!("optimal_pipeline/{n}gpu"), 1, budget, || {
+                std::hint::black_box(optimal_pipeline(&cm, &c, &devs, &t, 8, 8));
+            });
+        }
+    }
+
+    group("k-means initialization");
+    {
+        let c = cluster::heterogeneous_full_price();
+        let devs = c.online_devices();
+        bench("kmeans/init-58gpu", 2, budget, || {
+            let mut rng = Xoshiro256pp::seed_from_u64(1);
+            std::hint::black_box(kmeans::initial_groups(&c, &devs, &mut rng));
+        });
+    }
+
+    group("genetic search (small budget end-to-end)");
+    for (name, c) in [
+        ("half-price", cluster::heterogeneous_half_price()),
+        ("full-price", cluster::heterogeneous_full_price()),
+    ] {
+        bench(
+            &format!("ga/5-iterations-{name}"),
+            0,
+            Duration::from_millis(1500),
+            || {
+                let cfg = GaConfig {
+                    population: 6,
+                    iterations: 5,
+                    patience: 5,
+                    seed: 9,
+                    fitness_requests: 60,
+                    ..GaConfig::default()
+                };
+                std::hint::black_box(GeneticScheduler::new(&c, &m, cfg).run());
+            },
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Simulator benchmarks: cost-model evaluation, batch timing, and
+//! end-to-end discrete-event throughput (events/s) — the inner loop of
+//! every figure and of the GA's fitness function.
+
+use std::time::Duration;
+
+use hexgen::cluster;
+use hexgen::costmodel::{CostModel, InferenceTask, Phase};
+use hexgen::model::ModelSpec;
+use hexgen::parallelism::{Deployment, Pipeline, Stage};
+use hexgen::simulator::{batch_timing, simulate, SimConfig};
+use hexgen::workload::{LengthDist, WorkloadSpec};
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    let m = ModelSpec::llama2_70b();
+    let c = cluster::heterogeneous_full_price();
+    let cm = CostModel::new(&c, &m);
+
+    hexgen::util::bench::group("cost model primitives");
+    let t = InferenceTask::new(4, 256, 64);
+    let tp_group: Vec<usize> = (0..8).collect();
+    hexgen::util::bench::bench("comp_cost/tp8", 10, budget, || {
+        std::hint::black_box(cm.comp_cost(&tp_group, 40, &t, Phase::Both));
+    });
+    hexgen::util::bench::bench("comm_tp_cost/tp8", 10, budget, || {
+        std::hint::black_box(cm.comm_tp_cost(&tp_group, 40, &t, Phase::Both));
+    });
+    let next: Vec<usize> = (16..24).collect();
+    hexgen::util::bench::bench("comm_pp_cost/8x8", 10, budget, || {
+        std::hint::black_box(cm.comm_pp_cost(&tp_group, &next, &t, Phase::Both));
+    });
+
+    let stages: Vec<(Vec<usize>, usize)> = vec![
+        ((0..8).collect(), 40),
+        ((16..22).collect(), 24),
+        ((38..42).collect(), 16),
+    ];
+    hexgen::util::bench::bench("pipeline_cost/3stage", 10, budget, || {
+        std::hint::black_box(cm.pipeline_cost(&stages, &t, Phase::Both));
+    });
+    hexgen::util::bench::bench("batch_timing/3stage", 10, budget, || {
+        std::hint::black_box(batch_timing(&cm, &stages, &t, false));
+    });
+
+    hexgen::util::bench::group("discrete-event simulation");
+    let deployment = Deployment {
+        pipelines: (0..4)
+            .map(|i| Pipeline {
+                stages: vec![Stage { devices: (i * 8..i * 8 + 8).collect(), layers: 80 }],
+            })
+            .collect(),
+    };
+    for n in [200usize, 1000, 5000] {
+        let trace = WorkloadSpec {
+            rate: 4.0,
+            num_requests: n,
+            lengths: LengthDist::LmsysLike { s_out: 32 },
+            seed: 5,
+        }
+        .generate();
+        let r = hexgen::util::bench::bench(
+            &format!("simulate/{n}req-4replica"),
+            2,
+            budget,
+            || {
+                std::hint::black_box(simulate(&cm, &deployment, &trace, &SimConfig::default()));
+            },
+        );
+        let req_per_sec = n as f64 / r.mean_secs();
+        println!("    → {req_per_sec:.0} simulated requests/s");
+    }
+
+    hexgen::util::bench::group("workload generation");
+    hexgen::util::bench::bench("poisson-trace/10k", 2, budget, || {
+        std::hint::black_box(
+            WorkloadSpec {
+                rate: 4.0,
+                num_requests: 10_000,
+                lengths: LengthDist::LmsysLike { s_out: 64 },
+                seed: 6,
+            }
+            .generate(),
+        );
+    });
+}

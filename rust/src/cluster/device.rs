@@ -1,0 +1,84 @@
+//! Concrete devices, machines and regions of a heterogeneous pool.
+
+use super::gpu::GpuType;
+
+/// Stable device identifier: index into `Cluster::devices`.
+pub type DeviceId = usize;
+
+/// One physical GPU in the pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub id: DeviceId,
+    pub gpu: GpuType,
+    /// Machine (instance) this GPU is plugged into.
+    pub machine: usize,
+    /// Geographic region of the machine.
+    pub region: usize,
+    /// False when the GPU has left the pool (Figure 4 dynamics).
+    pub online: bool,
+}
+
+/// A rented instance: a set of same-type GPUs with a fast local interconnect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Machine {
+    pub id: usize,
+    pub region: usize,
+    pub gpu: GpuType,
+    pub num_gpus: usize,
+    /// Intra-machine interconnect class.
+    pub link: LocalLink,
+    pub name: String,
+}
+
+/// Intra-machine GPU interconnect class (determines α/β of local links).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalLink {
+    /// NVLink/NVSwitch (A100 SXM systems).
+    NvLink,
+    /// PCIe 4.0 peer-to-peer (workstation/server cards).
+    Pcie4,
+}
+
+impl LocalLink {
+    /// (latency seconds, bandwidth bytes/s) of one GPU↔GPU hop.
+    pub fn alpha_beta(self) -> (f64, f64) {
+        match self {
+            // NVSwitch: ~600 GB/s per-GPU aggregate; α ≈ 5 µs.
+            LocalLink::NvLink => (5e-6, 300e9),
+            // PCIe 4.0 x16 p2p: ~16 GB/s effective; α ≈ 10 µs.
+            LocalLink::Pcie4 => (10e-6, 16e9),
+        }
+    }
+}
+
+/// A named geographic region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Region {
+    pub id: usize,
+    pub name: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_classes_ordered() {
+        let (a_nv, b_nv) = LocalLink::NvLink.alpha_beta();
+        let (a_pc, b_pc) = LocalLink::Pcie4.alpha_beta();
+        assert!(b_nv > b_pc);
+        assert!(a_nv <= a_pc);
+    }
+
+    #[test]
+    fn device_construction() {
+        let d = Device {
+            id: 3,
+            gpu: GpuType::A5000,
+            machine: 1,
+            region: 0,
+            online: true,
+        };
+        assert_eq!(d.gpu.name(), "A5000");
+    }
+}

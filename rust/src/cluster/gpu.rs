@@ -1,0 +1,155 @@
+//! GPU device-type catalog.
+//!
+//! The scheduler and cost model only observe `(peak FP16 FLOPS, memory
+//! bandwidth, memory capacity)` per device (paper §4.1: `c_d`, `m_d`,
+//! `M_d`), so a catalog entry is a faithful substitute for real hardware.
+//! Published vendor numbers; prices follow the paper's §5.1 budgets.
+
+/// A GPU model in the heterogeneous pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum GpuType {
+    /// NVIDIA A100-SXM4 40GB (the homogeneous-baseline datacenter GPU).
+    A100_40G,
+    /// NVIDIA GeForce RTX 3090 Ti 24GB.
+    RTX3090TI,
+    /// NVIDIA RTX A6000 48GB.
+    A6000,
+    /// NVIDIA RTX A5000 24GB.
+    A5000,
+    /// NVIDIA A40 48GB.
+    A40,
+    /// NVIDIA RTX A4000 16GB.
+    A4000,
+}
+
+/// Static capability record for a [`GpuType`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// Device memory limit `M_d` in bytes.
+    pub memory_bytes: f64,
+    /// Device memory bandwidth `m_d` in bytes/second.
+    pub memory_bandwidth: f64,
+    /// Tensor-core FP16 peak `c_d` in FLOP/second.
+    pub peak_flops: f64,
+    /// Indicative on-demand price, $/hour (paper §5.1 budget accounting).
+    pub price_per_hour: f64,
+}
+
+impl GpuType {
+    pub const ALL: [GpuType; 6] = [
+        GpuType::A100_40G,
+        GpuType::RTX3090TI,
+        GpuType::A6000,
+        GpuType::A5000,
+        GpuType::A40,
+        GpuType::A4000,
+    ];
+
+    /// Catalog lookup. FLOPS are dense FP16 tensor-core peaks; bandwidths
+    /// are vendor HBM/GDDR peaks.
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            GpuType::A100_40G => GpuSpec {
+                name: "A100-40G",
+                memory_bytes: 40e9,
+                memory_bandwidth: 1555e9,
+                peak_flops: 312e12,
+                // p4d.24xlarge: $32.77/h for 8 GPUs
+                price_per_hour: 4.10,
+            },
+            GpuType::RTX3090TI => GpuSpec {
+                name: "3090Ti",
+                memory_bytes: 24e9,
+                memory_bandwidth: 1008e9,
+                peak_flops: 160e12,
+                price_per_hour: 1.20,
+            },
+            GpuType::A6000 => GpuSpec {
+                name: "A6000",
+                memory_bytes: 48e9,
+                memory_bandwidth: 768e9,
+                peak_flops: 155e12,
+                price_per_hour: 1.45,
+            },
+            GpuType::A5000 => GpuSpec {
+                name: "A5000",
+                memory_bytes: 24e9,
+                memory_bandwidth: 768e9,
+                peak_flops: 111e12,
+                price_per_hour: 0.95,
+            },
+            GpuType::A40 => GpuSpec {
+                name: "A40",
+                memory_bytes: 48e9,
+                memory_bandwidth: 696e9,
+                peak_flops: 150e12,
+                price_per_hour: 1.35,
+            },
+            GpuType::A4000 => GpuSpec {
+                name: "A4000",
+                memory_bytes: 16e9,
+                memory_bandwidth: 448e9,
+                peak_flops: 77e12,
+                price_per_hour: 0.55,
+            },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    pub fn from_name(name: &str) -> Option<GpuType> {
+        GpuType::ALL.into_iter().find(|t| t.name() == name)
+    }
+
+    /// Stable index into type-count vectors (τ in the paper).
+    pub fn index(self) -> usize {
+        GpuType::ALL.iter().position(|t| *t == self).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_sane() {
+        for t in GpuType::ALL {
+            let s = t.spec();
+            assert!(s.memory_bytes >= 16e9, "{:?}", t);
+            assert!(s.memory_bandwidth > 100e9);
+            assert!(s.peak_flops > 10e12);
+            assert!(s.price_per_hour > 0.0);
+        }
+    }
+
+    #[test]
+    fn a100_dominates_a4000() {
+        let a100 = GpuType::A100_40G.spec();
+        let a4000 = GpuType::A4000.spec();
+        assert!(a100.peak_flops > a4000.peak_flops);
+        assert!(a100.memory_bandwidth > a4000.memory_bandwidth);
+        assert!(a100.memory_bytes > a4000.memory_bytes);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for t in GpuType::ALL {
+            assert_eq!(GpuType::from_name(t.name()), Some(t));
+        }
+        assert_eq!(GpuType::from_name("H100"), None);
+    }
+
+    #[test]
+    fn index_is_stable_bijection() {
+        let mut seen = vec![false; GpuType::ALL.len()];
+        for t in GpuType::ALL {
+            assert!(!seen[t.index()]);
+            seen[t.index()] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

@@ -1,0 +1,16 @@
+//! Heterogeneous GPU pool model: device catalog, machines/regions,
+//! communication matrices (paper §4.1's **A** and **B**), and the four
+//! cluster presets used by the evaluation (§5.1, §3.1).
+
+pub mod device;
+pub mod gpu;
+pub mod network;
+pub mod spec;
+
+pub use device::{Device, DeviceId, LocalLink, Machine, Region};
+pub use gpu::{GpuSpec, GpuType};
+pub use network::{CommMatrices, NetworkProfile};
+pub use spec::{
+    case_study, heterogeneous_full_price, heterogeneous_half_price, homogeneous_a100,
+    preset, Cluster, ClusterSpec,
+};

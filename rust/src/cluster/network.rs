@@ -1,0 +1,231 @@
+//! Heterogeneous communication matrices.
+//!
+//! Paper §4.1: `A ∈ R+^{N×N}` holds pairwise latency (α, seconds) and
+//! `B ∈ R+^{N×N}` pairwise bandwidth (β, bytes/s). We synthesize them from
+//! link classes matching the paper's §5.1 measurements:
+//!   - intra-machine: NVLink or PCIe (device.rs);
+//!   - intra-region, cross-machine: 2 ms / 5 Gbps;
+//!   - inter-region: 40–150 ms / 0.3–1.0 Gbps (deterministic per region
+//!     pair, seeded).
+
+use super::device::{Device, Machine};
+use crate::util::rng::Xoshiro256pp;
+
+/// Dense symmetric communication matrices between all devices.
+#[derive(Debug, Clone)]
+pub struct CommMatrices {
+    pub n: usize,
+    /// Latency seconds; `alpha[i*n + j]`. Diagonal is 0.
+    pub alpha: Vec<f64>,
+    /// Bandwidth bytes/s; diagonal is +inf (no self-communication cost).
+    pub beta: Vec<f64>,
+}
+
+/// Link-class parameters used to synthesize [`CommMatrices`].
+#[derive(Debug, Clone)]
+pub struct NetworkProfile {
+    /// Cross-machine, same-region: (latency s, bandwidth bytes/s).
+    pub intra_region: (f64, f64),
+    /// Cross-region latency range (s).
+    pub inter_region_alpha: (f64, f64),
+    /// Cross-region bandwidth range (bytes/s).
+    pub inter_region_beta: (f64, f64),
+    /// Seed for the deterministic per-region-pair draw.
+    pub seed: u64,
+}
+
+impl Default for NetworkProfile {
+    fn default() -> Self {
+        NetworkProfile {
+            // §5.1 footnote: intra-region 2 ms, 5 Gbps.
+            intra_region: (2e-3, 5e9 / 8.0),
+            // inter-region 40–150 ms, 0.3–1.0 Gbps.
+            inter_region_alpha: (40e-3, 150e-3),
+            inter_region_beta: (0.3e9 / 8.0, 1.0e9 / 8.0),
+            seed: 0x4E57_0001,
+        }
+    }
+}
+
+/// High-bandwidth datacenter fabric (A100 p4d: 400 Gbps EFA between
+/// machines in the same placement group).
+pub fn datacenter_profile() -> NetworkProfile {
+    NetworkProfile {
+        intra_region: (50e-6, 400e9 / 8.0),
+        inter_region_alpha: (40e-3, 150e-3),
+        inter_region_beta: (0.3e9 / 8.0, 1.0e9 / 8.0),
+        seed: 0x4E57_0002,
+    }
+}
+
+impl CommMatrices {
+    /// Build matrices for `devices` grouped into `machines`.
+    pub fn build(
+        devices: &[Device],
+        machines: &[Machine],
+        profile: &NetworkProfile,
+    ) -> CommMatrices {
+        let n = devices.len();
+        let mut alpha = vec![0.0; n * n];
+        let mut beta = vec![f64::INFINITY; n * n];
+        // Deterministic per-region-pair inter-region links.
+        let nregions = devices.iter().map(|d| d.region).max().map_or(0, |r| r + 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(profile.seed);
+        let mut region_alpha = vec![0.0; nregions * nregions];
+        let mut region_beta = vec![0.0; nregions * nregions];
+        for r1 in 0..nregions {
+            for r2 in (r1 + 1)..nregions {
+                let a = rng.gen_f64_range(profile.inter_region_alpha.0, profile.inter_region_alpha.1);
+                let b = rng.gen_f64_range(profile.inter_region_beta.0, profile.inter_region_beta.1);
+                region_alpha[r1 * nregions + r2] = a;
+                region_alpha[r2 * nregions + r1] = a;
+                region_beta[r1 * nregions + r2] = b;
+                region_beta[r2 * nregions + r1] = b;
+            }
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let (a, b) = link_params(&devices[i], &devices[j], machines, profile, &region_alpha, &region_beta, nregions);
+                alpha[i * n + j] = a;
+                alpha[j * n + i] = a;
+                beta[i * n + j] = b;
+                beta[j * n + i] = b;
+            }
+        }
+        CommMatrices { n, alpha, beta }
+    }
+
+    #[inline]
+    pub fn alpha(&self, i: usize, j: usize) -> f64 {
+        self.alpha[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn beta(&self, i: usize, j: usize) -> f64 {
+        self.beta[i * self.n + j]
+    }
+
+    /// α–β transfer time for `bytes` between devices `i` and `j`.
+    #[inline]
+    pub fn transfer_time(&self, i: usize, j: usize, bytes: f64) -> f64 {
+        if i == j {
+            return 0.0;
+        }
+        self.alpha(i, j) + bytes / self.beta(i, j)
+    }
+
+    /// Restrict the matrices to a device subset (preserving order), used
+    /// when GPUs leave the pool (Figure 4).
+    pub fn restrict(&self, keep: &[usize]) -> CommMatrices {
+        let m = keep.len();
+        let mut alpha = vec![0.0; m * m];
+        let mut beta = vec![f64::INFINITY; m * m];
+        for (a, &i) in keep.iter().enumerate() {
+            for (b, &j) in keep.iter().enumerate() {
+                alpha[a * m + b] = self.alpha(i, j);
+                beta[a * m + b] = self.beta(i, j);
+            }
+        }
+        CommMatrices { n: m, alpha, beta }
+    }
+}
+
+fn link_params(
+    d1: &Device,
+    d2: &Device,
+    machines: &[Machine],
+    profile: &NetworkProfile,
+    region_alpha: &[f64],
+    region_beta: &[f64],
+    nregions: usize,
+) -> (f64, f64) {
+    if d1.machine == d2.machine {
+        machines[d1.machine].link.alpha_beta()
+    } else if d1.region == d2.region {
+        profile.intra_region
+    } else {
+        let idx = d1.region * nregions + d2.region;
+        (region_alpha[idx], region_beta[idx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::device::LocalLink;
+    use crate::cluster::gpu::GpuType;
+
+    fn mini_pool() -> (Vec<Device>, Vec<Machine>) {
+        // machine 0 (region 0): 2×A6000; machine 1 (region 0): 1×A5000;
+        // machine 2 (region 1): 1×3090Ti.
+        let machines = vec![
+            Machine { id: 0, region: 0, gpu: GpuType::A6000, num_gpus: 2, link: LocalLink::Pcie4, name: "m0".into() },
+            Machine { id: 1, region: 0, gpu: GpuType::A5000, num_gpus: 1, link: LocalLink::Pcie4, name: "m1".into() },
+            Machine { id: 2, region: 1, gpu: GpuType::RTX3090TI, num_gpus: 1, link: LocalLink::Pcie4, name: "m2".into() },
+        ];
+        let devices = vec![
+            Device { id: 0, gpu: GpuType::A6000, machine: 0, region: 0, online: true },
+            Device { id: 1, gpu: GpuType::A6000, machine: 0, region: 0, online: true },
+            Device { id: 2, gpu: GpuType::A5000, machine: 1, region: 0, online: true },
+            Device { id: 3, gpu: GpuType::RTX3090TI, machine: 2, region: 1, online: true },
+        ];
+        (devices, machines)
+    }
+
+    #[test]
+    fn symmetry_and_diagonal() {
+        let (d, m) = mini_pool();
+        let c = CommMatrices::build(&d, &m, &NetworkProfile::default());
+        for i in 0..4 {
+            assert_eq!(c.alpha(i, i), 0.0);
+            assert_eq!(c.beta(i, i), f64::INFINITY);
+            for j in 0..4 {
+                assert_eq!(c.alpha(i, j), c.alpha(j, i));
+                assert_eq!(c.beta(i, j), c.beta(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn link_hierarchy() {
+        let (d, m) = mini_pool();
+        let c = CommMatrices::build(&d, &m, &NetworkProfile::default());
+        // intra-machine faster than intra-region faster than inter-region
+        assert!(c.beta(0, 1) > c.beta(0, 2));
+        assert!(c.beta(0, 2) > c.beta(0, 3));
+        assert!(c.alpha(0, 1) < c.alpha(0, 2));
+        assert!(c.alpha(0, 2) < c.alpha(0, 3));
+        // inter-region in the paper's measured ranges
+        assert!((40e-3..=150e-3).contains(&c.alpha(0, 3)));
+        let gbps = c.beta(0, 3) * 8.0 / 1e9;
+        assert!((0.3..=1.0).contains(&gbps), "{gbps}");
+    }
+
+    #[test]
+    fn transfer_time_alpha_beta() {
+        let (d, m) = mini_pool();
+        let c = CommMatrices::build(&d, &m, &NetworkProfile::default());
+        let t = c.transfer_time(0, 2, 1e6);
+        assert!((t - (2e-3 + 1e6 / (5e9 / 8.0))).abs() < 1e-12);
+        assert_eq!(c.transfer_time(1, 1, 1e9), 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (d, m) = mini_pool();
+        let c1 = CommMatrices::build(&d, &m, &NetworkProfile::default());
+        let c2 = CommMatrices::build(&d, &m, &NetworkProfile::default());
+        assert_eq!(c1.alpha, c2.alpha);
+        assert_eq!(c1.beta, c2.beta);
+    }
+
+    #[test]
+    fn restrict_preserves_pairs() {
+        let (d, m) = mini_pool();
+        let c = CommMatrices::build(&d, &m, &NetworkProfile::default());
+        let r = c.restrict(&[0, 2, 3]);
+        assert_eq!(r.n, 3);
+        assert_eq!(r.alpha(0, 1), c.alpha(0, 2));
+        assert_eq!(r.beta(1, 2), c.beta(2, 3));
+    }
+}

@@ -1,0 +1,425 @@
+//! Cluster assembly, JSON config round-trip, and the paper's four presets.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::device::{Device, DeviceId, LocalLink, Machine, Region};
+use super::gpu::GpuType;
+use super::network::{datacenter_profile, CommMatrices, NetworkProfile};
+
+/// A fully assembled heterogeneous GPU pool: devices, topology, comm
+/// matrices and budget. This is the scheduler's world model.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub name: String,
+    pub regions: Vec<Region>,
+    pub machines: Vec<Machine>,
+    pub devices: Vec<Device>,
+    pub comm: CommMatrices,
+    /// Total rental budget, $/hour (paper §5.1).
+    pub budget_per_hour: f64,
+}
+
+/// Declarative description used to build a [`Cluster`]; what the JSON
+/// config encodes.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    /// (region name, list of (gpu type, count, link) machines).
+    pub regions: Vec<(String, Vec<(GpuType, usize, LocalLink)>)>,
+    pub profile: NetworkProfile,
+}
+
+impl ClusterSpec {
+    pub fn build(&self) -> Cluster {
+        let mut regions = Vec::new();
+        let mut machines = Vec::new();
+        let mut devices = Vec::new();
+        let mut budget = 0.0;
+        for (rid, (rname, machs)) in self.regions.iter().enumerate() {
+            regions.push(Region { id: rid, name: rname.clone() });
+            for (gpu, count, link) in machs {
+                let mid = machines.len();
+                machines.push(Machine {
+                    id: mid,
+                    region: rid,
+                    gpu: *gpu,
+                    num_gpus: *count,
+                    link: *link,
+                    name: format!("{rname}/m{mid}-{}x{}", count, gpu.name()),
+                });
+                for _ in 0..*count {
+                    let id = devices.len();
+                    devices.push(Device { id, gpu: *gpu, machine: mid, region: rid, online: true });
+                    budget += gpu.spec().price_per_hour;
+                }
+            }
+        }
+        let comm = CommMatrices::build(&devices, &machines, &self.profile);
+        Cluster {
+            name: self.name.clone(),
+            regions,
+            machines,
+            devices,
+            comm,
+            budget_per_hour: budget,
+        }
+    }
+}
+
+impl Cluster {
+    /// Devices currently online.
+    pub fn online_devices(&self) -> Vec<DeviceId> {
+        self.devices.iter().filter(|d| d.online).map(|d| d.id).collect()
+    }
+
+    /// Count of online devices per GPU type — the τ vector of the full pool.
+    pub fn type_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0; GpuType::ALL.len()];
+        for d in &self.devices {
+            if d.online {
+                counts[d.gpu.index()] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Number of distinct GPU types present (paper's `N_T`).
+    pub fn num_types(&self) -> usize {
+        self.type_counts().iter().filter(|&&c| c > 0).count()
+    }
+
+    /// Take `n` devices offline (Figure 4 dynamics). Returns the ids.
+    pub fn take_offline(&mut self, ids: &[DeviceId]) {
+        for &id in ids {
+            self.devices[id].online = false;
+        }
+    }
+
+    /// Group online device ids by machine.
+    pub fn devices_by_machine(&self) -> BTreeMap<usize, Vec<DeviceId>> {
+        let mut m: BTreeMap<usize, Vec<DeviceId>> = BTreeMap::new();
+        for d in &self.devices {
+            if d.online {
+                m.entry(d.machine).or_default().push(d.id);
+            }
+        }
+        m
+    }
+
+    // ----- JSON config ----------------------------------------------------
+
+    /// Serialize the *spec-level* description (machines/regions/profile).
+    pub fn spec_to_json(spec: &ClusterSpec) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut root = Json::obj();
+        root.set("name", Json::from(spec.name.as_str()));
+        let regions: Vec<Json> = spec
+            .regions
+            .iter()
+            .map(|(rname, machs)| {
+                let mut r = Json::obj();
+                r.set("name", Json::from(rname.as_str()));
+                let ms: Vec<Json> = machs
+                    .iter()
+                    .map(|(gpu, count, link)| {
+                        let mut m = Json::obj();
+                        m.set("gpu", Json::from(gpu.name()));
+                        m.set("count", Json::from(*count));
+                        m.set(
+                            "link",
+                            Json::from(match link {
+                                LocalLink::NvLink => "nvlink",
+                                LocalLink::Pcie4 => "pcie4",
+                            }),
+                        );
+                        m
+                    })
+                    .collect();
+                r.set("machines", Json::Arr(ms));
+                r
+            })
+            .collect();
+        root.set("regions", Json::Arr(regions));
+        let mut prof = Json::obj();
+        prof.set("intra_region_alpha", Json::from(spec.profile.intra_region.0));
+        prof.set("intra_region_beta", Json::from(spec.profile.intra_region.1));
+        prof.set("inter_region_alpha_lo", Json::from(spec.profile.inter_region_alpha.0));
+        prof.set("inter_region_alpha_hi", Json::from(spec.profile.inter_region_alpha.1));
+        prof.set("inter_region_beta_lo", Json::from(spec.profile.inter_region_beta.0));
+        prof.set("inter_region_beta_hi", Json::from(spec.profile.inter_region_beta.1));
+        prof.set("seed", Json::from(spec.profile.seed));
+        root.set("network", prof);
+        root
+    }
+
+    /// Parse a spec from JSON (inverse of [`Cluster::spec_to_json`]).
+    pub fn spec_from_json(j: &crate::util::json::Json) -> Result<ClusterSpec> {
+        let name = j.str("name").context("cluster name")?.to_string();
+        let mut regions = Vec::new();
+        for r in j.arr("regions").context("regions")? {
+            let rname = r.str("name")?.to_string();
+            let mut machs = Vec::new();
+            for m in r.arr("machines")? {
+                let gpu_name = m.str("gpu")?;
+                let gpu = GpuType::from_name(gpu_name)
+                    .with_context(|| format!("unknown gpu type '{gpu_name}'"))?;
+                let count = m.usize("count")?;
+                if count == 0 {
+                    bail!("machine with zero GPUs");
+                }
+                let link = match m.str("link")? {
+                    "nvlink" => LocalLink::NvLink,
+                    "pcie4" => LocalLink::Pcie4,
+                    other => bail!("unknown link class '{other}'"),
+                };
+                machs.push((gpu, count, link));
+            }
+            regions.push((rname, machs));
+        }
+        let profile = match j.opt("network") {
+            None => NetworkProfile::default(),
+            Some(p) => NetworkProfile {
+                intra_region: (p.f64("intra_region_alpha")?, p.f64("intra_region_beta")?),
+                inter_region_alpha: (
+                    p.f64("inter_region_alpha_lo")?,
+                    p.f64("inter_region_alpha_hi")?,
+                ),
+                inter_region_beta: (
+                    p.f64("inter_region_beta_lo")?,
+                    p.f64("inter_region_beta_hi")?,
+                ),
+                seed: p.get("seed")?.as_u64()?,
+            },
+        };
+        Ok(ClusterSpec { name, regions, profile })
+    }
+
+    pub fn spec_from_file(path: &str) -> Result<ClusterSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cluster config {path}"))?;
+        let j = crate::util::json::Json::parse(&text)?;
+        Self::spec_from_json(&j)
+    }
+}
+
+// ----- paper presets --------------------------------------------------------
+
+/// §5.1 homogeneous baseline: two AWS p4d.24xlarge (8×A100-40G each),
+/// NVLink intra-machine, 400 Gbps fabric between them. $65.54/hour.
+pub fn homogeneous_a100() -> Cluster {
+    ClusterSpec {
+        name: "homogeneous-a100".into(),
+        regions: vec![(
+            "us-east-1".into(),
+            vec![
+                (GpuType::A100_40G, 8, LocalLink::NvLink),
+                (GpuType::A100_40G, 8, LocalLink::NvLink),
+            ],
+        )],
+        profile: datacenter_profile(),
+    }
+    .build()
+}
+
+/// §5.1 heterogeneous-full-price: 2×(8×3090Ti) Iceland, 2×(3×3090Ti)
+/// Norway, 1×(8×A5000) Nevada, Illinois: 2×(8×A6000) + 1×(8×A5000) +
+/// 1×(4×A40). 58 GPUs, ~$65/hour.
+pub fn heterogeneous_full_price() -> Cluster {
+    ClusterSpec {
+        name: "heterogeneous-full-price".into(),
+        regions: vec![
+            (
+                "iceland".into(),
+                vec![
+                    (GpuType::RTX3090TI, 8, LocalLink::Pcie4),
+                    (GpuType::RTX3090TI, 8, LocalLink::Pcie4),
+                ],
+            ),
+            (
+                "norway".into(),
+                vec![
+                    (GpuType::RTX3090TI, 3, LocalLink::Pcie4),
+                    (GpuType::RTX3090TI, 3, LocalLink::Pcie4),
+                ],
+            ),
+            ("nevada".into(), vec![(GpuType::A5000, 8, LocalLink::Pcie4)]),
+            (
+                "illinois".into(),
+                vec![
+                    (GpuType::A6000, 8, LocalLink::Pcie4),
+                    (GpuType::A6000, 8, LocalLink::Pcie4),
+                    (GpuType::A5000, 8, LocalLink::Pcie4),
+                    (GpuType::A40, 4, LocalLink::Pcie4),
+                ],
+            ),
+        ],
+        profile: NetworkProfile::default(),
+    }
+    .build()
+}
+
+/// §5.1 heterogeneous-half-price: Iceland 2×(8×3090Ti), Norway
+/// 2×(3×3090Ti), Nevada 1×(8×A5000). 30 GPUs, ~$29.6/hour.
+pub fn heterogeneous_half_price() -> Cluster {
+    ClusterSpec {
+        name: "heterogeneous-half-price".into(),
+        regions: vec![
+            (
+                "iceland".into(),
+                vec![
+                    (GpuType::RTX3090TI, 8, LocalLink::Pcie4),
+                    (GpuType::RTX3090TI, 8, LocalLink::Pcie4),
+                ],
+            ),
+            (
+                "norway".into(),
+                vec![
+                    (GpuType::RTX3090TI, 3, LocalLink::Pcie4),
+                    (GpuType::RTX3090TI, 3, LocalLink::Pcie4),
+                ],
+            ),
+            ("nevada".into(), vec![(GpuType::A5000, 8, LocalLink::Pcie4)]),
+        ],
+        profile: NetworkProfile::default(),
+    }
+    .build()
+}
+
+/// §3.1 case-study pool: one machine with 4×A6000-48G, one with
+/// 2×A5000-24G, one with 2×A4000-16G, all in one region.
+pub fn case_study() -> Cluster {
+    ClusterSpec {
+        name: "case-study".into(),
+        regions: vec![(
+            "local".into(),
+            vec![
+                (GpuType::A6000, 4, LocalLink::Pcie4),
+                (GpuType::A5000, 2, LocalLink::Pcie4),
+                (GpuType::A4000, 2, LocalLink::Pcie4),
+            ],
+        )],
+        profile: NetworkProfile::default(),
+    }
+    .build()
+}
+
+/// Look up a preset by name (CLI `--cluster`).
+pub fn preset(name: &str) -> Option<Cluster> {
+    match name {
+        "homogeneous" | "homogeneous-a100" => Some(homogeneous_a100()),
+        "full-price" | "heterogeneous-full-price" => Some(heterogeneous_full_price()),
+        "half-price" | "heterogeneous-half-price" => Some(heterogeneous_half_price()),
+        "case-study" => Some(case_study()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_price_has_58_gpus() {
+        let c = heterogeneous_full_price();
+        assert_eq!(c.devices.len(), 58);
+        assert_eq!(c.regions.len(), 4);
+        assert_eq!(c.machines.len(), 9);
+        // 3090Ti: 16+6 = 22; A5000: 8+8 = 16; A6000: 16; A40: 4
+        let counts = c.type_counts();
+        assert_eq!(counts[GpuType::RTX3090TI.index()], 22);
+        assert_eq!(counts[GpuType::A5000.index()], 16);
+        assert_eq!(counts[GpuType::A6000.index()], 16);
+        assert_eq!(counts[GpuType::A40.index()], 4);
+        assert_eq!(c.num_types(), 4);
+    }
+
+    #[test]
+    fn half_price_has_30_gpus() {
+        let c = heterogeneous_half_price();
+        assert_eq!(c.devices.len(), 30);
+        assert_eq!(c.num_types(), 2);
+    }
+
+    #[test]
+    fn homogeneous_budget_close_to_paper() {
+        let c = homogeneous_a100();
+        assert_eq!(c.devices.len(), 16);
+        // paper: $65.54/hour for 16 A100s
+        assert!((c.budget_per_hour - 65.54).abs() < 2.0, "{}", c.budget_per_hour);
+    }
+
+    #[test]
+    fn full_vs_half_budget_ratio() {
+        let full = heterogeneous_full_price().budget_per_hour;
+        let half = heterogeneous_half_price().budget_per_hour;
+        // paper: $65.04 vs $29.6 — half should be ~45% of full
+        let ratio = half / full;
+        assert!((0.35..0.6).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn case_study_pool() {
+        let c = case_study();
+        assert_eq!(c.devices.len(), 8);
+        assert_eq!(c.machines.len(), 3);
+    }
+
+    #[test]
+    fn offline_devices_excluded() {
+        let mut c = heterogeneous_half_price();
+        c.take_offline(&[0, 1, 2, 3]);
+        assert_eq!(c.online_devices().len(), 26);
+        assert_eq!(c.type_counts().iter().sum::<usize>(), 26);
+    }
+
+    #[test]
+    fn json_spec_roundtrip() {
+        let spec = ClusterSpec {
+            name: "rt".into(),
+            regions: vec![
+                ("r0".into(), vec![(GpuType::A6000, 4, LocalLink::Pcie4)]),
+                ("r1".into(), vec![(GpuType::A100_40G, 8, LocalLink::NvLink)]),
+            ],
+            profile: NetworkProfile::default(),
+        };
+        let j = Cluster::spec_to_json(&spec);
+        let spec2 = Cluster::spec_from_json(&j).unwrap();
+        assert_eq!(spec2.name, "rt");
+        assert_eq!(spec2.regions.len(), 2);
+        assert_eq!(spec2.regions[0].1[0].0, GpuType::A6000);
+        assert_eq!(spec2.regions[1].1[0].2, LocalLink::NvLink);
+        let c1 = spec.build();
+        let c2 = spec2.build();
+        assert_eq!(c1.devices.len(), c2.devices.len());
+        assert_eq!(c1.comm.alpha, c2.comm.alpha);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        use crate::util::json::Json;
+        let bad = Json::parse(r#"{"name":"x","regions":[{"name":"r","machines":[{"gpu":"H100","count":1,"link":"pcie4"}]}]}"#).unwrap();
+        assert!(Cluster::spec_from_json(&bad).is_err());
+        let zero = Json::parse(r#"{"name":"x","regions":[{"name":"r","machines":[{"gpu":"A40","count":0,"link":"pcie4"}]}]}"#).unwrap();
+        assert!(Cluster::spec_from_json(&zero).is_err());
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["homogeneous", "full-price", "half-price", "case-study"] {
+            assert!(preset(name).is_some(), "{name}");
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn devices_by_machine_groups() {
+        let c = case_study();
+        let by_m = c.devices_by_machine();
+        assert_eq!(by_m.len(), 3);
+        assert_eq!(by_m[&0].len(), 4);
+        assert_eq!(by_m[&1].len(), 2);
+        assert_eq!(by_m[&2].len(), 2);
+    }
+}

@@ -1,0 +1,98 @@
+//! Dynamic batching: collect queued requests into one execution batch.
+//!
+//! HexGen's batching is deliberately simple (paper Appendix D): a worker
+//! blocks for the first request, then keeps admitting until either the
+//! batch cap or the wait window is hit. Batch size is later padded to an
+//! artifact bucket by the pipeline executor.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batch-formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (≤ the largest artifact bucket).
+    pub max_batch: usize,
+    /// How long to wait for co-batchable requests after the first.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4, window: Duration::from_millis(20) }
+    }
+}
+
+/// Collect one batch from `rx`. Blocks for the first item; returns
+/// `None` when the channel is closed and drained.
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.window;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collects_waiting_items_up_to_cap() {
+        let (tx, rx) = channel();
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, window: Duration::from_millis(5) };
+        let b = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(b2, vec![4, 5]);
+    }
+
+    #[test]
+    fn returns_none_on_closed_empty_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let policy = BatchPolicy::default();
+        assert!(collect_batch(&rx, &policy).is_none());
+    }
+
+    #[test]
+    fn window_bounds_the_wait() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_batch: 8, window: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn late_items_join_within_window() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+        });
+        let policy = BatchPolicy { max_batch: 4, window: Duration::from_millis(200) };
+        let b = collect_batch(&rx, &policy).unwrap();
+        handle.join().unwrap();
+        assert!(b.contains(&1));
+        // item 2 should usually join; tolerate scheduler jitter
+        assert!(b.len() <= 2);
+    }
+}

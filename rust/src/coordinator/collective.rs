@@ -1,0 +1,119 @@
+//! Collectives between TP shard executions (paper §3.2).
+//!
+//! On the CPU testbed all shards execute in one process, so the
+//! AllReduce is a host-side element-wise sum; the module still accounts
+//! the bytes that would cross the wire (2 all-reduces per layer, the
+//! traffic Eq. 5 models) so serving metrics can report communication
+//! volumes.
+
+use crate::runtime::Tensor;
+
+/// Byte/op counters for a pipeline's collective traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// AllReduce invocations (2 per layer per token step at TP>1).
+    pub allreduce_ops: usize,
+    /// Bytes that would be aggregated across TP shards.
+    pub allreduce_bytes: f64,
+    /// Leader→leader stage hand-offs.
+    pub pp_sends: usize,
+    /// Bytes handed between pipeline stages.
+    pub pp_bytes: f64,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, other: &CommStats) {
+        self.allreduce_ops += other.allreduce_ops;
+        self.allreduce_bytes += other.allreduce_bytes;
+        self.pp_sends += other.pp_sends;
+        self.pp_bytes += other.pp_bytes;
+    }
+}
+
+/// Sum shard partials in place into the first tensor (AllReduce-sum).
+/// Returns the reduced tensor; panics on shape mismatch (a plan bug).
+pub fn all_reduce_sum(mut parts: Vec<Tensor>, stats: &mut CommStats) -> Tensor {
+    assert!(!parts.is_empty(), "all_reduce over zero shards");
+    let mut acc = parts.remove(0);
+    for p in &parts {
+        assert_eq!(p.dims, acc.dims, "shard partial shape mismatch");
+        for (a, b) in acc.data.iter_mut().zip(&p.data) {
+            *a += b;
+        }
+    }
+    if !parts.is_empty() {
+        stats.allreduce_ops += 1;
+        stats.allreduce_bytes += (acc.data.len() * 4 * (parts.len() + 1)) as f64;
+    }
+    acc
+}
+
+/// Residual add: `x += delta` (same shape).
+pub fn add_residual(x: &mut Tensor, delta: &Tensor) {
+    assert_eq!(x.dims, delta.dims, "residual shape mismatch");
+    for (a, b) in x.data.iter_mut().zip(&delta.data) {
+        *a += b;
+    }
+}
+
+/// Record a leader→leader pipeline hand-off of `t`.
+pub fn record_pp_send(t: &Tensor, stats: &mut CommStats) {
+    stats.pp_sends += 1;
+    stats.pp_bytes += (t.data.len() * 4) as f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: Vec<f32>) -> Tensor {
+        Tensor { dims: vec![data.len()], data }
+    }
+
+    #[test]
+    fn sum_of_shards() {
+        let mut stats = CommStats::default();
+        let out = all_reduce_sum(
+            vec![t(vec![1.0, 2.0]), t(vec![10.0, 20.0]), t(vec![100.0, 200.0])],
+            &mut stats,
+        );
+        assert_eq!(out.data, vec![111.0, 222.0]);
+        assert_eq!(stats.allreduce_ops, 1);
+        assert_eq!(stats.allreduce_bytes, (2 * 4 * 3) as f64);
+    }
+
+    #[test]
+    fn single_shard_is_free() {
+        let mut stats = CommStats::default();
+        let out = all_reduce_sum(vec![t(vec![5.0])], &mut stats);
+        assert_eq!(out.data, vec![5.0]);
+        assert_eq!(stats.allreduce_ops, 0);
+        assert_eq!(stats.allreduce_bytes, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_shards_panic() {
+        let mut stats = CommStats::default();
+        all_reduce_sum(vec![t(vec![1.0]), t(vec![1.0, 2.0])], &mut stats);
+    }
+
+    #[test]
+    fn residual_and_pp_accounting() {
+        let mut x = t(vec![1.0, 1.0]);
+        add_residual(&mut x, &t(vec![2.0, 3.0]));
+        assert_eq!(x.data, vec![3.0, 4.0]);
+        let mut stats = CommStats::default();
+        record_pp_send(&x, &mut stats);
+        assert_eq!(stats.pp_sends, 1);
+        assert_eq!(stats.pp_bytes, 8.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = CommStats { allreduce_ops: 1, allreduce_bytes: 8.0, pp_sends: 2, pp_bytes: 16.0 };
+        a.merge(&CommStats { allreduce_ops: 3, allreduce_bytes: 24.0, pp_sends: 1, pp_bytes: 4.0 });
+        assert_eq!(a.allreduce_ops, 4);
+        assert_eq!(a.pp_bytes, 20.0);
+    }
+}

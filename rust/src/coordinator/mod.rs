@@ -1,0 +1,16 @@
+//! The HexGen coordinator (Layer 3): request routing, dynamic batching,
+//! leader-side collectives, and the asymmetric TP×PP pipeline executor —
+//! the real serving path (paper §3.2, Appendix C). Python never runs
+//! here; the executors load AOT artifacts via PJRT.
+
+pub mod batcher;
+pub mod collective;
+pub mod pipeline;
+pub mod router;
+pub mod service;
+
+pub use batcher::{collect_batch, BatchPolicy};
+pub use collective::{add_residual, all_reduce_sum, CommStats};
+pub use pipeline::{argmax_rows, plan_from_strategy, GenerationResult, PipelineExecutor, StagePlan};
+pub use router::{RoutePolicy, Router};
+pub use service::{collect_all, Completion, HexGenService, ServiceConfig};

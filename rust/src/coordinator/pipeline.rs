@@ -1,0 +1,412 @@
+//! Asymmetric pipeline executor: runs a generation batch through a chain
+//! of stages with per-stage TP degrees (paper §3.2), calling the AOT
+//! stage executables via PJRT and performing the leader-side collectives
+//! in Rust.
+//!
+//! The execution scheme per transformer layer is Megatron's:
+//!
+//! ```text
+//! x ─┬─ shard₀: attn_partial ─┐
+//!    ├─ shard₁: attn_partial ─┼─ AllReduce(sum) ─ +x ─┬─ shard₀: mlp ─┐
+//!    └─ …                     ┘                       └─ …            ┴─ AllReduce ─ +h
+//! ```
+//!
+//! with the KV caches held per (layer, shard) between decode steps.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{InputArg, ModelRuntime, Tensor, WeightStore};
+
+use super::collective::{add_residual, all_reduce_sum, record_pp_send, CommStats};
+
+/// One stage of the serving plan: a contiguous layer range at a TP degree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StagePlan {
+    pub layer_start: usize,
+    pub layer_count: usize,
+    pub tp: usize,
+}
+
+impl StagePlan {
+    pub fn layers(&self) -> std::ops::Range<usize> {
+        self.layer_start..self.layer_start + self.layer_count
+    }
+}
+
+/// Build a plan from TP-degree + layer-count lists (Appendix-F notation,
+/// e.g. `tp=[2,1]`, `layers=[4,2]`).
+pub fn plan_from_strategy(tps: &[usize], layers: &[usize]) -> Result<Vec<StagePlan>> {
+    if tps.len() != layers.len() || tps.is_empty() {
+        bail!("strategy lists must be equal-length and non-empty");
+    }
+    let mut start = 0;
+    let mut out = Vec::with_capacity(tps.len());
+    for (&tp, &lc) in tps.iter().zip(layers) {
+        if lc == 0 {
+            bail!("zero-layer stage");
+        }
+        out.push(StagePlan { layer_start: start, layer_count: lc, tp });
+        start += lc;
+    }
+    Ok(out)
+}
+
+/// Result of one generation batch.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    /// Generated tokens per request row (pad rows removed).
+    pub tokens: Vec<Vec<i32>>,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+    pub decode_steps: usize,
+    pub comm: CommStats,
+    /// Batch bucket actually executed (≥ the real batch).
+    pub bucket: usize,
+}
+
+/// KV caches for one stage: `[layer][shard] -> (k, v)`.
+type StageCaches = Vec<Vec<(Tensor, Tensor)>>;
+
+/// Executes generation through an asymmetric TP×PP plan on one thread.
+pub struct PipelineExecutor {
+    runtime: ModelRuntime,
+    stages: Vec<StagePlan>,
+}
+
+impl PipelineExecutor {
+    /// Load a runtime from `artifacts_dir` and validate the plan against
+    /// the manifest (layer coverage, supported TP degrees).
+    pub fn new(artifacts_dir: &Path, stages: Vec<StagePlan>) -> Result<PipelineExecutor> {
+        let runtime = ModelRuntime::load(artifacts_dir)?;
+        Self::with_runtime(runtime, stages)
+    }
+
+    pub fn with_runtime(runtime: ModelRuntime, stages: Vec<StagePlan>) -> Result<PipelineExecutor> {
+        let m = &runtime.manifest;
+        let total: usize = stages.iter().map(|s| s.layer_count).sum();
+        if total != m.model.layers {
+            bail!("plan covers {total} layers, model has {}", m.model.layers);
+        }
+        let mut next = 0;
+        for s in &stages {
+            if s.layer_start != next {
+                bail!("stages not contiguous at layer {next}");
+            }
+            next += s.layer_count;
+            if !m.tp_degrees.contains(&s.tp) {
+                bail!("tp={} has no artifacts (available {:?})", s.tp, m.tp_degrees);
+            }
+        }
+        Ok(PipelineExecutor { runtime, stages })
+    }
+
+    pub fn stages(&self) -> &[StagePlan] {
+        &self.stages
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.runtime
+    }
+
+    /// Strategy string in the paper's Appendix-F notation, e.g. `[2,1]`.
+    pub fn strategy_string(&self) -> String {
+        let v: Vec<String> = self.stages.iter().map(|s| s.tp.to_string()).collect();
+        format!("[{}]", v.join(","))
+    }
+
+    /// Generate up to `max_new` tokens for a batch of prompts (each
+    /// exactly `prompt_len` tokens; see [`crate::runtime::tokenizer`]).
+    /// Greedy decoding.
+    pub fn generate(&self, prompts: &[Vec<i32>], max_new: usize) -> Result<GenerationResult> {
+        let info = self.runtime.manifest.model.clone();
+        let b_real = prompts.len();
+        if b_real == 0 {
+            bail!("empty batch");
+        }
+        for p in prompts {
+            if p.len() != info.prompt_len {
+                bail!("prompt must be exactly {} tokens, got {}", info.prompt_len, p.len());
+            }
+        }
+        let max_new = max_new.min(info.max_seq - info.prompt_len);
+        if max_new == 0 {
+            bail!("max_new must be >= 1");
+        }
+        let bucket = self.runtime.manifest.bucket_for(b_real)?;
+
+        // Pad the batch to the bucket with PAD prompts.
+        let mut tokens: Vec<i32> = Vec::with_capacity(bucket * info.prompt_len);
+        for p in prompts {
+            tokens.extend_from_slice(p);
+        }
+        tokens.resize(bucket * info.prompt_len, crate::runtime::tokenizer::PAD);
+
+        let mut comm = CommStats::default();
+
+        // ---- prefill --------------------------------------------------
+        let t0 = Instant::now();
+        let mut x = self.embed(&tokens, bucket, info.prompt_len, true)?;
+        let mut caches: Vec<StageCaches> = Vec::with_capacity(self.stages.len());
+        for (si, stage) in self.stages.iter().enumerate() {
+            let mut stage_caches: StageCaches = Vec::with_capacity(stage.layer_count);
+            for layer in stage.layers() {
+                let (h, layer_caches) =
+                    self.layer_prefill(&x, layer, stage.tp, bucket, &mut comm)?;
+                x = h;
+                stage_caches.push(layer_caches);
+            }
+            caches.push(stage_caches);
+            if si + 1 < self.stages.len() {
+                record_pp_send(&x, &mut comm);
+            }
+        }
+        let logits = self.lm_head(&x, bucket, true)?;
+        let mut next = argmax_rows(&logits, info.vocab);
+        let prefill_seconds = t0.elapsed().as_secs_f64();
+
+        let mut generated: Vec<Vec<i32>> = vec![Vec::with_capacity(max_new); bucket];
+        for (row, g) in generated.iter_mut().enumerate() {
+            g.push(next[row]);
+        }
+
+        // ---- decode ----------------------------------------------------
+        let t1 = Instant::now();
+        let mut steps = 1; // first token came from prefill logits
+        for step in 1..max_new {
+            let pos = (info.prompt_len + step - 1) as i32;
+            let tok_batch: Vec<i32> = next.clone();
+            let mut x = self.embed(&tok_batch, bucket, 1, false)?;
+            for (si, stage) in self.stages.iter().enumerate() {
+                for (li, layer) in stage.layers().enumerate() {
+                    let h = self.layer_decode(
+                        &x,
+                        layer,
+                        stage.tp,
+                        bucket,
+                        pos,
+                        &mut caches[si][li],
+                        &mut comm,
+                    )?;
+                    x = h;
+                }
+                if si + 1 < self.stages.len() {
+                    record_pp_send(&x, &mut comm);
+                }
+            }
+            let logits = self.lm_head(&x, bucket, false)?;
+            next = argmax_rows(&logits, info.vocab);
+            for (row, g) in generated.iter_mut().enumerate() {
+                g.push(next[row]);
+            }
+            steps += 1;
+        }
+        let decode_seconds = t1.elapsed().as_secs_f64();
+
+        generated.truncate(b_real);
+        Ok(GenerationResult {
+            tokens: generated,
+            prefill_seconds,
+            decode_seconds,
+            decode_steps: steps,
+            comm,
+            bucket,
+        })
+    }
+
+    // ---- stage pieces ---------------------------------------------------
+
+    fn embed(&self, tokens: &[i32], bucket: usize, s: usize, prefill: bool) -> Result<Tensor> {
+        let name = if prefill {
+            format!("embed_prefill_b{bucket}")
+        } else {
+            format!("embed_decode_b{bucket}")
+        };
+        let mut outs = self.runtime.execute_t(
+            &name,
+            &[InputArg::I32(tokens, vec![bucket, s]), InputArg::Weight("embed")],
+        )?;
+        Ok(outs.remove(0))
+    }
+
+    fn lm_head(&self, x: &Tensor, bucket: usize, prefill: bool) -> Result<Tensor> {
+        let name = if prefill {
+            format!("lm_head_prefill_b{bucket}")
+        } else {
+            format!("lm_head_decode_b{bucket}")
+        };
+        let mut outs = self.runtime.execute_t(
+            &name,
+            &[InputArg::F32(x), InputArg::Weight("final_ln"), InputArg::Weight("lm_head")],
+        )?;
+        Ok(outs.remove(0))
+    }
+
+    /// One prefill layer: TP-sharded attention + MLP with host AllReduce.
+    /// Returns (new hidden state, per-shard (k, v) caches).
+    fn layer_prefill(
+        &self,
+        x: &Tensor,
+        layer: usize,
+        tp: usize,
+        bucket: usize,
+        comm: &mut CommStats,
+    ) -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
+        let attn_name = format!("attn_prefill_tp{tp}_b{bucket}");
+        let ln1 = format!("layers.{layer}.ln1");
+        let mut partials = Vec::with_capacity(tp);
+        let mut layer_caches = Vec::with_capacity(tp);
+        for r in 0..tp {
+            let wq = WeightStore::shard_name(layer, "wq", tp, r);
+            let wk = WeightStore::shard_name(layer, "wk", tp, r);
+            let wv = WeightStore::shard_name(layer, "wv", tp, r);
+            let wo = WeightStore::shard_name(layer, "wo", tp, r);
+            let mut outs = self.runtime.execute_t(
+                &attn_name,
+                &[
+                    InputArg::F32(x),
+                    InputArg::Weight(&ln1),
+                    InputArg::Weight(&wq),
+                    InputArg::Weight(&wk),
+                    InputArg::Weight(&wv),
+                    InputArg::Weight(&wo),
+                ],
+            )?;
+            let v_cache = outs.pop().context("missing v_cache")?;
+            let k_cache = outs.pop().context("missing k_cache")?;
+            let partial = outs.pop().context("missing partial")?;
+            partials.push(partial);
+            layer_caches.push((k_cache, v_cache));
+        }
+        let mut h = x.clone();
+        let reduced = all_reduce_sum(partials, comm);
+        add_residual(&mut h, &reduced);
+
+        let mlp_name = format!("mlp_prefill_tp{tp}_b{bucket}");
+        let ln2 = format!("layers.{layer}.ln2");
+        let mut mlp_partials = Vec::with_capacity(tp);
+        for r in 0..tp {
+            let w1 = WeightStore::shard_name(layer, "w1", tp, r);
+            let w2 = WeightStore::shard_name(layer, "w2", tp, r);
+            let mut outs = self.runtime.execute_t(
+                &mlp_name,
+                &[InputArg::F32(&h), InputArg::Weight(&ln2), InputArg::Weight(&w1), InputArg::Weight(&w2)],
+            )?;
+            mlp_partials.push(outs.remove(0));
+        }
+        let reduced = all_reduce_sum(mlp_partials, comm);
+        add_residual(&mut h, &reduced);
+        Ok((h, layer_caches))
+    }
+
+    /// One decode layer; updates the per-shard caches in place.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_decode(
+        &self,
+        x: &Tensor,
+        layer: usize,
+        tp: usize,
+        bucket: usize,
+        pos: i32,
+        caches: &mut Vec<(Tensor, Tensor)>,
+        comm: &mut CommStats,
+    ) -> Result<Tensor> {
+        let attn_name = format!("attn_decode_tp{tp}_b{bucket}");
+        let ln1 = format!("layers.{layer}.ln1");
+        let mut partials = Vec::with_capacity(tp);
+        for (r, (k_cache, v_cache)) in caches.iter_mut().enumerate() {
+            let wq = WeightStore::shard_name(layer, "wq", tp, r);
+            let wk = WeightStore::shard_name(layer, "wk", tp, r);
+            let wv = WeightStore::shard_name(layer, "wv", tp, r);
+            let wo = WeightStore::shard_name(layer, "wo", tp, r);
+            let mut outs = self.runtime.execute_t(
+                &attn_name,
+                &[
+                    InputArg::F32(x),
+                    InputArg::F32(k_cache),
+                    InputArg::F32(v_cache),
+                    InputArg::ScalarI32(pos),
+                    InputArg::Weight(&ln1),
+                    InputArg::Weight(&wq),
+                    InputArg::Weight(&wk),
+                    InputArg::Weight(&wv),
+                    InputArg::Weight(&wo),
+                ],
+            )?;
+            let new_v = outs.pop().context("missing v_cache")?;
+            let new_k = outs.pop().context("missing k_cache")?;
+            let partial = outs.pop().context("missing partial")?;
+            *k_cache = new_k;
+            *v_cache = new_v;
+            partials.push(partial);
+        }
+        let mut h = x.clone();
+        let reduced = all_reduce_sum(partials, comm);
+        add_residual(&mut h, &reduced);
+
+        let mlp_name = format!("mlp_decode_tp{tp}_b{bucket}");
+        let ln2 = format!("layers.{layer}.ln2");
+        let mut mlp_partials = Vec::with_capacity(tp);
+        for r in 0..tp {
+            let w1 = WeightStore::shard_name(layer, "w1", tp, r);
+            let w2 = WeightStore::shard_name(layer, "w2", tp, r);
+            let mut outs = self.runtime.execute_t(
+                &mlp_name,
+                &[InputArg::F32(&h), InputArg::Weight(&ln2), InputArg::Weight(&w1), InputArg::Weight(&w2)],
+            )?;
+            mlp_partials.push(outs.remove(0));
+        }
+        let reduced = all_reduce_sum(mlp_partials, comm);
+        add_residual(&mut h, &reduced);
+        Ok(h)
+    }
+}
+
+/// Row-wise argmax over a `[b, vocab]` tensor.
+pub fn argmax_rows(logits: &Tensor, vocab: usize) -> Vec<i32> {
+    assert_eq!(logits.dims.len(), 2);
+    assert_eq!(logits.dims[1], vocab);
+    logits
+        .data
+        .chunks_exact(vocab)
+        .map(|row| {
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (i, &v) in row.iter().enumerate() {
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_from_strategy_builds_ranges() {
+        let p = plan_from_strategy(&[2, 1], &[4, 2]).unwrap();
+        assert_eq!(p[0], StagePlan { layer_start: 0, layer_count: 4, tp: 2 });
+        assert_eq!(p[1], StagePlan { layer_start: 4, layer_count: 2, tp: 1 });
+        assert_eq!(p[1].layers(), 4..6);
+    }
+
+    #[test]
+    fn plan_validation_errors() {
+        assert!(plan_from_strategy(&[2], &[4, 2]).is_err());
+        assert!(plan_from_strategy(&[], &[]).is_err());
+        assert!(plan_from_strategy(&[1], &[0]).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor { dims: vec![2, 3], data: vec![0.1, 0.9, 0.3, 5.0, -1.0, 2.0] };
+        assert_eq!(argmax_rows(&t, 3), vec![1, 0]);
+    }
+}

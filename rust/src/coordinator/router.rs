@@ -1,0 +1,126 @@
+//! Request router over model replicas.
+//!
+//! The task coordinator (paper Appendix C) directs each request to a
+//! worker group according to the schedule. Policies: round-robin and
+//! least-outstanding-work (queue depth weighted by the replica's measured
+//! speed).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Fewest estimated outstanding work units (queue depth ÷ speed).
+    LeastLoaded,
+}
+
+/// Shared per-replica load accounting.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    outstanding: Vec<Arc<AtomicUsize>>,
+    /// Relative speed weight per replica (1.0 = baseline; higher = faster).
+    speed: Vec<f64>,
+    rr_next: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, replicas: usize) -> Router {
+        assert!(replicas > 0);
+        Router {
+            policy,
+            outstanding: (0..replicas).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            speed: vec![1.0; replicas],
+            rr_next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Set relative speed weights (e.g. 1/measured-latency per replica).
+    pub fn set_speeds(&mut self, speed: Vec<f64>) {
+        assert_eq!(speed.len(), self.outstanding.len());
+        assert!(speed.iter().all(|&s| s > 0.0));
+        self.speed = speed;
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Pick a replica for a new request and record the assignment.
+    pub fn route(&self) -> usize {
+        let r = match self.policy {
+            RoutePolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.outstanding.len()
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_cost = f64::INFINITY;
+                for (i, o) in self.outstanding.iter().enumerate() {
+                    let cost = (o.load(Ordering::Relaxed) as f64 + 1.0) / self.speed[i];
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.outstanding[r].fetch_add(1, Ordering::Relaxed);
+        r
+    }
+
+    /// Record completion of a request previously routed to `replica`.
+    pub fn complete(&self, replica: usize) {
+        self.outstanding[replica].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn outstanding(&self, replica: usize) -> usize {
+        self.outstanding[replica].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = Router::new(RoutePolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.route()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let a = r.route();
+        let b = r.route();
+        assert_ne!(a, b, "second request goes to the idle replica");
+        r.complete(a);
+        assert_eq!(r.route(), a);
+    }
+
+    #[test]
+    fn least_loaded_respects_speed() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_speeds(vec![4.0, 1.0]);
+        // replica 0 is 4× faster: it should absorb the first requests
+        // before replica 1 gets one ((q+1)/speed tie at the 5th pick).
+        let picks: Vec<usize> = (0..5).map(|_| r.route()).collect();
+        assert!(picks[..4].iter().all(|&p| p == 0), "{picks:?}");
+        assert_eq!(picks[4], 1, "{picks:?}");
+    }
+
+    #[test]
+    fn outstanding_tracks() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 1);
+        assert_eq!(r.outstanding(0), 0);
+        r.route();
+        r.route();
+        assert_eq!(r.outstanding(0), 2);
+        r.complete(0);
+        assert_eq!(r.outstanding(0), 1);
+    }
+}

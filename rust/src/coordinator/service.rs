@@ -1,0 +1,240 @@
+//! Threaded serving front-end: the real (non-simulated) HexGen service.
+//!
+//! One worker thread per replica, each owning a thread-confined
+//! [`PipelineExecutor`] (PJRT handles are not `Send`). The router assigns
+//! requests to replicas; each worker batches its queue (Appendix-D simple
+//! batching) and replies over per-request channels.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{tokenizer, Manifest, WeightStore};
+
+use super::batcher::{collect_batch, BatchPolicy};
+use super::collective::CommStats;
+use crate::runtime::ModelRuntime;
+
+use super::pipeline::{PipelineExecutor, StagePlan};
+use super::router::{RoutePolicy, Router};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifacts_dir: PathBuf,
+    /// One stage plan per replica.
+    pub replicas: Vec<Vec<StagePlan>>,
+    pub batch: BatchPolicy,
+    pub route: RoutePolicy,
+    /// Default generation length (≤ max_seq − prompt_len).
+    pub max_new_tokens: usize,
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// End-to-end latency (submit → response), seconds.
+    pub latency: f64,
+    /// Queueing delay before the batch started, seconds.
+    pub queued: f64,
+    pub replica: usize,
+    pub batch_size: usize,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+}
+
+struct WorkItem {
+    prompt_tokens: Vec<i32>,
+    max_new: usize,
+    submitted: Instant,
+    reply: Sender<Result<Completion, String>>,
+}
+
+/// Handle to a running service.
+pub struct HexGenService {
+    router: Arc<Router>,
+    queues: Vec<Sender<WorkItem>>,
+    workers: Vec<JoinHandle<()>>,
+    manifest: Manifest,
+    cfg: ServiceConfig,
+    comm_rx: Receiver<CommStats>,
+}
+
+impl HexGenService {
+    /// Start worker threads (compiling each replica's executables).
+    pub fn start(cfg: ServiceConfig) -> Result<HexGenService> {
+        if cfg.replicas.is_empty() {
+            bail!("no replicas configured");
+        }
+        let manifest = Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+        let weights = Arc::new(WeightStore::load(&cfg.artifacts_dir.join("weights.bin"))?);
+        let router = Arc::new(Router::new(cfg.route, cfg.replicas.len()));
+
+        let (comm_tx, comm_rx) = channel::<CommStats>();
+        let mut queues = Vec::with_capacity(cfg.replicas.len());
+        let mut workers = Vec::with_capacity(cfg.replicas.len());
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        for (rid, plan) in cfg.replicas.iter().enumerate() {
+            let (tx, rx) = channel::<WorkItem>();
+            queues.push(tx);
+            let plan = plan.clone();
+            let dir = cfg.artifacts_dir.clone();
+            let manifest = manifest.clone();
+            let weights = weights.clone();
+            let batch = cfg.batch;
+            let router = router.clone();
+            let comm_tx = comm_tx.clone();
+            let ready_tx = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(
+                    rid, dir, manifest, weights, plan, batch, rx, router, comm_tx, ready_tx,
+                )
+            }));
+        }
+        // Wait until every replica compiled its pipeline (or failed).
+        for _ in 0..cfg.replicas.len() {
+            ready_rx
+                .recv()
+                .context("worker died during startup")?
+                .map_err(|e| anyhow::anyhow!("replica startup failed: {e}"))?;
+        }
+        Ok(HexGenService { router, queues, workers, manifest, cfg, comm_rx })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Submit a prompt; returns a receiver for the completion.
+    pub fn submit(&self, prompt: &str, max_new: Option<usize>) -> Receiver<Result<Completion, String>> {
+        let (reply_tx, reply_rx) = channel();
+        let tokens = tokenizer::encode(prompt, self.manifest.model.prompt_len);
+        let item = WorkItem {
+            prompt_tokens: tokens,
+            max_new: max_new.unwrap_or(self.cfg.max_new_tokens),
+            submitted: Instant::now(),
+            reply: reply_tx,
+        };
+        let replica = self.router.route();
+        // Channel send only fails if the worker died; surface as error.
+        if self.queues[replica].send(item).is_err() {
+            let (etx, erx) = channel();
+            let _ = etx.send(Err(format!("replica {replica} is down")));
+            return erx;
+        }
+        reply_rx
+    }
+
+    /// Submit and block for the completion.
+    pub fn generate(&self, prompt: &str, max_new: Option<usize>) -> Result<Completion> {
+        let rx = self.submit(prompt, max_new);
+        rx.recv()
+            .context("service dropped the request")?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Drain accumulated communication stats from all workers.
+    pub fn comm_stats(&self) -> CommStats {
+        let mut total = CommStats::default();
+        while let Ok(s) = self.comm_rx.try_recv() {
+            total.merge(&s);
+        }
+        total
+    }
+
+    /// Shut down: close queues and join workers.
+    pub fn shutdown(self) {
+        drop(self.queues);
+        drop(self.comm_rx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    rid: usize,
+    dir: PathBuf,
+    manifest: Manifest,
+    weights: Arc<WeightStore>,
+    plan: Vec<StagePlan>,
+    batch: BatchPolicy,
+    rx: Receiver<WorkItem>,
+    router: Arc<Router>,
+    comm_tx: Sender<CommStats>,
+    ready_tx: Sender<Result<(), String>>,
+) {
+    // Thread-confined runtime (PJRT is not Send).
+    let exec = match ModelRuntime::with_weights(&dir, manifest, weights)
+        .and_then(|rt| PipelineExecutor::with_runtime(rt, plan))
+    {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    crate::log_info!("replica {rid} ready: strategy {}", exec.strategy_string());
+
+    while let Some(items) = collect_batch(&rx, &batch) {
+        let batch_size = items.len();
+        let started = Instant::now();
+        let prompts: Vec<Vec<i32>> = items.iter().map(|i| i.prompt_tokens.clone()).collect();
+        let max_new = items.iter().map(|i| i.max_new).max().unwrap_or(1);
+        match exec.generate(&prompts, max_new) {
+            Ok(result) => {
+                let _ = comm_tx.send(result.comm);
+                for (i, item) in items.into_iter().enumerate() {
+                    let tokens = result.tokens[i].clone();
+                    let completion = Completion {
+                        text: tokenizer::decode(&tokens),
+                        tokens,
+                        latency: item.submitted.elapsed().as_secs_f64(),
+                        queued: (started - item.submitted).as_secs_f64(),
+                        replica: rid,
+                        batch_size,
+                        prefill_seconds: result.prefill_seconds,
+                        decode_seconds: result.decode_seconds,
+                    };
+                    let _ = item.reply.send(Ok(completion));
+                    router.complete(rid);
+                }
+            }
+            Err(e) => {
+                let msg = format!("replica {rid} generation failed: {e:#}");
+                crate::log_error!("{msg}");
+                for item in items {
+                    let _ = item.reply.send(Err(msg.clone()));
+                    router.complete(rid);
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: wait on many submissions.
+pub fn collect_all(
+    rxs: Vec<Receiver<Result<Completion, String>>>,
+    timeout: Duration,
+) -> Vec<Result<Completion, String>> {
+    rxs.into_iter()
+        .map(|rx| {
+            rx.recv_timeout(timeout)
+                .unwrap_or_else(|e| Err(format!("timeout: {e}")))
+        })
+        .collect()
+}

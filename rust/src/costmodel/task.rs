@@ -1,0 +1,46 @@
+//! Inference task description (paper §4.1: `b_t`, `s_in`, `s_out`).
+
+/// One generative-inference task: a (possibly batched) request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct InferenceTask {
+    /// Batch size `b_t`.
+    pub batch: usize,
+    /// Prompt length `s_in` (tokens).
+    pub s_in: usize,
+    /// Output length `s_out` (tokens).
+    pub s_out: usize,
+}
+
+impl InferenceTask {
+    pub fn new(batch: usize, s_in: usize, s_out: usize) -> InferenceTask {
+        assert!(batch > 0 && s_in > 0 && s_out > 0);
+        InferenceTask { batch, s_in, s_out }
+    }
+
+    /// Total sequence length `s_in + s_out`.
+    pub fn total_len(&self) -> usize {
+        self.s_in + self.s_out
+    }
+
+    /// The paper's case-study request (§3.1): s_in=128, s_out=64, b=1.
+    pub fn case_study() -> InferenceTask {
+        InferenceTask::new(1, 128, 64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction() {
+        let t = InferenceTask::new(4, 128, 32);
+        assert_eq!(t.total_len(), 160);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_rejected() {
+        InferenceTask::new(0, 1, 1);
+    }
+}

@@ -1,0 +1,315 @@
+//! Shared infrastructure for the figure/table regeneration harnesses.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::Cluster;
+use crate::costmodel::CostModel;
+use crate::model::ModelSpec;
+use crate::parallelism::Deployment;
+use crate::scheduler::{GaConfig, GaResult, GeneticScheduler, MutationMode, PipelinePlanner};
+use crate::simulator::{simulate, BatchPolicy, RouterPolicy, SimConfig, SimOutcome, SloModel};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::{LengthDist, Request, WorkloadSpec};
+
+/// SLO scales swept in the attainment curves (Figure 2/3/5 x-axes).
+pub const SLO_SCALES: [f64; 8] = [1.0, 1.5, 2.0, 3.0, 5.0, 8.0, 12.0, 20.0];
+
+/// Request rates swept (paper: 0.125 – 8+ req/s).
+pub const RATES: [f64; 7] = [0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+
+/// Experiment-wide knobs derived from CLI flags.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    pub seed: u64,
+    /// Requests per simulated point.
+    pub requests: usize,
+    /// GA budget.
+    pub ga_population: usize,
+    pub ga_iterations: usize,
+    pub ga_patience: usize,
+    pub ga_fitness_requests: usize,
+    /// Where to dump machine-readable results (optional).
+    pub out_json: Option<String>,
+}
+
+impl ExpConfig {
+    pub fn from_args(args: &Args) -> ExpConfig {
+        let full = args.flag("full");
+        ExpConfig {
+            seed: args.get_u64("seed", 0x4E58_6E47),
+            requests: args.get_usize("requests", if full { 500 } else { 200 }),
+            ga_population: args.get_usize("population", if full { 16 } else { 10 }),
+            ga_iterations: args.get_usize("iterations", if full { 60 } else { 25 }),
+            ga_patience: args.get_usize("patience", if full { 15 } else { 10 }),
+            ga_fitness_requests: args.get_usize("fitness-requests", if full { 200 } else { 100 }),
+            out_json: args.get("out").map(str::to_string),
+        }
+    }
+
+    pub fn ga(&self, seed_salt: u64) -> GaConfig {
+        GaConfig {
+            population: self.ga_population,
+            iterations: self.ga_iterations,
+            patience: self.ga_patience,
+            seed: self.seed ^ seed_salt,
+            fitness_requests: self.ga_fitness_requests,
+            fitness_rate: 2.0,
+            ..GaConfig::default()
+        }
+    }
+}
+
+/// A named serving system under comparison (deployment + sim policy).
+pub struct System {
+    pub name: String,
+    pub cluster: Cluster,
+    pub deployment: Deployment,
+    pub sim: SimConfig,
+    pub ga: Option<GaResult>,
+}
+
+/// Schedule HexGen (asymmetric) on a cluster.
+pub fn hexgen_system(name: &str, cluster: Cluster, model: &ModelSpec, ga_cfg: GaConfig) -> System {
+    let res = GeneticScheduler::new(&cluster, model, ga_cfg).run();
+    System {
+        name: name.to_string(),
+        cluster,
+        deployment: res.deployment.clone(),
+        sim: SimConfig::default(),
+        ga: Some(res),
+    }
+}
+
+/// Schedule the symmetric-only ablation.
+pub fn symmetric_system(
+    name: &str,
+    cluster: Cluster,
+    model: &ModelSpec,
+    mut ga_cfg: GaConfig,
+) -> System {
+    ga_cfg.planner = PipelinePlanner::Symmetric;
+    let res = GeneticScheduler::new(&cluster, model, ga_cfg).run();
+    System {
+        name: name.to_string(),
+        cluster,
+        deployment: res.deployment.clone(),
+        sim: SimConfig::default(),
+        ga: Some(res),
+    }
+}
+
+/// The random-mutation strawman (Figure 6/7).
+pub fn random_mutation_system(
+    name: &str,
+    cluster: Cluster,
+    model: &ModelSpec,
+    mut ga_cfg: GaConfig,
+) -> System {
+    ga_cfg.mutation = MutationMode::Random;
+    let res = GeneticScheduler::new(&cluster, model, ga_cfg).run();
+    System {
+        name: name.to_string(),
+        cluster,
+        deployment: res.deployment.clone(),
+        sim: SimConfig::default(),
+        ga: Some(res),
+    }
+}
+
+/// The Petals-like swarm baseline: TP=1 chains, no batching beyond 1,
+/// token-granular admission (its sessions stream token-by-token).
+pub fn petals_system(name: &str, cluster: Cluster, model: &ModelSpec, seed: u64) -> System {
+    let deployment = crate::scheduler::swarm_deployment(&cluster, model, seed);
+    System {
+        name: name.to_string(),
+        cluster,
+        deployment,
+        sim: SimConfig {
+            batch: BatchPolicy { max_batch: 1, continuous: true },
+            router: RouterPolicy::RoundRobin,
+        },
+        ga: None,
+    }
+}
+
+/// HF-TGI-like baseline: symmetric homogeneous plans + continuous
+/// batching (Appendix D). The effective concurrent batch is capped at 4:
+/// a 70B model's KV cache on 40 GB cards bounds TGI's admission well
+/// below its configuration maximum (and an uncapped token-granular model
+/// would overstate 2023-era TGI throughput by an order of magnitude —
+/// see EXPERIMENTS.md §Figure 5).
+pub fn tgi_system(name: &str, cluster: Cluster, model: &ModelSpec, ga_cfg: GaConfig) -> System {
+    let mut sys = symmetric_system(name, cluster, model, ga_cfg);
+    sys.sim = SimConfig {
+        batch: BatchPolicy { max_batch: 4, continuous: true },
+        router: RouterPolicy::LeastLoaded,
+    };
+    sys
+}
+
+/// Simulate one (system, rate, s_out) point.
+pub fn run_point(
+    system: &System,
+    model: &ModelSpec,
+    rate: f64,
+    s_out: usize,
+    requests: usize,
+    seed: u64,
+) -> SimOutcome {
+    let cm = CostModel::new(&system.cluster, model);
+    let trace: Vec<Request> = WorkloadSpec {
+        rate,
+        num_requests: requests,
+        lengths: LengthDist::LmsysLike { s_out },
+        seed,
+    }
+    .generate();
+    simulate(&cm, &system.deployment, &trace, &system.sim)
+}
+
+/// Peak request rate sustaining `target` attainment at `scale` (binary
+/// search over the rate axis) — the paper's "resilience to peak rate".
+pub fn peak_rate(
+    system: &System,
+    model: &ModelSpec,
+    slo: &SloModel,
+    scale: f64,
+    s_out: usize,
+    requests: usize,
+    seed: u64,
+    target: f64,
+) -> f64 {
+    let ok = |rate: f64| {
+        run_point(system, model, rate, s_out, requests, seed).attainment(slo, scale) >= target
+    };
+    if !ok(0.05) {
+        return 0.0;
+    }
+    let mut lo = 0.05;
+    let mut hi = 0.05;
+    while ok(hi) && hi < 64.0 {
+        lo = hi;
+        hi *= 2.0;
+    }
+    if hi >= 64.0 && ok(hi) {
+        return hi;
+    }
+    for _ in 0..12 {
+        let mid = 0.5 * (lo + hi);
+        if ok(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+// ----- report formatting ------------------------------------------------
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:<width$}  ", c, width = widths[i]));
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    line(
+        &mut out,
+        &widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Render an attainment-vs-x curve as a compact series string.
+pub fn render_series(xs: &[f64], ys: &[f64]) -> String {
+    xs.iter()
+        .zip(ys)
+        .map(|(x, y)| format!("{x}:{y:.3}"))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+/// Dump results JSON when `--out` was given.
+pub fn maybe_dump(cfg: &ExpConfig, name: &str, payload: Json) -> anyhow::Result<()> {
+    if let Some(path) = &cfg.out_json {
+        let mut root = Json::obj();
+        root.set("experiment", Json::from(name));
+        root.set("seed", Json::from(cfg.seed));
+        root.set("data", payload);
+        std::fs::write(path, root.to_pretty())?;
+        println!("(wrote {path})");
+    }
+    Ok(())
+}
+
+/// Pretty one-line deployment summary.
+pub fn deployment_summary(cluster: &Cluster, d: &Deployment) -> String {
+    let strategies: BTreeMap<String, usize> =
+        d.pipelines.iter().fold(BTreeMap::new(), |mut m, p| {
+            *m.entry(p.strategy_string()).or_insert(0) += 1;
+            m
+        });
+    let s: Vec<String> = strategies
+        .into_iter()
+        .map(|(k, v)| format!("{v}x{k}"))
+        .collect();
+    format!(
+        "{} replicas on {} GPUs: {}",
+        d.num_replicas(),
+        d.devices().len(),
+        s.join(" ")
+    )
+    .replace("  ", " ")
+    + &format!(" ({})", cluster.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["sys", "val"],
+            &[
+                vec!["a".into(), "1.0".into()],
+                vec!["longer-name".into(), "2".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("sys"));
+        assert!(lines[2].contains('a'));
+    }
+
+    #[test]
+    fn series_renders() {
+        assert_eq!(render_series(&[1.0, 2.0], &[0.5, 1.0]), "1:0.500  2:1.000");
+    }
+
+    #[test]
+    fn exp_config_defaults() {
+        let cfg = ExpConfig::from_args(&Args::default());
+        assert_eq!(cfg.requests, 200);
+        let full = ExpConfig::from_args(&Args::parse(
+            ["--full".to_string()].into_iter(),
+        ));
+        assert_eq!(full.requests, 500);
+    }
+}

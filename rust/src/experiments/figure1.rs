@@ -1,0 +1,196 @@
+//! Figure 1 — §3.1 case study: parallel strategies over a heterogeneous
+//! pool (4×A6000 + 2×A5000 + 2×A4000 serving LLAMA-2 70B, s_in=128,
+//! s_out=64).
+//!
+//! Reproduces the paper's five candidate layouts (pure TP → OOM, naive
+//! PP → OOM, proportional PP=8, TP4+PP2, HexGen's asymmetric [4,2,2])
+//! plus the plan our Algorithm-1 DP finds, and reports single-request
+//! latency and speedups.
+
+use anyhow::Result;
+
+use crate::cluster;
+use crate::costmodel::{CostModel, InferenceTask, Phase};
+use crate::model::ModelSpec;
+use crate::parallelism::{Pipeline, Stage};
+use crate::scheduler::optimal_pipeline_opt;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::common::{maybe_dump, render_table, ExpConfig};
+
+struct Layout {
+    name: &'static str,
+    pipeline: Pipeline,
+}
+
+fn layouts() -> Vec<Layout> {
+    let s = |devices: Vec<usize>, layers: usize| Stage { devices, layers };
+    vec![
+        Layout {
+            // TP across all 8 GPUs (A4000 can't hold 1/8 of the model+cache)
+            name: "pure TP (TP=8)",
+            pipeline: Pipeline { stages: vec![s((0..8).collect(), 80)] },
+        },
+        Layout {
+            // even PP: 10 layers per GPU (A4000 can't hold 10 layers)
+            name: "pure PP (PP=8, even)",
+            pipeline: Pipeline {
+                stages: (0..8).map(|i| s(vec![i], 10)).collect(),
+            },
+        },
+        Layout {
+            // PP=8 with layers proportional to capacity: long pipeline
+            name: "PP=8 proportional",
+            pipeline: Pipeline {
+                stages: vec![
+                    s(vec![0], 14),
+                    s(vec![1], 14),
+                    s(vec![2], 14),
+                    s(vec![3], 14),
+                    s(vec![4], 7),
+                    s(vec![5], 7),
+                    s(vec![6], 5),
+                    s(vec![7], 5),
+                ],
+            },
+        },
+        Layout {
+            // TP=4 × PP=2: second stage's TP group spans two machines
+            name: "TP=4 PP=2",
+            pipeline: Pipeline {
+                stages: vec![s(vec![0, 1, 2, 3], 56), s(vec![4, 5, 6, 7], 24)],
+            },
+        },
+        Layout {
+            // HexGen's asymmetric plan from the paper
+            name: "HexGen [4,2,2] 48/20/12",
+            pipeline: Pipeline {
+                stages: vec![
+                    s(vec![0, 1, 2, 3], 48),
+                    s(vec![4, 5], 20),
+                    s(vec![6, 7], 12),
+                ],
+            },
+        },
+    ]
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = ExpConfig::from_args(args);
+    let c = cluster::case_study();
+    let m = ModelSpec::llama2_70b();
+    let cm = CostModel::new(&c, &m);
+    let t = InferenceTask::case_study();
+
+    println!("Figure 1 — case study: parallelism over heterogeneity");
+    println!("cluster: 1x(4xA6000-48G) + 1x(2xA5000-24G) + 1x(2xA4000-16G)");
+    println!("request: s_in={} s_out={} b={}\n", t.s_in, t.s_out, t.batch);
+
+    let mut rows = Vec::new();
+    let mut results: Vec<(String, Option<f64>)> = Vec::new();
+    for layout in layouts() {
+        let cost = layout.pipeline.cost(&cm, &t, Phase::Both);
+        results.push((layout.name.to_string(), cost));
+    }
+    // The plan Algorithm 1 finds on the full pool.
+    let dp = optimal_pipeline_opt(&cm, &c, &(0..8).collect::<Vec<_>>(), &t, 8, 8, true)
+        .expect("case study feasible");
+    results.push((
+        format!(
+            "HexGen DP-found {} {}",
+            dp.pipeline.strategy_string(),
+            dp.pipeline.layer_string()
+        ),
+        Some(dp.exact_cost),
+    ));
+
+    let hexgen_latency = results
+        .iter()
+        .find(|(n, _)| n.starts_with("HexGen [4,2,2]"))
+        .and_then(|(_, c)| *c)
+        .expect("paper layout feasible");
+
+    for (name, cost) in &results {
+        match cost {
+            None => rows.push(vec![name.clone(), "OOM".into(), "-".into()]),
+            Some(c) => rows.push(vec![
+                name.clone(),
+                format!("{c:.2}s"),
+                format!("{:.1}x", c / hexgen_latency),
+            ]),
+        }
+    }
+    println!(
+        "{}",
+        render_table(&["layout", "latency", "vs HexGen [4,2,2]"], &rows)
+    );
+
+    // Paper's claims: pure TP and naive PP OOM; asymmetric beats TP4+PP2
+    // by ~2x and the proportional PP by ~19x.
+    let oom = results.iter().filter(|(_, c)| c.is_none()).count();
+    let pp8 = results
+        .iter()
+        .find(|(n, _)| n.starts_with("PP=8"))
+        .and_then(|(_, c)| *c);
+    let tp4pp2 = results
+        .iter()
+        .find(|(n, _)| n.starts_with("TP=4"))
+        .and_then(|(_, c)| *c);
+    println!("paper-shape checks:");
+    println!("  OOM layouts: {oom} (paper: 2 — pure TP and even PP)");
+    if let (Some(a), Some(b)) = (tp4pp2, pp8) {
+        println!(
+            "  speedup vs TP4+PP2: {:.1}x (paper: ~2x);  vs PP=8 proportional: {:.1}x (paper: ~19x)",
+            a / hexgen_latency,
+            b / hexgen_latency
+        );
+    }
+
+    let mut data = Json::obj();
+    for (name, cost) in &results {
+        data.set(
+            name,
+            cost.map(Json::from).unwrap_or(Json::Str("OOM".into())),
+        );
+    }
+    maybe_dump(&cfg, "figure1", data)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_holds() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let cm = CostModel::new(&c, &m);
+        let t = InferenceTask::case_study();
+        let costs: Vec<Option<f64>> =
+            layouts().iter().map(|l| l.pipeline.cost(&cm, &t, Phase::Both)).collect();
+        // pure TP and even PP OOM
+        assert!(costs[0].is_none(), "TP=8 should OOM");
+        assert!(costs[1].is_none(), "even PP=8 should OOM");
+        // remaining three feasible
+        let pp8 = costs[2].unwrap();
+        let tp4pp2 = costs[3].unwrap();
+        let hexgen = costs[4].unwrap();
+        // asymmetric wins, and the orderings match the paper
+        assert!(hexgen < tp4pp2 && hexgen < pp8);
+        assert!(
+            tp4pp2 / hexgen > 1.3,
+            "vs TP4PP2 speedup too small: {}",
+            tp4pp2 / hexgen
+        );
+        // The paper measured 19x vs proportional PP=8 on real hardware
+        // (their PP had real framework per-stage overheads); the pure
+        // alpha-beta model yields a smaller but still decisive gap.
+        assert!(
+            pp8 / hexgen > 2.0,
+            "vs PP8 speedup too small: {}",
+            pp8 / hexgen
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Figure 2 — §5.2 cost-performance trade-off: SLO attainment of
+//! HexGen-full, HexGen w/o asymmetric parallelism, HexGen-half, and the
+//! homogeneous FlashAttention baseline, across output lengths 32/64/128,
+//! SLO scales, and request rates. Also prints the headline metrics:
+//! minimum latency deadline for 99% attainment and peak sustainable rate.
+
+use anyhow::Result;
+
+use crate::cluster;
+use crate::model::ModelSpec;
+use crate::simulator::SloModel;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::common::{
+    hexgen_system, maybe_dump, peak_rate, render_series, render_table, run_point,
+    symmetric_system, ExpConfig, System, RATES, SLO_SCALES,
+};
+
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = ExpConfig::from_args(args);
+    let m = ModelSpec::llama2_70b();
+    let slo = SloModel::new(&m);
+    let s_outs = args.get_usize_list("s-out", &[32, 64, 128]);
+    let rates = args.get_f64_list("rates", &[0.5, 1.0, 2.0, 4.0]);
+
+    println!("Figure 2 — cost-performance trade-off (SLO attainment)\n");
+    println!("scheduling the four systems (GA budget: pop={} iters={})...",
+             cfg.ga_population, cfg.ga_iterations);
+
+    let systems: Vec<System> = vec![
+        hexgen_system("hexgen-full", cluster::heterogeneous_full_price(), &m, cfg.ga(1)),
+        symmetric_system("hexgen-full-w/o-asym", cluster::heterogeneous_full_price(), &m, cfg.ga(2)),
+        hexgen_system("hexgen-half", cluster::heterogeneous_half_price(), &m, cfg.ga(3)),
+        symmetric_system("flash-attn-homogeneous", cluster::homogeneous_a100(), &m, cfg.ga(4)),
+    ];
+    for s in &systems {
+        println!(
+            "  {:<24} {}",
+            s.name,
+            super::common::deployment_summary(&s.cluster, &s.deployment)
+        );
+        if let Some(ga) = &s.ga {
+            println!(
+                "  {:<24} search: {} iters, {:.1}s, est. attainment {:.2}",
+                "", ga.iterations_run, ga.wall_time, ga.fitness
+            );
+        }
+    }
+    println!();
+
+    let mut data = Json::obj();
+    for &s_out in &s_outs {
+        println!("== output length {s_out} ==");
+        // attainment vs SLO scale, one row per (system, rate)
+        for &rate in &rates {
+            let mut rows = Vec::new();
+            for sys in &systems {
+                let out = run_point(sys, &m, rate, s_out, cfg.requests, cfg.seed ^ 0xF2);
+                let ys: Vec<f64> =
+                    SLO_SCALES.iter().map(|&sc| out.attainment(&slo, sc)).collect();
+                rows.push(vec![sys.name.clone(), render_series(&SLO_SCALES, &ys)]);
+                data.set(
+                    &format!("att/{}/{s_out}/{rate}", sys.name),
+                    Json::from(ys),
+                );
+            }
+            println!("rate {rate} req/s — attainment vs SLO scale:");
+            println!("{}", render_table(&["system", "scale:attainment"], &rows));
+        }
+
+        // attainment vs rate at a fixed scale (last column of the figure)
+        let fixed_scale = 5.0;
+        let mut rows = Vec::new();
+        for sys in &systems {
+            let ys: Vec<f64> = RATES
+                .iter()
+                .map(|&r| {
+                    run_point(sys, &m, r, s_out, cfg.requests, cfg.seed ^ 0xF3)
+                        .attainment(&slo, fixed_scale)
+                })
+                .collect();
+            rows.push(vec![sys.name.clone(), render_series(&RATES, &ys)]);
+            data.set(&format!("att-vs-rate/{}/{s_out}", sys.name), Json::from(ys));
+        }
+        println!("attainment vs rate (SLO scale {fixed_scale}):");
+        println!("{}", render_table(&["system", "rate:attainment"], &rows));
+    }
+
+    // Headline metrics at s_out=32, the paper's summary claims.
+    println!("== headline metrics (s_out=32, 99% attainment) ==");
+    let s_out = 32;
+    let mut rows = Vec::new();
+    let mut deadline_flash = 0.0;
+    let mut peak_flash = 0.0;
+    let mut deadline_hex = 0.0;
+    let mut peak_hex = 0.0;
+    for sys in &systems {
+        let out = run_point(sys, &m, 1.0, s_out, cfg.requests, cfg.seed ^ 0xF4);
+        let deadline = out.min_scale_for_attainment(&slo, 0.99);
+        let peak = peak_rate(sys, &m, &slo, 5.0, s_out, cfg.requests, cfg.seed ^ 0xF5, 0.99);
+        rows.push(vec![
+            sys.name.clone(),
+            format!("{deadline:.2}"),
+            format!("{peak:.2}"),
+        ]);
+        data.set(&format!("deadline/{}", sys.name), Json::from(deadline));
+        data.set(&format!("peak-rate/{}", sys.name), Json::from(peak));
+        if sys.name == "flash-attn-homogeneous" {
+            deadline_flash = deadline;
+            peak_flash = peak;
+        }
+        if sys.name == "hexgen-full" {
+            deadline_hex = deadline;
+            peak_hex = peak;
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["system", "min deadline @99% (SLO scale)", "peak rate @scale5 (req/s)"],
+            &rows
+        )
+    );
+    if deadline_hex > 0.0 && peak_flash > 0.0 {
+        println!(
+            "hexgen-full vs homogeneous: {:.2}x lower deadline (paper: up to 2.3x), {:.2}x peak rate (paper: up to 4x)",
+            deadline_flash / deadline_hex,
+            peak_hex / peak_flash
+        );
+    }
+    maybe_dump(&cfg, "figure2", data)?;
+    Ok(())
+}

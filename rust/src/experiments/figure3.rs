@@ -1,0 +1,91 @@
+//! Figure 3 — §5.3 HexGen (half-price heterogeneous) vs Petals-style
+//! swarm parallelism: attainment vs SLO scale and vs rate; headline:
+//! up to 3.5× lower deadline, 10× higher sustainable rate.
+
+use anyhow::Result;
+
+use crate::cluster;
+use crate::model::ModelSpec;
+use crate::simulator::SloModel;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::common::{
+    hexgen_system, maybe_dump, peak_rate, petals_system, render_series, render_table,
+    run_point, ExpConfig, RATES, SLO_SCALES,
+};
+
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = ExpConfig::from_args(args);
+    let m = ModelSpec::llama2_70b();
+    let slo = SloModel::new(&m);
+    let s_outs = args.get_usize_list("s-out", &[32, 64]);
+    let rates = args.get_f64_list("rates", &[0.25, 1.0]);
+
+    println!("Figure 3 — HexGen vs Petals (half-price heterogeneous)\n");
+    let systems = vec![
+        hexgen_system("hexgen-half", cluster::heterogeneous_half_price(), &m, cfg.ga(31)),
+        petals_system("petals-swarm", cluster::heterogeneous_half_price(), &m, cfg.seed ^ 31),
+    ];
+    for s in &systems {
+        println!(
+            "  {:<14} {}",
+            s.name,
+            super::common::deployment_summary(&s.cluster, &s.deployment)
+        );
+    }
+    println!();
+
+    let mut data = Json::obj();
+    for &s_out in &s_outs {
+        println!("== output length {s_out} ==");
+        for &rate in &rates {
+            let mut rows = Vec::new();
+            for sys in &systems {
+                let out = run_point(sys, &m, rate, s_out, cfg.requests, cfg.seed ^ 0xF30);
+                let ys: Vec<f64> =
+                    SLO_SCALES.iter().map(|&sc| out.attainment(&slo, sc)).collect();
+                rows.push(vec![sys.name.clone(), render_series(&SLO_SCALES, &ys)]);
+                data.set(&format!("att/{}/{s_out}/{rate}", sys.name), Json::from(ys));
+            }
+            println!("rate {rate} req/s — attainment vs SLO scale:");
+            println!("{}", render_table(&["system", "scale:attainment"], &rows));
+        }
+        let mut rows = Vec::new();
+        for sys in &systems {
+            let ys: Vec<f64> = RATES
+                .iter()
+                .map(|&r| {
+                    run_point(sys, &m, r, s_out, cfg.requests, cfg.seed ^ 0xF31)
+                        .attainment(&slo, 5.0)
+                })
+                .collect();
+            rows.push(vec![sys.name.clone(), render_series(&RATES, &ys)]);
+        }
+        println!("attainment vs rate (SLO scale 5):");
+        println!("{}", render_table(&["system", "rate:attainment"], &rows));
+    }
+
+    // Headlines.
+    let s_out = 32;
+    let hex = &systems[0];
+    let pet = &systems[1];
+    let d_hex = run_point(hex, &m, 0.5, s_out, cfg.requests, cfg.seed ^ 0xF32)
+        .min_scale_for_attainment(&slo, 0.99);
+    let d_pet = run_point(pet, &m, 0.5, s_out, cfg.requests, cfg.seed ^ 0xF32)
+        .min_scale_for_attainment(&slo, 0.99);
+    let p_hex = peak_rate(hex, &m, &slo, 8.0, s_out, cfg.requests, cfg.seed ^ 0xF33, 0.95);
+    let p_pet = peak_rate(pet, &m, &slo, 8.0, s_out, cfg.requests, cfg.seed ^ 0xF33, 0.95);
+    println!(
+        "deadline: hexgen {d_hex:.2} vs petals {d_pet:.2} → {:.1}x lower (paper: ≤3.5x)",
+        d_pet / d_hex
+    );
+    let rate_ratio = if p_pet > 0.0 { p_hex / p_pet } else { f64::INFINITY };
+    println!(
+        "peak rate: hexgen {p_hex:.2} vs petals {p_pet:.2} req/s → {rate_ratio:.1}x (paper: ~10x)"
+    );
+    data.set("deadline-ratio", Json::from(d_pet / d_hex));
+    data.set("peak-ratio", Json::from(rate_ratio.min(1e6)));
+    maybe_dump(&cfg, "figure3", data)?;
+    Ok(())
+}

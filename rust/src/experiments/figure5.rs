@@ -1,0 +1,86 @@
+//! Figure 5 — §5.3 HexGen (full-price heterogeneous) vs HuggingFace-TGI
+//! (homogeneous datacenter, continuous batching): near-parity, with
+//! HexGen up to 1.25× lower latency deadlines.
+
+use anyhow::Result;
+
+use crate::cluster;
+use crate::model::ModelSpec;
+use crate::simulator::SloModel;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::common::{
+    hexgen_system, maybe_dump, peak_rate, render_series, render_table, run_point,
+    tgi_system, ExpConfig, RATES, SLO_SCALES,
+};
+
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = ExpConfig::from_args(args);
+    let m = ModelSpec::llama2_70b();
+    let slo = SloModel::new(&m);
+    let s_outs = args.get_usize_list("s-out", &[32, 64]);
+    let rates = args.get_f64_list("rates", &[1.0, 4.0]);
+
+    println!("Figure 5 — HexGen vs HuggingFace-TGI\n");
+    let systems = vec![
+        hexgen_system("hexgen-full", cluster::heterogeneous_full_price(), &m, cfg.ga(51)),
+        tgi_system("hf-tgi-homogeneous", cluster::homogeneous_a100(), &m, cfg.ga(52)),
+    ];
+    for s in &systems {
+        println!(
+            "  {:<20} {}",
+            s.name,
+            super::common::deployment_summary(&s.cluster, &s.deployment)
+        );
+    }
+    println!();
+
+    let mut data = Json::obj();
+    for &s_out in &s_outs {
+        println!("== output length {s_out} ==");
+        for &rate in &rates {
+            let mut rows = Vec::new();
+            for sys in &systems {
+                let out = run_point(sys, &m, rate, s_out, cfg.requests, cfg.seed ^ 0xF50);
+                let ys: Vec<f64> =
+                    SLO_SCALES.iter().map(|&sc| out.attainment(&slo, sc)).collect();
+                rows.push(vec![sys.name.clone(), render_series(&SLO_SCALES, &ys)]);
+                data.set(&format!("att/{}/{s_out}/{rate}", sys.name), Json::from(ys));
+            }
+            println!("rate {rate} req/s — attainment vs SLO scale:");
+            println!("{}", render_table(&["system", "scale:attainment"], &rows));
+        }
+        let mut rows = Vec::new();
+        for sys in &systems {
+            let ys: Vec<f64> = RATES
+                .iter()
+                .map(|&r| {
+                    run_point(sys, &m, r, s_out, cfg.requests, cfg.seed ^ 0xF51)
+                        .attainment(&slo, 5.0)
+                })
+                .collect();
+            rows.push(vec![sys.name.clone(), render_series(&RATES, &ys)]);
+        }
+        println!("attainment vs rate (SLO scale 5):");
+        println!("{}", render_table(&["system", "rate:attainment"], &rows));
+    }
+
+    let s_out = 32;
+    let d_hex = run_point(&systems[0], &m, 1.0, s_out, cfg.requests, cfg.seed ^ 0xF52)
+        .min_scale_for_attainment(&slo, 0.99);
+    let d_tgi = run_point(&systems[1], &m, 1.0, s_out, cfg.requests, cfg.seed ^ 0xF52)
+        .min_scale_for_attainment(&slo, 0.99);
+    let p_hex = peak_rate(&systems[0], &m, &slo, 5.0, s_out, cfg.requests, cfg.seed ^ 0xF53, 0.99);
+    let p_tgi = peak_rate(&systems[1], &m, &slo, 5.0, s_out, cfg.requests, cfg.seed ^ 0xF53, 0.99);
+    println!(
+        "deadline: hexgen {d_hex:.2} vs tgi {d_tgi:.2} → {:.2}x (paper: ≤1.25x lower for HexGen)",
+        d_tgi / d_hex
+    );
+    println!("peak rate: hexgen {p_hex:.2} vs tgi {p_tgi:.2} req/s (paper: same level)");
+    data.set("deadline-ratio", Json::from(d_tgi / d_hex));
+    data.set("peak-hex", Json::from(p_hex));
+    data.set("peak-tgi", Json::from(p_tgi));
+    maybe_dump(&cfg, "figure5", data)?;
+    Ok(())
+}

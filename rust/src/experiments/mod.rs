@@ -1,0 +1,15 @@
+//! Evaluation harnesses: one module per paper figure/table (see DESIGN.md
+//! §4 for the experiment index). Each regenerates its figure's series /
+//! table's rows from scratch — scheduler runs, workload generation and
+//! simulation included — and prints paper-shape checks alongside.
+
+pub mod common;
+pub mod figure1;
+pub mod figure2;
+pub mod figure3;
+pub mod figure4;
+pub mod figure5;
+pub mod figure6;
+pub mod figure7;
+pub mod table3;
+pub mod table4;

@@ -1,0 +1,216 @@
+//! Table 3 — Appendix B performance alignment: the analytic cost model's
+//! prefill/decode estimates vs benchmarked execution, for TP8 / TP4+PP2 /
+//! TP2+PP4 / PP8 on 8×A100 at 256/32 and 512/64.
+//!
+//! Two blocks:
+//! 1. our Eq. 4–6 estimates against the paper's published benchmark
+//!    column (their testbed; batch size fitted once, since the paper does
+//!    not state it) — the *shape* (which config wins each phase) is the
+//!    reproduction target;
+//! 2. real wall-clock of the demo model on this host's CPU-PJRT pipeline
+//!    across the same plan shapes — evidence the runtime's relative
+//!    ordering matches the model's.
+
+use anyhow::Result;
+
+use crate::cluster;
+use crate::costmodel::{CostModel, InferenceTask, Phase};
+use crate::model::ModelSpec;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::common::{maybe_dump, render_table, ExpConfig};
+
+/// Paper Table 3 benchmarked values: (config, s_in/s_out, prefill, decode).
+const PAPER: [(&str, usize, usize, f64, f64); 8] = [
+    ("TP=8", 256, 32, 2.72, 2.43),
+    ("TP=4 PP=2", 256, 32, 3.79, 2.25),
+    ("TP=2 PP=4", 256, 32, 5.26, 3.29),
+    ("PP=8", 256, 32, 8.04, 6.04),
+    ("TP=8", 512, 64, 3.04, 4.76),
+    ("TP=4 PP=2", 512, 64, 4.16, 4.32),
+    ("TP=2 PP=4", 512, 64, 5.57, 6.65),
+    ("PP=8", 512, 64, 8.27, 12.4),
+];
+
+fn a100_stages(config: &str) -> Vec<(Vec<usize>, usize)> {
+    match config {
+        "TP=8" => vec![((0..8).collect(), 80)],
+        "TP=4 PP=2" => vec![((0..4).collect(), 40), ((4..8).collect(), 40)],
+        "TP=2 PP=4" => (0..4).map(|j| ((2 * j..2 * j + 2).collect(), 20)).collect(),
+        "PP=8" => (0..8).map(|j| (vec![j], 10)).collect(),
+        _ => unreachable!(),
+    }
+}
+
+fn try_estimate(cm: &CostModel, config: &str, t: &InferenceTask, phase: Phase) -> Option<f64> {
+    cm.pipeline_cost(&a100_stages(config), t, phase)
+}
+
+fn estimate(cm: &CostModel, config: &str, t: &InferenceTask, phase: Phase) -> f64 {
+    try_estimate(cm, config, t, phase).expect("A100 config feasible at fitted batch")
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = ExpConfig::from_args(args);
+    let c = cluster::homogeneous_a100();
+    let m = ModelSpec::llama2_70b();
+    let cm = CostModel::new(&c, &m);
+
+    println!("Table 3 — cost model vs benchmarked performance\n");
+
+    // Fit the batch size the paper benchmarked with (not stated): pick
+    // b minimizing mean relative error against their benchmark column.
+    let mut best_b = 1;
+    let mut best_err = f64::INFINITY;
+    'fit: for b in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let mut err = 0.0;
+        for (config, s_in, s_out, pre_bench, dec_bench) in PAPER {
+            let t = InferenceTask::new(b, s_in, s_out);
+            // skip batch sizes where any paper config would OOM
+            let Some(pre) = try_estimate(&cm, config, &t, Phase::Prefill) else {
+                continue 'fit;
+            };
+            let Some(dec) = try_estimate(&cm, config, &t, Phase::Decode) else {
+                continue 'fit;
+            };
+            err += ((pre - pre_bench) / pre_bench).abs() + ((dec - dec_bench) / dec_bench).abs();
+        }
+        if err < best_err {
+            best_err = err;
+            best_b = b;
+        }
+    }
+    println!("fitted batch size b={best_b} (paper does not state it)\n");
+
+    let mut rows = Vec::new();
+    let mut data = Json::obj();
+    let mut shape_ok = 0;
+    let mut shape_total = 0;
+    for (config, s_in, s_out, pre_bench, dec_bench) in PAPER {
+        let t = InferenceTask::new(best_b, s_in, s_out);
+        let pre = estimate(&cm, config, &t, Phase::Prefill);
+        let dec = estimate(&cm, config, &t, Phase::Decode);
+        rows.push(vec![
+            format!("{s_in}/{s_out}"),
+            config.to_string(),
+            format!("{pre_bench:.2}s"),
+            format!("{pre:.2}s"),
+            format!("{dec_bench:.2}s"),
+            format!("{dec:.2}s"),
+        ]);
+        data.set(&format!("{config}/{s_in}-{s_out}/prefill"), Json::from(pre));
+        data.set(&format!("{config}/{s_in}-{s_out}/decode"), Json::from(dec));
+        shape_total += 2;
+        // shape check: within 2x of the benchmarked value
+        if (pre / pre_bench) < 2.0 && (pre_bench / pre) < 2.0 {
+            shape_ok += 1;
+        }
+        if (dec / dec_bench) < 2.0 && (dec_bench / dec) < 2.0 {
+            shape_ok += 1;
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            &["in/out", "parallel config", "prefill (paper bench)", "prefill (our est)",
+              "decode (paper bench)", "decode (our est)"],
+            &rows
+        )
+    );
+    // Ordering checks the paper's table exhibits.
+    let t = InferenceTask::new(best_b, 256, 32);
+    let pre_order_ok = estimate(&cm, "TP=8", &t, Phase::Prefill)
+        < estimate(&cm, "TP=4 PP=2", &t, Phase::Prefill)
+        && estimate(&cm, "TP=4 PP=2", &t, Phase::Prefill)
+            < estimate(&cm, "TP=2 PP=4", &t, Phase::Prefill)
+        && estimate(&cm, "TP=2 PP=4", &t, Phase::Prefill)
+            < estimate(&cm, "PP=8", &t, Phase::Prefill);
+    let dec_pp8_worst = estimate(&cm, "PP=8", &t, Phase::Decode)
+        > estimate(&cm, "TP=8", &t, Phase::Decode);
+    println!("prefill ordering TP8 < TP4PP2 < TP2PP4 < PP8: {pre_order_ok}");
+    println!("decode PP8 slowest: {dec_pp8_worst}");
+    println!("estimates within 2x of paper's benchmark: {shape_ok}/{shape_total}\n");
+
+    // Block 2: real demo-model wall-clock on this host across plan shapes.
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        println!("demo-model real execution on CPU PJRT (6 layers, H=128):");
+        use crate::coordinator::{plan_from_strategy, PipelineExecutor};
+        use crate::runtime::tokenizer;
+        let prompt = tokenizer::encode("table three alignment probe", 32);
+        let mut rows = Vec::new();
+        for (name, tps, layers) in [
+            ("TP=4", vec![4usize], vec![6usize]),
+            ("TP=2 PP=2", vec![2, 2], vec![3, 3]),
+            ("TP=2 PP=1+asym", vec![2, 1], vec![4, 2]),
+            ("PP=2 (TP=1)", vec![1, 1], vec![3, 3]),
+            ("TP=1", vec![1], vec![6]),
+        ] {
+            let plan = plan_from_strategy(&tps, &layers)?;
+            let exec = PipelineExecutor::new(artifacts, plan)?;
+            // warm-up compiles
+            let _ = exec.generate(&[prompt.clone()], 2)?;
+            let res = exec.generate(&[prompt.clone()], 8)?;
+            rows.push(vec![
+                name.to_string(),
+                format!("{:.1}ms", res.prefill_seconds * 1e3),
+                format!("{:.1}ms", res.decode_seconds * 1e3 / (res.decode_steps.max(2) - 1) as f64),
+                format!("{}", res.comm.allreduce_ops),
+            ]);
+            data.set(&format!("demo/{name}/prefill"), Json::from(res.prefill_seconds));
+            data.set(&format!("demo/{name}/decode"), Json::from(res.decode_seconds));
+        }
+        println!(
+            "{}",
+            render_table(&["plan", "prefill", "decode/token", "allreduce ops"], &rows)
+        );
+        println!("(CPU host: TP shards execute sequentially, so TP>1 adds overhead here;");
+        println!(" the GPU speedup of TP comes from parallel shard execution, which the");
+        println!(" cost model — not this single-CPU testbed — captures.)");
+    } else {
+        println!("(artifacts/ not built — skipping demo-model measurement block)");
+    }
+
+    maybe_dump(&cfg, "table3", data)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_orderings_hold_in_cost_model() {
+        let c = cluster::homogeneous_a100();
+        let m = ModelSpec::llama2_70b();
+        let cm = CostModel::new(&c, &m);
+        for b in [1usize, 8, 32] {
+            let t = InferenceTask::new(b, 256, 32);
+            // prefill: more TP is better on NVLink
+            let p8 = estimate(&cm, "TP=8", &t, Phase::Prefill);
+            let p42 = estimate(&cm, "TP=4 PP=2", &t, Phase::Prefill);
+            let p24 = estimate(&cm, "TP=2 PP=4", &t, Phase::Prefill);
+            let pp8 = estimate(&cm, "PP=8", &t, Phase::Prefill);
+            assert!(p8 < p42 && p42 < p24 && p24 < pp8, "b={b}: {p8} {p42} {p24} {pp8}");
+            // decode: PP=8 is the worst (full-model scan per GPU)
+            let d8 = estimate(&cm, "TP=8", &t, Phase::Decode);
+            let dpp8 = estimate(&cm, "PP=8", &t, Phase::Decode);
+            assert!(dpp8 > 2.0 * d8, "b={b}: decode PP8 {dpp8} vs TP8 {d8}");
+        }
+    }
+
+    #[test]
+    fn all_paper_configs_feasible() {
+        let c = cluster::homogeneous_a100();
+        let m = ModelSpec::llama2_70b();
+        let cm = CostModel::new(&c, &m);
+        for (config, s_in, s_out, _, _) in PAPER {
+            let t = InferenceTask::new(8, s_in, s_out);
+            assert!(
+                cm.pipeline_cost(&a100_stages(config), &t, Phase::Both).is_some(),
+                "{config} infeasible"
+            );
+        }
+    }
+}

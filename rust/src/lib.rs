@@ -1,0 +1,33 @@
+//! # HexGen — generative LLM inference over heterogeneous environments
+//!
+//! A from-scratch reproduction of *HexGen: Generative Inference of Large
+//! Language Model over Heterogeneous Environment* (ICML 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: heterogeneous cluster
+//!   model, the Table-1 analytic cost model, the two-phase scheduler
+//!   (Algorithm-1 DP + genetic search), the discrete-event serving
+//!   simulator that drives the paper's evaluation, and a real serving
+//!   runtime that executes AOT-compiled model stages via PJRT.
+//! - **Layer 2** — a JAX transformer expressed as TP-shardable stage
+//!   functions, AOT-lowered to HLO text (`python/compile/`).
+//! - **Layer 1** — flash-attention-style Pallas kernels inside the Layer-2
+//!   stages (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! model once; the `hexgen` binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the experiment index (Figures 1–7, Tables 3–4) and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod costmodel;
+pub mod experiments;
+pub mod model;
+pub mod parallelism;
+pub mod runtime;
+pub mod scheduler;
+pub mod simulator;
+pub mod workload;
+pub mod util;

@@ -1,0 +1,214 @@
+//! `hexgen` — CLI entry point: serve the demo model, run the scheduler,
+//! and regenerate every figure/table of the paper's evaluation.
+
+use anyhow::{bail, Result};
+
+use hexgen::cluster;
+use hexgen::costmodel::CostModel;
+use hexgen::experiments;
+use hexgen::model::ModelSpec;
+use hexgen::scheduler::GeneticScheduler;
+use hexgen::simulator::{simulate, SimConfig, SloModel};
+use hexgen::util::cli::Args;
+use hexgen::workload::{LengthDist, WorkloadSpec};
+
+const USAGE: &str = "\
+hexgen — generative LLM inference over heterogeneous environments
+(ICML 2024 reproduction; see DESIGN.md)
+
+USAGE: hexgen <command> [options]
+
+Experiments (regenerate the paper's evaluation):
+  figure1            §3.1 case study (asymmetric parallelism speedups)
+  figure2            §5.2 cost-performance trade-off grid
+  figure3            §5.3 vs Petals (swarm parallelism)
+  figure4            §5.3 dynamic GPU pool (4 GPUs offline)
+  figure5            §5.3 vs HuggingFace-TGI
+  figure6            §5.4 scheduler convergence (guided vs random)
+  figure7            §5.4 init / random-mutation / HexGen bars
+  table3             Appendix B cost-model alignment
+  table4             Appendix F scheduled partitions by region
+  all                run every experiment in sequence
+
+Serving & tools:
+  serve --prompt <text> [--replicas N] [--max-new N] [--artifacts DIR]
+                     serve the demo model on the real PJRT runtime
+  schedule [--cluster NAME]
+                     run the two-phase scheduler on a cluster preset and
+                     print the deployment (presets: homogeneous,
+                     full-price, half-price, case-study)
+  simulate [--cluster NAME] [--rate R] [--requests N] [--s-out N]
+                     schedule + simulate one serving point
+
+Common options:
+  --seed N           base RNG seed (default 0x4E586E47)
+  --full             paper-scale budgets (slower, tighter estimates)
+  --out FILE         dump machine-readable results JSON
+  --requests N, --population N, --iterations N   fine-grained budgets
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "figure1" => experiments::figure1::run(&args),
+        "figure2" => experiments::figure2::run(&args),
+        "figure3" => experiments::figure3::run(&args),
+        "figure4" => experiments::figure4::run(&args),
+        "figure5" => experiments::figure5::run(&args),
+        "figure6" => experiments::figure6::run(&args),
+        "figure7" => experiments::figure7::run(&args),
+        "table3" => experiments::table3::run(&args),
+        "table4" => experiments::table4::run(&args),
+        "all" => {
+            for (name, f) in [
+                ("figure1", experiments::figure1::run as fn(&Args) -> Result<()>),
+                ("figure2", experiments::figure2::run),
+                ("figure3", experiments::figure3::run),
+                ("figure4", experiments::figure4::run),
+                ("figure5", experiments::figure5::run),
+                ("figure6", experiments::figure6::run),
+                ("figure7", experiments::figure7::run),
+                ("table3", experiments::table3::run),
+                ("table4", experiments::table4::run),
+            ] {
+                println!("\n════════ {name} ════════\n");
+                f(&args)?;
+            }
+            Ok(())
+        }
+        "serve" => serve(&args),
+        "schedule" => schedule(&args),
+        "simulate" => simulate_cmd(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `hexgen help`)"),
+    }
+}
+
+/// Serve the demo model end-to-end on the PJRT runtime.
+fn serve(args: &Args) -> Result<()> {
+    use hexgen::coordinator::{
+        plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+    };
+    let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+    if !dir.join("manifest.json").exists() {
+        bail!("artifacts not found in {dir:?}; run `make artifacts` first");
+    }
+    let replicas = args.get_usize("replicas", 2);
+    let plans = match replicas {
+        1 => vec![plan_from_strategy(&[2, 1], &[4, 2])?],
+        2 => vec![
+            plan_from_strategy(&[2, 1], &[4, 2])?,
+            plan_from_strategy(&[1, 1], &[3, 3])?,
+        ],
+        n => (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    plan_from_strategy(&[2, 1], &[4, 2])
+                } else {
+                    plan_from_strategy(&[1], &[6])
+                }
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    println!("starting service with {} replica(s)...", plans.len());
+    let service = HexGenService::start(ServiceConfig {
+        artifacts_dir: dir,
+        replicas: plans,
+        batch: BatchPolicy::default(),
+        route: RoutePolicy::LeastLoaded,
+        max_new_tokens: args.get_usize("max-new", 16),
+    })?;
+    let prompt = args.get_str("prompt", "the quick brown fox jumps over the lazy dog");
+    let c = service.generate(&prompt, None)?;
+    println!("prompt   : {prompt}");
+    println!("tokens   : {:?}", c.tokens);
+    println!("text     : {:?}", c.text);
+    println!(
+        "latency  : {:.1}ms (prefill {:.1}ms, decode {:.1}ms, replica {}, batch {})",
+        c.latency * 1e3,
+        c.prefill_seconds * 1e3,
+        c.decode_seconds * 1e3,
+        c.replica,
+        c.batch_size
+    );
+    let comm = service.comm_stats();
+    println!(
+        "comm     : {} all-reduces ({}), {} stage hand-offs ({})",
+        comm.allreduce_ops,
+        hexgen::util::fmt_bytes(comm.allreduce_bytes),
+        comm.pp_sends,
+        hexgen::util::fmt_bytes(comm.pp_bytes),
+    );
+    service.shutdown();
+    Ok(())
+}
+
+/// Run the two-phase scheduler on a preset and print the deployment.
+fn schedule(args: &Args) -> Result<()> {
+    let name = args.get_str("cluster", "full-price");
+    let Some(c) = cluster::preset(&name) else {
+        bail!("unknown cluster preset '{name}'");
+    };
+    let m = ModelSpec::llama2_70b();
+    let cfg = experiments::common::ExpConfig::from_args(args);
+    let res = GeneticScheduler::new(&c, &m, cfg.ga(0x5C)).run();
+    println!(
+        "cluster {} (${:.2}/h, {} GPUs) — {} iterations in {:.1}s, est. attainment {:.3}",
+        c.name,
+        c.budget_per_hour,
+        c.devices.len(),
+        res.iterations_run,
+        res.wall_time,
+        res.fitness
+    );
+    print!("{}", res.deployment.describe(&c));
+    Ok(())
+}
+
+/// Schedule + simulate one serving point.
+fn simulate_cmd(args: &Args) -> Result<()> {
+    let name = args.get_str("cluster", "half-price");
+    let Some(c) = cluster::preset(&name) else {
+        bail!("unknown cluster preset '{name}'");
+    };
+    let m = ModelSpec::llama2_70b();
+    let cfg = experiments::common::ExpConfig::from_args(args);
+    let res = GeneticScheduler::new(&c, &m, cfg.ga(0x51)).run();
+    let rate = args.get_f64("rate", 1.0);
+    let s_out = args.get_usize("s-out", 32);
+    let trace = WorkloadSpec {
+        rate,
+        num_requests: cfg.requests,
+        lengths: LengthDist::LmsysLike { s_out },
+        seed: cfg.seed,
+    }
+    .generate();
+    let cm = CostModel::new(&c, &m);
+    let out = simulate(&cm, &res.deployment, &trace, &SimConfig::default());
+    let slo = SloModel::new(&m);
+    println!("{}", res.deployment.describe(&c));
+    println!(
+        "rate {rate} req/s, {} requests, s_out {s_out}: throughput {:.2} req/s",
+        cfg.requests,
+        out.throughput()
+    );
+    for scale in [1.0, 2.0, 5.0, 10.0] {
+        println!("  attainment @scale {scale}: {:.3}", out.attainment(&slo, scale));
+    }
+    if let Some(s) = hexgen::util::stats::Summary::from_samples(
+        &out.latencies().iter().copied().filter(|x| x.is_finite()).collect::<Vec<_>>(),
+    ) {
+        println!(
+            "  latency p50 {:.2}s p95 {:.2}s p99 {:.2}s max {:.2}s",
+            s.p50, s.p95, s.p99, s.max
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Model specifications: the transformer shapes the cost model (Table 1)
+//! and the runtime need.
+
+/// Compute precision of the served model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp16,
+    Fp32,
+}
+
+impl Precision {
+    /// `B_type` in the paper: bytes per element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Fp16 => 2.0,
+            Precision::Fp32 => 4.0,
+        }
+    }
+}
+
+/// Architecture description of the model to serve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total transformer layers `L`.
+    pub layers: usize,
+    /// Hidden dimension `H`.
+    pub hidden: usize,
+    /// Attention heads (must divide `hidden`).
+    pub heads: usize,
+    /// Vocabulary size (runtime only; the cost model ignores the LM head).
+    pub vocab: usize,
+    pub precision: Precision,
+}
+
+impl ModelSpec {
+    /// LLAMA-2 (70B) as modeled by the paper: L=80, H=8192, FP16.
+    ///
+    /// Note: the paper's cost model (§2, Table 1) uses the *simplified*
+    /// transformer with 12H² parameters/layer (MHA, 4H MLP); it does not
+    /// model Llama's GQA or gated MLP. We reproduce the paper's model.
+    pub fn llama2_70b() -> ModelSpec {
+        ModelSpec {
+            name: "llama2-70b".into(),
+            layers: 80,
+            hidden: 8192,
+            heads: 64,
+            vocab: 32000,
+            precision: Precision::Fp16,
+        }
+    }
+
+    /// The small demo model actually AOT-compiled and served on CPU PJRT.
+    /// Must match `python/compile/model.py::DemoConfig`.
+    pub fn demo() -> ModelSpec {
+        ModelSpec {
+            name: "demo-6l-128h".into(),
+            layers: 6,
+            hidden: 128,
+            heads: 4,
+            vocab: 256,
+            precision: Precision::Fp32,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "llama2-70b" => Some(ModelSpec::llama2_70b()),
+            "demo" | "demo-6l-128h" => Some(ModelSpec::demo()),
+            _ => None,
+        }
+    }
+
+    /// `B_type` bytes.
+    pub fn btype(&self) -> f64 {
+        self.precision.bytes()
+    }
+
+    /// Parameters per transformer layer: 12·H² (4 attention H×H matrices +
+    /// H×4H + 4H×H MLP), per paper Appendix B.
+    pub fn params_per_layer(&self) -> f64 {
+        12.0 * (self.hidden as f64) * (self.hidden as f64)
+    }
+
+    /// Total parameter count (transformer trunk only, as the paper counts).
+    pub fn total_params(&self) -> f64 {
+        self.params_per_layer() * self.layers as f64
+    }
+
+    /// Bytes to store all parameters at serving precision.
+    pub fn param_bytes(&self) -> f64 {
+        self.total_params() * self.btype()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama70b_shapes() {
+        let m = ModelSpec::llama2_70b();
+        // 12·8192²·80 ≈ 64.4e9 params — the paper's simplified 70B-class model
+        assert!((m.total_params() - 64.4e9).abs() < 1e9);
+        // FP16 weights ≈ 129 GB
+        assert!((m.param_bytes() - 128.8e9).abs() < 2e9);
+        assert_eq!(m.hidden % m.heads, 0);
+    }
+
+    #[test]
+    fn demo_is_small() {
+        let m = ModelSpec::demo();
+        assert!(m.param_bytes() < 10e6);
+        assert_eq!(m.hidden % m.heads, 0);
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp16.bytes(), 2.0);
+        assert_eq!(Precision::Fp32.bytes(), 4.0);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelSpec::by_name("llama2-70b").is_some());
+        assert!(ModelSpec::by_name("demo").is_some());
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+}

@@ -1,0 +1,201 @@
+//! Type-count vector representation of GPU sets (the paper's τ, §4.2).
+//!
+//! A [`TypeVec`] abstracts a set of GPUs as counts per GPU type; the DP of
+//! Algorithm 1 and the GA mutations (§4.3) operate on these vectors, and a
+//! separate *binding* step maps them back to concrete devices.
+
+use crate::cluster::{Cluster, DeviceId, GpuType};
+
+pub const NUM_TYPES: usize = 6; // |GpuType::ALL|
+
+/// Counts per GPU type; index = `GpuType::index()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default, PartialOrd, Ord)]
+pub struct TypeVec(pub [usize; NUM_TYPES]);
+
+impl TypeVec {
+    pub fn zero() -> TypeVec {
+        TypeVec::default()
+    }
+
+    /// τ_k · e_k — a homogeneous set of `count` GPUs of type `k`.
+    pub fn single(gpu: GpuType, count: usize) -> TypeVec {
+        let mut v = TypeVec::zero();
+        v.0[gpu.index()] = count;
+        v
+    }
+
+    /// Build from a concrete device set.
+    pub fn from_devices(cluster: &Cluster, devices: &[DeviceId]) -> TypeVec {
+        let mut v = TypeVec::zero();
+        for &d in devices {
+            v.0[cluster.devices[d].gpu.index()] += 1;
+        }
+        v
+    }
+
+    pub fn total(&self) -> usize {
+        self.0.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    pub fn get(&self, gpu: GpuType) -> usize {
+        self.0[gpu.index()]
+    }
+
+    /// Component-wise `self + other`.
+    pub fn plus(&self, other: &TypeVec) -> TypeVec {
+        let mut v = *self;
+        for k in 0..NUM_TYPES {
+            v.0[k] += other.0[k];
+        }
+        v
+    }
+
+    /// Component-wise `self - other`; `None` if any component would go
+    /// negative.
+    pub fn minus(&self, other: &TypeVec) -> Option<TypeVec> {
+        let mut v = *self;
+        for k in 0..NUM_TYPES {
+            if v.0[k] < other.0[k] {
+                return None;
+            }
+            v.0[k] -= other.0[k];
+        }
+        Some(v)
+    }
+
+    /// True when `other` fits inside `self` component-wise.
+    pub fn contains(&self, other: &TypeVec) -> bool {
+        (0..NUM_TYPES).all(|k| self.0[k] >= other.0[k])
+    }
+
+    /// Even split: (⌊τ/2⌋, ⌈τ/2⌉) per type — the GA *split* mutation.
+    pub fn split_even(&self) -> (TypeVec, TypeVec) {
+        let mut a = TypeVec::zero();
+        let mut b = TypeVec::zero();
+        for k in 0..NUM_TYPES {
+            a.0[k] = self.0[k] / 2;
+            b.0[k] = self.0[k] - a.0[k];
+        }
+        (a, b)
+    }
+
+    /// GPU types with non-zero counts.
+    pub fn present_types(&self) -> Vec<GpuType> {
+        GpuType::ALL
+            .into_iter()
+            .filter(|t| self.0[t.index()] > 0)
+            .collect()
+    }
+
+    /// Total device memory of this set (for the GA's hold-a-replica
+    /// early check).
+    pub fn total_memory(&self) -> f64 {
+        GpuType::ALL
+            .into_iter()
+            .map(|t| self.0[t.index()] as f64 * t.spec().memory_bytes)
+            .sum()
+    }
+
+    /// Dense ranked index into a mixed-radix table with per-type capacity
+    /// `caps` (each dimension sized `caps[k]+1`). The DP memo key.
+    pub fn rank(&self, caps: &[usize; NUM_TYPES]) -> usize {
+        let mut idx = 0;
+        for k in 0..NUM_TYPES {
+            debug_assert!(self.0[k] <= caps[k]);
+            idx = idx * (caps[k] + 1) + self.0[k];
+        }
+        idx
+    }
+
+    /// Number of rank slots for capacity vector `caps`.
+    pub fn rank_space(caps: &[usize; NUM_TYPES]) -> usize {
+        caps.iter().map(|c| c + 1).product()
+    }
+}
+
+impl std::fmt::Display for TypeVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parts: Vec<String> = GpuType::ALL
+            .into_iter()
+            .filter(|t| self.0[t.index()] > 0)
+            .map(|t| format!("{}x{}", self.0[t.index()], t.name()))
+            .collect();
+        write!(f, "{{{}}}", parts.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    #[test]
+    fn arithmetic() {
+        let a = TypeVec::single(GpuType::A6000, 4);
+        let b = TypeVec::single(GpuType::A5000, 2);
+        let s = a.plus(&b);
+        assert_eq!(s.total(), 6);
+        assert_eq!(s.get(GpuType::A6000), 4);
+        assert_eq!(s.minus(&a), Some(b));
+        assert_eq!(b.minus(&a), None);
+        assert!(s.contains(&a));
+        assert!(!a.contains(&s));
+    }
+
+    #[test]
+    fn split_even_conserves() {
+        let v = TypeVec::single(GpuType::RTX3090TI, 5)
+            .plus(&TypeVec::single(GpuType::A40, 4));
+        let (a, b) = v.split_even();
+        assert_eq!(a.plus(&b), v);
+        assert_eq!(a.get(GpuType::RTX3090TI), 2);
+        assert_eq!(b.get(GpuType::RTX3090TI), 3);
+        assert_eq!(a.get(GpuType::A40), 2);
+    }
+
+    #[test]
+    fn from_devices_counts() {
+        let c = cluster::case_study();
+        let v = TypeVec::from_devices(&c, &[0, 1, 4, 6, 7]);
+        assert_eq!(v.get(GpuType::A6000), 2);
+        assert_eq!(v.get(GpuType::A5000), 1);
+        assert_eq!(v.get(GpuType::A4000), 2);
+        assert_eq!(v.total(), 5);
+    }
+
+    #[test]
+    fn rank_is_bijective_in_space() {
+        let caps = [2, 1, 0, 3, 0, 0];
+        let mut seen = vec![false; TypeVec::rank_space(&caps)];
+        for a in 0..=2 {
+            for b in 0..=1 {
+                for d in 0..=3 {
+                    let mut v = TypeVec::zero();
+                    v.0[0] = a;
+                    v.0[1] = b;
+                    v.0[3] = d;
+                    let r = v.rank(&caps);
+                    assert!(!seen[r], "collision at {v:?}");
+                    seen[r] = true;
+                }
+            }
+        }
+        assert_eq!(seen.iter().filter(|&&x| x).count(), 3 * 2 * 4);
+    }
+
+    #[test]
+    fn memory_total() {
+        let v = TypeVec::single(GpuType::A4000, 2);
+        assert!((v.total_memory() - 32e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn display_compact() {
+        let v = TypeVec::single(GpuType::A6000, 4).plus(&TypeVec::single(GpuType::A4000, 2));
+        assert_eq!(format!("{v}"), "{4xA6000,2xA4000}");
+    }
+}

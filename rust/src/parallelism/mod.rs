@@ -1,0 +1,293 @@
+//! Asymmetric parallelism plans.
+//!
+//! The paper's core representational contribution (§3): each pipeline
+//! stage may hold a different number of transformer layers *and* a
+//! different tensor-model-parallel degree. A [`Deployment`] is the
+//! assignment σ of §4.1 — a set of independent pipelines partitioning a
+//! subset of the device pool, each serving one replica of the model.
+
+pub mod group;
+
+pub use group::TypeVec;
+
+use std::collections::BTreeSet;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::{CostModel, InferenceTask, Phase};
+use crate::model::ModelSpec;
+
+/// One pipeline stage: a TP group and its layer count (`d_ij`, `l_ij`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stage {
+    pub devices: Vec<DeviceId>,
+    pub layers: usize,
+}
+
+impl Stage {
+    pub fn tp_degree(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+/// One independent inference pipeline (a model replica).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pipeline {
+    pub stages: Vec<Stage>,
+}
+
+impl Pipeline {
+    /// Paper Appendix F notation: `[4,2]` = TP degrees per stage.
+    pub fn strategy_string(&self) -> String {
+        let degs: Vec<String> = self.stages.iter().map(|s| s.tp_degree().to_string()).collect();
+        format!("[{}]", degs.join(","))
+    }
+
+    /// Layer counts per stage, e.g. `48/20/12`.
+    pub fn layer_string(&self) -> String {
+        let ls: Vec<String> = self.stages.iter().map(|s| s.layers.to_string()).collect();
+        ls.join("/")
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.stages.iter().map(|s| s.layers).sum()
+    }
+
+    pub fn devices(&self) -> Vec<DeviceId> {
+        self.stages.iter().flat_map(|s| s.devices.iter().copied()).collect()
+    }
+
+    /// End-to-end latency of one task on this pipeline (Eq. 2);
+    /// `None` on memory violation.
+    pub fn cost(&self, cm: &CostModel, t: &InferenceTask, phase: Phase) -> Option<f64> {
+        let stages: Vec<(Vec<DeviceId>, usize)> = self
+            .stages
+            .iter()
+            .map(|s| (s.devices.clone(), s.layers))
+            .collect();
+        cm.pipeline_cost(&stages, t, phase)
+    }
+
+    /// Validate against a model: layers sum to `L`, no empty/duplicate
+    /// devices, every stage non-empty.
+    pub fn validate(&self, model: &ModelSpec) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("pipeline with no stages".into());
+        }
+        if self.total_layers() != model.layers {
+            return Err(format!(
+                "layer sum {} != model layers {}",
+                self.total_layers(),
+                model.layers
+            ));
+        }
+        let mut seen = BTreeSet::new();
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.devices.is_empty() {
+                return Err(format!("stage {i} has no devices"));
+            }
+            if s.layers == 0 {
+                return Err(format!("stage {i} has zero layers"));
+            }
+            for &d in &s.devices {
+                if !seen.insert(d) {
+                    return Err(format!("device {d} appears twice"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A full assignment σ: independent pipelines over disjoint device sets.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Deployment {
+    pub pipelines: Vec<Pipeline>,
+}
+
+impl Deployment {
+    pub fn num_replicas(&self) -> usize {
+        self.pipelines.len()
+    }
+
+    pub fn devices(&self) -> Vec<DeviceId> {
+        self.pipelines.iter().flat_map(|p| p.devices()).collect()
+    }
+
+    /// Validate: each pipeline valid, pipelines pairwise disjoint, all
+    /// devices exist and are online.
+    pub fn validate(&self, cluster: &Cluster, model: &ModelSpec) -> Result<(), String> {
+        if self.pipelines.is_empty() {
+            return Err("deployment with no pipelines".into());
+        }
+        let mut seen = BTreeSet::new();
+        for (i, p) in self.pipelines.iter().enumerate() {
+            p.validate(model).map_err(|e| format!("pipeline {i}: {e}"))?;
+            for d in p.devices() {
+                if d >= cluster.devices.len() {
+                    return Err(format!("pipeline {i}: unknown device {d}"));
+                }
+                if !cluster.devices[d].online {
+                    return Err(format!("pipeline {i}: device {d} offline"));
+                }
+                if !seen.insert(d) {
+                    return Err(format!("device {d} used by two pipelines"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate + check memory feasibility of every stage.
+    pub fn validate_memory(
+        &self,
+        cm: &CostModel,
+        t: &InferenceTask,
+    ) -> Result<(), String> {
+        for (i, p) in self.pipelines.iter().enumerate() {
+            for (j, s) in p.stages.iter().enumerate() {
+                if !cm.mem_ok(&s.devices, s.layers, t) {
+                    return Err(format!(
+                        "pipeline {i} stage {j} ({} layers on {} GPUs) violates memory",
+                        s.layers,
+                        s.devices.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable summary (Table 4 style).
+    pub fn describe(&self, cluster: &Cluster) -> String {
+        let mut out = String::new();
+        for (i, p) in self.pipelines.iter().enumerate() {
+            let regions: BTreeSet<&str> = p
+                .devices()
+                .iter()
+                .map(|&d| cluster.regions[cluster.devices[d].region].name.as_str())
+                .collect();
+            let gpus: Vec<String> = p
+                .stages
+                .iter()
+                .map(|s| {
+                    format!(
+                        "{}x{}",
+                        s.devices.len(),
+                        cluster.devices[s.devices[0]].gpu.name()
+                    )
+                })
+                .collect();
+            out.push_str(&format!(
+                "replica {i:>2}: {} layers {} gpus [{}] regions {:?}\n",
+                p.strategy_string(),
+                p.layer_string(),
+                gpus.join(", "),
+                regions
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    fn case_plan() -> Pipeline {
+        // §3.1 winning layout: [4,2,2] with 48/20/12 layers
+        Pipeline {
+            stages: vec![
+                Stage { devices: vec![0, 1, 2, 3], layers: 48 },
+                Stage { devices: vec![4, 5], layers: 20 },
+                Stage { devices: vec![6, 7], layers: 12 },
+            ],
+        }
+    }
+
+    #[test]
+    fn strategy_notation() {
+        let p = case_plan();
+        assert_eq!(p.strategy_string(), "[4,2,2]");
+        assert_eq!(p.layer_string(), "48/20/12");
+        assert_eq!(p.num_stages(), 3);
+        assert_eq!(p.total_layers(), 80);
+    }
+
+    #[test]
+    fn pipeline_validation() {
+        let m = ModelSpec::llama2_70b();
+        assert!(case_plan().validate(&m).is_ok());
+
+        let mut wrong_layers = case_plan();
+        wrong_layers.stages[0].layers = 10;
+        assert!(wrong_layers.validate(&m).is_err());
+
+        let mut dup = case_plan();
+        dup.stages[1].devices = vec![0, 5];
+        assert!(dup.validate(&m).is_err());
+
+        let mut empty = case_plan();
+        empty.stages[2].devices.clear();
+        assert!(empty.validate(&m).is_err());
+
+        let mut zero = case_plan();
+        zero.stages[0].layers = 0;
+        zero.stages[1].layers = 68;
+        assert!(zero.validate(&m).is_err());
+    }
+
+    #[test]
+    fn deployment_validation() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let d = Deployment { pipelines: vec![case_plan()] };
+        assert!(d.validate(&c, &m).is_ok());
+
+        // two pipelines sharing a device
+        let d2 = Deployment {
+            pipelines: vec![case_plan(), case_plan()],
+        };
+        assert!(d2.validate(&c, &m).is_err());
+
+        // offline device rejected
+        let mut c2 = c.clone();
+        c2.take_offline(&[3]);
+        let d3 = Deployment { pipelines: vec![case_plan()] };
+        assert!(d3.validate(&c2, &m).is_err());
+    }
+
+    #[test]
+    fn deployment_memory_validation() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let cm = CostModel::new(&c, &m);
+        let t = InferenceTask::case_study();
+        let good = Deployment { pipelines: vec![case_plan()] };
+        assert!(good.validate_memory(&cm, &t).is_ok());
+
+        let bad = Deployment {
+            pipelines: vec![Pipeline {
+                stages: vec![
+                    Stage { devices: vec![0, 1, 2, 3], layers: 10 },
+                    Stage { devices: vec![6, 7], layers: 70 }, // A4000 OOM
+                ],
+            }],
+        };
+        assert!(bad.validate_memory(&cm, &t).is_err());
+    }
+
+    #[test]
+    fn describe_mentions_strategy() {
+        let c = cluster::case_study();
+        let d = Deployment { pipelines: vec![case_plan()] };
+        let s = d.describe(&c);
+        assert!(s.contains("[4,2,2]"));
+        assert!(s.contains("48/20/12"));
+        assert!(s.contains("A6000"));
+    }
+}

@@ -1,0 +1,222 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them on the CPU PJRT
+//! client, and executes them with host tensors.
+//!
+//! PJRT handles in the `xla` crate are `Rc`-based (not `Send`), so a
+//! [`ModelRuntime`] is **thread-confined**: each pipeline worker thread
+//! constructs its own (sharing the parsed [`WeightStore`] via `Arc`).
+//! Executables are compiled lazily and cached per runtime.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::weights::{Tensor, WeightStore};
+
+/// Thread-confined PJRT execution context for the demo model.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub weights: Arc<WeightStore>,
+    client: xla::PjRtClient,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Weight tensors converted to literals once and reused across calls
+    /// (§Perf: saves one host copy per weight per execution).
+    weight_literals: RefCell<HashMap<String, Rc<xla::Literal>>>,
+    dir: PathBuf,
+    /// Cumulative PJRT executions (hot-path metric).
+    pub exec_count: RefCell<usize>,
+}
+
+impl ModelRuntime {
+    /// Load manifest + weights from an artifacts directory and create a
+    /// CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let weights = Arc::new(WeightStore::load(&dir.join("weights.bin"))?);
+        Self::with_weights(dir, manifest, weights)
+    }
+
+    /// Create a runtime re-using an already-parsed weight store (what the
+    /// per-thread workers do).
+    pub fn with_weights(
+        dir: &Path,
+        manifest: Manifest,
+        weights: Arc<WeightStore>,
+    ) -> Result<ModelRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ModelRuntime {
+            manifest,
+            weights,
+            client,
+            executables: RefCell::new(HashMap::new()),
+            weight_literals: RefCell::new(HashMap::new()),
+            dir: dir.to_path_buf(),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.executables.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.borrow().len()
+    }
+
+    /// Execute an artifact on literal inputs; unpacks the output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        if inputs.len() != spec.params.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.params.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        *self.exec_count.borrow_mut() += 1;
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing '{name}'"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of '{name}'"))?;
+        // AOT lowers with return_tuple=True: always a tuple.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with host tensors; `InputArg::Weight` inputs resolve
+    /// through the per-runtime literal cache.
+    pub fn execute_t(&self, name: &str, inputs: &[InputArg]) -> Result<Vec<Tensor>> {
+        let args: Vec<ArgLit> = inputs
+            .iter()
+            .map(|a| match a {
+                InputArg::Weight(w) => Ok(ArgLit::Cached(self.weight_literal(w)?)),
+                other => Ok(ArgLit::Own(other.to_literal()?)),
+            })
+            .collect::<Result<_>>()?;
+        let spec = self.manifest.artifact(name)?;
+        if args.len() != spec.params.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.params.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        *self.exec_count.borrow_mut() += 1;
+        let bufs = exe
+            .execute::<ArgLit>(&args)
+            .with_context(|| format!("executing '{name}'"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of '{name}'"))?;
+        let outs = lit.to_tuple()?;
+        let mut tensors = Vec::with_capacity(outs.len());
+        for o in outs.iter() {
+            tensors.push(literal_to_tensor_f32(o, None)?);
+        }
+        Ok(tensors)
+    }
+
+    /// Weight tensor as a cached literal (uploaded at most once).
+    pub fn weight_literal(&self, name: &str) -> Result<Rc<xla::Literal>> {
+        if let Some(l) = self.weight_literals.borrow().get(name) {
+            return Ok(l.clone());
+        }
+        let lit = Rc::new(tensor_to_literal(self.weights.get(name)?)?);
+        self.weight_literals
+            .borrow_mut()
+            .insert(name.to_string(), lit.clone());
+        Ok(lit)
+    }
+}
+
+/// Owned-or-cached literal argument (borrowable as `&Literal` for
+/// `PjRtLoadedExecutable::execute`).
+enum ArgLit {
+    Own(xla::Literal),
+    Cached(Rc<xla::Literal>),
+}
+
+impl std::borrow::Borrow<xla::Literal> for ArgLit {
+    fn borrow(&self) -> &xla::Literal {
+        match self {
+            ArgLit::Own(l) => l,
+            ArgLit::Cached(r) => r,
+        }
+    }
+}
+
+/// An input argument to [`ModelRuntime::execute_t`].
+pub enum InputArg<'a> {
+    /// f32 tensor (uploaded per call — activations, caches).
+    F32(&'a Tensor),
+    /// int32 tensor (tokens).
+    I32(&'a [i32], Vec<usize>),
+    /// int32 scalar (decode position).
+    ScalarI32(i32),
+    /// Named weight, resolved through the runtime's literal cache.
+    Weight(&'a str),
+}
+
+impl<'a> InputArg<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            InputArg::F32(t) => tensor_to_literal(t),
+            InputArg::I32(data, dims) => {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+            }
+            InputArg::ScalarI32(x) => Ok(xla::Literal::scalar(*x)),
+            InputArg::Weight(_) => unreachable!("resolved by execute_t"),
+        }
+    }
+}
+
+/// Host tensor → literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&t.data).reshape(&t.dims_i64())?)
+}
+
+/// Literal → host f32 tensor; dims read from the literal when `None`.
+pub fn literal_to_tensor_f32(lit: &xla::Literal, dims: Option<Vec<usize>>) -> Result<Tensor> {
+    let data: Vec<f32> = lit.to_vec::<f32>()?;
+    let dims = match dims {
+        Some(d) => d,
+        None => match lit.shape()? {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            other => bail!("expected array literal, got {other:?}"),
+        },
+    };
+    let n: usize = dims.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("dims {dims:?} disagree with {} elements", data.len());
+    }
+    Ok(Tensor { dims, data })
+}
+
+/// Literal → host i32 vector (argmax outputs, tokens).
+pub fn literal_to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}

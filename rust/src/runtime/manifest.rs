@@ -1,0 +1,216 @@
+//! `manifest.json` parsing: the artifact catalog emitted by the AOT step.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parameter or output descriptor of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled stage variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Demo-model architecture as recorded by the AOT step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub prompt_len: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub tp_degrees: Vec<usize>,
+    pub batch_buckets: Vec<usize>,
+    pub weight_order: Vec<String>,
+    pub artifacts: std::collections::BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let m = j.get("model")?;
+        let model = ModelInfo {
+            name: m.str("name")?.to_string(),
+            layers: m.usize("layers")?,
+            hidden: m.usize("hidden")?,
+            heads: m.usize("heads")?,
+            vocab: m.usize("vocab")?,
+            prompt_len: m.usize("prompt_len")?,
+            max_seq: m.usize("max_seq")?,
+            head_dim: m.usize("head_dim")?,
+            ffn: m.usize("ffn")?,
+        };
+        if model.hidden != model.heads * model.head_dim {
+            bail!("inconsistent manifest: hidden != heads*head_dim");
+        }
+        let tp_degrees = usize_list(j.arr("tp_degrees")?)?;
+        let batch_buckets = usize_list(j.arr("batch_buckets")?)?;
+        let weight_order: Vec<String> = j
+            .arr("weight_order")?
+            .iter()
+            .map(|x| x.as_str().map(str::to_string))
+            .collect::<Result<_, _>>()?;
+        let mut artifacts = std::collections::BTreeMap::new();
+        for (name, spec) in j.get("artifacts")?.as_obj()? {
+            let params = spec
+                .arr("params")?
+                .iter()
+                .map(parse_param)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs: Vec<String> = spec
+                .arr("outputs")?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string))
+                .collect::<Result<_, _>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: spec.str("file")?.to_string(),
+                    params,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { model, tp_degrees, batch_buckets, weight_order, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}'"))
+    }
+
+    /// Pick the smallest batch bucket that fits `batch`.
+    pub fn bucket_for(&self, batch: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= batch)
+            .min()
+            .with_context(|| {
+                format!("batch {batch} exceeds largest bucket {:?}", self.batch_buckets)
+            })
+    }
+}
+
+fn parse_param(j: &Json) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: j.str("name")?.to_string(),
+        shape: usize_list(j.arr("shape")?)?,
+        dtype: j.str("dtype")?.to_string(),
+    })
+}
+
+fn usize_list(arr: &[Json]) -> Result<Vec<usize>> {
+    arr.iter().map(|x| x.as_usize().map_err(Into::into)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"name":"demo","layers":6,"hidden":128,"heads":4,"vocab":256,
+                "prompt_len":32,"max_seq":64,"head_dim":32,"ffn":512},
+      "tp_degrees":[1,2,4],
+      "batch_buckets":[1,4],
+      "weight_order":["embed","final_ln"],
+      "artifacts":{
+        "mlp_prefill_tp2_b1":{
+          "file":"mlp_prefill_tp2_b1.hlo.txt",
+          "params":[{"name":"x","shape":[1,32,128],"dtype":"float32"},
+                     {"name":"ln2","shape":[128],"dtype":"float32"}],
+          "outputs":["partial"]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.hidden, 128);
+        assert_eq!(m.tp_degrees, vec![1, 2, 4]);
+        let a = m.artifact("mlp_prefill_tp2_b1").unwrap();
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.params[0].shape, vec![1, 32, 128]);
+        assert_eq!(a.params[0].elements(), 1 * 32 * 128);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), 1);
+        assert_eq!(m.bucket_for(2).unwrap(), 4);
+        assert_eq!(m.bucket_for(4).unwrap(), 4);
+        assert!(m.bucket_for(5).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_model() {
+        let bad = SAMPLE.replace("\"head_dim\":32", "\"head_dim\":16");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.model.layers, 6);
+        assert_eq!(m.artifacts.len(), 36);
+        for (_, a) in &m.artifacts {
+            assert!(!a.params.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+        // key artifacts present
+        for name in [
+            "embed_prefill_b1",
+            "attn_prefill_tp2_b4",
+            "attn_decode_tp4_b1",
+            "mlp_decode_tp1_b4",
+            "lm_head_decode_b1",
+            "full_prefill_b1",
+        ] {
+            assert!(m.artifacts.contains_key(name), "{name}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Serving runtime: PJRT client wrapper, AOT artifact/weights loading,
+//! and the byte tokenizer. Python never runs here — everything executes
+//! from `artifacts/*.hlo.txt` produced once by `make artifacts`.
+
+pub mod engine;
+pub mod manifest;
+pub mod tokenizer;
+pub mod weights;
+
+pub use engine::{
+    literal_to_tensor_f32, literal_to_vec_i32, tensor_to_literal, InputArg, ModelRuntime,
+};
+pub use manifest::{ArtifactSpec, Manifest, ModelInfo, ParamSpec};
+pub use weights::{Tensor, WeightStore};

@@ -1,0 +1,62 @@
+//! Byte-level tokenizer for the demo model (vocab = 256).
+//!
+//! Prompts are normalized to exactly `prompt_len` tokens: UTF-8 bytes,
+//! truncated from the left (keep the most recent context) and left-padded
+//! with `PAD` — the serving shape contract of the AOT artifacts, which
+//! keeps KV caches contiguous without per-request length plumbing.
+
+pub const PAD: i32 = 0;
+
+/// Encode text to exactly `prompt_len` byte tokens.
+pub fn encode(text: &str, prompt_len: usize) -> Vec<i32> {
+    let bytes = text.as_bytes();
+    let take = bytes.len().min(prompt_len);
+    let mut out = vec![PAD; prompt_len - take];
+    out.extend(bytes[bytes.len() - take..].iter().map(|&b| b as i32));
+    out
+}
+
+/// Decode generated tokens back to text (lossy; PAD dropped).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t != PAD && (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_pads_left() {
+        let t = encode("hi", 5);
+        assert_eq!(t, vec![0, 0, 0, b'h' as i32, b'i' as i32]);
+    }
+
+    #[test]
+    fn encode_truncates_left() {
+        let t = encode("abcdef", 3);
+        assert_eq!(t, vec![b'd' as i32, b'e' as i32, b'f' as i32]);
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = encode("hello", 8);
+        assert_eq!(decode(&t), "hello");
+    }
+
+    #[test]
+    fn decode_skips_pad_and_out_of_range() {
+        assert_eq!(decode(&[0, 72, 105, 300, -5]), "Hi");
+    }
+
+    #[test]
+    fn exact_length() {
+        for len in [1, 16, 32] {
+            assert_eq!(encode("some text", len).len(), len);
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! `weights.bin` (HXGW) parser: the named-tensor container emitted by
+//! `python/compile/aot.py::write_weights`.
+//!
+//! Format (little endian): magic `HXGW`, u32 version, u32 count, then per
+//! tensor: u16 name_len, name utf-8, u8 ndim, u32 dims…, f32 data.
+
+use std::collections::HashMap;
+use std::io::Read;
+
+use anyhow::{bail, Context, Result};
+
+/// A host-side named tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// All tensors from a weights.bin, by name.
+#[derive(Debug, Clone, Default)]
+pub struct WeightStore {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn load(path: &std::path::Path) -> Result<WeightStore> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<WeightStore> {
+        let mut r = bytes;
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("weights magic")?;
+        if &magic != b"HXGW" {
+            bail!("bad weights magic {magic:?}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("unsupported weights version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            r.read_exact(&mut name_buf).context("tensor name")?;
+            let name = String::from_utf8(name_buf).context("tensor name utf-8")?;
+            let ndim = read_u8(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = dims.iter().product::<usize>().max(1);
+            let mut data = vec![0f32; n];
+            {
+                let byte_len = n * 4;
+                if r.len() < byte_len {
+                    bail!("truncated tensor data for '{name}'");
+                }
+                let (head, rest) = r.split_at(byte_len);
+                for (i, chunk) in head.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+                r = rest;
+            }
+            tensors.insert(name, Tensor { dims, data });
+        }
+        if !r.is_empty() {
+            bail!("{} trailing bytes after last tensor", r.len());
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing weight '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Sharded-weight name for a layer weight (`tp == 1` → unsharded name).
+    pub fn shard_name(layer: usize, weight: &str, tp: usize, rank: usize) -> String {
+        if tp == 1 {
+            format!("layers.{layer}.{weight}")
+        } else {
+            format!("layers.{layer}.{weight}.tp{tp}.r{rank}")
+        }
+    }
+}
+
+fn read_u8(r: &mut &[u8]) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b).context("read u8")?;
+    Ok(b[0])
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b).context("read u16")?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("read u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_bytes() -> Vec<u8> {
+        // two tensors: "a" [2,2] = 1..4; "b.c" [3] = 5,6,7
+        let mut v = Vec::new();
+        v.extend_from_slice(b"HXGW");
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(&1u16.to_le_bytes());
+        v.extend_from_slice(b"a");
+        v.push(2);
+        v.extend_from_slice(&2u32.to_le_bytes());
+        v.extend_from_slice(&2u32.to_le_bytes());
+        for x in [1f32, 2.0, 3.0, 4.0] {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v.extend_from_slice(&3u16.to_le_bytes());
+        v.extend_from_slice(b"b.c");
+        v.push(1);
+        v.extend_from_slice(&3u32.to_le_bytes());
+        for x in [5f32, 6.0, 7.0] {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v
+    }
+
+    #[test]
+    fn parses_sample() {
+        let ws = WeightStore::parse(&sample_bytes()).unwrap();
+        assert_eq!(ws.len(), 2);
+        let a = ws.get("a").unwrap();
+        assert_eq!(a.dims, vec![2, 2]);
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ws.get("b.c").unwrap().data, vec![5.0, 6.0, 7.0]);
+        assert!(ws.get("nope").is_err());
+        assert_eq!(ws.names(), vec!["a", "b.c"]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample_bytes();
+        b[0] = b'X';
+        assert!(WeightStore::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut b = sample_bytes();
+        b[4] = 9;
+        assert!(WeightStore::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let b = sample_bytes();
+        assert!(WeightStore::parse(&b[..b.len() - 2]).is_err());
+        let mut b2 = b.clone();
+        b2.push(0);
+        assert!(WeightStore::parse(&b2).is_err());
+    }
+
+    #[test]
+    fn shard_names() {
+        assert_eq!(WeightStore::shard_name(3, "wq", 1, 0), "layers.3.wq");
+        assert_eq!(WeightStore::shard_name(3, "wq", 2, 1), "layers.3.wq.tp2.r1");
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/weights.bin");
+        if !path.exists() {
+            return; // artifacts not built in this environment
+        }
+        let ws = WeightStore::load(&path).unwrap();
+        // demo model: embed [256,128], shards for tp 2 and 4
+        let e = ws.get("embed").unwrap();
+        assert_eq!(e.dims, vec![256, 128]);
+        assert!(ws.contains("layers.0.wq.tp2.r0"));
+        assert!(ws.contains("layers.5.w2.tp4.r3"));
+        let wq = ws.get("layers.0.wq.tp2.r0").unwrap();
+        assert_eq!(wq.dims, vec![128, 64]);
+    }
+}

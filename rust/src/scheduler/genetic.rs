@@ -1,0 +1,637 @@
+//! Genetic search for the global device partition (paper §4.3).
+//!
+//! An individual is a partition of the online device pool into candidate
+//! pipeline groups. Each group is planned by the Algorithm-1 DP
+//! ([`super::dp::optimal_pipeline`]); groups that cannot hold a model
+//! replica contribute no pipeline (their GPUs idle). Fitness is the
+//! estimated SLO attainment of the resulting deployment on a sampled
+//! workload — the paper estimates expected SLO with AlpaServe's simulator;
+//! we use our discrete-event engine the same way.
+//!
+//! Mutations are the paper's *merge*, *split* and *swap* with the
+//! hold-a-replica early check; `MutationMode::Random` replaces them with
+//! unguided single-device moves (the Figure-6 strawman).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::{CostModel, InferenceTask};
+use crate::model::ModelSpec;
+use crate::parallelism::Deployment;
+use crate::simulator::{simulate, SimConfig, SloModel};
+use crate::util::rng::Xoshiro256pp;
+use crate::workload::{LengthDist, Request, WorkloadSpec};
+
+use super::dp::{optimal_pipeline_opt, DpResult};
+use super::kmeans::initial_groups;
+use super::planner::PipelinePlanner;
+
+/// Mutation strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MutationMode {
+    /// Paper §4.3: merge / split / swap with early feasibility pruning.
+    Guided,
+    /// Strawman: unguided random single-device moves (Figure 6 baseline).
+    Random,
+}
+
+/// GA configuration.
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub iterations: usize,
+    /// Stop after this many iterations without improvement.
+    pub patience: usize,
+    pub seed: u64,
+    pub max_stages: usize,
+    pub max_tp: usize,
+    pub mutation: MutationMode,
+    /// Workload used for fitness estimation.
+    pub fitness_rate: f64,
+    pub fitness_requests: usize,
+    pub s_out: usize,
+    /// SLO scale at which attainment is estimated.
+    pub slo_scale: f64,
+    /// Pipeline planning flavor (asymmetric HexGen vs symmetric ablation).
+    pub planner: PipelinePlanner,
+    pub sim: SimConfig,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 16,
+            iterations: 60,
+            patience: 15,
+            seed: 0x4E58_6E47, // "HexGn"
+            max_stages: 8,
+            max_tp: 8,
+            mutation: MutationMode::Guided,
+            fitness_rate: 2.0,
+            fitness_requests: 200,
+            s_out: 32,
+            slo_scale: 5.0,
+            planner: PipelinePlanner::Asymmetric,
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+/// One step of the convergence history.
+#[derive(Debug, Clone, Copy)]
+pub struct HistoryPoint {
+    pub iteration: usize,
+    pub wall_time: f64,
+    pub best_fitness: f64,
+}
+
+/// Search result.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub deployment: Deployment,
+    pub fitness: f64,
+    pub history: Vec<HistoryPoint>,
+    pub iterations_run: usize,
+    pub wall_time: f64,
+    /// The k-means-initialized individual's fitness (Figure 7's
+    /// "random init" bar).
+    pub init_fitness: f64,
+}
+
+type Partition = Vec<Vec<DeviceId>>;
+
+/// The genetic scheduler.
+pub struct GeneticScheduler<'a> {
+    cluster: &'a Cluster,
+    model: &'a ModelSpec,
+    cfg: GaConfig,
+    /// Fitness traces at the configured rate and at 4× (the high-pressure
+    /// trace keeps the objective from saturating at 1.0 once every plan
+    /// meets the SLO at the base rate — resilience to peak rate is half
+    /// of the paper's headline metric).
+    traces: [Vec<Request>; 2],
+    slo: SloModel,
+    /// Memoized per-group DP plans keyed by sorted device ids.
+    plan_cache: HashMap<Vec<DeviceId>, Option<DpResult>>,
+    /// Memoized fitness keyed by canonical partition signature.
+    fitness_cache: HashMap<String, f64>,
+    /// Representative planning task for the DP objective.
+    plan_task: InferenceTask,
+}
+
+impl<'a> GeneticScheduler<'a> {
+    pub fn new(cluster: &'a Cluster, model: &'a ModelSpec, cfg: GaConfig) -> Self {
+        let mk_trace = |rate: f64, salt: u64| {
+            WorkloadSpec {
+                rate,
+                num_requests: cfg.fitness_requests,
+                lengths: LengthDist::LmsysLike { s_out: cfg.s_out },
+                seed: cfg.seed ^ salt,
+            }
+            .generate()
+        };
+        let traces = [
+            mk_trace(cfg.fitness_rate, 0x57_AC_E0),
+            mk_trace(cfg.fitness_rate * 6.0, 0x57_AC_E1),
+        ];
+        let plan_task = InferenceTask::new(1, 64, cfg.s_out);
+        GeneticScheduler {
+            cluster,
+            model,
+            cfg,
+            traces,
+            slo: SloModel::new(model),
+            plan_cache: HashMap::new(),
+            fitness_cache: HashMap::new(),
+            plan_task,
+        }
+    }
+
+    /// Plan one group with the configured planner (memoized).
+    fn plan_group(&mut self, group: &[DeviceId]) -> Option<DpResult> {
+        let mut key = group.to_vec();
+        key.sort_unstable();
+        if let Some(hit) = self.plan_cache.get(&key) {
+            return hit.clone();
+        }
+        let cm = CostModel::new(self.cluster, self.model);
+        let res = match self.cfg.planner {
+            PipelinePlanner::Asymmetric => optimal_pipeline_opt(
+                &cm,
+                self.cluster,
+                group,
+                &self.plan_task,
+                self.cfg.max_stages,
+                self.cfg.max_tp,
+                false,
+            ),
+            PipelinePlanner::Symmetric => super::symmetric::symmetric_pipeline(
+                &cm,
+                self.cluster,
+                group,
+                &self.plan_task,
+                self.cfg.max_stages,
+                self.cfg.max_tp,
+            ),
+        };
+        self.plan_cache.insert(key, res.clone());
+        res
+    }
+
+    /// Build the deployment a partition induces (feasible groups only).
+    pub fn deployment_of(&mut self, partition: &Partition) -> Deployment {
+        let mut pipelines = Vec::new();
+        for g in partition {
+            if g.is_empty() {
+                continue;
+            }
+            if let Some(res) = self.plan_group(g) {
+                pipelines.push(res.pipeline);
+            }
+        }
+        Deployment { pipelines }
+    }
+
+    /// Estimated SLO attainment of a partition (memoized).
+    pub fn fitness_of(&mut self, partition: &Partition) -> f64 {
+        let sig = signature(partition);
+        if let Some(&f) = self.fitness_cache.get(&sig) {
+            return f;
+        }
+        let deployment = self.deployment_of(partition);
+        let f = if deployment.pipelines.is_empty() {
+            0.0
+        } else {
+            let cm = CostModel::new(self.cluster, self.model);
+            // Mean attainment over the base-rate and high-pressure traces
+            // (both at the configured SLO scale): the high-rate trace
+            // keeps discriminating by *capacity* once every plan meets
+            // the SLO at the base rate.
+            let mut att = 0.0;
+            let mut mean_norm = 0.0;
+            for trace in self.traces.iter() {
+                let out = simulate(&cm, &deployment, trace, &self.cfg.sim);
+                att += out.attainment(&self.slo, self.cfg.slo_scale);
+                // Secondary objective: prefer lower normalized latency
+                // among equal-attainment plans (breaks plateaus at 0/1).
+                let mut s = 0.0;
+                let mut n = 0;
+                for r in &out.records {
+                    if r.latency.is_finite() {
+                        s += r.latency / self.slo.reference_latency(&r.task);
+                        n += 1;
+                    }
+                }
+                mean_norm += if n == 0 { 1e9 } else { s / n as f64 };
+            }
+            att /= self.traces.len() as f64;
+            mean_norm /= self.traces.len() as f64;
+            att + 1e-3 / (1.0 + mean_norm)
+        };
+        self.fitness_cache.insert(sig, f);
+        f
+    }
+
+    /// Run the search.
+    pub fn run(&mut self) -> GaResult {
+        let start = Instant::now();
+        let mut rng = Xoshiro256pp::seed_from_u64(self.cfg.seed);
+        let devices = self.cluster.online_devices();
+        assert!(!devices.is_empty(), "empty device pool");
+
+        // §4.3 initialization: k-means over the comm matrix, then greedy
+        // capacity splits — the paper's scheduler "aims to maximize device
+        // memory utilization by incorporating as many model replicas as
+        // possible" (§5.2), so the population starts from groups just big
+        // enough to hold one replica instead of whole-region blobs.
+        let seed_partition = normalize(self.saturate_splits(initial_groups(
+            self.cluster,
+            &devices,
+            &mut rng,
+        )));
+        let init_fitness = self.fitness_of(&seed_partition);
+
+        let mut population: Vec<(Partition, f64)> = vec![(seed_partition.clone(), init_fitness)];
+        while population.len() < self.cfg.population {
+            let mut p = seed_partition.clone();
+            // Diversify with a few random (guided) mutations.
+            for _ in 0..1 + rng.gen_range(3) {
+                if let Some(q) = self.mutate(&p, &mut rng) {
+                    p = q;
+                }
+            }
+            let f = self.fitness_of(&p);
+            population.push((p, f));
+        }
+
+        let mut history = Vec::new();
+        let mut best = population
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        history.push(HistoryPoint {
+            iteration: 0,
+            wall_time: start.elapsed().as_secs_f64(),
+            best_fitness: best.1,
+        });
+
+        let mut stale = 0usize;
+        let mut iterations_run = 0usize;
+        for iter in 1..=self.cfg.iterations {
+            iterations_run = iter;
+            // Generate offspring: one per population slot, tournament parent.
+            let mut offspring: Vec<(Partition, f64)> = Vec::with_capacity(self.cfg.population);
+            for _ in 0..self.cfg.population {
+                let parent = tournament(&population, &mut rng);
+                let mut child = parent.clone();
+                let n_mut = 1 + rng.gen_range(2);
+                let mut changed = false;
+                for _ in 0..n_mut {
+                    if let Some(c) = self.mutate(&child, &mut rng) {
+                        child = c;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    continue;
+                }
+                let f = self.fitness_of(&child);
+                offspring.push((child, f));
+            }
+            // Elitist truncation selection.
+            population.extend(offspring);
+            population.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            population.dedup_by(|a, b| signature(&a.0) == signature(&b.0));
+            population.truncate(self.cfg.population);
+
+            let iter_best = population[0].clone();
+            if iter_best.1 > best.1 + 1e-12 {
+                best = iter_best;
+                stale = 0;
+            } else {
+                stale += 1;
+            }
+            history.push(HistoryPoint {
+                iteration: iter,
+                wall_time: start.elapsed().as_secs_f64(),
+                best_fitness: best.1,
+            });
+            if stale >= self.cfg.patience {
+                break;
+            }
+        }
+
+        let deployment = self.deployment_of(&best.0);
+        GaResult {
+            deployment,
+            fitness: best.1,
+            history,
+            iterations_run,
+            wall_time: start.elapsed().as_secs_f64(),
+            init_fitness,
+        }
+    }
+
+    /// Greedily split groups (per-type even splits) while both halves can
+    /// still hold a full model replica — the §4.3 split mutation applied
+    /// to saturation at initialization time.
+    fn saturate_splits(&self, groups: Partition) -> Partition {
+        let param_bytes = self.model.param_bytes();
+        let holds = |g: &Vec<DeviceId>| -> bool {
+            g.iter()
+                .map(|&d| self.cluster.devices[d].gpu.spec().memory_bytes)
+                .sum::<f64>()
+                >= param_bytes
+        };
+        let mut out: Partition = Vec::new();
+        let mut work = groups;
+        while let Some(g) = work.pop() {
+            if g.len() >= 2 {
+                let (a, b) = split_group(self.cluster, &g);
+                if !a.is_empty() && !b.is_empty() && holds(&a) && holds(&b) {
+                    work.push(a);
+                    work.push(b);
+                    continue;
+                }
+            }
+            out.push(g);
+        }
+        out
+    }
+
+    /// Apply one mutation; `None` if the draw was inapplicable or pruned.
+    fn mutate(&mut self, p: &Partition, rng: &mut Xoshiro256pp) -> Option<Partition> {
+        match self.cfg.mutation {
+            MutationMode::Guided => self.mutate_guided(p, rng),
+            MutationMode::Random => mutate_random(p, rng),
+        }
+    }
+
+    fn mutate_guided(&mut self, p: &Partition, rng: &mut Xoshiro256pp) -> Option<Partition> {
+        let param_bytes = self.model.param_bytes();
+        let holds = |g: &Vec<DeviceId>| -> bool {
+            g.iter()
+                .map(|&d| self.cluster.devices[d].gpu.spec().memory_bytes)
+                .sum::<f64>()
+                >= param_bytes
+        };
+        match rng.gen_range(3) {
+            // Merge two groups.
+            0 => {
+                if p.len() < 2 {
+                    return None;
+                }
+                let i = rng.gen_range(p.len());
+                let mut j = rng.gen_range(p.len() - 1);
+                if j >= i {
+                    j += 1;
+                }
+                let mut q: Partition = Vec::with_capacity(p.len() - 1);
+                let mut merged = p[i].clone();
+                merged.extend_from_slice(&p[j]);
+                merged.sort_unstable();
+                for (k, g) in p.iter().enumerate() {
+                    if k != i && k != j {
+                        q.push(g.clone());
+                    }
+                }
+                q.push(merged);
+                Some(normalize(q))
+            }
+            // Split one group evenly per type (machine-major halves).
+            1 => {
+                let candidates: Vec<usize> =
+                    (0..p.len()).filter(|&i| p[i].len() >= 2).collect();
+                let &i = rng.choose(&candidates)?;
+                let (a, b) = split_group(self.cluster, &p[i]);
+                // Early check (§4.3): both halves must hold a replica.
+                if !holds(&a) || !holds(&b) {
+                    return None;
+                }
+                let mut q: Partition = Vec::with_capacity(p.len() + 1);
+                for (k, g) in p.iter().enumerate() {
+                    if k != i {
+                        q.push(g.clone());
+                    }
+                }
+                q.push(a);
+                q.push(b);
+                Some(normalize(q))
+            }
+            // Swap: move one GPU from one group to another.
+            _ => {
+                if p.len() < 2 {
+                    return None;
+                }
+                let donors: Vec<usize> = (0..p.len()).filter(|&i| p[i].len() >= 2).collect();
+                let &i = rng.choose(&donors)?;
+                let mut j = rng.gen_range(p.len() - 1);
+                if j >= i {
+                    j += 1;
+                }
+                let mut q = p.clone();
+                let di = rng.gen_range(q[i].len());
+                let dev = q[i].remove(di);
+                // Early check: donor should still hold a replica if it did.
+                if holds(&p[i]) && !holds(&q[i]) {
+                    return None;
+                }
+                q[j].push(dev);
+                q[j].sort_unstable();
+                Some(normalize(q))
+            }
+        }
+    }
+}
+
+/// Unguided baseline: move a random device to a random group (possibly a
+/// new singleton). No feasibility pruning, no structured merge/split.
+fn mutate_random(p: &Partition, rng: &mut Xoshiro256pp) -> Option<Partition> {
+    let total: usize = p.iter().map(|g| g.len()).sum();
+    if total < 2 {
+        return None;
+    }
+    let mut q = p.clone();
+    let gi = rng.gen_range(q.len());
+    if q[gi].is_empty() {
+        return None;
+    }
+    let di = rng.gen_range(q[gi].len());
+    let dev = q[gi].remove(di);
+    let target = rng.gen_range(q.len() + 1);
+    if target == q.len() {
+        q.push(vec![dev]);
+    } else {
+        q[target].push(dev);
+        q[target].sort_unstable();
+    }
+    Some(normalize(q))
+}
+
+/// Drop empty groups and order deterministically (canonical form).
+fn normalize(mut p: Partition) -> Partition {
+    for g in p.iter_mut() {
+        g.sort_unstable();
+    }
+    p.retain(|g| !g.is_empty());
+    p.sort();
+    p
+}
+
+fn signature(p: &Partition) -> String {
+    let mut s = String::new();
+    for g in p {
+        for d in g {
+            s.push_str(&d.to_string());
+            s.push(',');
+        }
+        s.push(';');
+    }
+    s
+}
+
+/// Split a group per GPU type, machine-major (keeps machines intact where
+/// possible) — the τ-vector *split* of §4.3 bound to concrete devices.
+fn split_group(cluster: &Cluster, g: &[DeviceId]) -> (Vec<DeviceId>, Vec<DeviceId>) {
+    use std::collections::BTreeMap;
+    let mut by_type: BTreeMap<usize, Vec<DeviceId>> = BTreeMap::new();
+    for &d in g {
+        by_type.entry(cluster.devices[d].gpu.index()).or_default().push(d);
+    }
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for (_, mut devs) in by_type {
+        // machine-major ordering so halves align with machines
+        devs.sort_by_key(|&d| (cluster.devices[d].machine, d));
+        let half = devs.len() / 2;
+        a.extend_from_slice(&devs[..half]);
+        b.extend_from_slice(&devs[half..]);
+    }
+    (a, b)
+}
+
+fn tournament<'p>(
+    population: &'p [(Partition, f64)],
+    rng: &mut Xoshiro256pp,
+) -> &'p Partition {
+    let i = rng.gen_range(population.len());
+    let j = rng.gen_range(population.len());
+    if population[i].1 >= population[j].1 {
+        &population[i].0
+    } else {
+        &population[j].0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::util::prop::{prop_assert, prop_check};
+
+    fn quick_cfg(seed: u64) -> GaConfig {
+        GaConfig {
+            population: 6,
+            iterations: 8,
+            patience: 5,
+            seed,
+            fitness_requests: 60,
+            fitness_rate: 0.5,
+            ..GaConfig::default()
+        }
+    }
+
+    #[test]
+    fn ga_finds_feasible_deployment_half_price() {
+        let c = cluster::heterogeneous_half_price();
+        let m = ModelSpec::llama2_70b();
+        let mut ga = GeneticScheduler::new(&c, &m, quick_cfg(1));
+        let res = ga.run();
+        assert!(!res.deployment.pipelines.is_empty());
+        res.deployment.validate(&c, &m).unwrap();
+        assert!(res.fitness > 0.0);
+        assert!(res.fitness >= res.init_fitness - 1e-9);
+        // history monotone non-decreasing
+        assert!(res
+            .history
+            .windows(2)
+            .all(|w| w[1].best_fitness >= w[0].best_fitness - 1e-12));
+    }
+
+    #[test]
+    fn guided_mutations_preserve_device_multiset() {
+        let c = cluster::heterogeneous_half_price();
+        let m = ModelSpec::llama2_70b();
+        prop_check(60, 0xBEEF, |rng| {
+            let mut ga = GeneticScheduler::new(&c, &m, quick_cfg(rng.next_u64()));
+            let devices = c.online_devices();
+            let mut p = normalize(initial_groups(&c, &devices, rng));
+            for _ in 0..10 {
+                if let Some(q) = ga.mutate(&p, rng) {
+                    p = q;
+                }
+            }
+            let mut all: Vec<DeviceId> = p.concat();
+            all.sort_unstable();
+            prop_assert(all == devices, format!("multiset changed: {all:?}"))
+        });
+    }
+
+    #[test]
+    fn random_mutations_preserve_device_multiset() {
+        let c = cluster::heterogeneous_half_price();
+        prop_check(60, 0xF00D, |rng| {
+            let devices = c.online_devices();
+            let mut p = normalize(initial_groups(&c, &devices, rng));
+            for _ in 0..10 {
+                if let Some(q) = mutate_random(&p, rng) {
+                    p = q;
+                }
+            }
+            let mut all: Vec<DeviceId> = p.concat();
+            all.sort_unstable();
+            prop_assert(all == devices, format!("multiset changed: {all:?}"))
+        });
+    }
+
+    #[test]
+    fn split_group_halves_types() {
+        let c = cluster::heterogeneous_half_price();
+        // Iceland machine 0+1: 16×3090Ti
+        let g: Vec<DeviceId> = (0..16).collect();
+        let (a, b) = split_group(&c, &g);
+        assert_eq!(a.len(), 8);
+        assert_eq!(b.len(), 8);
+        // halves are machine-aligned
+        let ma = c.devices[a[0]].machine;
+        assert!(a.iter().all(|&d| c.devices[d].machine == ma));
+    }
+
+    #[test]
+    fn guided_beats_or_ties_random_on_half_price() {
+        let c = cluster::heterogeneous_half_price();
+        let m = ModelSpec::llama2_70b();
+        let mut g_cfg = quick_cfg(7);
+        g_cfg.iterations = 12;
+        let mut r_cfg = g_cfg.clone();
+        r_cfg.mutation = MutationMode::Random;
+        let gf = GeneticScheduler::new(&c, &m, g_cfg).run().fitness;
+        let rf = GeneticScheduler::new(&c, &m, r_cfg).run().fitness;
+        assert!(gf >= rf - 0.02, "guided {gf} vs random {rf}");
+    }
+
+    #[test]
+    fn deployment_uses_only_online_devices() {
+        let mut c = cluster::heterogeneous_half_price();
+        c.take_offline(&[0, 1, 2, 3]);
+        let m = ModelSpec::llama2_70b();
+        let mut ga = GeneticScheduler::new(&c, &m, quick_cfg(3));
+        let res = ga.run();
+        res.deployment.validate(&c, &m).unwrap();
+        for d in res.deployment.devices() {
+            assert!(c.devices[d].online);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! K-means over the communication matrix + elbow method (paper §4.3,
+//! "Initialization").
+//!
+//! Devices are embedded by their row of the bandwidth matrix (log-scale,
+//! since link classes span five orders of magnitude); k-means then groups
+//! devices with similar connectivity — i.e. it discovers machines/regions
+//! — and the elbow method picks the number of initial pipeline groups M.
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::util::rng::Xoshiro256pp;
+
+/// Embed device `d` as its log-bandwidth row (plus log-latency row) to all
+/// other devices.
+fn embed(cluster: &Cluster, devices: &[DeviceId]) -> Vec<Vec<f64>> {
+    devices
+        .iter()
+        .map(|&d| {
+            let mut row: Vec<f64> = Vec::with_capacity(devices.len() * 2);
+            for &d2 in devices {
+                if d == d2 {
+                    row.push(0.0);
+                    row.push(0.0);
+                } else {
+                    row.push(cluster.comm.beta(d, d2).log10());
+                    row.push(-(cluster.comm.alpha(d, d2).log10()));
+                }
+            }
+            row
+        })
+        .collect()
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Standard Lloyd's k-means. Returns (assignment per device, inertia).
+pub fn kmeans(points: &[Vec<f64>], k: usize, rng: &mut Xoshiro256pp) -> (Vec<usize>, f64) {
+    let n = points.len();
+    assert!(k >= 1 && k <= n);
+    let dim = points[0].len();
+
+    // k-means++ seeding.
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centers.push(points[rng.gen_range(n)].clone());
+    while centers.len() < k {
+        let d2: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centers
+                    .iter()
+                    .map(|c| dist2(p, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            // all points identical to some center: pick arbitrary
+            centers.push(points[rng.gen_range(n)].clone());
+            continue;
+        }
+        let idx = rng.choose_weighted(&d2);
+        centers.push(points[idx].clone());
+    }
+
+    let mut assign = vec![0usize; n];
+    for _iter in 0..50 {
+        // Assign.
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(p, &centers[a])
+                        .partial_cmp(&dist2(p, &centers[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sums = vec![vec![0.0; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, x) in sums[assign[i]].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f64;
+                }
+                centers[c] = sums[c].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let inertia: f64 = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| dist2(p, &centers[assign[i]]))
+        .sum();
+    (assign, inertia)
+}
+
+/// Elbow method: run k-means for k = 1..=k_max, pick the k after which the
+/// inertia improvement drops below `threshold` of the previous drop.
+pub fn elbow_k(points: &[Vec<f64>], k_max: usize, rng: &mut Xoshiro256pp) -> usize {
+    let k_max = k_max.min(points.len()).max(1);
+    let mut inertias = Vec::with_capacity(k_max);
+    for k in 1..=k_max {
+        let (_, inertia) = kmeans(points, k, rng);
+        inertias.push(inertia);
+    }
+    if inertias.len() == 1 {
+        return 1;
+    }
+    // First k whose marginal improvement is < 15% of the k=1→2 drop.
+    let first_drop = (inertias[0] - inertias[1]).max(1e-12);
+    for k in 2..inertias.len() {
+        let drop = inertias[k - 1] - inertias[k];
+        if drop < 0.15 * first_drop {
+            return k;
+        }
+    }
+    inertias.len()
+}
+
+/// Communication-aware initial partition of the device pool into pipeline
+/// groups (the GA's initial population seed).
+pub fn initial_groups(
+    cluster: &Cluster,
+    devices: &[DeviceId],
+    rng: &mut Xoshiro256pp,
+) -> Vec<Vec<DeviceId>> {
+    if devices.len() <= 1 {
+        return vec![devices.to_vec()];
+    }
+    let points = embed(cluster, devices);
+    let k = elbow_k(&points, devices.len().min(12), rng);
+    let (assign, _) = kmeans(&points, k, rng);
+    let mut groups: Vec<Vec<DeviceId>> = vec![Vec::new(); k];
+    for (i, &d) in devices.iter().enumerate() {
+        groups[assign[i]].push(d);
+    }
+    groups.retain(|g| !g.is_empty());
+    // The initialization exists to "avoid using slow cross-region
+    // communication links" (§4.3) — if the elbow under-segmented, split
+    // any group spanning regions into per-region subgroups.
+    let mut out: Vec<Vec<DeviceId>> = Vec::new();
+    for g in groups {
+        let mut by_region: std::collections::BTreeMap<usize, Vec<DeviceId>> =
+            std::collections::BTreeMap::new();
+        for d in g {
+            by_region.entry(cluster.devices[d].region).or_default().push(d);
+        }
+        out.extend(by_region.into_values());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    #[test]
+    fn kmeans_separates_obvious_clusters() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut points = Vec::new();
+        for i in 0..10 {
+            points.push(vec![0.0 + 0.01 * i as f64, 0.0]);
+        }
+        for i in 0..10 {
+            points.push(vec![100.0 + 0.01 * i as f64, 100.0]);
+        }
+        let (assign, inertia) = kmeans(&points, 2, &mut rng);
+        assert!(inertia < 1.0);
+        let first = assign[0];
+        assert!(assign[..10].iter().all(|&a| a == first));
+        assert!(assign[10..].iter().all(|&a| a != first));
+    }
+
+    #[test]
+    fn elbow_detects_two_blobs() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let mut points = Vec::new();
+        for i in 0..12 {
+            points.push(vec![(i % 3) as f64 * 0.01, 0.0]);
+            points.push(vec![50.0 + (i % 3) as f64 * 0.01, 50.0]);
+        }
+        let k = elbow_k(&points, 8, &mut rng);
+        assert!(k == 2 || k == 3, "k={k}");
+    }
+
+    #[test]
+    fn initial_groups_respect_regions() {
+        // half-price: Iceland (16), Norway (6), Nevada (8) — groups should
+        // never mix regions (inter-region bandwidth is ~100× lower).
+        let c = cluster::heterogeneous_half_price();
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let groups = initial_groups(&c, &c.online_devices(), &mut rng);
+        assert!(groups.len() >= 2);
+        for g in &groups {
+            let r0 = c.devices[g[0]].region;
+            assert!(
+                g.iter().all(|&d| c.devices[d].region == r0),
+                "group mixes regions: {g:?}"
+            );
+        }
+        // every device appears exactly once
+        let mut all: Vec<DeviceId> = groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, c.online_devices());
+    }
+
+    #[test]
+    fn single_device_pool() {
+        let c = cluster::case_study();
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let groups = initial_groups(&c, &[3], &mut rng);
+        assert_eq!(groups, vec![vec![3]]);
+    }
+}

@@ -1,0 +1,103 @@
+//! Pipeline layer-partition heuristic (paper §4.3, "Determine the
+//! pipeline partitions").
+//!
+//! For a fresh offspring the partition starts even (`l_ij = L/S_i`); after
+//! a DP pass bound the stages to concrete device sets, the partition is
+//! adjusted proportionally to each stage's total device memory — an
+//! expectation-maximization-style alternation with Algorithm 1.
+
+/// Even partition of `total_layers` into `stages` parts (remainder spread
+/// over the leading stages).
+pub fn even_partition(total_layers: usize, stages: usize) -> Vec<usize> {
+    assert!(stages > 0 && stages <= total_layers);
+    let base = total_layers / stages;
+    let rem = total_layers % stages;
+    (0..stages)
+        .map(|j| base + usize::from(j < rem))
+        .collect()
+}
+
+/// Redistribute layers proportionally to per-stage memory capacity
+/// (bytes). Every stage keeps at least one layer and the result sums to
+/// `total_layers`. Uses largest-remainder apportionment for determinism.
+pub fn memory_proportional_partition(total_layers: usize, stage_memory: &[f64]) -> Vec<usize> {
+    let stages = stage_memory.len();
+    assert!(stages > 0 && stages <= total_layers);
+    let total_mem: f64 = stage_memory.iter().sum();
+    assert!(total_mem > 0.0);
+
+    // Reserve 1 layer per stage, apportion the rest by memory share.
+    let free = total_layers - stages;
+    let quotas: Vec<f64> = stage_memory
+        .iter()
+        .map(|m| free as f64 * m / total_mem)
+        .collect();
+    let mut out: Vec<usize> = quotas.iter().map(|q| 1 + q.floor() as usize).collect();
+    let mut assigned: usize = out.iter().sum();
+
+    // Largest remainders get the leftover layers.
+    let mut rema: Vec<(usize, f64)> = quotas
+        .iter()
+        .enumerate()
+        .map(|(i, q)| (i, q - q.floor()))
+        .collect();
+    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut k = 0;
+    while assigned < total_layers {
+        out[rema[k % stages].0] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    debug_assert_eq!(out.iter().sum::<usize>(), total_layers);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_partition_sums_and_balances() {
+        assert_eq!(even_partition(80, 3), vec![27, 27, 26]);
+        assert_eq!(even_partition(80, 8), vec![10; 8]);
+        assert_eq!(even_partition(7, 7), vec![1; 7]);
+        for s in 1..=10 {
+            let p = even_partition(80, s);
+            assert_eq!(p.iter().sum::<usize>(), 80);
+            assert!(p.iter().max().unwrap() - p.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn memory_proportional_tracks_capacity() {
+        // case study: 4×48G, 2×24G, 2×16G → 192G/48G/32G per stage
+        let p = memory_proportional_partition(80, &[192e9, 48e9, 32e9]);
+        assert_eq!(p.iter().sum::<usize>(), 80);
+        // close to the paper's 48/20/12 hand layout
+        assert!(p[0] >= 52 && p[0] <= 60, "{p:?}");
+        assert!(p[1] >= 12 && p[1] <= 18, "{p:?}");
+        assert!(p[2] >= 8 && p[2] <= 12, "{p:?}");
+        assert!(p[0] > p[1] && p[1] > p[2]);
+    }
+
+    #[test]
+    fn minimum_one_layer_per_stage() {
+        let p = memory_proportional_partition(4, &[1e12, 1.0, 1.0, 1.0]);
+        assert_eq!(p, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn proportional_is_deterministic() {
+        let m = [3.0, 2.0, 2.0, 1.0];
+        assert_eq!(
+            memory_proportional_partition(13, &m),
+            memory_proportional_partition(13, &m)
+        );
+    }
+
+    #[test]
+    fn equal_memory_gives_even() {
+        let p = memory_proportional_partition(80, &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(p, vec![20, 20, 20, 20]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Two-phase scheduling over heterogeneity (paper §4): Algorithm-1 DP for
+//! per-pipeline layouts, k-means/elbow initialization, and a genetic
+//! algorithm (merge/split/swap) for the global partition; plus the
+//! baseline policies the evaluation compares against (symmetric-only
+//! ablation, Petals-style swarm).
+
+pub mod dp;
+pub mod genetic;
+pub mod kmeans;
+pub mod layer_partition;
+pub mod planner;
+pub mod swarm;
+pub mod symmetric;
+
+pub use dp::{optimal_pipeline, optimal_pipeline_opt, solve_dp, DpResult, GroupPool};
+pub use genetic::{GaConfig, GaResult, GeneticScheduler, HistoryPoint, MutationMode};
+pub use planner::PipelinePlanner;
+pub use swarm::swarm_deployment;
+pub use symmetric::symmetric_pipeline;

@@ -1,0 +1,13 @@
+//! Pipeline-planning flavor: HexGen's asymmetric planner vs the
+//! symmetric-only ablation (§5.2 "HexGen w/o asymmetric parallel support").
+
+/// Which per-group pipeline planner the GA uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelinePlanner {
+    /// Full HexGen: per-stage layer counts and TP degrees may differ
+    /// (Algorithm-1 DP).
+    Asymmetric,
+    /// Ablation: all stages share one TP degree and an even layer split —
+    /// the FlashAttention/Megatron-style symmetric constraint.
+    Symmetric,
+}

@@ -1,0 +1,123 @@
+//! Petals-style swarm-parallelism baseline (§5.3, Figure 3).
+//!
+//! Petals assigns each server (GPU) a contiguous block of layers sized to
+//! its memory and routes each request through a dynamically chosen chain
+//! of servers covering all layers — with **no static schedule**: chains
+//! are formed by availability, not by the communication topology, and
+//! there is no tensor parallelism. We reproduce the *policy*: TP=1 stages,
+//! layer blocks proportional to device memory, chains stitched in device
+//! order shuffled by the join order of a decentralized swarm (seeded),
+//! i.e. oblivious to region boundaries.
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::CostModel;
+use crate::model::ModelSpec;
+use crate::parallelism::{Deployment, Pipeline, Stage};
+use crate::util::rng::Xoshiro256pp;
+
+/// Build the swarm deployment: devices join in random order; each takes as
+/// many remaining layers of the current replica chain as its memory
+/// allows (with a KV/activation reserve); when a chain reaches `L`
+/// layers, a new chain starts. Incomplete trailing chains are dropped.
+pub fn swarm_deployment(
+    cluster: &Cluster,
+    model: &ModelSpec,
+    seed: u64,
+) -> Deployment {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut devices: Vec<DeviceId> = cluster.online_devices();
+    rng.shuffle(&mut devices);
+
+    let per_layer_bytes = model.params_per_layer() * model.btype();
+    // Petals reserves room for attention caches; use 70% of memory for
+    // weights, matching its default block auto-sizing spirit.
+    let usable = 0.7;
+
+    let mut pipelines = Vec::new();
+    let mut current: Vec<Stage> = Vec::new();
+    let mut remaining = model.layers;
+    for d in devices {
+        if remaining == 0 {
+            pipelines.push(Pipeline { stages: std::mem::take(&mut current) });
+            remaining = model.layers;
+        }
+        let mem = cluster.devices[d].gpu.spec().memory_bytes * usable;
+        let fit = (mem / per_layer_bytes).floor() as usize;
+        if fit == 0 {
+            continue; // device too small to host even one block
+        }
+        let take = fit.min(remaining);
+        current.push(Stage { devices: vec![d], layers: take });
+        remaining -= take;
+    }
+    if remaining == 0 && !current.is_empty() {
+        pipelines.push(Pipeline { stages: current });
+    }
+    Deployment { pipelines }
+}
+
+/// Swarm chains have no planner: re-forming after churn is just re-running
+/// [`swarm_deployment`] with a new seed.
+pub fn validate_swarm(
+    cluster: &Cluster,
+    model: &ModelSpec,
+    cm: &CostModel,
+    deployment: &Deployment,
+) -> Result<(), String> {
+    deployment.validate(cluster, model)?;
+    let t = crate::costmodel::InferenceTask::new(1, 64, 32);
+    deployment.validate_memory(cm, &t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    #[test]
+    fn swarm_covers_layers_with_tp1_stages() {
+        let c = cluster::heterogeneous_half_price();
+        let m = ModelSpec::llama2_70b();
+        let d = swarm_deployment(&c, &m, 42);
+        assert!(!d.pipelines.is_empty());
+        for p in &d.pipelines {
+            assert_eq!(p.total_layers(), 80);
+            assert!(p.stages.iter().all(|s| s.tp_degree() == 1));
+        }
+        let cm = CostModel::new(&c, &m);
+        validate_swarm(&c, &m, &cm, &d).unwrap();
+    }
+
+    #[test]
+    fn swarm_chains_ignore_regions() {
+        // With 3 regions and shuffled join order, at least one chain should
+        // straddle regions (that's the point of the baseline).
+        let c = cluster::heterogeneous_half_price();
+        let m = ModelSpec::llama2_70b();
+        let d = swarm_deployment(&c, &m, 7);
+        let straddles = d.pipelines.iter().any(|p| {
+            let r0 = c.devices[p.devices()[0]].region;
+            p.devices().iter().any(|&dd| c.devices[dd].region != r0)
+        });
+        assert!(straddles);
+    }
+
+    #[test]
+    fn swarm_is_deterministic_per_seed() {
+        let c = cluster::heterogeneous_half_price();
+        let m = ModelSpec::llama2_70b();
+        assert_eq!(swarm_deployment(&c, &m, 3), swarm_deployment(&c, &m, 3));
+        assert_ne!(swarm_deployment(&c, &m, 3), swarm_deployment(&c, &m, 4));
+    }
+
+    #[test]
+    fn small_pool_yields_no_chain() {
+        // 2×A4000 cannot host 80 layers
+        let c = cluster::case_study();
+        let mut c2 = c.clone();
+        c2.take_offline(&(0..6).collect::<Vec<_>>());
+        let m = ModelSpec::llama2_70b();
+        let d = swarm_deployment(&c2, &m, 1);
+        assert!(d.pipelines.is_empty());
+    }
+}

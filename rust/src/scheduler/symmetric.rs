@@ -1,0 +1,135 @@
+//! Symmetric-only pipeline planning: the constraint the paper ablates
+//! (§5.2) and the homogeneous baselines (FlashAttention serving, HF-TGI)
+//! operate under — every pipeline stage has the *same* TP degree and the
+//! *same* number of layers.
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::{CostModel, InferenceTask, Phase};
+use crate::parallelism::{Pipeline, Stage};
+
+use super::dp::{DpResult, GroupPool};
+use super::layer_partition::even_partition;
+
+/// Best symmetric plan for a device group: enumerate (stages S, tp) with
+/// S·tp ≤ |group|, tp | heads, even layer split, machine-major binding;
+/// pick the feasible plan with minimal Eq. 2 cost.
+pub fn symmetric_pipeline(
+    cm: &CostModel,
+    cluster: &Cluster,
+    devices: &[DeviceId],
+    task: &InferenceTask,
+    max_stages: usize,
+    max_tp: usize,
+) -> Option<DpResult> {
+    let pool = GroupPool::new(cluster, devices);
+    let n = pool.total();
+    let l = cm.model.layers;
+    let mut best: Option<DpResult> = None;
+    for s in 1..=max_stages.min(n).min(l) {
+        for tp in 1..=max_tp.min(n / s) {
+            if cm.model.heads % tp != 0 {
+                continue;
+            }
+            // Bind S stages of `tp` GPUs each from the per-type
+            // machine-major orders; symmetric systems also require one GPU
+            // type per TP group, so stages consume types greedily.
+            let mut stages: Vec<Stage> = Vec::with_capacity(s);
+            let mut used = [0usize; crate::parallelism::group::NUM_TYPES];
+            let partition = even_partition(l, s);
+            let mut ok = true;
+            for layers in partition.iter().take(s) {
+                // next type with enough remaining GPUs
+                let mut bound: Option<Vec<DeviceId>> = None;
+                for k in 0..crate::parallelism::group::NUM_TYPES {
+                    if pool.caps[k] - used[k] >= tp {
+                        bound = Some(pool.bind(k, used[k], tp).to_vec());
+                        used[k] += tp;
+                        break;
+                    }
+                }
+                match bound {
+                    Some(devs) => stages.push(Stage { devices: devs, layers: *layers }),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let pipeline = Pipeline { stages };
+            let Some(exact) = pipeline.cost(cm, task, Phase::Both) else {
+                continue; // memory violation somewhere
+            };
+            let better = best.as_ref().map(|b| exact < b.exact_cost).unwrap_or(true);
+            if better {
+                best = Some(DpResult { pipeline, dp_cost: exact, exact_cost: exact });
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+    use crate::model::ModelSpec;
+    use crate::scheduler::dp::optimal_pipeline;
+
+    #[test]
+    fn symmetric_plans_are_symmetric() {
+        let c = cluster::homogeneous_a100();
+        let m = ModelSpec::llama2_70b();
+        let cm = CostModel::new(&c, &m);
+        let t = InferenceTask::new(1, 128, 64);
+        let res = symmetric_pipeline(&cm, &c, &(0..8).collect::<Vec<_>>(), &t, 8, 8).unwrap();
+        let tp0 = res.pipeline.stages[0].tp_degree();
+        assert!(res.pipeline.stages.iter().all(|s| s.tp_degree() == tp0));
+        let layers: Vec<usize> = res.pipeline.stages.iter().map(|s| s.layers).collect();
+        assert!(layers.iter().max().unwrap() - layers.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn symmetric_never_beats_asymmetric() {
+        // The asymmetric DP searches a superset of the symmetric space, so
+        // its optimum is at least as good on every pool.
+        let m = ModelSpec::llama2_70b();
+        let t = InferenceTask::case_study();
+        for c in [cluster::case_study(), cluster::homogeneous_a100()] {
+            let cm = CostModel::new(&c, &m);
+            let devs: Vec<DeviceId> = (0..8).collect();
+            let sym = symmetric_pipeline(&cm, &c, &devs, &t, 8, 8);
+            let asym = optimal_pipeline(&cm, &c, &devs, &t, 8, 8);
+            if let (Some(s), Some(a)) = (&sym, &asym) {
+                assert!(
+                    a.exact_cost <= s.exact_cost * 1.0001,
+                    "{}: asym {} vs sym {}",
+                    c.name,
+                    a.exact_cost,
+                    s.exact_cost
+                );
+            } else {
+                assert!(sym.is_none(), "sym feasible where asym infeasible");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_ooms_on_case_study_where_asymmetric_fits() {
+        // §3.1: the symmetric planner cannot fit the model over the whole
+        // mixed pool at every (S, tp) that uses the A4000s evenly... it may
+        // still find a plan ignoring the weak GPUs; what it must NOT find
+        // is any plan better than the asymmetric one.
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let cm = CostModel::new(&c, &m);
+        let t = InferenceTask::case_study();
+        let sym = symmetric_pipeline(&cm, &c, &(0..8).collect::<Vec<_>>(), &t, 8, 8);
+        let asym = optimal_pipeline(&cm, &c, &(0..8).collect::<Vec<_>>(), &t, 8, 8).unwrap();
+        if let Some(s) = sym {
+            assert!(asym.exact_cost <= s.exact_cost * 1.0001);
+        }
+    }
+}

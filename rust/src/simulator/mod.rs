@@ -1,0 +1,11 @@
+//! Serving simulation: discrete-event engine over deployments (the
+//! evaluation substrate for Figures 2–7) and the SLO model.
+
+pub mod engine;
+pub mod event;
+
+pub use engine::{
+    attainment_absolute, batch_timing, estimate_attainment, simulate, BatchPolicy,
+    RequestRecord, RouterPolicy, SimConfig, SimOutcome, SloModel,
+};
+pub use event::EventQueue;

@@ -1,0 +1,88 @@
+//! Minimal benchmark harness (`cargo bench` targets use this; the offline
+//! crate set has no criterion). Criterion-like reporting: warm-up, fixed
+//! wall-time budget, mean/p50/min/max per iteration.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10}/iter  (p50 {:>10}, min {:>10}, max {:>10}, n={})",
+            self.name,
+            fmt(self.mean),
+            fmt(self.p50),
+            fmt(self.min),
+            fmt(self.max),
+            self.iters
+        );
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+fn fmt(d: Duration) -> String {
+    crate::util::fmt_duration(d.as_secs_f64())
+}
+
+/// Run `f` repeatedly for ~`budget` (after `warmup` iterations), timing
+/// each call. Use `std::hint::black_box` inside `f` for inputs/outputs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        min: samples[0],
+        max: samples[samples.len() - 1],
+    };
+    res.report();
+    res
+}
+
+/// Group header for bench output.
+pub fn group(title: &str) {
+    println!("\n── {title} ──");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.p50 && r.p50 <= r.max);
+        assert!(r.mean >= r.min && r.mean <= r.max);
+    }
+}

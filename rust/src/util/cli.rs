@@ -1,0 +1,168 @@
+//! Tiny command-line argument parser (no `clap` in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Typed accessors with defaults keep the experiment entry points terse.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of numbers: `--rates 0.5,1,2`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad number '{x}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{x}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("serve --verbose --rate 2.5 trace.json");
+        assert_eq!(a.positional, vec!["serve", "trace.json"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("--out=result.json --n=5");
+        assert_eq!(a.get_str("out", ""), "result.json");
+        assert_eq!(a.get_usize("n", 0), 5);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--rate 1.0 --dry-run");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_f64("rate", 0.0), 1.0);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("");
+        assert_eq!(a.get_usize("n", 7), 7);
+        assert_eq!(a.get_str("mode", "sim"), "sim");
+        assert_eq!(a.get_f64_list("rates", &[1.0, 2.0]), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = parse("--rates 0.5,1,2 --lens 32,64");
+        assert_eq!(a.get_f64_list("rates", &[]), vec![0.5, 1.0, 2.0]);
+        assert_eq!(a.get_usize_list("lens", &[]), vec![32, 64]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_number_panics() {
+        let a = parse("--rate abc");
+        a.get_f64("rate", 0.0);
+    }
+}

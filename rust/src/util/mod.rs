@@ -1,0 +1,57 @@
+//! Foundation substrates: PRNG, JSON, statistics, CLI parsing, logging and
+//! a mini property-test harness. These exist because the offline build has
+//! no `rand`/`serde`/`clap`/`proptest`; everything above this module is
+//! paper logic.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format seconds human-readably (`1.234s`, `12.3ms`, `456us`).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.1}us", secs * 1e6)
+    } else {
+        format!("{:.0}ns", secs * 1e9)
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2}{}", UNITS[u])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(0.0123), "12.30ms");
+        assert_eq!(fmt_duration(45e-6), "45.0us");
+        assert_eq!(fmt_duration(120e-9), "120ns");
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(512.0), "512.00B");
+        assert_eq!(fmt_bytes(2048.0), "2.00KiB");
+        assert_eq!(fmt_bytes(140e9), "130.39GiB");
+    }
+}

@@ -1,0 +1,100 @@
+//! Mini property-based testing harness (no `proptest` in the offline set).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(256, 0xC0FFEE, |rng| {
+//!     let n = rng.gen_range_in(1, 50);
+//!     let plan = random_plan(rng, n);
+//!     prop_assert(plan.is_valid(), format!("invalid plan: {plan:?}"))
+//! });
+//! ```
+//!
+//! Each case gets a forked RNG; on failure the harness reports the case
+//! index and the sub-seed so the exact case can be replayed with
+//! [`prop_replay`]. No shrinking — cases are kept small by construction.
+
+use super::rng::Xoshiro256pp;
+
+/// Result of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper returning `PropResult`.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are within `tol`.
+pub fn prop_close(a: f64, b: f64, tol: f64, context: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{context}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of `property`; panic with diagnostics on the
+/// first failure.
+pub fn prop_check<F>(cases: usize, seed: u64, mut property: F)
+where
+    F: FnMut(&mut Xoshiro256pp) -> PropResult,
+{
+    let mut master = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let sub_seed = master.next_u64();
+        let mut rng = Xoshiro256pp::seed_from_u64(sub_seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (sub_seed={sub_seed:#x}): {msg}\n\
+                 replay with prop_replay({sub_seed:#x}, property)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by sub-seed.
+pub fn prop_replay<F>(sub_seed: u64, mut property: F)
+where
+    F: FnMut(&mut Xoshiro256pp) -> PropResult,
+{
+    let mut rng = Xoshiro256pp::seed_from_u64(sub_seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("replayed case (sub_seed={sub_seed:#x}) failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check(50, 1, |rng| {
+            count += 1;
+            let x = rng.next_f64();
+            prop_assert((0.0..1.0).contains(&x), "f64 out of range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(50, 2, |rng| {
+            let x = rng.gen_range(10);
+            prop_assert(x < 5, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0 + 1e-12, 1e-9, "eq").is_ok());
+        assert!(prop_close(1.0, 1.1, 1e-9, "neq").is_err());
+        // relative tolerance scales with magnitude
+        assert!(prop_close(1e12, 1e12 + 1.0, 1e-9, "big").is_ok());
+    }
+}

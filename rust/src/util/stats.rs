@@ -1,0 +1,248 @@
+//! Latency/throughput statistics: percentiles, histograms, online moments.
+
+/// Summary statistics over a set of samples (latencies in seconds, etc.).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary from unsorted samples. Returns `None` when empty.
+    pub fn from_samples(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Some(Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            max: xs[n - 1],
+            p50: percentile_sorted(&xs, 0.50),
+            p90: percentile_sorted(&xs, 0.90),
+            p95: percentile_sorted(&xs, 0.95),
+            p99: percentile_sorted(&xs, 0.99),
+        })
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of unsorted samples.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&xs, q)
+}
+
+/// Fraction of samples `<= bound` — the SLO attainment primitive.
+pub fn fraction_within(samples: &[f64], bound: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.iter().filter(|&&x| x <= bound).count() as f64 / samples.len() as f64
+}
+
+/// Simple fixed-bucket histogram for report output.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub buckets: Vec<usize>,
+    pub underflow: usize,
+    pub overflow: usize,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbuckets: usize) -> Histogram {
+        assert!(hi > lo && nbuckets > 0);
+        Histogram {
+            lo,
+            hi,
+            buckets: vec![0; nbuckets],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.buckets.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.buckets[idx.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.buckets.iter().sum::<usize>() + self.underflow + self.overflow
+    }
+
+    /// Render as ASCII bars for terminal reports.
+    pub fn render(&self, width: usize) -> String {
+        let max = self.buckets.iter().copied().max().unwrap_or(1).max(1);
+        let n = self.buckets.len();
+        let mut out = String::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            let b_lo = self.lo + (self.hi - self.lo) * i as f64 / n as f64;
+            let b_hi = self.lo + (self.hi - self.lo) * (i + 1) as f64 / n as f64;
+            let bar = "#".repeat(c * width / max);
+            out.push_str(&format!("{b_lo:>9.3}-{b_hi:<9.3} |{bar:<width$}| {c}\n"));
+        }
+        out
+    }
+}
+
+/// Online mean/variance accumulator (Welford) for streaming metrics.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::from_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile(&xs, 1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn fraction_within_bounds() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(fraction_within(&xs, 2.5), 0.5);
+        assert_eq!(fraction_within(&xs, 0.0), 0.0);
+        assert_eq!(fraction_within(&xs, 100.0), 1.0);
+        assert_eq!(fraction_within(&[], 1.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.9, -1.0, 10.0, 11.0] {
+            h.add(x);
+        }
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 2);
+        assert_eq!(h.buckets[9], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.total(), 7);
+        assert!(h.render(20).lines().count() == 10);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64) * 0.37).collect();
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.add(x);
+        }
+        let s = Summary::from_samples(&xs).unwrap();
+        assert!((o.mean() - s.mean).abs() < 1e-9);
+        assert!((o.std() - s.std).abs() < 1e-9);
+        assert_eq!(o.min(), s.min);
+        assert_eq!(o.max(), s.max);
+        assert_eq!(o.count(), s.count);
+    }
+}

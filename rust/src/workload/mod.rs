@@ -1,0 +1,123 @@
+//! Inference workload generation (paper §5.1).
+//!
+//! Requests arrive by a Poisson process (exponential inter-arrival times)
+//! parameterized by the request rate; prompt lengths follow a clipped
+//! log-normal fit to chatbot-arena-style conversations; output lengths are
+//! fixed per experiment (32/64/128), as in the paper's grids.
+
+use crate::costmodel::InferenceTask;
+use crate::util::rng::Xoshiro256pp;
+
+/// One inference request in a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time, seconds from trace start.
+    pub arrival: f64,
+    pub task: InferenceTask,
+}
+
+/// Prompt/output length distribution.
+#[derive(Debug, Clone, Copy)]
+pub enum LengthDist {
+    /// Every request has exactly this (s_in, s_out).
+    Fixed { s_in: usize, s_out: usize },
+    /// Log-normal prompt lengths (clipped), fixed output length — the
+    /// §5.1 setup: real-prompt inputs, swept output lengths.
+    LmsysLike { s_out: usize },
+}
+
+impl LengthDist {
+    fn sample(&self, rng: &mut Xoshiro256pp) -> (usize, usize) {
+        match *self {
+            LengthDist::Fixed { s_in, s_out } => (s_in, s_out),
+            LengthDist::LmsysLike { s_out } => {
+                // Chatbot-arena prompts: median ≈ 50 tokens, heavy tail;
+                // ln N(4.0, 0.8) → median e^4 ≈ 55, p95 ≈ 205. Clip to
+                // [8, 1024].
+                let s_in = rng.log_normal(4.0, 0.8).round().clamp(8.0, 1024.0) as usize;
+                (s_in, s_out)
+            }
+        }
+    }
+}
+
+/// Workload generator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    /// Mean request rate, requests/second (Poisson).
+    pub rate: f64,
+    /// Number of requests to generate.
+    pub num_requests: usize,
+    pub lengths: LengthDist,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// Generate the request trace (sorted by arrival).
+    pub fn generate(&self) -> Vec<Request> {
+        assert!(self.rate > 0.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed);
+        let mut t = 0.0;
+        (0..self.num_requests)
+            .map(|id| {
+                t += rng.exponential(self.rate);
+                let (s_in, s_out) = self.lengths.sample(&mut rng);
+                Request {
+                    id,
+                    arrival: t,
+                    task: InferenceTask::new(1, s_in, s_out),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let spec = WorkloadSpec {
+            rate: 4.0,
+            num_requests: 8000,
+            lengths: LengthDist::Fixed { s_in: 128, s_out: 32 },
+            seed: 1,
+        };
+        let trace = spec.generate();
+        assert_eq!(trace.len(), 8000);
+        let span = trace.last().unwrap().arrival;
+        let measured_rate = 8000.0 / span;
+        assert!((measured_rate - 4.0).abs() < 0.2, "rate={measured_rate}");
+        // arrivals sorted
+        assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn lmsys_lengths_plausible() {
+        let spec = WorkloadSpec {
+            rate: 1.0,
+            num_requests: 5000,
+            lengths: LengthDist::LmsysLike { s_out: 64 },
+            seed: 2,
+        };
+        let trace = spec.generate();
+        let mean_in: f64 =
+            trace.iter().map(|r| r.task.s_in as f64).sum::<f64>() / trace.len() as f64;
+        assert!((40.0..120.0).contains(&mean_in), "mean_in={mean_in}");
+        assert!(trace.iter().all(|r| (8..=1024).contains(&r.task.s_in)));
+        assert!(trace.iter().all(|r| r.task.s_out == 64));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = WorkloadSpec {
+            rate: 2.0,
+            num_requests: 100,
+            lengths: LengthDist::LmsysLike { s_out: 32 },
+            seed: 7,
+        };
+        assert_eq!(spec.generate(), spec.generate());
+    }
+}

@@ -1,0 +1,193 @@
+//! Property-based tests over scheduler, cost model and simulator
+//! invariants (in-house `util::prop` harness; no proptest offline).
+
+use hexgen::cluster::{self, Cluster, DeviceId};
+use hexgen::costmodel::{CostModel, InferenceTask, Phase};
+use hexgen::model::ModelSpec;
+use hexgen::parallelism::{Deployment, Pipeline, Stage};
+use hexgen::scheduler::{optimal_pipeline, GroupPool};
+use hexgen::simulator::{simulate, SimConfig, SloModel};
+use hexgen::util::prop::{prop_assert, prop_check};
+use hexgen::util::rng::Xoshiro256pp;
+use hexgen::workload::{LengthDist, WorkloadSpec};
+
+fn random_task(rng: &mut Xoshiro256pp) -> InferenceTask {
+    InferenceTask::new(
+        1 + rng.gen_range(8),
+        8 + rng.gen_range(512),
+        1 + rng.gen_range(256),
+    )
+}
+
+fn random_subset(rng: &mut Xoshiro256pp, cluster: &Cluster, min: usize) -> Vec<DeviceId> {
+    let n = cluster.devices.len();
+    let k = min + rng.gen_range(n - min);
+    rng.sample_indices(n, k.max(min))
+}
+
+#[test]
+fn cost_model_properties() {
+    let clusters = [cluster::heterogeneous_full_price(), cluster::case_study()];
+    let m = ModelSpec::llama2_70b();
+    prop_check(300, 0xC057, |rng| {
+        let c = &clusters[rng.gen_range(clusters.len())];
+        let cm = CostModel::new(c, &m);
+        let t = random_task(rng);
+        let devs = random_subset(rng, c, 1);
+        let layers = 1 + rng.gen_range(m.layers);
+
+        // costs are non-negative and finite
+        let comp = cm.comp_cost(&devs, layers, &t, Phase::Both);
+        let tp = cm.comm_tp_cost(&devs, layers, &t, Phase::Both);
+        prop_assert(comp.is_finite() && comp > 0.0, format!("comp={comp}"))?;
+        prop_assert(tp.is_finite() && tp >= 0.0, format!("tp={tp}"))?;
+
+        // phase split sums to Both for comm; comp's Both uses s_out scans
+        let tp_sum = cm.comm_tp_cost(&devs, layers, &t, Phase::Prefill)
+            + cm.comm_tp_cost(&devs, layers, &t, Phase::Decode);
+        prop_assert((tp_sum - tp).abs() <= 1e-9 * tp.max(1.0), "tp phases")?;
+
+        // memory decreases (weakly) with TP degree
+        let m1 = cm.mem_bytes(1, layers, &t);
+        let m4 = cm.mem_bytes(4, layers, &t);
+        prop_assert(m4 <= m1, format!("mem tp4 {m4} > tp1 {m1}"))?;
+
+        // more layers -> more memory, more compute
+        if layers + 1 <= m.layers {
+            let comp2 = cm.comp_cost(&devs, layers + 1, &t, Phase::Both);
+            prop_assert(comp2 > comp, "comp not monotone in layers")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dp_plans_are_valid_and_within_pool() {
+    let m = ModelSpec::llama2_70b();
+    let clusters = [
+        cluster::heterogeneous_half_price(),
+        cluster::heterogeneous_full_price(),
+        cluster::case_study(),
+    ];
+    prop_check(40, 0xD9, |rng| {
+        let c = &clusters[rng.gen_range(clusters.len())];
+        let cm = CostModel::new(c, &m);
+        let devs = random_subset(rng, c, 2);
+        let t = random_task(rng);
+        match optimal_pipeline(&cm, c, &devs, &t, 6, 8) {
+            None => Ok(()), // infeasible subsets are fine
+            Some(res) => {
+                res.pipeline
+                    .validate(&m)
+                    .map_err(|e| format!("invalid plan: {e}"))?;
+                // all devices drawn from the subset
+                for d in res.pipeline.devices() {
+                    prop_assert(devs.contains(&d), format!("foreign device {d}"))?;
+                }
+                // exact cost is reproducible
+                let again = res.pipeline.cost(&cm, &t, Phase::Both).unwrap();
+                prop_assert(
+                    (again - res.exact_cost).abs() < 1e-9,
+                    "cost not reproducible",
+                )?;
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn group_pool_binding_is_a_partition() {
+    let c = cluster::heterogeneous_full_price();
+    prop_check(100, 0xB14D, |rng| {
+        let devs = random_subset(rng, &c, 1);
+        let pool = GroupPool::new(&c, &devs);
+        prop_assert(pool.total() == devs.len(), "pool size")?;
+        // binding all of each type enumerates each device exactly once
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 0..hexgen::parallelism::group::NUM_TYPES {
+            let cap = pool.caps[k];
+            if cap == 0 {
+                continue;
+            }
+            for &d in pool.bind(k, 0, cap) {
+                prop_assert(seen.insert(d), format!("device {d} bound twice"))?;
+            }
+        }
+        prop_assert(seen.len() == devs.len(), "binding incomplete")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_conservation_and_monotonicity() {
+    let c = cluster::homogeneous_a100();
+    let m = ModelSpec::llama2_70b();
+    let cm = CostModel::new(&c, &m);
+    let slo = SloModel::new(&m);
+    let deployment = Deployment {
+        pipelines: vec![
+            Pipeline { stages: vec![Stage { devices: (0..8).collect(), layers: 80 }] },
+            Pipeline { stages: vec![Stage { devices: (8..16).collect(), layers: 80 }] },
+        ],
+    };
+    prop_check(25, 0x51A7, |rng| {
+        let rate = 0.2 + rng.next_f64() * 4.0;
+        let n = 50 + rng.gen_range(100);
+        let s_out = *rng.choose(&[32usize, 64, 128]).unwrap();
+        let trace = WorkloadSpec {
+            rate,
+            num_requests: n,
+            lengths: LengthDist::LmsysLike { s_out },
+            seed: rng.next_u64(),
+        }
+        .generate();
+        let out = simulate(&cm, &deployment, &trace, &SimConfig::default());
+
+        // conservation: every request completes exactly once
+        prop_assert(out.records.len() == n, "record count")?;
+        for (r, req) in out.records.iter().zip(&trace) {
+            prop_assert(
+                r.completion >= req.arrival,
+                "completion before arrival",
+            )?;
+            prop_assert(r.latency > 0.0, "non-positive latency")?;
+        }
+        // attainment monotone in SLO scale
+        let mut prev = 0.0;
+        for scale in [1.0, 2.0, 5.0, 10.0, 50.0] {
+            let a = out.attainment(&slo, scale);
+            prop_assert(a + 1e-12 >= prev, "attainment not monotone")?;
+            prop_assert((0.0..=1.0).contains(&a), "attainment range")?;
+            prev = a;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_timing_latency_at_least_period() {
+    let c = cluster::heterogeneous_full_price();
+    let m = ModelSpec::llama2_70b();
+    let cm = CostModel::new(&c, &m);
+    prop_check(100, 0xBA7C1, |rng| {
+        let devs = random_subset(rng, &c, 2);
+        let t = random_task(rng);
+        let Some(res) = optimal_pipeline(&cm, &c, &devs, &t, 4, 8) else {
+            return Ok(());
+        };
+        let stages: Vec<(Vec<usize>, usize)> = res
+            .pipeline
+            .stages
+            .iter()
+            .map(|s| (s.devices.clone(), s.layers))
+            .collect();
+        if let Some((lat, period)) =
+            hexgen::simulator::batch_timing(&cm, &stages, &t, false)
+        {
+            prop_assert(lat >= period - 1e-12, format!("lat {lat} < period {period}"))?;
+            prop_assert(lat.is_finite() && period > 0.0, "timing finite")?;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,152 @@
+//! Integration tests over the real AOT artifacts: the Rust coordinator
+//! must reproduce the fused JAX model's numerics when composing
+//! asymmetric TP×PP stage executables with host-side collectives.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent).
+
+use std::path::PathBuf;
+
+use hexgen::coordinator::{plan_from_strategy, PipelineExecutor};
+use hexgen::runtime::{tokenizer, InputArg, ModelRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("full_prefill_b1.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Greedy generation with the fused whole-model executables (the oracle).
+fn fused_generate(rt: &ModelRuntime, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let info = &rt.manifest.model;
+    assert_eq!(prompt.len(), info.prompt_len);
+    let weight_names = rt.manifest.weight_order.clone();
+
+    let mut inputs = vec![InputArg::I32(prompt, vec![1, info.prompt_len])];
+    let weights: Vec<&hexgen::runtime::Tensor> = weight_names
+        .iter()
+        .map(|n| rt.weights.get(n).unwrap())
+        .collect();
+    for w in &weights {
+        inputs.push(InputArg::F32(w));
+    }
+    let outs = rt.execute_t("full_prefill_b1", &inputs).unwrap();
+    let (logits, mut kc, mut vc) = (outs[0].clone(), outs[1].clone(), outs[2].clone());
+    let mut next = hexgen::coordinator::argmax_rows(&logits, info.vocab);
+    let mut out = vec![next[0]];
+
+    for step in 1..max_new {
+        let pos = (info.prompt_len + step - 1) as i32;
+        let tok = [next[0]];
+        let mut inputs = vec![
+            InputArg::I32(&tok, vec![1, 1]),
+            InputArg::F32(&kc),
+            InputArg::F32(&vc),
+            InputArg::ScalarI32(pos),
+        ];
+        for w in &weights {
+            inputs.push(InputArg::F32(w));
+        }
+        let outs = rt.execute_t("full_decode_b1", &inputs).unwrap();
+        let logits = outs[0].clone();
+        kc = outs[1].clone();
+        vc = outs[2].clone();
+        next = hexgen::coordinator::argmax_rows(&logits, info.vocab);
+        out.push(next[0]);
+    }
+    out
+}
+
+#[test]
+fn asymmetric_plans_match_fused_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt = tokenizer::encode("the quick brown fox jumps over the lazy dog", 32);
+    let max_new = 6;
+
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let oracle = fused_generate(&rt, &prompt, max_new);
+    assert_eq!(oracle.len(), max_new);
+
+    // Every plan shape must reproduce the oracle token-for-token.
+    for (tps, layers) in [
+        (vec![1usize], vec![6usize]),          // single stage TP=1
+        (vec![4], vec![6]),                    // single stage TP=4
+        (vec![2, 1], vec![4, 2]),              // the §3.1-style asymmetric plan
+        (vec![1, 2, 4], vec![2, 2, 2]),        // fully asymmetric 3-stage
+        (vec![2, 2], vec![3, 3]),              // symmetric 2-stage
+    ] {
+        let plan = plan_from_strategy(&tps, &layers).unwrap();
+        let exec = PipelineExecutor::new(&dir, plan).unwrap();
+        let result = exec.generate(&[prompt.clone()], max_new).unwrap();
+        assert_eq!(
+            result.tokens[0], oracle,
+            "plan {} diverged from fused model",
+            exec.strategy_string()
+        );
+        assert_eq!(result.decode_steps, max_new);
+        assert!(result.prefill_seconds > 0.0 && result.decode_seconds > 0.0);
+    }
+}
+
+#[test]
+fn tp_collective_counts_match_plan() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt = tokenizer::encode("hello world", 32);
+    let plan = plan_from_strategy(&[2, 1], &[4, 2]).unwrap();
+    let exec = PipelineExecutor::new(&dir, plan).unwrap();
+    let res = exec.generate(&[prompt], 3).unwrap();
+    // Prefill: stage0 has 4 layers at TP2 → 8 all-reduces; stage1 TP1 → 0.
+    // Decode: 2 further steps × 8. Total 8 + 16 = 24.
+    assert_eq!(res.comm.allreduce_ops, 24, "{:?}", res.comm);
+    // One PP hand-off per token step (prefill + 2 decode steps).
+    assert_eq!(res.comm.pp_sends, 3);
+    assert!(res.comm.allreduce_bytes > 0.0 && res.comm.pp_bytes > 0.0);
+}
+
+#[test]
+fn batch_bucket_padding_is_transparent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let p1 = tokenizer::encode("first prompt", 32);
+    let p2 = tokenizer::encode("second, rather different prompt", 32);
+    let plan = plan_from_strategy(&[2], &[6]).unwrap();
+    let exec = PipelineExecutor::new(&dir, plan).unwrap();
+
+    // batch of 2 → bucket 4; results must equal per-request runs (b=1).
+    let joint = exec.generate(&[p1.clone(), p2.clone()], 4).unwrap();
+    assert_eq!(joint.bucket, 4);
+    assert_eq!(joint.tokens.len(), 2);
+    let solo1 = exec.generate(&[p1], 4).unwrap();
+    let solo2 = exec.generate(&[p2], 4).unwrap();
+    assert_eq!(joint.tokens[0], solo1.tokens[0]);
+    assert_eq!(joint.tokens[1], solo2.tokens[0]);
+}
+
+#[test]
+fn invalid_plans_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    // layer sum mismatch
+    assert!(PipelineExecutor::new(&dir, plan_from_strategy(&[1], &[5]).unwrap()).is_err());
+    // unsupported tp degree
+    assert!(PipelineExecutor::new(&dir, plan_from_strategy(&[3], &[6]).unwrap()).is_err());
+    // non-contiguous stages
+    use hexgen::coordinator::StagePlan;
+    let bad = vec![
+        StagePlan { layer_start: 0, layer_count: 3, tp: 1 },
+        StagePlan { layer_start: 4, layer_count: 3, tp: 1 },
+    ];
+    assert!(PipelineExecutor::new(&dir, bad).is_err());
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt = tokenizer::encode("determinism check", 32);
+    let plan = plan_from_strategy(&[2, 2], &[3, 3]).unwrap();
+    let exec = PipelineExecutor::new(&dir, plan).unwrap();
+    let a = exec.generate(&[prompt.clone()], 5).unwrap();
+    let b = exec.generate(&[prompt], 5).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+}
