@@ -1,0 +1,21 @@
+# HexGen reproduction — top-level targets.
+
+# Lower the demo model to HLO-text artifacts + weights + manifest
+# (requires JAX; the Rust reference backend does not need this). The
+# output lands in rust/artifacts/ — where the tests (CARGO_MANIFEST_DIR)
+# and benches (package-root cwd) look for it.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../rust/artifacts
+
+# Regenerate the checked-in reference-backend parity fixture.
+fixture:
+	cd python && python -m compile.make_ref_fixture \
+		--out-dir ../rust/tests/fixtures/ref_demo
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+.PHONY: artifacts fixture build test

@@ -1,0 +1,170 @@
+"""Emit the checked-in fixture for the Rust `ReferenceBackend` parity test.
+
+Builds a tiny demo model (2 layers, H=16) with the same weight layout the
+AOT step uses, runs prefill + greedy decode through the pure-jnp oracles
+in ``kernels/ref.py`` (the numerics contract the Rust reference backend
+mirrors), and writes:
+
+* ``manifest.json`` / ``weights.bin`` — loadable by the Rust runtime
+  layer exactly like a real artifacts directory (no ``.hlo.txt`` files:
+  the reference backend executes stage names directly);
+* ``golden.json`` — prompt tokens, post-prefill logits, and the greedy
+  token sequence the Rust side must reproduce.
+
+Usage: ``python -m compile.make_ref_fixture --out-dir ../rust/tests/fixtures/ref_demo``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import aot
+from . import model as M
+from .kernels.ref import attention_ref, decode_attention_ref, rmsnorm_ref
+
+CFG = M.DemoConfig(
+    layers=2,
+    hidden=16,
+    heads=2,
+    vocab=256,
+    prompt_len=8,
+    max_seq=16,
+    tp_degrees=(1, 2),
+    batch_buckets=(1, 2),
+)
+
+PROMPT = "hexgen parity"
+DECODE_STEPS = 6
+
+
+def encode(text: str, prompt_len: int) -> list:
+    """Mirror rust/src/runtime/tokenizer.rs: bytes, left-truncate, left-pad."""
+    bs = list(text.encode("utf-8"))[-prompt_len:]
+    return [0] * (prompt_len - len(bs)) + bs
+
+
+def layer_forward_prefill(x, params, layer, cfg):
+    """One layer, TP=1, built on the ref.py oracles (not the Pallas path)."""
+    (ln1, wq, wk, wv, wo), (ln2, w1, w2) = M.shard_layer(params, layer, 1, 0, cfg)
+    b, s, _ = x.shape
+    nh, dh = cfg.heads, cfg.head_dim
+    xn = rmsnorm_ref(x, ln1)
+    q = (xn @ wq).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    k = (xn @ wk).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    v = (xn @ wv).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+    attn = attention_ref(q, k, v, causal=True)
+    partial = attn.transpose(0, 2, 1, 3).reshape(b, s, nh * dh) @ wo
+    x = x + partial
+    x = x + jax.nn.relu(rmsnorm_ref(x, ln2) @ w1) @ w2
+    k_cache = jnp.zeros((b, nh, cfg.max_seq, dh), jnp.float32).at[:, :, :s].set(k)
+    v_cache = jnp.zeros((b, nh, cfg.max_seq, dh), jnp.float32).at[:, :, :s].set(v)
+    return x, k_cache, v_cache
+
+
+def layer_forward_decode(x, params, layer, k_cache, v_cache, pos, cfg):
+    (ln1, wq, wk, wv, wo), (ln2, w1, w2) = M.shard_layer(params, layer, 1, 0, cfg)
+    b = x.shape[0]
+    nh, dh = cfg.heads, cfg.head_dim
+    xn = rmsnorm_ref(x, ln1)
+    q = (xn @ wq).reshape(b, 1, nh, dh).transpose(0, 2, 1, 3)
+    k_new = (xn @ wk).reshape(b, 1, nh, dh).transpose(0, 2, 1, 3)
+    v_new = (xn @ wv).reshape(b, 1, nh, dh).transpose(0, 2, 1, 3)
+    k_cache = k_cache.at[:, :, pos : pos + 1].set(k_new)
+    v_cache = v_cache.at[:, :, pos : pos + 1].set(v_new)
+    attn = decode_attention_ref(q, k_cache, v_cache, pos + 1)
+    partial = attn.transpose(0, 2, 1, 3).reshape(b, 1, nh * dh) @ wo
+    x = x + partial
+    x = x + jax.nn.relu(rmsnorm_ref(x, ln2) @ w1) @ w2
+    return x, k_cache, v_cache
+
+
+def lm_head(x, params):
+    return rmsnorm_ref(x[:, -1, :], params["final_ln"]) @ params["lm_head"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../rust/tests/fixtures/ref_demo")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = CFG
+    params = M.init_params(args.seed, cfg)
+
+    tokens = encode(PROMPT, cfg.prompt_len)
+    x = M.embed(jnp.asarray([tokens], jnp.int32), params["embed"])
+    caches = []
+    for i in range(cfg.layers):
+        x, kc, vc = layer_forward_prefill(x, params, i, cfg)
+        caches.append((kc, vc))
+    logits = lm_head(x, params)
+    prefill_logits = np.asarray(logits[0], np.float64)
+
+    out_tokens = [int(np.argmax(prefill_logits))]
+    margins = [float(np.sort(prefill_logits)[-1] - np.sort(prefill_logits)[-2])]
+    for step in range(1, DECODE_STEPS):
+        pos = cfg.prompt_len + step - 1
+        x = M.embed(jnp.asarray([[out_tokens[-1]]], jnp.int32), params["embed"])
+        for i in range(cfg.layers):
+            kc, vc = caches[i]
+            x, kc, vc = layer_forward_decode(x, params, i, kc, vc, pos, cfg)
+            caches[i] = (kc, vc)
+        step_logits = np.asarray(lm_head(x, params)[0], np.float64)
+        out_tokens.append(int(np.argmax(step_logits)))
+        srt = np.sort(step_logits)
+        margins.append(float(srt[-1] - srt[-2]))
+
+    # Greedy decisions must be robust to f32 reimplementation noise.
+    assert min(margins) > 1e-3, f"argmax margin too small: {margins}"
+
+    aot.write_weights(os.path.join(args.out_dir, "weights.bin"), params, cfg)
+    manifest = {
+        "model": {
+            "name": "ref-demo-2l-16h",
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "vocab": cfg.vocab,
+            "prompt_len": cfg.prompt_len,
+            "max_seq": cfg.max_seq,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+        },
+        "tp_degrees": list(cfg.tp_degrees),
+        "batch_buckets": list(cfg.batch_buckets),
+        "weight_order": aot.weight_order(cfg),
+        "seed": args.seed,
+        "artifacts": {
+            name: {
+                "file": f"{name}.hlo.txt",
+                "params": [aot.shape_entry(n, s) for n, s in params_spec],
+                "outputs": outputs,
+            }
+            for name, _, params_spec, outputs in aot.artifact_defs(cfg)
+        },
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+
+    golden = {
+        "prompt": PROMPT,
+        "prompt_tokens": tokens,
+        "prefill_logits": [float(v) for v in prefill_logits],
+        "greedy_tokens": out_tokens,
+        "argmax_margins": margins,
+    }
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as fh:
+        json.dump(golden, fh, indent=1)
+    print(f"wrote fixture to {args.out_dir}")
+    print(f"prompt tokens : {tokens}")
+    print(f"greedy tokens : {out_tokens}")
+    print(f"min margin    : {min(margins):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,14 @@
-//! Runtime benchmarks over the real AOT artifacts: PJRT execute latency
-//! per stage kernel, all-reduce, and whole prefill/decode steps across
-//! plan shapes. Skipped (with a message) when artifacts are not built.
+//! Runtime benchmarks over an artifacts directory: per-stage execute
+//! latency, all-reduce, and whole prefill/decode steps across plan
+//! shapes, on this build's default execution backend (PJRT with
+//! `--features pjrt`, pure-Rust reference otherwise). Skipped (with a
+//! message) when artifacts are not built.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use hexgen::coordinator::{all_reduce_sum, plan_from_strategy, CommStats, PipelineExecutor};
-use hexgen::runtime::{tokenizer, InputArg, ModelRuntime, Tensor};
+use hexgen::runtime::{load_backend, tokenizer, BackendKind, InputArg, Tensor};
 
 fn main() {
     let dir = PathBuf::from("artifacts");
@@ -16,37 +18,32 @@ fn main() {
     }
     let budget = Duration::from_millis(1000);
 
-    hexgen::util::bench::group("PJRT stage executions (b=1)");
-    let rt = ModelRuntime::load(&dir).unwrap();
-    let info = rt.manifest.model.clone();
+    let rt = load_backend(BackendKind::default(), &dir).unwrap();
+    hexgen::util::bench::group(&format!("stage executions on '{}' backend (b=1)", rt.name()));
+    let info = rt.manifest().model.clone();
     let x_prefill = Tensor {
         dims: vec![1, info.prompt_len, info.hidden],
         data: vec![0.1; info.prompt_len * info.hidden],
     };
-    let ln = rt.weights.get("layers.0.ln1").unwrap().clone();
+    let ln = rt.weights().get("layers.0.ln1").unwrap().clone();
     for tp in [1usize, 2, 4] {
-        let wq = rt.weights.get(&shard("wq", tp)).unwrap().clone();
-        let wk = rt.weights.get(&shard("wk", tp)).unwrap().clone();
-        let wv = rt.weights.get(&shard("wv", tp)).unwrap().clone();
-        let wo = rt.weights.get(&shard("wo", tp)).unwrap().clone();
+        let wq = rt.weights().get(&shard("wq", tp)).unwrap().clone();
+        let wk = rt.weights().get(&shard("wk", tp)).unwrap().clone();
+        let wv = rt.weights().get(&shard("wv", tp)).unwrap().clone();
+        let wo = rt.weights().get(&shard("wo", tp)).unwrap().clone();
         let name = format!("attn_prefill_tp{tp}_b1");
-        // compile outside the timed region
-        rt.executable(&name).unwrap();
+        let args = [
+            InputArg::F32(&x_prefill),
+            InputArg::F32(&ln),
+            InputArg::F32(&wq),
+            InputArg::F32(&wk),
+            InputArg::F32(&wv),
+            InputArg::F32(&wo),
+        ];
+        // warm any backend-side compile cache outside the timed region
+        rt.execute(&name, &args).unwrap();
         hexgen::util::bench::bench(&format!("attn_prefill/tp{tp}"), 3, budget, || {
-            std::hint::black_box(
-                rt.execute_t(
-                    &name,
-                    &[
-                        InputArg::F32(&x_prefill),
-                        InputArg::F32(&ln),
-                        InputArg::F32(&wq),
-                        InputArg::F32(&wk),
-                        InputArg::F32(&wv),
-                        InputArg::F32(&wo),
-                    ],
-                )
-                .unwrap(),
-            );
+            std::hint::black_box(rt.execute(&name, &args).unwrap());
         });
     }
 
@@ -63,7 +60,7 @@ fn main() {
     });
 
     hexgen::util::bench::group("end-to-end generation (prefill + 4 decode steps)");
-    let prompt = tokenizer::encode("benchmark prompt for the demo model", 32);
+    let prompt = tokenizer::encode("benchmark prompt for the demo model", info.prompt_len);
     for (name, tps, layers) in [
         ("tp1-fused-stage", vec![1usize], vec![6usize]),
         ("tp2-pp2-asym", vec![2, 1], vec![4, 2]),

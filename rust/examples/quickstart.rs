@@ -24,13 +24,14 @@ fn main() -> Result<()> {
     let plan = plan_from_strategy(&[2, 1], &[4, 2])?;
     let exec = PipelineExecutor::new(dir, plan)?;
     println!(
-        "loaded demo model ({} layers, strategy {})",
-        exec.runtime().manifest.model.layers,
+        "loaded demo model ({} layers, backend {}, strategy {})",
+        exec.manifest().model.layers,
+        exec.backend().name(),
         exec.strategy_string()
     );
 
     let prompt = "the quick brown fox jumps over the lazy dog";
-    let tokens = tokenizer::encode(prompt, exec.runtime().manifest.model.prompt_len);
+    let tokens = tokenizer::encode(prompt, exec.manifest().model.prompt_len);
     let result = exec.generate(&[tokens], 12)?;
 
     println!("prompt : {prompt}");

@@ -1,4 +1,4 @@
-//! End-to-end serving driver (the DESIGN.md §5 validation run): start the
+//! End-to-end serving driver (see rust/README.md): start the
 //! threaded HexGen service with two asymmetric replicas of the real demo
 //! model, replay a Poisson request trace through the router/batcher, and
 //! report latency percentiles, throughput and SLO attainment.
@@ -45,6 +45,7 @@ fn main() -> Result<()> {
     // scheduler would deploy on unequal hardware.
     let cfg = ServiceConfig {
         artifacts_dir: dir,
+        backend: Default::default(),
         replicas: vec![
             plan_from_strategy(&[2, 1], &[4, 2])?, // TP2→TP1, 4+2 layers
             plan_from_strategy(&[1, 1], &[3, 3])?, // TP1 pipeline, 3+3

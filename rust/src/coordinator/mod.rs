@@ -1,7 +1,9 @@
 //! The HexGen coordinator (Layer 3): request routing, dynamic batching,
 //! leader-side collectives, and the asymmetric TP×PP pipeline executor —
 //! the real serving path (paper §3.2, Appendix C). Python never runs
-//! here; the executors load AOT artifacts via PJRT.
+//! here; the executors run stage artifacts through a pluggable
+//! [`crate::runtime::ExecutionBackend`] (pure-Rust reference by default,
+//! PJRT behind the `pjrt` feature).
 
 pub mod batcher;
 pub mod collective;

@@ -1,7 +1,7 @@
 //! Asymmetric pipeline executor: runs a generation batch through a chain
-//! of stages with per-stage TP degrees (paper §3.2), calling the AOT
-//! stage executables via PJRT and performing the leader-side collectives
-//! in Rust.
+//! of stages with per-stage TP degrees (paper §3.2), calling the stage
+//! executables through an [`ExecutionBackend`] (pure-Rust reference or
+//! PJRT) and performing the leader-side collectives in Rust.
 //!
 //! The execution scheme per transformer layer is Megatron's:
 //!
@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{InputArg, ModelRuntime, Tensor, WeightStore};
+use crate::runtime::{BackendKind, ExecutionBackend, InputArg, Tensor, WeightStore};
 
 use super::collective::{add_residual, all_reduce_sum, record_pp_send, CommStats};
 
@@ -72,20 +72,27 @@ type StageCaches = Vec<Vec<(Tensor, Tensor)>>;
 
 /// Executes generation through an asymmetric TP×PP plan on one thread.
 pub struct PipelineExecutor {
-    runtime: ModelRuntime,
+    backend: Box<dyn ExecutionBackend>,
     stages: Vec<StagePlan>,
 }
 
 impl PipelineExecutor {
-    /// Load a runtime from `artifacts_dir` and validate the plan against
-    /// the manifest (layer coverage, supported TP degrees).
+    /// Load the default backend for this build (PJRT when the `pjrt`
+    /// feature is enabled, pure-Rust reference otherwise) from
+    /// `artifacts_dir` and validate the plan against the manifest.
     pub fn new(artifacts_dir: &Path, stages: Vec<StagePlan>) -> Result<PipelineExecutor> {
-        let runtime = ModelRuntime::load(artifacts_dir)?;
-        Self::with_runtime(runtime, stages)
+        let backend = crate::runtime::load_backend(BackendKind::default(), artifacts_dir)?;
+        Self::with_backend(backend, stages)
     }
 
-    pub fn with_runtime(runtime: ModelRuntime, stages: Vec<StagePlan>) -> Result<PipelineExecutor> {
-        let m = &runtime.manifest;
+    /// Wrap an already-constructed backend (what per-replica worker
+    /// threads do), validating the plan against its manifest (layer
+    /// coverage, supported TP degrees).
+    pub fn with_backend(
+        backend: Box<dyn ExecutionBackend>,
+        stages: Vec<StagePlan>,
+    ) -> Result<PipelineExecutor> {
+        let m = backend.manifest();
         let total: usize = stages.iter().map(|s| s.layer_count).sum();
         if total != m.model.layers {
             bail!("plan covers {total} layers, model has {}", m.model.layers);
@@ -100,15 +107,21 @@ impl PipelineExecutor {
                 bail!("tp={} has no artifacts (available {:?})", s.tp, m.tp_degrees);
             }
         }
-        Ok(PipelineExecutor { runtime, stages })
+        Ok(PipelineExecutor { backend, stages })
     }
 
     pub fn stages(&self) -> &[StagePlan] {
         &self.stages
     }
 
-    pub fn runtime(&self) -> &ModelRuntime {
-        &self.runtime
+    /// The execution backend this pipeline runs on.
+    pub fn backend(&self) -> &dyn ExecutionBackend {
+        self.backend.as_ref()
+    }
+
+    /// The artifact catalog + model architecture being served.
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        self.backend.manifest()
     }
 
     /// Strategy string in the paper's Appendix-F notation, e.g. `[2,1]`.
@@ -121,7 +134,7 @@ impl PipelineExecutor {
     /// exactly `prompt_len` tokens; see [`crate::runtime::tokenizer`]).
     /// Greedy decoding.
     pub fn generate(&self, prompts: &[Vec<i32>], max_new: usize) -> Result<GenerationResult> {
-        let info = self.runtime.manifest.model.clone();
+        let info = self.backend.manifest().model.clone();
         let b_real = prompts.len();
         if b_real == 0 {
             bail!("empty batch");
@@ -135,7 +148,7 @@ impl PipelineExecutor {
         if max_new == 0 {
             bail!("max_new must be >= 1");
         }
-        let bucket = self.runtime.manifest.bucket_for(b_real)?;
+        let bucket = self.backend.manifest().bucket_for(b_real)?;
 
         // Pad the batch to the bucket with PAD prompts.
         let mut tokens: Vec<i32> = Vec::with_capacity(bucket * info.prompt_len);
@@ -224,7 +237,7 @@ impl PipelineExecutor {
         } else {
             format!("embed_decode_b{bucket}")
         };
-        let mut outs = self.runtime.execute_t(
+        let mut outs = self.backend.execute(
             &name,
             &[InputArg::I32(tokens, vec![bucket, s]), InputArg::Weight("embed")],
         )?;
@@ -237,7 +250,7 @@ impl PipelineExecutor {
         } else {
             format!("lm_head_decode_b{bucket}")
         };
-        let mut outs = self.runtime.execute_t(
+        let mut outs = self.backend.execute(
             &name,
             &[InputArg::F32(x), InputArg::Weight("final_ln"), InputArg::Weight("lm_head")],
         )?;
@@ -263,7 +276,7 @@ impl PipelineExecutor {
             let wk = WeightStore::shard_name(layer, "wk", tp, r);
             let wv = WeightStore::shard_name(layer, "wv", tp, r);
             let wo = WeightStore::shard_name(layer, "wo", tp, r);
-            let mut outs = self.runtime.execute_t(
+            let mut outs = self.backend.execute(
                 &attn_name,
                 &[
                     InputArg::F32(x),
@@ -290,7 +303,7 @@ impl PipelineExecutor {
         for r in 0..tp {
             let w1 = WeightStore::shard_name(layer, "w1", tp, r);
             let w2 = WeightStore::shard_name(layer, "w2", tp, r);
-            let mut outs = self.runtime.execute_t(
+            let mut outs = self.backend.execute(
                 &mlp_name,
                 &[InputArg::F32(&h), InputArg::Weight(&ln2), InputArg::Weight(&w1), InputArg::Weight(&w2)],
             )?;
@@ -321,7 +334,7 @@ impl PipelineExecutor {
             let wk = WeightStore::shard_name(layer, "wk", tp, r);
             let wv = WeightStore::shard_name(layer, "wv", tp, r);
             let wo = WeightStore::shard_name(layer, "wo", tp, r);
-            let mut outs = self.runtime.execute_t(
+            let mut outs = self.backend.execute(
                 &attn_name,
                 &[
                     InputArg::F32(x),
@@ -352,7 +365,7 @@ impl PipelineExecutor {
         for r in 0..tp {
             let w1 = WeightStore::shard_name(layer, "w1", tp, r);
             let w2 = WeightStore::shard_name(layer, "w2", tp, r);
-            let mut outs = self.runtime.execute_t(
+            let mut outs = self.backend.execute(
                 &mlp_name,
                 &[InputArg::F32(&h), InputArg::Weight(&ln2), InputArg::Weight(&w1), InputArg::Weight(&w2)],
             )?;

@@ -1,9 +1,10 @@
 //! Threaded serving front-end: the real (non-simulated) HexGen service.
 //!
 //! One worker thread per replica, each owning a thread-confined
-//! [`PipelineExecutor`] (PJRT handles are not `Send`). The router assigns
-//! requests to replicas; each worker batches its queue (Appendix-D simple
-//! batching) and replies over per-request channels.
+//! [`PipelineExecutor`] over its own [`ExecutionBackend`] instance
+//! (backends need not be `Send`; PJRT handles are not). The router
+//! assigns requests to replicas; each worker batches its queue
+//! (Appendix-D simple batching) and replies over per-request channels.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -13,11 +14,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{tokenizer, Manifest, WeightStore};
+use crate::runtime::{make_backend, tokenizer, BackendKind, Manifest, WeightStore};
 
 use super::batcher::{collect_batch, BatchPolicy};
 use super::collective::CommStats;
-use crate::runtime::ModelRuntime;
 
 use super::pipeline::{PipelineExecutor, StagePlan};
 use super::router::{RoutePolicy, Router};
@@ -26,6 +26,8 @@ use super::router::{RoutePolicy, Router};
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub artifacts_dir: PathBuf,
+    /// Execution backend each replica worker constructs for itself.
+    pub backend: BackendKind,
     /// One stage plan per replica.
     pub replicas: Vec<Vec<StagePlan>>,
     pub batch: BatchPolicy,
@@ -88,12 +90,14 @@ impl HexGenService {
             let manifest = manifest.clone();
             let weights = weights.clone();
             let batch = cfg.batch;
+            let backend = cfg.backend;
             let router = router.clone();
             let comm_tx = comm_tx.clone();
             let ready_tx = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    rid, dir, manifest, weights, plan, batch, rx, router, comm_tx, ready_tx,
+                    rid, backend, dir, manifest, weights, plan, batch, rx, router, comm_tx,
+                    ready_tx,
                 )
             }));
         }
@@ -165,6 +169,7 @@ impl HexGenService {
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rid: usize,
+    backend: BackendKind,
     dir: PathBuf,
     manifest: Manifest,
     weights: Arc<WeightStore>,
@@ -175,9 +180,9 @@ fn worker_loop(
     comm_tx: Sender<CommStats>,
     ready_tx: Sender<Result<(), String>>,
 ) {
-    // Thread-confined runtime (PJRT is not Send).
-    let exec = match ModelRuntime::with_weights(&dir, manifest, weights)
-        .and_then(|rt| PipelineExecutor::with_runtime(rt, plan))
+    // Thread-confined backend instance (backends need not be Send).
+    let exec = match make_backend(backend, &dir, manifest, weights)
+        .and_then(|be| PipelineExecutor::with_backend(be, plan))
     {
         Ok(e) => {
             let _ = ready_tx.send(Ok(()));
@@ -188,7 +193,11 @@ fn worker_loop(
             return;
         }
     };
-    crate::log_info!("replica {rid} ready: strategy {}", exec.strategy_string());
+    crate::log_info!(
+        "replica {rid} ready: backend {} strategy {}",
+        exec.backend().name(),
+        exec.strategy_string()
+    );
 
     while let Some(items) = collect_batch(&rx, &batch) {
         let batch_size = items.len();

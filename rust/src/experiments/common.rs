@@ -137,8 +137,7 @@ pub fn petals_system(name: &str, cluster: Cluster, model: &ModelSpec, seed: u64)
 /// batching (Appendix D). The effective concurrent batch is capped at 4:
 /// a 70B model's KV cache on 40 GB cards bounds TGI's admission well
 /// below its configuration maximum (and an uncapped token-granular model
-/// would overstate 2023-era TGI throughput by an order of magnitude —
-/// see EXPERIMENTS.md §Figure 5).
+/// would overstate 2023-era TGI throughput by an order of magnitude).
 pub fn tgi_system(name: &str, cluster: Cluster, model: &ModelSpec, ga_cfg: GaConfig) -> System {
     let mut sys = symmetric_system(name, cluster, model, ga_cfg);
     sys.sim = SimConfig {

@@ -1,5 +1,5 @@
-//! Evaluation harnesses: one module per paper figure/table (see DESIGN.md
-//! §4 for the experiment index). Each regenerates its figure's series /
+//! Evaluation harnesses: one module per paper figure/table (see
+//! rust/README.md for the experiment index). Each regenerates its series /
 //! table's rows from scratch — scheduler runs, workload generation and
 //! simulation included — and prints paper-shape checks alongside.
 

@@ -8,7 +8,9 @@
 //!   model, the Table-1 analytic cost model, the two-phase scheduler
 //!   (Algorithm-1 DP + genetic search), the discrete-event serving
 //!   simulator that drives the paper's evaluation, and a real serving
-//!   runtime that executes AOT-compiled model stages via PJRT.
+//!   runtime that executes model stages through a pluggable
+//!   [`runtime::ExecutionBackend`] — a pure-Rust reference backend by
+//!   default, PJRT-compiled AOT artifacts behind the `pjrt` feature.
 //! - **Layer 2** — a JAX transformer expressed as TP-shardable stage
 //!   functions, AOT-lowered to HLO text (`python/compile/`).
 //! - **Layer 1** — flash-attention-style Pallas kernels inside the Layer-2
@@ -17,8 +19,8 @@
 //! Python never runs on the request path: `make artifacts` lowers the
 //! model once; the `hexgen` binary is self-contained afterwards.
 //!
-//! See `DESIGN.md` for the experiment index (Figures 1–7, Tables 3–4) and
-//! `EXPERIMENTS.md` for measured results.
+//! See `rust/README.md` for build instructions, cargo features, and the
+//! experiment index (Figures 1–7, Tables 3–4).
 
 pub mod cluster;
 pub mod coordinator;

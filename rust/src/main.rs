@@ -14,7 +14,7 @@ use hexgen::workload::{LengthDist, WorkloadSpec};
 
 const USAGE: &str = "\
 hexgen — generative LLM inference over heterogeneous environments
-(ICML 2024 reproduction; see DESIGN.md)
+(ICML 2024 reproduction; see rust/README.md)
 
 USAGE: hexgen <command> [options]
 
@@ -120,6 +120,7 @@ fn serve(args: &Args) -> Result<()> {
     println!("starting service with {} replica(s)...", plans.len());
     let service = HexGenService::start(ServiceConfig {
         artifacts_dir: dir,
+        backend: Default::default(),
         replicas: plans,
         batch: BatchPolicy::default(),
         route: RoutePolicy::LeastLoaded,

@@ -1,0 +1,132 @@
+//! The execution-backend seam: the trait the pipeline coordinator and
+//! service layer program against, decoupling scheduling/serving from the
+//! execution substrate (the multi-backend direction HexGen-2 and Helix
+//! both take).
+//!
+//! A backend executes named stage artifacts (`attn_prefill_tp2_b4`, …)
+//! on host tensors. Two implementations ship in-tree:
+//!
+//! * [`ReferenceBackend`](super::reference::ReferenceBackend) — pure
+//!   Rust, mirrors the numerics of `python/compile/kernels/ref.py`; zero
+//!   native dependencies, always available (the default build).
+//! * [`ModelRuntime`](super::engine::ModelRuntime) — PJRT-backed, behind
+//!   the `pjrt` cargo feature; executes the AOT-lowered HLO artifacts.
+//!
+//! Backends need not be `Send`: each pipeline worker thread constructs
+//! its own instance from a shared [`BackendKind`] + parsed
+//! [`WeightStore`] (PJRT handles are `Rc`-based and thread-confined).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::weights::{Tensor, WeightStore};
+
+/// An input argument to [`ExecutionBackend::execute`].
+pub enum InputArg<'a> {
+    /// f32 tensor (activations, KV caches).
+    F32(&'a Tensor),
+    /// int32 tensor (tokens) with its dimensions.
+    I32(&'a [i32], Vec<usize>),
+    /// int32 scalar (decode position).
+    ScalarI32(i32),
+    /// Named weight, resolved through the backend's weight store (and
+    /// any backend-side upload cache).
+    Weight(&'a str),
+}
+
+/// Stage-execution substrate: load artifacts once, then run prefill and
+/// decode stage functions on host tensors.
+pub trait ExecutionBackend {
+    /// Short backend identifier (`"reference"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// The artifact catalog + model architecture this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// The parsed weight store (shared across worker threads).
+    fn weights(&self) -> &Arc<WeightStore>;
+
+    /// Execute the named stage artifact; returns its outputs in the
+    /// manifest's declared order.
+    fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>>;
+
+    /// Cumulative stage executions (hot-path metric).
+    fn exec_count(&self) -> usize;
+}
+
+/// Which [`ExecutionBackend`] implementation to construct. `Copy` and
+/// `Send` so service configs can hand it to worker threads, which each
+/// build their own (possibly thread-confined) backend instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust reference numerics (always available).
+    Reference,
+    /// PJRT CPU client over AOT HLO artifacts (`pjrt` feature).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl Default for BackendKind {
+    fn default() -> BackendKind {
+        #[cfg(feature = "pjrt")]
+        return BackendKind::Pjrt;
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Reference
+    }
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Construct a backend re-using an already-parsed manifest and weight
+/// store (what per-replica worker threads do).
+pub fn make_backend(
+    kind: BackendKind,
+    dir: &Path,
+    manifest: Manifest,
+    weights: Arc<WeightStore>,
+) -> Result<Box<dyn ExecutionBackend>> {
+    #[cfg(not(feature = "pjrt"))]
+    let _ = dir;
+    match kind {
+        BackendKind::Reference => Ok(Box::new(super::reference::ReferenceBackend::with_weights(
+            manifest, weights,
+        ))),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(super::engine::ModelRuntime::with_weights(
+            dir, manifest, weights,
+        )?)),
+    }
+}
+
+/// Load manifest + weights from an artifacts directory and construct the
+/// requested backend.
+pub fn load_backend(kind: BackendKind, dir: &Path) -> Result<Box<dyn ExecutionBackend>> {
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    let weights = Arc::new(WeightStore::load(&dir.join("weights.bin"))?);
+    make_backend(kind, dir, manifest, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_kind_matches_features() {
+        #[cfg(not(feature = "pjrt"))]
+        assert_eq!(BackendKind::default(), BackendKind::Reference);
+        #[cfg(feature = "pjrt")]
+        assert_eq!(BackendKind::default(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::Reference.name(), "reference");
+    }
+}

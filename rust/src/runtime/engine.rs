@@ -1,10 +1,16 @@
-//! PJRT runtime: loads HLO-text artifacts, compiles them on the CPU PJRT
-//! client, and executes them with host tensors.
+//! PJRT execution backend (`pjrt` cargo feature): loads HLO-text
+//! artifacts, compiles them on the CPU PJRT client, and executes them
+//! with host tensors.
 //!
 //! PJRT handles in the `xla` crate are `Rc`-based (not `Send`), so a
 //! [`ModelRuntime`] is **thread-confined**: each pipeline worker thread
 //! constructs its own (sharing the parsed [`WeightStore`] via `Arc`).
 //! Executables are compiled lazily and cached per runtime.
+//!
+//! The default workspace wires the `xla` dependency to the in-tree API
+//! stub (`vendor/xla-stub`), which type-checks this path but fails at
+//! client construction; swap it for the real `xla` crate to serve on an
+//! actual PJRT runtime.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -14,6 +20,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::{ExecutionBackend, InputArg};
 use super::manifest::Manifest;
 use super::weights::{Tensor, WeightStore};
 
@@ -107,12 +114,12 @@ impl ModelRuntime {
 
     /// Execute with host tensors; `InputArg::Weight` inputs resolve
     /// through the per-runtime literal cache.
-    pub fn execute_t(&self, name: &str, inputs: &[InputArg]) -> Result<Vec<Tensor>> {
+    pub fn execute_t(&self, name: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
         let args: Vec<ArgLit> = inputs
             .iter()
             .map(|a| match a {
                 InputArg::Weight(w) => Ok(ArgLit::Cached(self.weight_literal(w)?)),
-                other => Ok(ArgLit::Own(other.to_literal()?)),
+                other => Ok(ArgLit::Own(arg_to_literal(other)?)),
             })
             .collect::<Result<_>>()?;
         let spec = self.manifest.artifact(name)?;
@@ -152,6 +159,28 @@ impl ModelRuntime {
     }
 }
 
+impl ExecutionBackend for ModelRuntime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn weights(&self) -> &Arc<WeightStore> {
+        &self.weights
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        self.execute_t(artifact, inputs)
+    }
+
+    fn exec_count(&self) -> usize {
+        *self.exec_count.borrow()
+    }
+}
+
 /// Owned-or-cached literal argument (borrowable as `&Literal` for
 /// `PjRtLoadedExecutable::execute`).
 enum ArgLit {
@@ -168,29 +197,16 @@ impl std::borrow::Borrow<xla::Literal> for ArgLit {
     }
 }
 
-/// An input argument to [`ModelRuntime::execute_t`].
-pub enum InputArg<'a> {
-    /// f32 tensor (uploaded per call — activations, caches).
-    F32(&'a Tensor),
-    /// int32 tensor (tokens).
-    I32(&'a [i32], Vec<usize>),
-    /// int32 scalar (decode position).
-    ScalarI32(i32),
-    /// Named weight, resolved through the runtime's literal cache.
-    Weight(&'a str),
-}
-
-impl<'a> InputArg<'a> {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        match self {
-            InputArg::F32(t) => tensor_to_literal(t),
-            InputArg::I32(data, dims) => {
-                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
-            }
-            InputArg::ScalarI32(x) => Ok(xla::Literal::scalar(*x)),
-            InputArg::Weight(_) => unreachable!("resolved by execute_t"),
+/// Host input → literal (weights are resolved by `execute_t` instead).
+fn arg_to_literal(arg: &InputArg<'_>) -> Result<xla::Literal> {
+    match arg {
+        InputArg::F32(t) => tensor_to_literal(t),
+        InputArg::I32(data, dims) => {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
         }
+        InputArg::ScalarI32(x) => Ok(xla::Literal::scalar(*x)),
+        InputArg::Weight(_) => unreachable!("resolved by execute_t"),
     }
 }
 

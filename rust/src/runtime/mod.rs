@@ -1,14 +1,22 @@
-//! Serving runtime: PJRT client wrapper, AOT artifact/weights loading,
-//! and the byte tokenizer. Python never runs here — everything executes
-//! from `artifacts/*.hlo.txt` produced once by `make artifacts`.
+//! Serving runtime: the [`ExecutionBackend`] seam, AOT artifact/weights
+//! loading, the byte tokenizer, and the backend implementations — the
+//! pure-Rust [`ReferenceBackend`] (always available) and the PJRT-backed
+//! [`ModelRuntime`] behind the `pjrt` cargo feature. Python never runs
+//! here — everything executes from the artifacts directory produced once
+//! by `make artifacts` (or, for the reference backend, from
+//! `manifest.json` + `weights.bin` alone).
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod reference;
 pub mod tokenizer;
 pub mod weights;
 
-pub use engine::{
-    literal_to_tensor_f32, literal_to_vec_i32, tensor_to_literal, InputArg, ModelRuntime,
-};
+pub use backend::{load_backend, make_backend, BackendKind, ExecutionBackend, InputArg};
+#[cfg(feature = "pjrt")]
+pub use engine::{literal_to_tensor_f32, literal_to_vec_i32, tensor_to_literal, ModelRuntime};
 pub use manifest::{ArtifactSpec, Manifest, ModelInfo, ParamSpec};
+pub use reference::ReferenceBackend;
 pub use weights::{Tensor, WeightStore};

@@ -1,0 +1,645 @@
+//! Pure-Rust reference execution backend.
+//!
+//! Mirrors the numerics of `python/compile/kernels/ref.py` (naive causal
+//! softmax attention, RMSNorm, ReLU MLP) over the manifest's weight
+//! layout, so the pipeline coordinator, batcher, and service layer can be
+//! exercised end-to-end in plain `cargo test` with zero native
+//! dependencies. Stage names follow the AOT artifact grammar
+//! (`attn_prefill_tp{T}_b{B}`, `embed_decode_b{B}`, …); no `.hlo.txt`
+//! files are read — only `manifest.json` + `weights.bin`.
+//!
+//! Checked against golden values emitted by
+//! `python/compile/make_ref_fixture.py` (see `tests/reference_parity.rs`).
+
+use std::cell::Cell;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::backend::{ExecutionBackend, InputArg};
+use super::manifest::Manifest;
+use super::weights::{Tensor, WeightStore};
+
+const RMSNORM_EPS: f32 = 1e-6;
+
+/// Pure-Rust stage executor over a manifest + weight store.
+pub struct ReferenceBackend {
+    manifest: Manifest,
+    weights: Arc<WeightStore>,
+    exec_count: Cell<usize>,
+}
+
+impl ReferenceBackend {
+    /// Load manifest + weights from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<ReferenceBackend> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let weights = Arc::new(WeightStore::load(&dir.join("weights.bin"))?);
+        Ok(Self::with_weights(manifest, weights))
+    }
+
+    /// Create a backend re-using an already-parsed weight store.
+    pub fn with_weights(manifest: Manifest, weights: Arc<WeightStore>) -> ReferenceBackend {
+        ReferenceBackend { manifest, weights, exec_count: Cell::new(0) }
+    }
+
+    fn tensor_arg<'t>(&'t self, a: &'t InputArg<'t>, what: &str) -> Result<&'t Tensor> {
+        match a {
+            InputArg::F32(t) => Ok(*t),
+            InputArg::Weight(n) => self.weights.get(n),
+            _ => bail!("{what}: expected an f32 tensor or weight"),
+        }
+    }
+
+    // ---- stage implementations -----------------------------------------
+
+    fn run_embed(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        expect_inputs(inputs, 2, "embed")?;
+        let (tokens, dims) = tokens_arg(&inputs[0], "embed tokens")?;
+        let emb = self.tensor_arg(&inputs[1], "embed table")?;
+        let m = &self.manifest.model;
+        if emb.dims != vec![m.vocab, m.hidden] {
+            bail!("embed table has shape {:?}, expected [{}, {}]", emb.dims, m.vocab, m.hidden);
+        }
+        if dims.len() != 2 || dims[0] != st.bucket {
+            bail!("embed tokens shape {dims:?} does not match bucket {}", st.bucket);
+        }
+        let s = dims[1];
+        if tokens.len() != st.bucket * s {
+            bail!("embed: {} tokens for shape {dims:?}", tokens.len());
+        }
+        let h = m.hidden;
+        let mut out = vec![0f32; tokens.len() * h];
+        for (row, &t) in tokens.iter().enumerate() {
+            // jnp.take clips out-of-range indices under jit; mirror that.
+            let idx = (t.max(0) as usize).min(m.vocab - 1);
+            out[row * h..(row + 1) * h].copy_from_slice(&emb.data[idx * h..(idx + 1) * h]);
+        }
+        Ok(vec![Tensor { dims: vec![st.bucket, s, h], data: out }])
+    }
+
+    fn run_lm_head(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        expect_inputs(inputs, 3, "lm_head")?;
+        let x = self.tensor_arg(&inputs[0], "lm_head x")?;
+        let ln = self.tensor_arg(&inputs[1], "final_ln")?;
+        let w = self.tensor_arg(&inputs[2], "lm_head weight")?;
+        let m = &self.manifest.model;
+        let (b, s, h) = dims3(x, "lm_head x")?;
+        check_bucket(b, st)?;
+        if s == 0 {
+            bail!("lm_head input has zero sequence length");
+        }
+        if h != m.hidden {
+            bail!("lm_head x hidden {h} != model hidden {}", m.hidden);
+        }
+        if w.dims != vec![h, m.vocab] {
+            bail!("lm_head weight has shape {:?}, expected [{h}, {}]", w.dims, m.vocab);
+        }
+        // Last position per batch row, RMSNorm, then project to vocab.
+        let mut last = vec![0f32; b * h];
+        for bi in 0..b {
+            let src = (bi * s + (s - 1)) * h;
+            last[bi * h..(bi + 1) * h].copy_from_slice(&x.data[src..src + h]);
+        }
+        let xn = rmsnorm_rows(&last, h, &ln.data)?;
+        let logits = matmul(&xn, b, h, w, "lm_head")?;
+        Ok(vec![Tensor { dims: vec![b, m.vocab], data: logits }])
+    }
+
+    fn run_attn_prefill(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        expect_inputs(inputs, 6, "attn_prefill")?;
+        let x = self.tensor_arg(&inputs[0], "attn x")?;
+        let ln = self.tensor_arg(&inputs[1], "ln1")?;
+        let wq = self.tensor_arg(&inputs[2], "wq")?;
+        let wk = self.tensor_arg(&inputs[3], "wk")?;
+        let wv = self.tensor_arg(&inputs[4], "wv")?;
+        let wo = self.tensor_arg(&inputs[5], "wo")?;
+        let m = &self.manifest.model;
+        let (b, s, h) = dims3(x, "attn x")?;
+        check_bucket(b, st)?;
+        if s == 0 || s > m.max_seq {
+            bail!("attn_prefill sequence length {s} outside [1, {}]", m.max_seq);
+        }
+        let shard = self.shard_dims(st.tp, h, wq, wk, wv, wo)?;
+        let (nhs, dh, hs) = (shard.nhs, shard.dh, shard.hs);
+
+        let xn = rmsnorm_rows(&x.data, h, &ln.data)?;
+        let q = matmul(&xn, b * s, h, wq, "wq")?;
+        let k = matmul(&xn, b * s, h, wk, "wk")?;
+        let v = matmul(&xn, b * s, h, wv, "wv")?;
+
+        // Causal softmax attention per (batch row, head); the per-shard
+        // layout is [row, head*dh + d] with row = bi*s + position.
+        let mut merged = vec![0f32; b * s * hs];
+        let scale = 1.0 / (dh as f32).sqrt();
+        for bi in 0..b {
+            for head in 0..nhs {
+                let off = head * dh;
+                for i in 0..s {
+                    let qrow = (bi * s + i) * hs + off;
+                    let mut scores = Vec::with_capacity(i + 1);
+                    let mut max_s = f32::NEG_INFINITY;
+                    for j in 0..=i {
+                        let krow = (bi * s + j) * hs + off;
+                        let mut dot = 0f32;
+                        for d in 0..dh {
+                            dot += q[qrow + d] * k[krow + d];
+                        }
+                        let sc = dot * scale;
+                        if sc > max_s {
+                            max_s = sc;
+                        }
+                        scores.push(sc);
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - max_s).exp();
+                        denom += *sc;
+                    }
+                    for d in 0..dh {
+                        let mut acc = 0f32;
+                        for (j, p) in scores.iter().enumerate() {
+                            acc += p * v[(bi * s + j) * hs + off + d];
+                        }
+                        merged[qrow + d] = acc / denom;
+                    }
+                }
+            }
+        }
+        let partial = matmul(&merged, b * s, hs, wo, "wo")?;
+
+        // Zero-padded shard caches [b, nhs, s_max, dh], filled in [0, s).
+        let s_max = m.max_seq;
+        let mut kc = vec![0f32; b * nhs * s_max * dh];
+        let mut vc = vec![0f32; b * nhs * s_max * dh];
+        for bi in 0..b {
+            for head in 0..nhs {
+                for j in 0..s {
+                    let dst = ((bi * nhs + head) * s_max + j) * dh;
+                    let src = (bi * s + j) * hs + head * dh;
+                    kc[dst..dst + dh].copy_from_slice(&k[src..src + dh]);
+                    vc[dst..dst + dh].copy_from_slice(&v[src..src + dh]);
+                }
+            }
+        }
+        let cache_dims = vec![b, nhs, s_max, dh];
+        Ok(vec![
+            Tensor { dims: vec![b, s, h], data: partial },
+            Tensor { dims: cache_dims.clone(), data: kc },
+            Tensor { dims: cache_dims, data: vc },
+        ])
+    }
+
+    fn run_attn_decode(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        expect_inputs(inputs, 9, "attn_decode")?;
+        let x = self.tensor_arg(&inputs[0], "attn x")?;
+        let kc_in = self.tensor_arg(&inputs[1], "k_cache")?;
+        let vc_in = self.tensor_arg(&inputs[2], "v_cache")?;
+        let pos = scalar_arg(&inputs[3], "pos")?;
+        let ln = self.tensor_arg(&inputs[4], "ln1")?;
+        let wq = self.tensor_arg(&inputs[5], "wq")?;
+        let wk = self.tensor_arg(&inputs[6], "wk")?;
+        let wv = self.tensor_arg(&inputs[7], "wv")?;
+        let wo = self.tensor_arg(&inputs[8], "wo")?;
+        let m = &self.manifest.model;
+        let (b, s, h) = dims3(x, "attn x")?;
+        check_bucket(b, st)?;
+        if s != 1 {
+            bail!("attn_decode expects a single-token input, got s={s}");
+        }
+        let shard = self.shard_dims(st.tp, h, wq, wk, wv, wo)?;
+        let (nhs, dh, hs) = (shard.nhs, shard.dh, shard.hs);
+        let s_max = m.max_seq;
+        let cache_dims = vec![b, nhs, s_max, dh];
+        if kc_in.dims != cache_dims || vc_in.dims != cache_dims {
+            bail!(
+                "decode caches have shapes {:?}/{:?}, expected {cache_dims:?}",
+                kc_in.dims,
+                vc_in.dims
+            );
+        }
+        if pos < 0 || pos as usize >= s_max {
+            bail!("decode position {pos} outside cache of length {s_max}");
+        }
+        let pos = pos as usize;
+
+        let xn = rmsnorm_rows(&x.data, h, &ln.data)?;
+        let q = matmul(&xn, b, h, wq, "wq")?;
+        let k_new = matmul(&xn, b, h, wk, "wk")?;
+        let v_new = matmul(&xn, b, h, wv, "wv")?;
+
+        // Functionally-updated caches: write the current token at `pos`.
+        let mut kc = kc_in.data.clone();
+        let mut vc = vc_in.data.clone();
+        for bi in 0..b {
+            for head in 0..nhs {
+                let dst = ((bi * nhs + head) * s_max + pos) * dh;
+                let src = bi * hs + head * dh;
+                kc[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
+                vc[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
+            }
+        }
+
+        // Single-token attention over the first pos+1 cache positions.
+        let mut merged = vec![0f32; b * hs];
+        let scale = 1.0 / (dh as f32).sqrt();
+        for bi in 0..b {
+            for head in 0..nhs {
+                let qrow = bi * hs + head * dh;
+                let base = (bi * nhs + head) * s_max;
+                let mut scores = Vec::with_capacity(pos + 1);
+                let mut max_s = f32::NEG_INFINITY;
+                for j in 0..=pos {
+                    let krow = (base + j) * dh;
+                    let mut dot = 0f32;
+                    for d in 0..dh {
+                        dot += q[qrow + d] * kc[krow + d];
+                    }
+                    let sc = dot * scale;
+                    if sc > max_s {
+                        max_s = sc;
+                    }
+                    scores.push(sc);
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - max_s).exp();
+                    denom += *sc;
+                }
+                for d in 0..dh {
+                    let mut acc = 0f32;
+                    for (j, p) in scores.iter().enumerate() {
+                        acc += p * vc[(base + j) * dh + d];
+                    }
+                    merged[qrow + d] = acc / denom;
+                }
+            }
+        }
+        let partial = matmul(&merged, b, hs, wo, "wo")?;
+        Ok(vec![
+            Tensor { dims: vec![b, 1, h], data: partial },
+            Tensor { dims: cache_dims.clone(), data: kc },
+            Tensor { dims: cache_dims, data: vc },
+        ])
+    }
+
+    fn run_mlp(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        expect_inputs(inputs, 4, "mlp")?;
+        let x = self.tensor_arg(&inputs[0], "mlp x")?;
+        let ln = self.tensor_arg(&inputs[1], "ln2")?;
+        let w1 = self.tensor_arg(&inputs[2], "w1")?;
+        let w2 = self.tensor_arg(&inputs[3], "w2")?;
+        let m = &self.manifest.model;
+        let (b, s, h) = dims3(x, "mlp x")?;
+        check_bucket(b, st)?;
+        if h != m.hidden {
+            bail!("mlp x hidden {h} != model hidden {}", m.hidden);
+        }
+        let fs = m.ffn / st.tp;
+        if w1.dims != vec![h, fs] || w2.dims != vec![fs, h] {
+            bail!(
+                "mlp shard weights have shapes {:?}/{:?}, expected [{h}, {fs}]/[{fs}, {h}]",
+                w1.dims,
+                w2.dims
+            );
+        }
+        let rows = b * s;
+        let xn = rmsnorm_rows(&x.data, h, &ln.data)?;
+        let mut hidden = matmul(&xn, rows, h, w1, "w1")?;
+        for v in hidden.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let out = matmul(&hidden, rows, fs, w2, "w2")?;
+        Ok(vec![Tensor { dims: vec![b, s, h], data: out }])
+    }
+
+    /// Validate shard projection widths against the stage's TP degree.
+    fn shard_dims(
+        &self,
+        tp: usize,
+        h: usize,
+        wq: &Tensor,
+        wk: &Tensor,
+        wv: &Tensor,
+        wo: &Tensor,
+    ) -> Result<ShardDims> {
+        let m = &self.manifest.model;
+        if h != m.hidden {
+            bail!("stage input hidden {h} != model hidden {}", m.hidden);
+        }
+        if tp == 0 || m.heads % tp != 0 {
+            bail!("tp={tp} does not divide {} heads", m.heads);
+        }
+        let nhs = m.heads / tp;
+        let dh = m.head_dim;
+        let hs = nhs * dh;
+        for (name, w) in [("wq", wq), ("wk", wk), ("wv", wv)] {
+            if w.dims != vec![h, hs] {
+                bail!("{name} shard has shape {:?}, expected [{h}, {hs}]", w.dims);
+            }
+        }
+        if wo.dims != vec![hs, h] {
+            bail!("wo shard has shape {:?}, expected [{hs}, {h}]", wo.dims);
+        }
+        Ok(ShardDims { nhs, dh, hs })
+    }
+}
+
+struct ShardDims {
+    nhs: usize,
+    dh: usize,
+    hs: usize,
+}
+
+impl ExecutionBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn weights(&self) -> &Arc<WeightStore> {
+        &self.weights
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        let Some(st) = StageName::parse(artifact) else {
+            bail!("reference backend cannot execute artifact '{artifact}' (unknown stage name)");
+        };
+        if !self.manifest.batch_buckets.contains(&st.bucket) {
+            bail!(
+                "artifact '{artifact}': bucket {} not in manifest {:?}",
+                st.bucket,
+                self.manifest.batch_buckets
+            );
+        }
+        if !self.manifest.tp_degrees.contains(&st.tp) {
+            bail!(
+                "artifact '{artifact}': tp {} not in manifest {:?}",
+                st.tp,
+                self.manifest.tp_degrees
+            );
+        }
+        self.exec_count.set(self.exec_count.get() + 1);
+        match (st.op, st.prefill) {
+            (Op::Embed, _) => self.run_embed(&st, inputs),
+            (Op::LmHead, _) => self.run_lm_head(&st, inputs),
+            (Op::Attn, true) => self.run_attn_prefill(&st, inputs),
+            (Op::Attn, false) => self.run_attn_decode(&st, inputs),
+            (Op::Mlp, _) => self.run_mlp(&st, inputs),
+        }
+    }
+
+    fn exec_count(&self) -> usize {
+        self.exec_count.get()
+    }
+}
+
+// ---- stage-name grammar ----------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Embed,
+    LmHead,
+    Attn,
+    Mlp,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct StageName {
+    op: Op,
+    prefill: bool,
+    tp: usize,
+    bucket: usize,
+}
+
+impl StageName {
+    /// Parse `{op}_{phase}[_tp{T}]_b{B}` artifact names.
+    fn parse(name: &str) -> Option<StageName> {
+        let (op, rest) = if let Some(r) = name.strip_prefix("embed_") {
+            (Op::Embed, r)
+        } else if let Some(r) = name.strip_prefix("lm_head_") {
+            (Op::LmHead, r)
+        } else if let Some(r) = name.strip_prefix("attn_") {
+            (Op::Attn, r)
+        } else if let Some(r) = name.strip_prefix("mlp_") {
+            (Op::Mlp, r)
+        } else {
+            return None;
+        };
+        let (prefill, rest) = if let Some(r) = rest.strip_prefix("prefill_") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("decode_") {
+            (false, r)
+        } else {
+            return None;
+        };
+        let (tp, rest) = match rest.strip_prefix("tp") {
+            Some(r) => {
+                let (digits, r2) = r.split_once('_')?;
+                (digits.parse().ok()?, r2)
+            }
+            None => (1, rest),
+        };
+        let bucket = rest.strip_prefix('b')?.parse().ok()?;
+        Some(StageName { op, prefill, tp, bucket })
+    }
+}
+
+// ---- numerics helpers ------------------------------------------------------
+
+/// RMSNorm over rows of width `h` (ref.py `rmsnorm_ref`).
+fn rmsnorm_rows(x: &[f32], h: usize, scale: &[f32]) -> Result<Vec<f32>> {
+    if scale.len() != h {
+        bail!("rmsnorm scale has {} elements, rows have {h}", scale.len());
+    }
+    if x.len() % h != 0 {
+        bail!("rmsnorm input of {} elements is not a multiple of {h}", x.len());
+    }
+    let mut out = vec![0f32; x.len()];
+    for (orow, row) in out.chunks_exact_mut(h).zip(x.chunks_exact(h)) {
+        let mut ss = 0f32;
+        for &v in row {
+            ss += v * v;
+        }
+        let denom = (ss / h as f32 + RMSNORM_EPS).sqrt();
+        for i in 0..h {
+            orow[i] = row[i] * scale[i] / denom;
+        }
+    }
+    Ok(out)
+}
+
+/// `[rows, k] @ w[k, n]` row-major matmul.
+fn matmul(x: &[f32], rows: usize, k: usize, w: &Tensor, what: &str) -> Result<Vec<f32>> {
+    if w.dims.len() != 2 || w.dims[0] != k {
+        bail!("{what}: weight shape {:?} incompatible with inner dim {k}", w.dims);
+    }
+    if x.len() != rows * k {
+        bail!("{what}: input of {} elements is not [{rows}, {k}]", x.len());
+    }
+    let n = w.dims[1];
+    let mut out = vec![0f32; rows * n];
+    for r in 0..rows {
+        let xrow = &x[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (i, &xv) in xrow.iter().enumerate() {
+            let wrow = &w.data[i * n..(i + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn dims3(t: &Tensor, what: &str) -> Result<(usize, usize, usize)> {
+    if t.dims.len() != 3 {
+        bail!("{what}: expected a rank-3 tensor, got {:?}", t.dims);
+    }
+    Ok((t.dims[0], t.dims[1], t.dims[2]))
+}
+
+fn check_bucket(b: usize, st: &StageName) -> Result<()> {
+    if b != st.bucket {
+        bail!("input batch {b} does not match artifact bucket {}", st.bucket);
+    }
+    Ok(())
+}
+
+fn expect_inputs(inputs: &[InputArg<'_>], n: usize, what: &str) -> Result<()> {
+    if inputs.len() != n {
+        bail!("{what} expects {n} inputs, got {}", inputs.len());
+    }
+    Ok(())
+}
+
+fn tokens_arg<'t>(a: &'t InputArg<'t>, what: &str) -> Result<(&'t [i32], &'t [usize])> {
+    match a {
+        InputArg::I32(data, dims) => Ok((*data, dims.as_slice())),
+        _ => bail!("{what}: expected int32 tokens"),
+    }
+}
+
+fn scalar_arg(a: &InputArg<'_>, what: &str) -> Result<i32> {
+    match a {
+        InputArg::ScalarI32(x) => Ok(*x),
+        _ => bail!("{what}: expected an int32 scalar"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_parse() {
+        assert_eq!(
+            StageName::parse("attn_prefill_tp2_b4"),
+            Some(StageName { op: Op::Attn, prefill: true, tp: 2, bucket: 4 })
+        );
+        assert_eq!(
+            StageName::parse("embed_decode_b1"),
+            Some(StageName { op: Op::Embed, prefill: false, tp: 1, bucket: 1 })
+        );
+        assert_eq!(
+            StageName::parse("lm_head_prefill_b2"),
+            Some(StageName { op: Op::LmHead, prefill: true, tp: 1, bucket: 2 })
+        );
+        assert_eq!(
+            StageName::parse("mlp_decode_tp4_b1"),
+            Some(StageName { op: Op::Mlp, prefill: false, tp: 4, bucket: 1 })
+        );
+        assert_eq!(StageName::parse("full_prefill_b1"), None);
+        assert_eq!(StageName::parse("attn_warmup_tp2_b1"), None);
+        assert_eq!(StageName::parse("attn_prefill_tpx_b1"), None);
+    }
+
+    #[test]
+    fn rmsnorm_matches_formula() {
+        // Constant row of 2.0 with unit scale: 2/sqrt(4 + eps) ≈ 1.
+        let out = rmsnorm_rows(&[2.0, 2.0, 2.0, 2.0], 4, &[1.0; 4]).unwrap();
+        for v in out {
+            assert!((v - 1.0).abs() < 1e-5, "{v}");
+        }
+        assert!(rmsnorm_rows(&[1.0, 2.0], 3, &[1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn matmul_small() {
+        let w = Tensor { dims: vec![2, 3], data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        // [1, 2] @ w = [1+8, 2+10, 3+12]
+        let out = matmul(&[1.0, 2.0], 1, 2, &w, "t").unwrap();
+        assert_eq!(out, vec![9.0, 12.0, 15.0]);
+        assert!(matmul(&[1.0], 1, 2, &w, "t").is_err());
+    }
+
+    #[test]
+    fn softmax_attention_single_position_returns_v() {
+        // With one position the softmax weight is exactly 1, so attention
+        // output == v regardless of q/k. Exercise via run_attn_prefill on
+        // a minimal hand-built model (h=2, heads=1).
+        let manifest = Manifest::parse(
+            r#"{
+              "model": {"name":"t","layers":1,"hidden":2,"heads":1,"vocab":4,
+                        "prompt_len":1,"max_seq":2,"head_dim":2,"ffn":8},
+              "tp_degrees":[1],
+              "batch_buckets":[1],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap();
+        let be = ReferenceBackend::with_weights(manifest, Arc::new(WeightStore::default()));
+        let x = Tensor { dims: vec![1, 1, 2], data: vec![0.5, -0.25] };
+        let ln = Tensor { dims: vec![2], data: vec![1.0, 1.0] };
+        let eye = Tensor { dims: vec![2, 2], data: vec![1.0, 0.0, 0.0, 1.0] };
+        let outs = be
+            .execute(
+                "attn_prefill_tp1_b1",
+                &[
+                    InputArg::F32(&x),
+                    InputArg::F32(&ln),
+                    InputArg::F32(&eye),
+                    InputArg::F32(&eye),
+                    InputArg::F32(&eye),
+                    InputArg::F32(&eye),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 3);
+        // partial == v == rmsnorm(x) when every projection is identity.
+        let xn = rmsnorm_rows(&x.data, 2, &ln.data).unwrap();
+        for (a, b) in outs[0].data.iter().zip(&xn) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // caches zero-padded to max_seq.
+        assert_eq!(outs[1].dims, vec![1, 1, 2, 2]);
+        assert_eq!(&outs[1].data[0..2], &xn[..]);
+        assert_eq!(&outs[1].data[2..4], &[0.0, 0.0]);
+        assert_eq!(be.exec_count(), 1);
+    }
+
+    #[test]
+    fn unknown_artifacts_rejected() {
+        let manifest = Manifest::parse(
+            r#"{
+              "model": {"name":"t","layers":1,"hidden":2,"heads":1,"vocab":4,
+                        "prompt_len":1,"max_seq":2,"head_dim":2,"ffn":8},
+              "tp_degrees":[1],
+              "batch_buckets":[1],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap();
+        let be = ReferenceBackend::with_weights(manifest, Arc::new(WeightStore::default()));
+        assert!(be.execute("full_prefill_b1", &[]).is_err());
+        assert!(be.execute("attn_prefill_tp2_b1", &[]).is_err()); // tp 2 absent
+        assert!(be.execute("embed_prefill_b4", &[]).is_err()); // bucket 4 absent
+    }
+}

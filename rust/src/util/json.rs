@@ -21,13 +21,24 @@ pub enum Json {
 }
 
 /// Parse or access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json access error: {0}")]
     Access(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Access(msg) => write!(f, "json access error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ----- constructors -------------------------------------------------
@@ -154,13 +165,9 @@ impl Json {
     }
 
     // ----- writing ---------------------------------------------------------
-
-    /// Compact serialization.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
+    //
+    // Compact serialization is `Display` (so `to_string()` comes from the
+    // blanket `ToString` impl rather than shadowing it).
 
     /// Pretty serialization with 2-space indent.
     pub fn to_pretty(&self) -> String {
@@ -222,7 +229,9 @@ impl Json {
 
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", self.to_string())
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 

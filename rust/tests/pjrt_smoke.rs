@@ -1,0 +1,28 @@
+//! Compile-level smoke test of the PJRT path (`--features pjrt`): the
+//! `ModelRuntime` backend and its `xla` surface must keep type-checking
+//! even when the wired `xla` crate is the in-tree API stub.
+#![cfg(feature = "pjrt")]
+
+use std::path::Path;
+
+use hexgen::runtime::{BackendKind, ExecutionBackend, ModelRuntime};
+
+#[test]
+fn pjrt_is_the_default_backend_kind() {
+    assert_eq!(BackendKind::default(), BackendKind::Pjrt);
+    assert_eq!(BackendKind::Pjrt.name(), "pjrt");
+}
+
+#[test]
+fn missing_artifacts_error_cleanly() {
+    // Whether backed by the stub or a real XLA runtime, loading from a
+    // nonexistent artifacts directory must be an error, not a panic.
+    assert!(ModelRuntime::load(Path::new("/nonexistent-hexgen-artifacts")).is_err());
+}
+
+#[test]
+fn backend_trait_object_is_constructible() {
+    // Type-level check that ModelRuntime satisfies the backend seam.
+    fn assert_backend<T: ExecutionBackend>() {}
+    assert_backend::<ModelRuntime>();
+}

@@ -1,0 +1,214 @@
+//! Parity tests: the pure-Rust [`ReferenceBackend`] must reproduce the
+//! golden values emitted by `python/compile/make_ref_fixture.py` (which
+//! runs the `python/compile/kernels/ref.py` oracles on the checked-in
+//! 2-layer fixture model), and every asymmetric plan shape must agree
+//! with them token-for-token.
+
+use std::path::PathBuf;
+
+use hexgen::coordinator::{add_residual, plan_from_strategy, PipelineExecutor};
+use hexgen::runtime::{
+    load_backend, tokenizer, BackendKind, ExecutionBackend, InputArg, ReferenceBackend, Tensor,
+    WeightStore,
+};
+use hexgen::util::json::Json;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
+}
+
+fn golden() -> Json {
+    let text = std::fs::read_to_string(fixture_dir().join("golden.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+fn golden_tokens(g: &Json, key: &str) -> Vec<i32> {
+    g.arr(key)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap() as i32)
+        .collect()
+}
+
+/// Compose prefill manually through the stage artifacts at TP=1 and
+/// return the logits (what the fused JAX model would produce).
+fn manual_prefill_logits(be: &dyn ExecutionBackend, tokens: &[i32]) -> Tensor {
+    let m = be.manifest().model.clone();
+    assert_eq!(tokens.len(), m.prompt_len);
+    let mut x = be
+        .execute(
+            "embed_prefill_b1",
+            &[InputArg::I32(tokens, vec![1, m.prompt_len]), InputArg::Weight("embed")],
+        )
+        .unwrap()
+        .remove(0);
+    for layer in 0..m.layers {
+        let ln1 = format!("layers.{layer}.ln1");
+        let wq = WeightStore::shard_name(layer, "wq", 1, 0);
+        let wk = WeightStore::shard_name(layer, "wk", 1, 0);
+        let wv = WeightStore::shard_name(layer, "wv", 1, 0);
+        let wo = WeightStore::shard_name(layer, "wo", 1, 0);
+        let mut outs = be
+            .execute(
+                "attn_prefill_tp1_b1",
+                &[
+                    InputArg::F32(&x),
+                    InputArg::Weight(&ln1),
+                    InputArg::Weight(&wq),
+                    InputArg::Weight(&wk),
+                    InputArg::Weight(&wv),
+                    InputArg::Weight(&wo),
+                ],
+            )
+            .unwrap();
+        let partial = outs.remove(0);
+        add_residual(&mut x, &partial);
+        let ln2 = format!("layers.{layer}.ln2");
+        let w1 = WeightStore::shard_name(layer, "w1", 1, 0);
+        let w2 = WeightStore::shard_name(layer, "w2", 1, 0);
+        let mlp = be
+            .execute(
+                "mlp_prefill_tp1_b1",
+                &[
+                    InputArg::F32(&x),
+                    InputArg::Weight(&ln2),
+                    InputArg::Weight(&w1),
+                    InputArg::Weight(&w2),
+                ],
+            )
+            .unwrap()
+            .remove(0);
+        add_residual(&mut x, &mlp);
+    }
+    be.execute(
+        "lm_head_prefill_b1",
+        &[InputArg::F32(&x), InputArg::Weight("final_ln"), InputArg::Weight("lm_head")],
+    )
+    .unwrap()
+    .remove(0)
+}
+
+#[test]
+fn prefill_logits_match_python_golden_values() {
+    let g = golden();
+    let be = ReferenceBackend::load(&fixture_dir()).unwrap();
+    let prompt_tokens = golden_tokens(&g, "prompt_tokens");
+
+    // The Rust tokenizer must agree with the fixture's encoding.
+    let encoded = tokenizer::encode(g.str("prompt").unwrap(), prompt_tokens.len());
+    assert_eq!(encoded, prompt_tokens, "tokenizer drifted from fixture");
+
+    let logits = manual_prefill_logits(&be, &prompt_tokens);
+    let want = g.arr("prefill_logits").unwrap();
+    assert_eq!(logits.dims, vec![1, want.len()]);
+    let mut max_err = 0f64;
+    for (got, w) in logits.data.iter().zip(want) {
+        let err = (*got as f64 - w.as_f64().unwrap()).abs();
+        max_err = max_err.max(err);
+    }
+    assert!(max_err < 1e-3, "logits diverged from ref.py golden values: max_err={max_err}");
+}
+
+#[test]
+fn every_plan_shape_reproduces_golden_greedy_tokens() {
+    let g = golden();
+    let prompt_tokens = golden_tokens(&g, "prompt_tokens");
+    let want = golden_tokens(&g, "greedy_tokens");
+
+    // Asymmetric TP×PP shapes over the 2-layer model: all must agree
+    // with the fused ref.py oracle token-for-token.
+    for (tps, layers) in [
+        (vec![1usize], vec![2usize]), // single stage TP=1
+        (vec![2], vec![2]),           // single stage TP=2
+        (vec![1, 1], vec![1, 1]),     // 2-stage TP=1 pipeline
+        (vec![2, 1], vec![1, 1]),     // asymmetric: TP=2 then TP=1
+    ] {
+        let be = load_backend(BackendKind::Reference, &fixture_dir()).unwrap();
+        let plan = plan_from_strategy(&tps, &layers).unwrap();
+        let exec = PipelineExecutor::with_backend(be, plan).unwrap();
+        let result = exec.generate(&[prompt_tokens.clone()], want.len()).unwrap();
+        assert_eq!(
+            result.tokens[0],
+            want,
+            "plan {} diverged from ref.py golden tokens",
+            exec.strategy_string()
+        );
+        assert_eq!(result.decode_steps, want.len());
+    }
+}
+
+#[test]
+fn tp_collective_counts_match_plan() {
+    let be = load_backend(BackendKind::Reference, &fixture_dir()).unwrap();
+    let prompt = tokenizer::encode("hello", be.manifest().model.prompt_len);
+    let plan = plan_from_strategy(&[2, 1], &[1, 1]).unwrap();
+    let exec = PipelineExecutor::with_backend(be, plan).unwrap();
+    let res = exec.generate(&[prompt], 3).unwrap();
+    // Stage 0 has 1 layer at TP=2 → 2 all-reduces per token step; stage 1
+    // at TP=1 contributes none. 3 token steps (prefill + 2 decode) → 6.
+    assert_eq!(res.comm.allreduce_ops, 6, "{:?}", res.comm);
+    // One PP hand-off per token step.
+    assert_eq!(res.comm.pp_sends, 3);
+    assert!(res.comm.allreduce_bytes > 0.0 && res.comm.pp_bytes > 0.0);
+    assert!(exec.backend().exec_count() > 0);
+}
+
+#[test]
+fn batch_bucket_padding_is_transparent() {
+    let dir = fixture_dir();
+    let be = load_backend(BackendKind::Reference, &dir).unwrap();
+    let prompt_len = be.manifest().model.prompt_len;
+    let p1 = tokenizer::encode("first", prompt_len);
+    let p2 = tokenizer::encode("second!", prompt_len);
+    let exec =
+        PipelineExecutor::with_backend(be, plan_from_strategy(&[2], &[2]).unwrap()).unwrap();
+
+    // batch of 2 → bucket 2; results must equal per-request runs (b=1).
+    let joint = exec.generate(&[p1.clone(), p2.clone()], 4).unwrap();
+    assert_eq!(joint.bucket, 2);
+    assert_eq!(joint.tokens.len(), 2);
+    let solo1 = exec.generate(&[p1], 4).unwrap();
+    let solo2 = exec.generate(&[p2], 4).unwrap();
+    assert_eq!(joint.tokens[0], solo1.tokens[0]);
+    assert_eq!(joint.tokens[1], solo2.tokens[0]);
+}
+
+#[test]
+fn invalid_plans_rejected() {
+    let dir = fixture_dir();
+    // layer sum mismatch
+    assert!(PipelineExecutor::with_backend(
+        load_backend(BackendKind::Reference, &dir).unwrap(),
+        plan_from_strategy(&[1], &[1]).unwrap()
+    )
+    .is_err());
+    // unsupported tp degree
+    assert!(PipelineExecutor::with_backend(
+        load_backend(BackendKind::Reference, &dir).unwrap(),
+        plan_from_strategy(&[4], &[2]).unwrap()
+    )
+    .is_err());
+    // non-contiguous stages
+    use hexgen::coordinator::StagePlan;
+    let bad = vec![
+        StagePlan { layer_start: 0, layer_count: 1, tp: 1 },
+        StagePlan { layer_start: 2, layer_count: 1, tp: 1 },
+    ];
+    assert!(PipelineExecutor::with_backend(
+        load_backend(BackendKind::Reference, &dir).unwrap(),
+        bad
+    )
+    .is_err());
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let dir = fixture_dir();
+    let be = load_backend(BackendKind::Reference, &dir).unwrap();
+    let prompt = tokenizer::encode("determinism", be.manifest().model.prompt_len);
+    let exec =
+        PipelineExecutor::with_backend(be, plan_from_strategy(&[1, 1], &[1, 1]).unwrap()).unwrap();
+    let a = exec.generate(&[prompt.clone()], 5).unwrap();
+    let b = exec.generate(&[prompt], 5).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+}

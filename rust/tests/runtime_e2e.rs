@@ -2,7 +2,11 @@
 //! must reproduce the fused JAX model's numerics when composing
 //! asymmetric TP×PP stage executables with host-side collectives.
 //!
-//! Requires `make artifacts` (skipped gracefully when absent).
+//! Requires the `pjrt` feature (with a real `xla` crate wired in) and
+//! `make artifacts` (skipped gracefully when absent). The
+//! backend-agnostic equivalent over the checked-in fixture lives in
+//! `reference_parity.rs`.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,5 +1,7 @@
 //! End-to-end tests of the threaded serving front-end (router + batcher +
-//! per-replica workers over real PJRT pipelines).
+//! per-replica workers) over the pure-Rust reference backend and the
+//! checked-in fixture model — runs in plain `cargo test` with zero
+//! native dependencies.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -7,25 +9,23 @@ use std::time::Duration;
 use hexgen::coordinator::{
     collect_all, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
 };
+use hexgen::runtime::BackendKind;
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        None
-    }
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
 }
 
+/// Two replicas with different asymmetric plans over the 2-layer fixture
+/// model (tp degrees {1, 2}, batch buckets {1, 2}).
 fn two_replica_config(dir: PathBuf) -> ServiceConfig {
     ServiceConfig {
         artifacts_dir: dir,
+        backend: BackendKind::Reference,
         replicas: vec![
-            plan_from_strategy(&[2, 1], &[4, 2]).unwrap(), // asymmetric
-            plan_from_strategy(&[1, 1], &[3, 3]).unwrap(), // TP=1 pipeline
+            plan_from_strategy(&[2], &[2]).unwrap(),    // single stage, TP=2
+            plan_from_strategy(&[1, 1], &[1, 1]).unwrap(), // TP=1 pipeline
         ],
-        batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(10) },
+        batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(10) },
         route: RoutePolicy::LeastLoaded,
         max_new_tokens: 4,
     }
@@ -33,8 +33,7 @@ fn two_replica_config(dir: PathBuf) -> ServiceConfig {
 
 #[test]
 fn service_serves_batched_requests() {
-    let Some(dir) = artifacts_dir() else { return };
-    let service = HexGenService::start(two_replica_config(dir)).unwrap();
+    let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
     assert_eq!(service.replicas(), 2);
 
     let prompts = [
@@ -54,7 +53,7 @@ fn service_serves_batched_requests() {
         assert_eq!(c.tokens.len(), 4);
         assert!(c.latency > 0.0);
         assert!(c.latency >= c.queued);
-        assert!(c.batch_size >= 1 && c.batch_size <= 4);
+        assert!(c.batch_size >= 1 && c.batch_size <= 2);
         replicas_used.insert(c.replica);
     }
     // 6 concurrent requests over 2 replicas: both should see traffic.
@@ -68,14 +67,13 @@ fn service_serves_batched_requests() {
 
 #[test]
 fn same_prompt_same_output_across_replicas() {
-    let Some(dir) = artifacts_dir() else { return };
     // Two replicas with different plans must agree on greedy outputs.
-    let service = HexGenService::start(two_replica_config(dir)).unwrap();
-    let a = service.generate("consistency probe", Some(5)).unwrap();
+    let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
+    let a = service.generate("consistency probe", Some(4)).unwrap();
     // Try to reach the other replica by submitting repeatedly.
     let mut other = None;
     for _ in 0..8 {
-        let c = service.generate("consistency probe", Some(5)).unwrap();
+        let c = service.generate("consistency probe", Some(4)).unwrap();
         if c.replica != a.replica {
             other = Some(c);
             break;
@@ -89,13 +87,31 @@ fn same_prompt_same_output_across_replicas() {
 
 #[test]
 fn startup_fails_cleanly_on_bad_plan() {
-    let Some(dir) = artifacts_dir() else { return };
     let cfg = ServiceConfig {
-        artifacts_dir: dir,
-        replicas: vec![plan_from_strategy(&[3], &[6]).unwrap()], // tp=3 unsupported
+        artifacts_dir: fixture_dir(),
+        backend: BackendKind::Reference,
+        replicas: vec![plan_from_strategy(&[4], &[2]).unwrap()], // tp=4 unsupported
         batch: BatchPolicy::default(),
         route: RoutePolicy::RoundRobin,
         max_new_tokens: 2,
     };
     assert!(HexGenService::start(cfg).is_err());
+}
+
+#[test]
+fn oversized_batch_rejected_not_hung() {
+    // max_batch above the largest bucket: the batch cannot be padded to
+    // any bucket, so requests fail with an error instead of hanging.
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.batch = BatchPolicy { max_batch: 4, window: Duration::from_millis(30) };
+    let service = HexGenService::start(cfg).unwrap();
+    let rxs: Vec<_> = (0..4).map(|_| service.submit("overflow probe", Some(2))).collect();
+    let results = collect_all(rxs, Duration::from_secs(60));
+    for r in &results {
+        match r {
+            Ok(c) => assert_eq!(c.tokens.len(), 2),
+            Err(e) => assert!(e.contains("bucket"), "unexpected error: {e}"),
+        }
+    }
+    service.shutdown();
 }

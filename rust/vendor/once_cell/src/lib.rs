@@ -1,0 +1,57 @@
+//! Offline API-compatible subset of the `once_cell` crate: just
+//! [`sync::Lazy`], backed by `std::sync::OnceLock`. Vendored as a
+//! workspace path crate because the build environment has no network
+//! registry.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, safe to share across threads.
+    ///
+    /// Unlike upstream `once_cell`, the initializer is `Fn` rather than
+    /// `FnOnce` (it is only ever invoked once; `Fn` keeps the cell `Sync`
+    /// without interior mutability around the closure).
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+
+        /// Force evaluation and return a reference to the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        static N: Lazy<u64> = Lazy::new(|| 40 + 2);
+
+        #[test]
+        fn static_lazy_initializes_once() {
+            assert_eq!(*N, 42);
+            assert_eq!(*N, 42);
+        }
+
+        #[test]
+        fn closure_lazy() {
+            let l: Lazy<String, _> = Lazy::new(|| "hi".to_string());
+            assert_eq!(l.len(), 2);
+        }
+    }
+}

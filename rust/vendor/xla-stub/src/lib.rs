@@ -1,0 +1,199 @@
+//! Type-level stub of the `xla` (PJRT) crate.
+//!
+//! Mirrors exactly the API surface `hexgen`'s PJRT backend uses —
+//! `PjRtClient`, `PjRtLoadedExecutable`, `Literal`, `HloModuleProto`,
+//! `XlaComputation`, `Shape` — so `cargo check --features pjrt`
+//! type-checks in environments without XLA binaries. Host-side literal
+//! construction works; every operation that would need the native PJRT
+//! runtime returns [`Error`] at runtime. Swap this path dependency for
+//! the real `xla` crate to serve on an actual PJRT client.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type; implements `std::error::Error` so callers can attach
+/// `anyhow` context to it.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} requires the native PJRT runtime (build with the real `xla` crate)"
+    ))
+}
+
+/// Element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    fn to_f64(self) -> f64;
+    fn from_f64(x: f64) -> Self;
+}
+
+impl NativeType for f32 {
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+}
+
+impl NativeType for i32 {
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(x: f64) -> Self {
+        x as i32
+    }
+}
+
+/// Array shape: dimension sizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Shape of a literal or computation result.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// A host tensor (stub: stores elements as f64 plus dimensions).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            data: data.iter().map(|x| x.to_f64()).collect(),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { data: vec![x.to_f64()], dims: vec![] }
+    }
+
+    /// Reshape without changing element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n.max(1) as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {dims:?} incompatible with {} elements",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+
+    /// Destructure a tuple literal (stub literals are never tuples).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literals"))
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone() }))
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation handle (stub).
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// PJRT client handle (stub: construction fails at runtime).
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compilation"))
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execution"))
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("buffer transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        match r.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 2]),
+            other => panic!("unexpected shape {other:?}"),
+        }
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn runtime_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        assert!(Literal::scalar(1i32).to_tuple().is_err());
+    }
+}
