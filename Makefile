@@ -18,4 +18,9 @@ build:
 test:
 	cargo test -q
 
-.PHONY: artifacts fixture build test
+# Continuous vs static batching on the serving path (runs over the
+# checked-in fixture model; no artifacts needed).
+bench-batching:
+	cargo bench -p hexgen --bench batching
+
+.PHONY: artifacts fixture build test bench-batching

@@ -1,0 +1,111 @@
+//! Continuous vs static batching on the serving path.
+//!
+//! Replays a staggered-arrival, mixed-`max_new` workload through the full
+//! threaded service twice — once with run-to-completion batching
+//! (`BatchPolicy.continuous = false`, the pre-iteration-level baseline)
+//! and once with continuous batching — and reports mean/p50 latency and
+//! delivered tokens/s. Runs over the checked-in fixture model, so it
+//! needs no artifacts directory:
+//!
+//! ```bash
+//! cargo bench --bench batching          # or: make bench-batching
+//! ```
+//!
+//! The workload alternates short (2-token) and long (8-token) requests:
+//! under static batching a short row's slot idles until its co-batched
+//! long neighbour drains, and every queued request waits for the whole
+//! batch; continuous batching retires the short row at its own limit and
+//! admits the next request at the following decode-step boundary.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hexgen::coordinator::{
+    collect_all, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+};
+use hexgen::runtime::BackendKind;
+use hexgen::util::stats::Summary;
+
+const REQUESTS: usize = 200;
+const STAGGER: Duration = Duration::from_micros(50);
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
+}
+
+struct RunStats {
+    mean_latency: f64,
+    p50_latency: f64,
+    tokens_per_sec: f64,
+    wall: f64,
+}
+
+fn run(continuous: bool) -> RunStats {
+    let cfg = ServiceConfig {
+        artifacts_dir: fixture_dir(),
+        backend: BackendKind::Reference,
+        replicas: vec![plan_from_strategy(&[1], &[2]).unwrap()],
+        batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(1), continuous },
+        route: RoutePolicy::RoundRobin,
+        max_new_tokens: 8,
+        stop_token: None,
+    };
+    let service = HexGenService::start(cfg).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(REQUESTS);
+    for i in 0..REQUESTS {
+        // Mixed per-request limits: a short row next to a long one is
+        // exactly where run-to-completion batching wastes slot time.
+        let max_new = if i % 2 == 0 { 2 } else { 8 };
+        rxs.push(service.submit(&format!("bench request {i}"), Some(max_new)));
+        std::thread::sleep(STAGGER);
+    }
+    let results = collect_all(rxs, Duration::from_secs(600));
+    let wall = t0.elapsed().as_secs_f64();
+    service.shutdown();
+
+    let mut latencies = Vec::with_capacity(REQUESTS);
+    let mut tokens = 0usize;
+    for r in &results {
+        let c = r.as_ref().expect("bench request failed");
+        latencies.push(c.latency);
+        tokens += c.tokens.len();
+    }
+    let s = Summary::from_samples(&latencies).expect("no samples");
+    RunStats {
+        mean_latency: s.mean,
+        p50_latency: s.p50,
+        tokens_per_sec: tokens as f64 / wall,
+        wall,
+    }
+}
+
+fn report(name: &str, s: &RunStats) {
+    println!(
+        "{name:<28} mean {:>8.2}ms  p50 {:>8.2}ms  {:>9.0} tok/s  (wall {:.2}s)",
+        s.mean_latency * 1e3,
+        s.p50_latency * 1e3,
+        s.tokens_per_sec,
+        s.wall
+    );
+}
+
+fn main() {
+    hexgen::util::bench::group(&format!(
+        "serving {REQUESTS} staggered requests (max_new 2/8 alternating, 1 replica, 2 slots)"
+    ));
+    // Warm both paths once so neither pays first-touch costs in the
+    // measured run.
+    let _ = run(false);
+    let _ = run(true);
+    let stat = run(false);
+    let cont = run(true);
+    report("static run-to-completion", &stat);
+    report("continuous batching", &cont);
+    println!(
+        "continuous vs static: {:.2}x mean latency, {:.2}x tokens/s",
+        stat.mean_latency / cont.mean_latency,
+        cont.tokens_per_sec / stat.tokens_per_sec
+    );
+}

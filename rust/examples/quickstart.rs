@@ -1,10 +1,15 @@
-//! Quickstart: load the AOT-compiled demo model and generate text through
-//! an asymmetric TP×PP pipeline — the minimal end-to-end path.
+//! Quickstart: load a demo model and generate text through an asymmetric
+//! TP×PP pipeline — the minimal end-to-end path.
 //!
 //! ```bash
-//! make artifacts            # once: python lowers the model to HLO
+//! make artifacts            # optional: python lowers the 6-layer model
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! Without `artifacts/` (no JAX on the machine) this falls back to the
+//! checked-in 2-layer parity fixture, which the pure-Rust reference
+//! backend serves out of the box — so this example always runs (and is
+//! exercised in CI).
 
 use anyhow::Result;
 
@@ -12,34 +17,43 @@ use hexgen::coordinator::{plan_from_strategy, PipelineExecutor};
 use hexgen::runtime::tokenizer;
 
 fn main() -> Result<()> {
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let dir = if artifacts.join("manifest.json").exists() {
+        artifacts
+    } else {
+        let fixture = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/fixtures/ref_demo");
+        eprintln!("artifacts/ missing — falling back to the checked-in fixture model");
+        fixture
+    };
 
     // An asymmetric plan in the paper's Appendix-F notation: two pipeline
-    // stages, the first serving 4 layers at TP=2, the second 2 layers at
-    // TP=1 — exactly the kind of layout symmetric systems cannot express.
-    let plan = plan_from_strategy(&[2, 1], &[4, 2])?;
-    let exec = PipelineExecutor::new(dir, plan)?;
+    // stages, the first at TP=2, the second at TP=1 — exactly the kind of
+    // layout symmetric systems cannot express. Stage sizes follow the
+    // model's layer count (4+2 on the 6-layer demo, 1+1 on the fixture).
+    let model = hexgen::runtime::Manifest::load(&dir.join("manifest.json"))?.model;
+    let tail = (model.layers / 3).max(1);
+    let plan = plan_from_strategy(&[2, 1], &[model.layers - tail, tail])?;
+    let exec = PipelineExecutor::new(&dir, plan)?;
     println!(
         "loaded demo model ({} layers, backend {}, strategy {})",
-        exec.manifest().model.layers,
+        model.layers,
         exec.backend().name(),
         exec.strategy_string()
     );
 
     let prompt = "the quick brown fox jumps over the lazy dog";
-    let tokens = tokenizer::encode(prompt, exec.manifest().model.prompt_len);
-    let result = exec.generate(&[tokens], 12)?;
+    let tokens = tokenizer::encode(prompt, model.prompt_len);
+    let max_new = (model.max_seq - model.prompt_len).min(12);
+    let result = exec.generate(&[tokens], max_new)?;
 
     println!("prompt : {prompt}");
     println!("tokens : {:?}", result.tokens[0]);
     println!("text   : {:?}", tokenizer::decode(&result.tokens[0]));
     println!(
-        "prefill {:.1}ms | decode {:.1}ms for {} tokens ({:.1}ms/token)",
+        "prefill {:.1}ms ({} token) | decode {:.1}ms over {} iterations ({:.1}ms/token)",
         result.prefill_seconds * 1e3,
+        result.prefill_tokens,
         result.decode_seconds * 1e3,
         result.decode_steps,
         result.decode_seconds * 1e3 / result.decode_steps.max(1) as f64,

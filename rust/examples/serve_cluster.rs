@@ -50,9 +50,10 @@ fn main() -> Result<()> {
             plan_from_strategy(&[2, 1], &[4, 2])?, // TP2→TP1, 4+2 layers
             plan_from_strategy(&[1, 1], &[3, 3])?, // TP1 pipeline, 3+3
         ],
-        batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(15) },
+        batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(15), continuous: true },
         route: RoutePolicy::LeastLoaded,
         max_new_tokens: max_new,
+        stop_token: None,
     };
     println!("starting HexGen service: 2 replicas ([2,1] 4/2 and [1,1] 3/3)...");
     let t_start = Instant::now();

@@ -1,46 +1,127 @@
-//! Dynamic batching: collect queued requests into one execution batch.
+//! Admission policy for continuous (iteration-level) batching.
 //!
-//! HexGen's batching is deliberately simple (paper Appendix D): a worker
-//! blocks for the first request, then keeps admitting until either the
-//! batch cap or the wait window is hit. Batch size is later padded to an
-//! artifact bucket by the pipeline executor.
+//! HexGen's original batching (paper Appendix D) collected a one-shot
+//! batch and ran it to completion. The serving loop now admits at every
+//! decode-step boundary instead: an [`AdmissionQueue`] buffers arrivals
+//! off the worker's channel, and [`AdmissionQueue::admit`] hands over as
+//! many requests as there are free KV-cache slots. The wait `window`
+//! only applies when the worker is idle (nothing decoding) — co-batching
+//! prefills is worth a short wait, but stalling an in-flight batch is
+//! not.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
-/// Batch-formation policy.
+/// Admission policy knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
-    /// Maximum requests per batch (≤ the largest artifact bucket).
+    /// Maximum co-batched requests (the serving loop sizes its KV-cache
+    /// slot count to the largest artifact bucket ≤ this).
     pub max_batch: usize,
-    /// How long to wait for co-batchable requests after the first.
+    /// How long an *idle* worker waits for co-batchable requests after
+    /// the first arrival (never delays an in-flight batch).
     pub window: Duration,
+    /// Iteration-level scheduling: admit queued requests into freed
+    /// slots at decode-step boundaries. `false` reverts to
+    /// run-to-completion batching (the static baseline benchmarked by
+    /// `benches/batching.rs`).
+    pub continuous: bool,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 4, window: Duration::from_millis(20) }
+        BatchPolicy { max_batch: 4, window: Duration::from_millis(20), continuous: true }
     }
 }
 
-/// Collect one batch from `rx`. Blocks for the first item; returns
-/// `None` when the channel is closed and drained.
-pub fn collect_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
-    let mut batch = vec![first];
-    let deadline = Instant::now() + policy.window;
-    while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+/// Buffered view over a worker's request channel.
+pub struct AdmissionQueue<T> {
+    rx: Receiver<T>,
+    pending: VecDeque<T>,
+    disconnected: bool,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(rx: Receiver<T>) -> AdmissionQueue<T> {
+        AdmissionQueue { rx, pending: VecDeque::new(), disconnected: false }
+    }
+
+    /// Drain everything currently queued on the channel, without blocking.
+    pub fn poll(&mut self) {
+        loop {
+            match self.rx.try_recv() {
+                Ok(item) => self.pending.push_back(item),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.disconnected = true;
+                    break;
+                }
+            }
         }
     }
-    Some(batch)
+
+    /// Requests buffered and not yet admitted.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True once the channel is closed and every request was handed out.
+    pub fn is_closed(&self) -> bool {
+        self.disconnected && self.pending.is_empty()
+    }
+
+    /// Block until at least one request is available. Returns `false`
+    /// when the channel closed with nothing left (shutdown).
+    pub fn wait(&mut self) -> bool {
+        self.poll();
+        if !self.pending.is_empty() {
+            return true;
+        }
+        if self.disconnected {
+            return false;
+        }
+        match self.rx.recv() {
+            Ok(item) => {
+                self.pending.push_back(item);
+                true
+            }
+            Err(_) => {
+                self.disconnected = true;
+                false
+            }
+        }
+    }
+
+    /// Hand out up to `min(free, policy.max_batch)` requests. When `idle`
+    /// and fewer are pending, waits up to `policy.window` for
+    /// co-batchable arrivals first.
+    pub fn admit(&mut self, free: usize, idle: bool, policy: &BatchPolicy) -> Vec<T> {
+        self.poll();
+        let cap = free.min(policy.max_batch);
+        if cap == 0 || self.pending.is_empty() {
+            return Vec::new();
+        }
+        if idle && self.pending.len() < cap && !self.disconnected {
+            let deadline = Instant::now() + policy.window;
+            while self.pending.len() < cap {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.rx.recv_timeout(deadline - now) {
+                    Ok(item) => self.pending.push_back(item),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        self.disconnected = true;
+                        break;
+                    }
+                }
+            }
+        }
+        let n = cap.min(self.pending.len());
+        self.pending.drain(..n).collect()
+    }
 }
 
 #[cfg(test)]
@@ -48,51 +129,92 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    fn policy(max_batch: usize, window_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, window: Duration::from_millis(window_ms), continuous: true }
+    }
+
     #[test]
-    fn collects_waiting_items_up_to_cap() {
+    fn admits_waiting_items_up_to_cap() {
         let (tx, rx) = channel();
         for i in 0..6 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 4, window: Duration::from_millis(5) };
-        let b = collect_batch(&rx, &policy).unwrap();
-        assert_eq!(b, vec![0, 1, 2, 3]);
-        let b2 = collect_batch(&rx, &policy).unwrap();
-        assert_eq!(b2, vec![4, 5]);
+        let mut q = AdmissionQueue::new(rx);
+        assert_eq!(q.admit(4, true, &policy(4, 5)), vec![0, 1, 2, 3]);
+        assert_eq!(q.admit(4, true, &policy(4, 5)), vec![4, 5]);
+        assert_eq!(q.pending(), 0);
     }
 
     #[test]
-    fn returns_none_on_closed_empty_channel() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        let policy = BatchPolicy::default();
-        assert!(collect_batch(&rx, &policy).is_none());
+    fn free_slots_bound_admission() {
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let mut q = AdmissionQueue::new(rx);
+        // only 1 free slot: admit exactly one, keep the rest pending
+        assert_eq!(q.admit(1, false, &policy(4, 5)), vec![0]);
+        assert_eq!(q.pending(), 3);
+        assert_eq!(q.admit(2, false, &policy(4, 5)), vec![1, 2]);
     }
 
     #[test]
-    fn window_bounds_the_wait() {
+    fn busy_admission_never_waits() {
         let (tx, rx) = channel();
         tx.send(1).unwrap();
-        let policy = BatchPolicy { max_batch: 8, window: Duration::from_millis(10) };
+        let mut q = AdmissionQueue::new(rx);
         let t0 = Instant::now();
-        let b = collect_batch(&rx, &policy).unwrap();
-        assert_eq!(b, vec![1]);
+        // idle=false: even with a huge window and spare capacity, return
+        // immediately with what is pending.
+        assert_eq!(q.admit(8, false, &policy(8, 5_000)), vec![1]);
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
     #[test]
-    fn late_items_join_within_window() {
+    fn idle_window_bounds_the_wait() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let mut q = AdmissionQueue::new(rx);
+        let t0 = Instant::now();
+        assert_eq!(q.admit(8, true, &policy(8, 10)), vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        drop(tx);
+    }
+
+    #[test]
+    fn late_items_join_within_idle_window() {
         let (tx, rx) = channel();
         tx.send(1).unwrap();
         let handle = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(5));
             tx.send(2).unwrap();
         });
-        let policy = BatchPolicy { max_batch: 4, window: Duration::from_millis(200) };
-        let b = collect_batch(&rx, &policy).unwrap();
+        let mut q = AdmissionQueue::new(rx);
+        let b = q.admit(4, true, &policy(4, 200));
         handle.join().unwrap();
         assert!(b.contains(&1));
         // item 2 should usually join; tolerate scheduler jitter
         assert!(b.len() <= 2);
+    }
+
+    #[test]
+    fn wait_returns_false_on_closed_empty_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let mut q = AdmissionQueue::new(rx);
+        assert!(!q.wait());
+        assert!(q.is_closed());
+        assert!(q.admit(4, true, &BatchPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn wait_drains_channel_after_close() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let mut q = AdmissionQueue::new(rx);
+        assert!(q.wait());
+        assert_eq!(q.admit(4, true, &BatchPolicy::default()), vec![7]);
+        assert!(!q.wait());
     }
 }

@@ -1,6 +1,7 @@
-//! The HexGen coordinator (Layer 3): request routing, dynamic batching,
-//! leader-side collectives, and the asymmetric TP×PP pipeline executor —
-//! the real serving path (paper §3.2, Appendix C). Python never runs
+//! The HexGen coordinator (Layer 3): request routing, continuous
+//! (iteration-level) batching, leader-side collectives, and the
+//! asymmetric TP×PP pipeline executor — the real serving path (paper
+//! §3.2, Appendix C). Python never runs
 //! here; the executors run stage artifacts through a pluggable
 //! [`crate::runtime::ExecutionBackend`] (pure-Rust reference by default,
 //! PJRT behind the `pjrt` feature).
@@ -11,8 +12,11 @@ pub mod pipeline;
 pub mod router;
 pub mod service;
 
-pub use batcher::{collect_batch, BatchPolicy};
+pub use batcher::{AdmissionQueue, BatchPolicy};
 pub use collective::{add_residual, all_reduce_sum, CommStats};
-pub use pipeline::{argmax_rows, plan_from_strategy, GenerationResult, PipelineExecutor, StagePlan};
+pub use pipeline::{
+    argmax_rows, plan_from_strategy, DecodeSession, GenerationResult, PipelineExecutor,
+    SlotRequest, StagePlan,
+};
 pub use router::{RoutePolicy, Router};
 pub use service::{collect_all, Completion, HexGenService, ServiceConfig};

@@ -12,13 +12,22 @@
 //! ```
 //!
 //! with the KV caches held per (layer, shard) between decode steps.
+//!
+//! Serving runs **continuous (iteration-level) batching** through a
+//! persistent [`DecodeSession`]: slot-based KV caches sized to an
+//! artifact bucket, with [`DecodeSession::prefill_into_slots`] admitting
+//! requests into free slots at any decode-step boundary and
+//! [`DecodeSession::decode_step`] retiring rows the moment they hit
+//! their own `max_new` or emit their stop token. The monolithic
+//! [`PipelineExecutor::generate`] remains as a thin run-to-completion
+//! wrapper over a session.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{BackendKind, ExecutionBackend, InputArg, Tensor, WeightStore};
+use crate::runtime::{tokenizer, BackendKind, ExecutionBackend, InputArg, Tensor, WeightStore};
 
 use super::collective::{add_residual, all_reduce_sum, record_pp_send, CommStats};
 
@@ -61,7 +70,12 @@ pub struct GenerationResult {
     pub tokens: Vec<Vec<i32>>,
     pub prefill_seconds: f64,
     pub decode_seconds: f64,
+    /// True decode iterations only — the token argmaxed from the prefill
+    /// logits is *not* counted here (see [`Self::prefill_tokens`]), so
+    /// `decode_steps / decode_seconds` is an honest decode rate.
     pub decode_steps: usize,
+    /// Tokens produced by the prefill pass itself (one per request row).
+    pub prefill_tokens: usize,
     pub comm: CommStats,
     /// Batch bucket actually executed (≥ the real batch).
     pub bucket: usize,
@@ -130,103 +144,94 @@ impl PipelineExecutor {
         format!("[{}]", v.join(","))
     }
 
+    /// Open a persistent decode session with `bucket` KV-cache slots
+    /// (`bucket` must be one of the manifest's batch buckets). Caches are
+    /// allocated zeroed; requests are admitted with
+    /// [`DecodeSession::prefill_into_slots`].
+    pub fn new_session(&self, bucket: usize) -> Result<DecodeSession<'_>> {
+        let m = self.backend.manifest();
+        if !m.batch_buckets.contains(&bucket) {
+            bail!("session bucket {bucket} not in manifest buckets {:?}", m.batch_buckets);
+        }
+        let info = &m.model;
+        let mut caches: Vec<StageCaches> = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            if stage.tp == 0 || info.heads % stage.tp != 0 {
+                bail!("tp={} does not divide {} heads", stage.tp, info.heads);
+            }
+            let nhs = info.heads / stage.tp;
+            let dims = vec![bucket, nhs, info.max_seq, info.head_dim];
+            let n = bucket * nhs * info.max_seq * info.head_dim;
+            let mut stage_caches: StageCaches = Vec::with_capacity(stage.layer_count);
+            for _ in 0..stage.layer_count {
+                let shards: Vec<(Tensor, Tensor)> = (0..stage.tp)
+                    .map(|_| {
+                        (
+                            Tensor { dims: dims.clone(), data: vec![0.0; n] },
+                            Tensor { dims: dims.clone(), data: vec![0.0; n] },
+                        )
+                    })
+                    .collect();
+                stage_caches.push(shards);
+            }
+            caches.push(stage_caches);
+        }
+        Ok(DecodeSession {
+            exec: self,
+            bucket,
+            caches,
+            slots: (0..bucket).map(|_| None).collect(),
+            comm: CommStats::default(),
+            decode_steps: 0,
+            prefill_tokens: 0,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+        })
+    }
+
     /// Generate up to `max_new` tokens for a batch of prompts (each
     /// exactly `prompt_len` tokens; see [`crate::runtime::tokenizer`]).
-    /// Greedy decoding.
+    /// Greedy decoding. Thin run-to-completion wrapper over a
+    /// [`DecodeSession`]; each row still stops at its own limit.
     pub fn generate(&self, prompts: &[Vec<i32>], max_new: usize) -> Result<GenerationResult> {
-        let info = self.backend.manifest().model.clone();
+        self.generate_with_limits(prompts, &vec![max_new; prompts.len()])
+    }
+
+    /// Like [`Self::generate`] but with a per-request `max_new`: row `i`
+    /// receives exactly `max_new[i]` tokens (clamped to the cache), no
+    /// matter what its co-batched neighbours asked for.
+    pub fn generate_with_limits(
+        &self,
+        prompts: &[Vec<i32>],
+        max_new: &[usize],
+    ) -> Result<GenerationResult> {
         let b_real = prompts.len();
         if b_real == 0 {
             bail!("empty batch");
         }
-        for p in prompts {
-            if p.len() != info.prompt_len {
-                bail!("prompt must be exactly {} tokens, got {}", info.prompt_len, p.len());
-            }
-        }
-        let max_new = max_new.min(info.max_seq - info.prompt_len);
-        if max_new == 0 {
-            bail!("max_new must be >= 1");
+        if max_new.len() != b_real {
+            bail!("{} max_new limits for {b_real} prompts", max_new.len());
         }
         let bucket = self.backend.manifest().bucket_for(b_real)?;
-
-        // Pad the batch to the bucket with PAD prompts.
-        let mut tokens: Vec<i32> = Vec::with_capacity(bucket * info.prompt_len);
-        for p in prompts {
-            tokens.extend_from_slice(p);
+        let mut session = self.new_session(bucket)?;
+        let reqs: Vec<(usize, SlotRequest)> = prompts
+            .iter()
+            .zip(max_new)
+            .enumerate()
+            .map(|(i, (p, &mn))| {
+                (i, SlotRequest { prompt: p.clone(), max_new: mn, stop: None })
+            })
+            .collect();
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); b_real];
+        for (slot, toks) in session.prefill_into_slots(reqs)? {
+            out[slot] = toks;
         }
-        tokens.resize(bucket * info.prompt_len, crate::runtime::tokenizer::PAD);
-
-        let mut comm = CommStats::default();
-
-        // ---- prefill --------------------------------------------------
-        let t0 = Instant::now();
-        let mut x = self.embed(&tokens, bucket, info.prompt_len, true)?;
-        let mut caches: Vec<StageCaches> = Vec::with_capacity(self.stages.len());
-        for (si, stage) in self.stages.iter().enumerate() {
-            let mut stage_caches: StageCaches = Vec::with_capacity(stage.layer_count);
-            for layer in stage.layers() {
-                let (h, layer_caches) =
-                    self.layer_prefill(&x, layer, stage.tp, bucket, &mut comm)?;
-                x = h;
-                stage_caches.push(layer_caches);
-            }
-            caches.push(stage_caches);
-            if si + 1 < self.stages.len() {
-                record_pp_send(&x, &mut comm);
+        while session.active() > 0 {
+            for (slot, toks) in session.decode_step()? {
+                out[slot] = toks;
             }
         }
-        let logits = self.lm_head(&x, bucket, true)?;
-        let mut next = argmax_rows(&logits, info.vocab);
-        let prefill_seconds = t0.elapsed().as_secs_f64();
-
-        let mut generated: Vec<Vec<i32>> = vec![Vec::with_capacity(max_new); bucket];
-        for (row, g) in generated.iter_mut().enumerate() {
-            g.push(next[row]);
-        }
-
-        // ---- decode ----------------------------------------------------
-        let t1 = Instant::now();
-        let mut steps = 1; // first token came from prefill logits
-        for step in 1..max_new {
-            let pos = (info.prompt_len + step - 1) as i32;
-            let tok_batch: Vec<i32> = next.clone();
-            let mut x = self.embed(&tok_batch, bucket, 1, false)?;
-            for (si, stage) in self.stages.iter().enumerate() {
-                for (li, layer) in stage.layers().enumerate() {
-                    let h = self.layer_decode(
-                        &x,
-                        layer,
-                        stage.tp,
-                        bucket,
-                        pos,
-                        &mut caches[si][li],
-                        &mut comm,
-                    )?;
-                    x = h;
-                }
-                if si + 1 < self.stages.len() {
-                    record_pp_send(&x, &mut comm);
-                }
-            }
-            let logits = self.lm_head(&x, bucket, false)?;
-            next = argmax_rows(&logits, info.vocab);
-            for (row, g) in generated.iter_mut().enumerate() {
-                g.push(next[row]);
-            }
-            steps += 1;
-        }
-        let decode_seconds = t1.elapsed().as_secs_f64();
-
-        generated.truncate(b_real);
-        Ok(GenerationResult {
-            tokens: generated,
-            prefill_seconds,
-            decode_seconds,
-            decode_steps: steps,
-            comm,
-            bucket,
-        })
+        Ok(session.into_result(out))
     }
 
     // ---- stage pieces ---------------------------------------------------
@@ -315,6 +320,9 @@ impl PipelineExecutor {
     }
 
     /// One decode layer; updates the per-shard caches in place.
+    /// `positions[row]` is where that row's new KV entry lands (its cache
+    /// depth); a uniform batch lowers to the scalar-position artifact
+    /// signature, mixed depths (continuous batching) to a per-row vector.
     #[allow(clippy::too_many_arguments)]
     fn layer_decode(
         &self,
@@ -322,25 +330,31 @@ impl PipelineExecutor {
         layer: usize,
         tp: usize,
         bucket: usize,
-        pos: i32,
+        positions: &[i32],
         caches: &mut Vec<(Tensor, Tensor)>,
         comm: &mut CommStats,
     ) -> Result<Tensor> {
         let attn_name = format!("attn_decode_tp{tp}_b{bucket}");
         let ln1 = format!("layers.{layer}.ln1");
+        let uniform = positions.windows(2).all(|w| w[0] == w[1]);
         let mut partials = Vec::with_capacity(tp);
         for (r, (k_cache, v_cache)) in caches.iter_mut().enumerate() {
             let wq = WeightStore::shard_name(layer, "wq", tp, r);
             let wk = WeightStore::shard_name(layer, "wk", tp, r);
             let wv = WeightStore::shard_name(layer, "wv", tp, r);
             let wo = WeightStore::shard_name(layer, "wo", tp, r);
+            let pos_arg = if uniform {
+                InputArg::ScalarI32(positions[0])
+            } else {
+                InputArg::I32(positions, vec![bucket])
+            };
             let mut outs = self.backend.execute(
                 &attn_name,
                 &[
                     InputArg::F32(x),
                     InputArg::F32(k_cache),
                     InputArg::F32(v_cache),
-                    InputArg::ScalarI32(pos),
+                    pos_arg,
                     InputArg::Weight(&ln1),
                     InputArg::Weight(&wq),
                     InputArg::Weight(&wk),
@@ -374,6 +388,273 @@ impl PipelineExecutor {
         let reduced = all_reduce_sum(mlp_partials, comm);
         add_residual(&mut h, &reduced);
         Ok(h)
+    }
+}
+
+/// A request to admit into a [`DecodeSession`] slot.
+#[derive(Debug, Clone)]
+pub struct SlotRequest {
+    /// Exactly `prompt_len` tokens (see [`crate::runtime::tokenizer`]).
+    pub prompt: Vec<i32>,
+    /// Per-request generation limit (clamped to `max_seq - prompt_len`).
+    pub max_new: usize,
+    /// Optional stop token: the row retires as soon as it emits this.
+    pub stop: Option<i32>,
+}
+
+/// Per-slot decode state.
+struct SlotState {
+    max_new: usize,
+    stop: Option<i32>,
+    /// Tokens generated so far (the first came from prefill logits).
+    generated: Vec<i32>,
+    /// Next input token for the coming decode step.
+    next: i32,
+    /// Cache depth = where the next KV entry is written.
+    pos: usize,
+}
+
+/// Persistent step-granular decode state over a [`PipelineExecutor`]:
+/// `bucket` KV-cache slots shared by all in-flight rows. The serving
+/// loop interleaves [`Self::prefill_into_slots`] (admission) with
+/// [`Self::decode_step`] (one token for every active row), so a late
+/// request joins an in-flight batch at the next step boundary instead of
+/// waiting behind it, and every row stops at its own `max_new`/stop
+/// token — continuous (iteration-level) batching.
+pub struct DecodeSession<'a> {
+    exec: &'a PipelineExecutor,
+    bucket: usize,
+    /// `[stage][layer][shard] -> (k, v)`, each `[bucket, nhs, max_seq, dh]`.
+    caches: Vec<StageCaches>,
+    slots: Vec<Option<SlotState>>,
+    comm: CommStats,
+    decode_steps: usize,
+    prefill_tokens: usize,
+    prefill_seconds: f64,
+    decode_seconds: f64,
+}
+
+impl<'a> DecodeSession<'a> {
+    /// Cache slots in this session (an artifact bucket).
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Rows currently decoding.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Slots available for admission.
+    pub fn free_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// True decode iterations executed so far.
+    pub fn decode_steps(&self) -> usize {
+        self.decode_steps
+    }
+
+    pub fn prefill_seconds(&self) -> f64 {
+        self.prefill_seconds
+    }
+
+    pub fn decode_seconds(&self) -> f64 {
+        self.decode_seconds
+    }
+
+    /// Drain the communication counters accumulated since the last call.
+    pub fn take_comm(&mut self) -> CommStats {
+        std::mem::take(&mut self.comm)
+    }
+
+    /// Admit requests into free slots: run their prefill (at the smallest
+    /// bucket that fits the admission batch) and scatter the resulting KV
+    /// rows into the slots' cache rows. Callable between any two decode
+    /// steps; in-flight rows are untouched. Returns the rows that already
+    /// finished at prefill (`max_new == 1` or stop token emitted) as
+    /// `(slot, tokens)`; their slots are freed again.
+    ///
+    /// Admitting while other rows are mid-decode leaves rows at different
+    /// cache depths, which requires
+    /// [`ExecutionBackend::supports_rowwise_decode_positions`]; on
+    /// scalar-position backends (the AOT artifact signature) only admit
+    /// into an idle session, as the service loop does.
+    pub fn prefill_into_slots(
+        &mut self,
+        reqs: Vec<(usize, SlotRequest)>,
+    ) -> Result<Vec<(usize, Vec<i32>)>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let info = self.exec.backend.manifest().model.clone();
+        let mut claimed = vec![false; self.bucket];
+        for (slot, r) in &reqs {
+            if *slot >= self.bucket {
+                bail!("slot {slot} outside session bucket {}", self.bucket);
+            }
+            if self.slots[*slot].is_some() || claimed[*slot] {
+                bail!("slot {slot} is already occupied");
+            }
+            claimed[*slot] = true;
+            if r.prompt.len() != info.prompt_len {
+                bail!("prompt must be exactly {} tokens, got {}", info.prompt_len, r.prompt.len());
+            }
+            if r.max_new == 0 {
+                bail!("max_new must be >= 1");
+            }
+        }
+        let pb = self.exec.backend.manifest().bucket_for(reqs.len())?;
+
+        let t0 = Instant::now();
+        let mut tokens: Vec<i32> = Vec::with_capacity(pb * info.prompt_len);
+        for (_, r) in &reqs {
+            tokens.extend_from_slice(&r.prompt);
+        }
+        tokens.resize(pb * info.prompt_len, tokenizer::PAD);
+
+        let mut x = self.exec.embed(&tokens, pb, info.prompt_len, true)?;
+        for (si, stage) in self.exec.stages.iter().enumerate() {
+            for (li, layer) in stage.layers().enumerate() {
+                let (h, layer_caches) =
+                    self.exec.layer_prefill(&x, layer, stage.tp, pb, &mut self.comm)?;
+                x = h;
+                for (shard, (kc, vc)) in layer_caches.iter().enumerate() {
+                    for (row, (slot, _)) in reqs.iter().enumerate() {
+                        let (dst_k, dst_v) = &mut self.caches[si][li][shard];
+                        dst_k.copy_slot_from(*slot, kc, row)?;
+                        dst_v.copy_slot_from(*slot, vc, row)?;
+                    }
+                }
+            }
+            if si + 1 < self.exec.stages.len() {
+                record_pp_send(&x, &mut self.comm);
+            }
+        }
+        let logits = self.exec.lm_head(&x, pb, true)?;
+        let next = argmax_rows(&logits, info.vocab);
+        self.prefill_seconds += t0.elapsed().as_secs_f64();
+        self.prefill_tokens += reqs.len();
+
+        let max_decode = info.max_seq - info.prompt_len;
+        let mut finished = Vec::new();
+        for (row, (slot, r)) in reqs.into_iter().enumerate() {
+            let tok = next[row];
+            let st = SlotState {
+                max_new: r.max_new.min(max_decode).max(1),
+                stop: r.stop,
+                generated: vec![tok],
+                next: tok,
+                pos: info.prompt_len,
+            };
+            if st.generated.len() >= st.max_new || Some(tok) == st.stop {
+                self.evict(slot);
+                finished.push((slot, st.generated));
+            } else {
+                self.slots[slot] = Some(st);
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Run one decode iteration for every active row. Rows that hit their
+    /// own `max_new` or stop token retire: their slots are freed (cache
+    /// rows zeroed) and their full token sequences returned as
+    /// `(slot, tokens)`. A no-op returning `[]` when nothing is active.
+    pub fn decode_step(&mut self) -> Result<Vec<(usize, Vec<i32>)>> {
+        if self.active() == 0 {
+            return Ok(Vec::new());
+        }
+        let info = self.exec.backend.manifest().model.clone();
+        let t0 = Instant::now();
+
+        let mut tok_batch = vec![tokenizer::PAD; self.bucket];
+        let mut positions = vec![0i32; self.bucket];
+        let mut filler_pos = 0i32;
+        for (slot, st) in self.slots.iter().enumerate() {
+            if let Some(st) = st {
+                tok_batch[slot] = st.next;
+                positions[slot] = st.pos as i32;
+                filler_pos = st.pos as i32;
+            }
+        }
+        // Free slots mirror an active row's position so a uniform batch
+        // keeps the scalar-position artifact signature available.
+        for (slot, st) in self.slots.iter().enumerate() {
+            if st.is_none() {
+                positions[slot] = filler_pos;
+            }
+        }
+
+        let mut x = self.exec.embed(&tok_batch, self.bucket, 1, false)?;
+        for (si, stage) in self.exec.stages.iter().enumerate() {
+            for (li, layer) in stage.layers().enumerate() {
+                x = self.exec.layer_decode(
+                    &x,
+                    layer,
+                    stage.tp,
+                    self.bucket,
+                    &positions,
+                    &mut self.caches[si][li],
+                    &mut self.comm,
+                )?;
+            }
+            if si + 1 < self.exec.stages.len() {
+                record_pp_send(&x, &mut self.comm);
+            }
+        }
+        let logits = self.exec.lm_head(&x, self.bucket, false)?;
+        let next = argmax_rows(&logits, info.vocab);
+        self.decode_steps += 1;
+        self.decode_seconds += t0.elapsed().as_secs_f64();
+
+        let mut finished = Vec::new();
+        for slot in 0..self.bucket {
+            let done = {
+                let Some(st) = self.slots[slot].as_mut() else { continue };
+                let tok = next[slot];
+                st.generated.push(tok);
+                st.next = tok;
+                st.pos += 1;
+                st.generated.len() >= st.max_new || Some(tok) == st.stop
+            };
+            if done {
+                let st = self.slots[slot].take().expect("slot state");
+                self.evict(slot);
+                finished.push((slot, st.generated));
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Zero a slot's cache rows across all stages/layers/shards (evict).
+    fn evict(&mut self, slot: usize) {
+        for stage in self.caches.iter_mut() {
+            for layer in stage.iter_mut() {
+                for (k, v) in layer.iter_mut() {
+                    let _ = k.clear_slot(slot);
+                    let _ = v.clear_slot(slot);
+                }
+            }
+        }
+    }
+
+    /// Fold the session's counters into a [`GenerationResult`].
+    fn into_result(mut self, tokens: Vec<Vec<i32>>) -> GenerationResult {
+        GenerationResult {
+            tokens,
+            prefill_seconds: self.prefill_seconds,
+            decode_seconds: self.decode_seconds,
+            decode_steps: self.decode_steps,
+            prefill_tokens: self.prefill_tokens,
+            comm: std::mem::take(&mut self.comm),
+            bucket: self.bucket,
+        }
     }
 }
 

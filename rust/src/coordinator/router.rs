@@ -50,25 +50,46 @@ impl Router {
 
     /// Pick a replica for a new request and record the assignment.
     pub fn route(&self) -> usize {
+        self.route_excluding(&[]).expect("router has at least one replica")
+    }
+
+    /// Pick a replica, skipping `excluded` (replicas observed dead by the
+    /// caller). Returns `None` when every replica is excluded. The caller
+    /// must pair each successful pick with [`Self::complete`] — including
+    /// when the hand-off to the replica fails afterwards, or the load
+    /// counter leaks and the policy keeps favouring a dead replica.
+    pub fn route_excluding(&self, excluded: &[usize]) -> Option<usize> {
+        let n = self.outstanding.len();
         let r = match self.policy {
             RoutePolicy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.outstanding.len()
+                let mut pick = None;
+                for _ in 0..n {
+                    let c = self.rr_next.fetch_add(1, Ordering::Relaxed) % n;
+                    if !excluded.contains(&c) {
+                        pick = Some(c);
+                        break;
+                    }
+                }
+                pick?
             }
             RoutePolicy::LeastLoaded => {
-                let mut best = 0;
+                let mut best = None;
                 let mut best_cost = f64::INFINITY;
                 for (i, o) in self.outstanding.iter().enumerate() {
+                    if excluded.contains(&i) {
+                        continue;
+                    }
                     let cost = (o.load(Ordering::Relaxed) as f64 + 1.0) / self.speed[i];
                     if cost < best_cost {
                         best_cost = cost;
-                        best = i;
+                        best = Some(i);
                     }
                 }
-                best
+                best?
             }
         };
         self.outstanding[r].fetch_add(1, Ordering::Relaxed);
-        r
+        Some(r)
     }
 
     /// Record completion of a request previously routed to `replica`.
@@ -111,6 +132,34 @@ mod tests {
         let picks: Vec<usize> = (0..5).map(|_| r.route()).collect();
         assert!(picks[..4].iter().all(|&p| p == 0), "{picks:?}");
         assert_eq!(picks[4], 1, "{picks:?}");
+    }
+
+    #[test]
+    fn route_excluding_skips_dead_replicas() {
+        let r = Router::new(RoutePolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..4).map(|_| r.route_excluding(&[1]).unwrap()).collect();
+        assert!(picks.iter().all(|&p| p != 1), "{picks:?}");
+        assert_eq!(r.route_excluding(&[0, 1, 2]), None);
+
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        for _ in 0..3 {
+            assert_eq!(r.route_excluding(&[0]), Some(1));
+        }
+        assert_eq!(r.outstanding(1), 3);
+        assert_eq!(r.outstanding(0), 0);
+    }
+
+    #[test]
+    fn failed_handoff_releases_the_count() {
+        // Regression for the dead-replica load leak: a route() whose
+        // queue send fails must be paired with complete(), restoring the
+        // counter so the policy does not keep favouring the dead replica.
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let dead = r.route();
+        r.complete(dead); // hand-off failed: release
+        assert_eq!(r.outstanding(dead), 0);
+        let alive = r.route_excluding(&[dead]).unwrap();
+        assert_ne!(alive, dead);
     }
 
     #[test]

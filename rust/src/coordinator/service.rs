@@ -3,11 +3,18 @@
 //! One worker thread per replica, each owning a thread-confined
 //! [`PipelineExecutor`] over its own [`ExecutionBackend`] instance
 //! (backends need not be `Send`; PJRT handles are not). The router
-//! assigns requests to replicas; each worker batches its queue
-//! (Appendix-D simple batching) and replies over per-request channels.
+//! assigns requests to replicas; each worker runs a **continuous
+//! batching** admission loop over a persistent
+//! [`DecodeSession`](super::pipeline::DecodeSession): at every
+//! decode-step boundary it retires rows that hit their own `max_new` (or
+//! stop token), frees their KV-cache slots, and prefills queued requests
+//! into the free slots — so a late request joins the in-flight batch
+//! instead of waiting behind it.
+//!
+//! [`ExecutionBackend`]: crate::runtime::ExecutionBackend
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -16,10 +23,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::{make_backend, tokenizer, BackendKind, Manifest, WeightStore};
 
-use super::batcher::{collect_batch, BatchPolicy};
+use super::batcher::{AdmissionQueue, BatchPolicy};
 use super::collective::CommStats;
 
-use super::pipeline::{PipelineExecutor, StagePlan};
+use super::pipeline::{PipelineExecutor, SlotRequest, StagePlan};
 use super::router::{RoutePolicy, Router};
 
 /// Service configuration.
@@ -34,6 +41,8 @@ pub struct ServiceConfig {
     pub route: RoutePolicy,
     /// Default generation length (≤ max_seq − prompt_len).
     pub max_new_tokens: usize,
+    /// Optional stop token: rows retire early when they emit it.
+    pub stop_token: Option<i32>,
 }
 
 /// A completed generation.
@@ -43,12 +52,20 @@ pub struct Completion {
     pub tokens: Vec<i32>,
     /// End-to-end latency (submit → response), seconds.
     pub latency: f64,
-    /// Queueing delay before the batch started, seconds.
+    /// Queueing delay before this request was admitted into a slot,
+    /// seconds.
     pub queued: f64,
     pub replica: usize,
+    /// Rows in flight on the replica when this request was admitted
+    /// (including itself).
     pub batch_size: usize,
+    /// Wall time of this request's prefill pass, seconds.
     pub prefill_seconds: f64,
+    /// Wall time from this request's prefill to its retirement, seconds.
     pub decode_seconds: f64,
+    /// Decode iterations this request participated in
+    /// (`tokens.len() - 1`; the first token comes from prefill).
+    pub decode_steps: usize,
 }
 
 struct WorkItem {
@@ -56,6 +73,16 @@ struct WorkItem {
     max_new: usize,
     submitted: Instant,
     reply: Sender<Result<Completion, String>>,
+}
+
+/// A request occupying a decode-session slot.
+struct ActiveItem {
+    item: WorkItem,
+    admitted: Instant,
+    /// Rows in flight when this request was admitted (incl. itself).
+    cohort: usize,
+    prefill_seconds: f64,
+    decode_start: Instant,
 }
 
 /// Handle to a running service.
@@ -91,13 +118,14 @@ impl HexGenService {
             let weights = weights.clone();
             let batch = cfg.batch;
             let backend = cfg.backend;
+            let stop_token = cfg.stop_token;
             let router = router.clone();
             let comm_tx = comm_tx.clone();
             let ready_tx = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    rid, backend, dir, manifest, weights, plan, batch, rx, router, comm_tx,
-                    ready_tx,
+                    rid, backend, dir, manifest, weights, plan, batch, stop_token, rx, router,
+                    comm_tx, ready_tx,
                 )
             }));
         }
@@ -119,24 +147,43 @@ impl HexGenService {
         self.queues.len()
     }
 
-    /// Submit a prompt; returns a receiver for the completion.
+    /// Submit a prompt; returns a receiver for the completion. If the
+    /// routed replica is dead (its queue hung up), the router's load
+    /// count is released and the request re-routed to a live replica.
     pub fn submit(&self, prompt: &str, max_new: Option<usize>) -> Receiver<Result<Completion, String>> {
         let (reply_tx, reply_rx) = channel();
         let tokens = tokenizer::encode(prompt, self.manifest.model.prompt_len);
-        let item = WorkItem {
+        let mut item = WorkItem {
             prompt_tokens: tokens,
             max_new: max_new.unwrap_or(self.cfg.max_new_tokens),
             submitted: Instant::now(),
             reply: reply_tx,
         };
-        let replica = self.router.route();
-        // Channel send only fails if the worker died; surface as error.
-        if self.queues[replica].send(item).is_err() {
-            let (etx, erx) = channel();
-            let _ = etx.send(Err(format!("replica {replica} is down")));
-            return erx;
+        // Reject invalid limits here, per request — admission batches
+        // several requests into one prefill, and one bad request must not
+        // fail its co-batched neighbours.
+        if item.max_new == 0 {
+            let _ = item.reply.send(Err("max_new must be >= 1".to_string()));
+            return reply_rx;
         }
-        reply_rx
+        let mut dead: Vec<usize> = Vec::new();
+        loop {
+            let Some(replica) = self.router.route_excluding(&dead) else {
+                let _ = item.reply.send(Err("all replicas are down".to_string()));
+                return reply_rx;
+            };
+            match self.queues[replica].send(item) {
+                Ok(()) => return reply_rx,
+                Err(SendError(returned)) => {
+                    // The worker hung up: release the routed load count so
+                    // the policy stops charging the dead replica, then try
+                    // the remaining ones.
+                    self.router.complete(replica);
+                    dead.push(replica);
+                    item = returned;
+                }
+            }
+        }
     }
 
     /// Submit and block for the completion.
@@ -166,6 +213,19 @@ impl HexGenService {
     }
 }
 
+/// Largest artifact bucket not exceeding `max_batch` (the session's slot
+/// count); falls back to the smallest bucket when `max_batch` is below
+/// them all.
+fn session_bucket(buckets: &[usize], max_batch: usize) -> usize {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b <= max_batch.max(1))
+        .max()
+        .or_else(|| buckets.iter().copied().min())
+        .unwrap_or(1)
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rid: usize,
@@ -175,6 +235,7 @@ fn worker_loop(
     weights: Arc<WeightStore>,
     plan: Vec<StagePlan>,
     batch: BatchPolicy,
+    stop_token: Option<i32>,
     rx: Receiver<WorkItem>,
     router: Arc<Router>,
     comm_tx: Sender<CommStats>,
@@ -184,53 +245,160 @@ fn worker_loop(
     let exec = match make_backend(backend, &dir, manifest, weights)
         .and_then(|be| PipelineExecutor::with_backend(be, plan))
     {
-        Ok(e) => {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready_tx.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let bucket = session_bucket(&exec.manifest().batch_buckets, batch.max_batch);
+    let mut session = match exec.new_session(bucket) {
+        Ok(s) => {
             let _ = ready_tx.send(Ok(()));
-            e
+            s
         }
         Err(e) => {
             let _ = ready_tx.send(Err(format!("{e:#}")));
             return;
         }
     };
+    // Continuous admission co-batches rows at different cache depths,
+    // which needs per-row decode positions; backends bound to the
+    // scalar-position AOT artifact signature degrade to
+    // run-to-completion batching instead of failing mid-step.
+    let continuous = batch.continuous && exec.backend().supports_rowwise_decode_positions();
+    if batch.continuous && !continuous {
+        crate::log_warn!(
+            "replica {rid}: backend {} lacks per-row decode positions; \
+             falling back to run-to-completion batching",
+            exec.backend().name()
+        );
+    }
     crate::log_info!(
-        "replica {rid} ready: backend {} strategy {}",
+        "replica {rid} ready: backend {} strategy {} ({bucket} slots, {})",
         exec.backend().name(),
-        exec.strategy_string()
+        exec.strategy_string(),
+        if continuous { "continuous batching" } else { "run-to-completion batching" },
     );
 
-    while let Some(items) = collect_batch(&rx, &batch) {
-        let batch_size = items.len();
-        let started = Instant::now();
-        let prompts: Vec<Vec<i32>> = items.iter().map(|i| i.prompt_tokens.clone()).collect();
-        let max_new = items.iter().map(|i| i.max_new).max().unwrap_or(1);
-        match exec.generate(&prompts, max_new) {
-            Ok(result) => {
-                let _ = comm_tx.send(result.comm);
-                for (i, item) in items.into_iter().enumerate() {
-                    let tokens = result.tokens[i].clone();
-                    let completion = Completion {
-                        text: tokenizer::decode(&tokens),
-                        tokens,
-                        latency: item.submitted.elapsed().as_secs_f64(),
-                        queued: (started - item.submitted).as_secs_f64(),
-                        replica: rid,
-                        batch_size,
-                        prefill_seconds: result.prefill_seconds,
-                        decode_seconds: result.decode_seconds,
+    let mut queue = AdmissionQueue::new(rx);
+    let mut active: Vec<Option<ActiveItem>> = (0..bucket).map(|_| None).collect();
+
+    let fail = |active_item: ActiveItem, msg: &str| {
+        let _ = active_item.item.reply.send(Err(msg.to_string()));
+        router.complete(rid);
+    };
+    let deliver = |active_item: ActiveItem, tokens: Vec<i32>| {
+        let completion = Completion {
+            text: tokenizer::decode(&tokens),
+            latency: active_item.item.submitted.elapsed().as_secs_f64(),
+            queued: (active_item.admitted - active_item.item.submitted).as_secs_f64(),
+            replica: rid,
+            batch_size: active_item.cohort,
+            prefill_seconds: active_item.prefill_seconds,
+            decode_seconds: active_item.decode_start.elapsed().as_secs_f64(),
+            decode_steps: tokens.len().saturating_sub(1),
+            tokens,
+        };
+        let _ = active_item.item.reply.send(Ok(completion));
+        router.complete(rid);
+    };
+
+    loop {
+        // ---- block when idle, otherwise just sweep the channel --------
+        if session.active() == 0 && !queue.wait() {
+            break; // shutdown: channel closed and drained, nothing in flight
+        }
+
+        // ---- admission at a step boundary -----------------------------
+        // In run-to-completion mode slots only open once the whole batch
+        // retired; continuous mode admits into any freed slot.
+        let free = session.free_slots();
+        let avail = if continuous || session.active() == 0 { free.len() } else { 0 };
+        let admitted = queue.admit(avail, session.active() == 0, &batch);
+        if !admitted.is_empty() {
+            let now = Instant::now();
+            let cohort = session.active() + admitted.len();
+            let mut reqs = Vec::with_capacity(admitted.len());
+            let mut slots_used = Vec::with_capacity(admitted.len());
+            for (item, &slot) in admitted.into_iter().zip(free.iter()) {
+                reqs.push((
+                    slot,
+                    SlotRequest {
+                        prompt: item.prompt_tokens.clone(),
+                        max_new: item.max_new,
+                        stop: stop_token,
+                    },
+                ));
+                active[slot] = Some(ActiveItem {
+                    item,
+                    admitted: now,
+                    cohort,
+                    prefill_seconds: 0.0,
+                    decode_start: now,
+                });
+                slots_used.push(slot);
+            }
+            let t0 = Instant::now();
+            match session.prefill_into_slots(reqs) {
+                Ok(finished) => {
+                    let pf = t0.elapsed().as_secs_f64();
+                    let end = Instant::now();
+                    for &slot in &slots_used {
+                        if let Some(a) = active[slot].as_mut() {
+                            a.prefill_seconds = pf;
+                            a.decode_start = end;
+                        }
+                    }
+                    for (slot, tokens) in finished {
+                        if let Some(a) = active[slot].take() {
+                            deliver(a, tokens);
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("replica {rid} prefill failed: {e:#}");
+                    crate::log_error!("{msg}");
+                    for slot in slots_used {
+                        if let Some(a) = active[slot].take() {
+                            fail(a, &msg);
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- one decode iteration for every in-flight row -------------
+        if session.active() > 0 {
+            match session.decode_step() {
+                Ok(finished) => {
+                    for (slot, tokens) in finished {
+                        if let Some(a) = active[slot].take() {
+                            deliver(a, tokens);
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("replica {rid} decode failed: {e:#}");
+                    crate::log_error!("{msg}");
+                    for slot_item in active.iter_mut() {
+                        if let Some(a) = slot_item.take() {
+                            fail(a, &msg);
+                        }
+                    }
+                    // The session's slot state may be inconsistent after a
+                    // mid-step failure: start from a fresh one.
+                    session = match exec.new_session(bucket) {
+                        Ok(s) => s,
+                        Err(_) => return,
                     };
-                    let _ = item.reply.send(Ok(completion));
-                    router.complete(rid);
                 }
             }
-            Err(e) => {
-                let msg = format!("replica {rid} generation failed: {e:#}");
-                crate::log_error!("{msg}");
-                for item in items {
-                    let _ = item.reply.send(Err(msg.clone()));
-                    router.complete(rid);
-                }
-            }
+        }
+
+        let comm = session.take_comm();
+        if comm != CommStats::default() {
+            let _ = comm_tx.send(comm);
         }
     }
 }

@@ -125,6 +125,7 @@ fn serve(args: &Args) -> Result<()> {
         batch: BatchPolicy::default(),
         route: RoutePolicy::LeastLoaded,
         max_new_tokens: args.get_usize("max-new", 16),
+        stop_token: None,
     })?;
     let prompt = args.get_str("prompt", "the quick brown fox jumps over the lazy dog");
     let c = service.generate(&prompt, None)?;

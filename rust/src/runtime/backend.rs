@@ -53,6 +53,15 @@ pub trait ExecutionBackend {
     /// manifest's declared order.
     fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>>;
 
+    /// Whether `attn_decode` accepts a per-row `[b]` position vector in
+    /// place of the batch-wide scalar. Continuous batching needs this to
+    /// co-batch rows at different cache depths; backends bound to
+    /// AOT-compiled artifact signatures (scalar `pos`) return `false`
+    /// and the serving loop degrades to run-to-completion batching.
+    fn supports_rowwise_decode_positions(&self) -> bool {
+        false
+    }
+
     /// Cumulative stage executions (hot-path metric).
     fn exec_count(&self) -> usize;
 }

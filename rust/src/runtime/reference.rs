@@ -195,7 +195,6 @@ impl ReferenceBackend {
         let x = self.tensor_arg(&inputs[0], "attn x")?;
         let kc_in = self.tensor_arg(&inputs[1], "k_cache")?;
         let vc_in = self.tensor_arg(&inputs[2], "v_cache")?;
-        let pos = scalar_arg(&inputs[3], "pos")?;
         let ln = self.tensor_arg(&inputs[4], "ln1")?;
         let wq = self.tensor_arg(&inputs[5], "wq")?;
         let wk = self.tensor_arg(&inputs[6], "wk")?;
@@ -218,32 +217,55 @@ impl ReferenceBackend {
                 vc_in.dims
             );
         }
-        if pos < 0 || pos as usize >= s_max {
-            bail!("decode position {pos} outside cache of length {s_max}");
+        // Decode positions: a batch-wide scalar (uniform batches, the shape
+        // the AOT artifacts compile) or a per-row `[b]` int32 vector — what
+        // continuous batching needs when co-batched rows sit at different
+        // sequence depths.
+        let positions: Vec<usize> = match &inputs[3] {
+            InputArg::ScalarI32(p) => vec![*p; b],
+            InputArg::I32(data, dims) => {
+                if data.len() != b || dims.first() != Some(&b) {
+                    bail!(
+                        "decode positions: {} values (dims {dims:?}) for batch {b}",
+                        data.len()
+                    );
+                }
+                data.to_vec()
+            }
+            _ => bail!("pos: expected an int32 scalar or per-row int32 vector"),
         }
-        let pos = pos as usize;
+        .into_iter()
+        .map(|p| {
+            if p < 0 || p as usize >= s_max {
+                bail!("decode position {p} outside cache of length {s_max}");
+            }
+            Ok(p as usize)
+        })
+        .collect::<Result<_>>()?;
 
         let xn = rmsnorm_rows(&x.data, h, &ln.data)?;
         let q = matmul(&xn, b, h, wq, "wq")?;
         let k_new = matmul(&xn, b, h, wk, "wk")?;
         let v_new = matmul(&xn, b, h, wv, "wv")?;
 
-        // Functionally-updated caches: write the current token at `pos`.
+        // Functionally-updated caches: write each row's token at its own
+        // position.
         let mut kc = kc_in.data.clone();
         let mut vc = vc_in.data.clone();
         for bi in 0..b {
             for head in 0..nhs {
-                let dst = ((bi * nhs + head) * s_max + pos) * dh;
+                let dst = ((bi * nhs + head) * s_max + positions[bi]) * dh;
                 let src = bi * hs + head * dh;
                 kc[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
                 vc[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
             }
         }
 
-        // Single-token attention over the first pos+1 cache positions.
+        // Single-token attention over each row's first pos+1 cache entries.
         let mut merged = vec![0f32; b * hs];
         let scale = 1.0 / (dh as f32).sqrt();
         for bi in 0..b {
+            let pos = positions[bi];
             for head in 0..nhs {
                 let qrow = bi * hs + head * dh;
                 let base = (bi * nhs + head) * s_max;
@@ -364,6 +386,10 @@ impl ExecutionBackend for ReferenceBackend {
 
     fn weights(&self) -> &Arc<WeightStore> {
         &self.weights
+    }
+
+    fn supports_rowwise_decode_positions(&self) -> bool {
+        true
     }
 
     fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
@@ -522,13 +548,6 @@ fn tokens_arg<'t>(a: &'t InputArg<'t>, what: &str) -> Result<(&'t [i32], &'t [us
     match a {
         InputArg::I32(data, dims) => Ok((*data, dims.as_slice())),
         _ => bail!("{what}: expected int32 tokens"),
-    }
-}
-
-fn scalar_arg(a: &InputArg<'_>, what: &str) -> Result<i32> {
-    match a {
-        InputArg::ScalarI32(x) => Ok(*x),
-        _ => bail!("{what}: expected an int32 scalar"),
     }
 }
 

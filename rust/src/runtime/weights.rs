@@ -24,6 +24,56 @@ impl Tensor {
     pub fn dims_i64(&self) -> Vec<i64> {
         self.dims.iter().map(|&d| d as i64).collect()
     }
+
+    /// Number of dim-0 slots (batch rows for KV-cache tensors).
+    pub fn slots(&self) -> usize {
+        self.dims.first().copied().unwrap_or(0)
+    }
+
+    /// Elements per dim-0 slot.
+    pub fn slot_elements(&self) -> usize {
+        if self.dims.is_empty() {
+            0
+        } else {
+            self.dims[1..].iter().product::<usize>().max(1)
+        }
+    }
+
+    /// Copy dim-0 row `src_slot` of `src` into row `dst_slot` of `self`
+    /// (KV-cache slot insert). The trailing dims must match; the dim-0
+    /// extents may differ (e.g. prefill bucket vs session bucket).
+    pub fn copy_slot_from(&mut self, dst_slot: usize, src: &Tensor, src_slot: usize) -> Result<()> {
+        if self.dims.is_empty() || src.dims.is_empty() || self.dims[1..] != src.dims[1..] {
+            bail!(
+                "slot copy between incompatible shapes {:?} and {:?}",
+                self.dims,
+                src.dims
+            );
+        }
+        if dst_slot >= self.slots() || src_slot >= src.slots() {
+            bail!(
+                "slot copy {src_slot}->{dst_slot} out of range ({} src, {} dst slots)",
+                src.slots(),
+                self.slots()
+            );
+        }
+        let n = self.slot_elements();
+        self.data[dst_slot * n..(dst_slot + 1) * n]
+            .copy_from_slice(&src.data[src_slot * n..(src_slot + 1) * n]);
+        Ok(())
+    }
+
+    /// Zero dim-0 row `slot` (KV-cache slot evict).
+    pub fn clear_slot(&mut self, slot: usize) -> Result<()> {
+        if self.dims.is_empty() || slot >= self.slots() {
+            bail!("clear_slot {slot} out of range for shape {:?}", self.dims);
+        }
+        let n = self.slot_elements();
+        for v in &mut self.data[slot * n..(slot + 1) * n] {
+            *v = 0.0;
+        }
+        Ok(())
+    }
 }
 
 /// All tensors from a weights.bin, by name.
@@ -196,6 +246,27 @@ mod tests {
         let mut b2 = b.clone();
         b2.push(0);
         assert!(WeightStore::parse(&b2).is_err());
+    }
+
+    #[test]
+    fn slot_insert_and_evict() {
+        // dst: [3, 2] zeroed cache; src: [2, 2] prefill rows.
+        let mut dst = Tensor { dims: vec![3, 2], data: vec![0.0; 6] };
+        let src = Tensor { dims: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        dst.copy_slot_from(2, &src, 1).unwrap();
+        assert_eq!(dst.data, vec![0.0, 0.0, 0.0, 0.0, 3.0, 4.0]);
+        dst.copy_slot_from(0, &src, 0).unwrap();
+        assert_eq!(dst.data, vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0]);
+        dst.clear_slot(2).unwrap();
+        assert_eq!(dst.data, vec![1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(dst.slots(), 3);
+        assert_eq!(dst.slot_elements(), 2);
+        // errors: out-of-range slots and mismatched trailing dims
+        assert!(dst.copy_slot_from(3, &src, 0).is_err());
+        assert!(dst.copy_slot_from(0, &src, 2).is_err());
+        assert!(dst.clear_slot(3).is_err());
+        let bad = Tensor { dims: vec![2, 3], data: vec![0.0; 6] };
+        assert!(dst.copy_slot_from(0, &bad, 0).is_err());
     }
 
     #[test]

@@ -133,7 +133,9 @@ fn every_plan_shape_reproduces_golden_greedy_tokens() {
             "plan {} diverged from ref.py golden tokens",
             exec.strategy_string()
         );
-        assert_eq!(result.decode_steps, want.len());
+        // One token from prefill, the rest from true decode iterations.
+        assert_eq!(result.decode_steps, want.len() - 1);
+        assert_eq!(result.prefill_tokens, 1);
     }
 }
 
@@ -199,6 +201,112 @@ fn invalid_plans_rejected() {
         bad
     )
     .is_err());
+}
+
+#[test]
+fn staggered_admission_matches_solo_runs() {
+    // The continuous-batching core claim: a request admitted into an
+    // in-flight batch at a decode-step boundary decodes token-for-token
+    // as if it ran alone, and each row stops at its own max_new.
+    use hexgen::coordinator::SlotRequest;
+    let dir = fixture_dir();
+    let exec = PipelineExecutor::with_backend(
+        load_backend(BackendKind::Reference, &dir).unwrap(),
+        plan_from_strategy(&[2, 1], &[1, 1]).unwrap(),
+    )
+    .unwrap();
+    let prompt_len = exec.manifest().model.prompt_len;
+    let pa = tokenizer::encode("first long request", prompt_len);
+    let pb = tokenizer::encode("late joiner", prompt_len);
+    let solo_a = exec.generate(&[pa.clone()], 8).unwrap().tokens[0].clone();
+    let solo_b = exec.generate(&[pb.clone()], 3).unwrap().tokens[0].clone();
+
+    let mut session = exec.new_session(2).unwrap();
+    assert_eq!(session.bucket(), 2);
+    assert_eq!(session.free_slots(), vec![0, 1]);
+    let fin = session
+        .prefill_into_slots(vec![(0, SlotRequest { prompt: pa, max_new: 8, stop: None })])
+        .unwrap();
+    assert!(fin.is_empty());
+    assert_eq!(session.active(), 1);
+
+    // Three decode steps with A alone, then admit B mid-flight.
+    for _ in 0..3 {
+        assert!(session.decode_step().unwrap().is_empty());
+    }
+    let fin = session
+        .prefill_into_slots(vec![(1, SlotRequest { prompt: pb, max_new: 3, stop: None })])
+        .unwrap();
+    assert!(fin.is_empty());
+    assert_eq!(session.active(), 2);
+
+    let mut done = std::collections::BTreeMap::new();
+    while session.active() > 0 {
+        for (slot, toks) in session.decode_step().unwrap() {
+            done.insert(slot, toks);
+        }
+    }
+    // B (admitted at step 3, max_new 3) retired while A was still
+    // decoding; both match their solo greedy runs exactly.
+    assert_eq!(done[&1].len(), 3);
+    assert_eq!(done[&0].len(), 8);
+    assert_eq!(done[&0], solo_a, "in-flight row perturbed by admission");
+    assert_eq!(done[&1], solo_b, "late-admitted row diverged from solo run");
+    // A needed 7 decode iterations; B's 2 rode along within them.
+    assert_eq!(session.decode_steps(), 7);
+}
+
+#[test]
+fn per_row_max_new_truncates_each_row() {
+    let dir = fixture_dir();
+    let exec = PipelineExecutor::with_backend(
+        load_backend(BackendKind::Reference, &dir).unwrap(),
+        plan_from_strategy(&[2], &[2]).unwrap(),
+    )
+    .unwrap();
+    let prompt_len = exec.manifest().model.prompt_len;
+    let p1 = tokenizer::encode("short", prompt_len);
+    let p2 = tokenizer::encode("longer request", prompt_len);
+    let r = exec.generate_with_limits(&[p1.clone(), p2.clone()], &[2, 6]).unwrap();
+    assert_eq!(r.tokens[0].len(), 2, "row 0 must stop at its own max_new");
+    assert_eq!(r.tokens[1].len(), 6);
+    assert_eq!(r.decode_steps, 5, "batch decodes to the longest row only");
+    assert_eq!(r.prefill_tokens, 2);
+    // Both rows match their solo runs despite the mixed limits.
+    assert_eq!(r.tokens[0], exec.generate(&[p1], 2).unwrap().tokens[0]);
+    assert_eq!(r.tokens[1], exec.generate(&[p2], 6).unwrap().tokens[0]);
+}
+
+#[test]
+fn stop_token_retires_row_early() {
+    use hexgen::coordinator::SlotRequest;
+    let g = golden();
+    let prompt = golden_tokens(&g, "prompt_tokens");
+    let want = golden_tokens(&g, "greedy_tokens");
+    // The golden greedy sequence emits `want[2]` at its third step; with
+    // that as the stop token the row must retire right there.
+    let dir = fixture_dir();
+    let exec = PipelineExecutor::with_backend(
+        load_backend(BackendKind::Reference, &dir).unwrap(),
+        plan_from_strategy(&[1], &[2]).unwrap(),
+    )
+    .unwrap();
+    let mut session = exec.new_session(1).unwrap();
+    let fin = session
+        .prefill_into_slots(vec![(
+            0,
+            SlotRequest { prompt, max_new: want.len(), stop: Some(want[2]) },
+        )])
+        .unwrap();
+    assert!(fin.is_empty());
+    let mut got = None;
+    while session.active() > 0 {
+        for (_, toks) in session.decode_step().unwrap() {
+            got = Some(toks);
+        }
+    }
+    assert_eq!(got.unwrap(), want[..3].to_vec());
+    assert_eq!(session.decode_steps(), 2);
 }
 
 #[test]

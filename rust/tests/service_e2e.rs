@@ -1,7 +1,9 @@
-//! End-to-end tests of the threaded serving front-end (router + batcher +
-//! per-replica workers) over the pure-Rust reference backend and the
-//! checked-in fixture model — runs in plain `cargo test` with zero
-//! native dependencies.
+//! End-to-end tests of the threaded serving front-end (router + admission
+//! loop + per-replica workers) over the pure-Rust reference backend and
+//! the checked-in fixture model — runs in plain `cargo test` with zero
+//! native dependencies. The workers run continuous (iteration-level)
+//! batching: requests are admitted into KV-cache slots at decode-step
+//! boundaries and each row stops at its own `max_new`.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -10,6 +12,7 @@ use hexgen::coordinator::{
     collect_all, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
 };
 use hexgen::runtime::BackendKind;
+use hexgen::util::json::Json;
 
 fn fixture_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
@@ -25,9 +28,24 @@ fn two_replica_config(dir: PathBuf) -> ServiceConfig {
             plan_from_strategy(&[2], &[2]).unwrap(),    // single stage, TP=2
             plan_from_strategy(&[1, 1], &[1, 1]).unwrap(), // TP=1 pipeline
         ],
-        batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(10) },
+        batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(10), continuous: true },
         route: RoutePolicy::LeastLoaded,
         max_new_tokens: 4,
+        stop_token: None,
+    }
+}
+
+/// One replica (single TP=2 stage) with a generous co-batch window so
+/// near-simultaneous submissions land in one admission batch.
+fn one_replica_config(dir: PathBuf, window: Duration) -> ServiceConfig {
+    ServiceConfig {
+        artifacts_dir: dir,
+        backend: BackendKind::Reference,
+        replicas: vec![plan_from_strategy(&[2], &[2]).unwrap()],
+        batch: BatchPolicy { max_batch: 2, window, continuous: true },
+        route: RoutePolicy::RoundRobin,
+        max_new_tokens: 4,
+        stop_token: None,
     }
 }
 
@@ -54,6 +72,7 @@ fn service_serves_batched_requests() {
         assert!(c.latency > 0.0);
         assert!(c.latency >= c.queued);
         assert!(c.batch_size >= 1 && c.batch_size <= 2);
+        assert_eq!(c.decode_steps, c.tokens.len() - 1);
         replicas_used.insert(c.replica);
     }
     // 6 concurrent requests over 2 replicas: both should see traffic.
@@ -94,24 +113,133 @@ fn startup_fails_cleanly_on_bad_plan() {
         batch: BatchPolicy::default(),
         route: RoutePolicy::RoundRobin,
         max_new_tokens: 2,
+        stop_token: None,
     };
     assert!(HexGenService::start(cfg).is_err());
 }
 
 #[test]
-fn oversized_batch_rejected_not_hung() {
-    // max_batch above the largest bucket: the batch cannot be padded to
-    // any bucket, so requests fail with an error instead of hanging.
+fn overcommitted_queue_drains_through_slot_reuse() {
+    // max_batch above the largest bucket: the session runs at the largest
+    // bucket (2 slots) and the backlog drains through continuous
+    // admission instead of failing or hanging.
     let mut cfg = two_replica_config(fixture_dir());
-    cfg.batch = BatchPolicy { max_batch: 4, window: Duration::from_millis(30) };
+    cfg.batch = BatchPolicy { max_batch: 4, window: Duration::from_millis(30), continuous: true };
     let service = HexGenService::start(cfg).unwrap();
     let rxs: Vec<_> = (0..4).map(|_| service.submit("overflow probe", Some(2))).collect();
     let results = collect_all(rxs, Duration::from_secs(60));
     for r in &results {
-        match r {
-            Ok(c) => assert_eq!(c.tokens.len(), 2),
-            Err(e) => assert!(e.contains("bucket"), "unexpected error: {e}"),
-        }
+        let c = r.as_ref().expect("request failed");
+        assert_eq!(c.tokens.len(), 2);
+        assert!(c.batch_size <= 2, "cohort cannot exceed the slot count");
     }
+    service.shutdown();
+}
+
+#[test]
+fn mixed_max_new_each_row_gets_exactly_its_own_length() {
+    // A 2-token request co-batched with a 7-token request must receive
+    // exactly 2 tokens (the old static path gave every row the batch-wide
+    // max). The wide idle window makes the co-batching deterministic.
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_secs(2))).unwrap();
+    let rx_small = service.submit("short request", Some(2));
+    let rx_large = service.submit("long request please", Some(7));
+    let small = rx_small.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let large = rx_large.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    assert_eq!(small.tokens.len(), 2, "small row must stop at its own max_new");
+    assert_eq!(large.tokens.len(), 7);
+    // Both were admitted in one cohort, so the small row really did stop
+    // early while its neighbour kept decoding.
+    assert_eq!(small.batch_size, 2, "requests were not co-batched");
+    assert_eq!(large.batch_size, 2);
+    assert_eq!(small.decode_steps, 1);
+    assert_eq!(large.decode_steps, 6);
+    service.shutdown();
+}
+
+#[test]
+fn burst_with_staggered_limits_all_exact() {
+    // More requests than slots, every one with a different max_new
+    // (including max_new=1, which finishes at prefill): continuous slot
+    // reuse must deliver each row exactly its requested length.
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(5)))
+            .unwrap();
+    let limits: Vec<usize> = vec![1, 2, 3, 4, 5, 6];
+    let rxs: Vec<_> = limits
+        .iter()
+        .map(|&n| service.submit(&format!("burst request {n}"), Some(n)))
+        .collect();
+    let results = collect_all(rxs, Duration::from_secs(120));
+    for (r, &n) in results.iter().zip(&limits) {
+        let c = r.as_ref().expect("request failed");
+        assert_eq!(c.tokens.len(), n, "row asked for {n} tokens");
+    }
+    service.shutdown();
+}
+
+#[test]
+fn continuous_batching_preserves_greedy_parity() {
+    // Serving the golden prompt through the continuous-batching service —
+    // co-batched with unrelated traffic of different lengths — must
+    // reproduce the ref.py golden greedy tokens exactly.
+    let text = std::fs::read_to_string(fixture_dir().join("golden.json")).unwrap();
+    let g = Json::parse(&text).unwrap();
+    let prompt = g.str("prompt").unwrap().to_string();
+    let want: Vec<i32> = g
+        .arr("greedy_tokens")
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap() as i32)
+        .collect();
+
+    let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
+    let mut golden_rxs = Vec::new();
+    let mut noise_rxs = Vec::new();
+    for i in 0..4 {
+        golden_rxs.push(service.submit(&prompt, Some(want.len())));
+        noise_rxs.push(service.submit(&format!("noise traffic {i}"), Some(i + 1)));
+    }
+    for r in collect_all(golden_rxs, Duration::from_secs(120)) {
+        let c = r.expect("golden request failed");
+        assert_eq!(c.tokens, want, "continuous batching diverged from golden greedy tokens");
+    }
+    for r in collect_all(noise_rxs, Duration::from_secs(120)) {
+        r.expect("noise request failed");
+    }
+    service.shutdown();
+}
+
+#[test]
+fn invalid_max_new_rejected_without_failing_neighbours() {
+    // A max_new=0 request is rejected at submit; a valid request sent in
+    // the same window must be unaffected.
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(20)))
+            .unwrap();
+    let rx_bad = service.submit("zero tokens please", Some(0));
+    let rx_good = service.submit("valid neighbour", Some(3));
+    let bad = rx_bad.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(bad.is_err(), "max_new=0 must be rejected");
+    let good = rx_good.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    assert_eq!(good.tokens.len(), 3);
+    service.shutdown();
+}
+
+#[test]
+fn static_mode_still_serves() {
+    // The run-to-completion baseline (continuous = false) must stay a
+    // working configuration — it is what benches/batching.rs compares
+    // against — and per-row max_new holds there too.
+    let mut cfg = one_replica_config(fixture_dir(), Duration::from_secs(2));
+    cfg.batch.continuous = false;
+    let service = HexGenService::start(cfg).unwrap();
+    let rx_a = service.submit("static mode a", Some(2));
+    let rx_b = service.submit("static mode b", Some(5));
+    let a = rx_a.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let b = rx_b.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    assert_eq!(a.tokens.len(), 2);
+    assert_eq!(b.tokens.len(), 5);
     service.shutdown();
 }
