@@ -47,6 +47,8 @@ fn run(continuous: bool) -> RunStats {
         replicas: vec![plan_from_strategy(&[1], &[2]).unwrap()],
         batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(1), continuous },
         route: RoutePolicy::RoundRobin,
+        speeds: None,
+        adapt_speeds: true,
         max_new_tokens: 8,
         stop_token: None,
     };

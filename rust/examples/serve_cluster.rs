@@ -52,6 +52,8 @@ fn main() -> Result<()> {
         ],
         batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(15), continuous: true },
         route: RoutePolicy::LeastLoaded,
+        speeds: None,
+        adapt_speeds: true,
         max_new_tokens: max_new,
         stop_token: None,
     };

@@ -1,0 +1,322 @@
+//! Lower a scheduler [`DeploymentPlan`] onto an artifact manifest.
+//!
+//! The scheduler plans the paper-scale model (e.g. LLAMA-2 70B, TP up to
+//! 8) while the serving runtime executes whatever the AOT step actually
+//! compiled (the demo/fixture model: few layers, a small set of
+//! `tp_degrees`). [`lower_plan`] maps each replica of the plan to a
+//! servable `Vec<StagePlan>`:
+//!
+//! - stage **TP degrees clamp down** to the largest compiled degree that
+//!   also divides the served model's head count;
+//! - per-stage **layer counts re-apportion** proportionally onto the
+//!   served model's layer total (every stage keeps ≥ 1 layer);
+//! - when a replica has more stages than the served model has layers,
+//!   **adjacent stages merge** (smallest combined layer count first)
+//!   until the pipeline fits.
+//!
+//! Every adjustment is reported in [`LoweredPlan::adjustments`] so the
+//! operator sees exactly how the serving shape diverges from σ. The
+//! plan's per-replica Eq. 2 cost estimates become normalized router
+//! speed seeds (see [`super::router::Router::set_speeds`]).
+
+use anyhow::{bail, Result};
+
+use crate::parallelism::DeploymentPlan;
+use crate::runtime::Manifest;
+
+use super::pipeline::StagePlan;
+
+/// A plan mapped onto the artifact manifest, ready for
+/// [`super::service::ServiceConfig`].
+#[derive(Debug, Clone)]
+pub struct LoweredPlan {
+    /// One stage plan per replica.
+    pub replicas: Vec<Vec<StagePlan>>,
+    /// Relative routing speed seed per replica, from the plan's Eq. 2
+    /// cost estimates (normalized to mean 1.0; replicas without an
+    /// estimate get 1.0).
+    pub speeds: Vec<f64>,
+    /// Human-readable report of every merge/rescale/clamp applied.
+    pub adjustments: Vec<String>,
+}
+
+/// Lower `plan` onto `manifest` (see module docs).
+pub fn lower_plan(plan: &DeploymentPlan, manifest: &Manifest) -> Result<LoweredPlan> {
+    plan.validate()?;
+    let m_layers = manifest.model.layers;
+    if m_layers == 0 {
+        bail!("manifest model has zero layers");
+    }
+    // TP degrees the runtime can execute: compiled artifacts exist AND
+    // the degree divides the served model's head count.
+    let mut avail: Vec<usize> = manifest
+        .tp_degrees
+        .iter()
+        .copied()
+        .filter(|&t| t >= 1 && manifest.model.heads % t == 0)
+        .collect();
+    avail.sort_unstable();
+    let Some(&min_tp) = avail.first() else {
+        bail!(
+            "no usable tp degree in manifest (compiled {:?}, model has {} heads)",
+            manifest.tp_degrees,
+            manifest.model.heads
+        );
+    };
+
+    let mut adjustments = Vec::new();
+    let mut replicas = Vec::with_capacity(plan.replicas.len());
+    for (i, r) in plan.replicas.iter().enumerate() {
+        // (tp, layers) working copy of the replica's stages.
+        let mut stages: Vec<(usize, usize)> = r.stages.iter().map(|s| (s.tp, s.layers)).collect();
+
+        // ---- merge until the pipeline fits the served layer count ----
+        if stages.len() > m_layers {
+            while stages.len() > m_layers {
+                let j = (0..stages.len() - 1)
+                    .min_by_key(|&j| stages[j].1 + stages[j + 1].1)
+                    .expect("at least two stages while merging");
+                stages[j] = (stages[j].0.max(stages[j + 1].0), stages[j].1 + stages[j + 1].1);
+                stages.remove(j + 1);
+            }
+            adjustments.push(format!(
+                "replica {i}: merged {} stages into {} (served model has {m_layers} layers)",
+                r.stages.len(),
+                stages.len(),
+            ));
+        }
+
+        // ---- re-apportion layers proportionally (each stage ≥ 1) -----
+        let plan_total: usize = stages.iter().map(|s| s.1).sum();
+        let mut layers = vec![1usize; stages.len()];
+        for _ in 0..(m_layers - stages.len()) {
+            // Greedy largest-deficit apportionment: deterministic and
+            // proportional to the plan's layer split.
+            let j = (0..stages.len())
+                .max_by(|&a, &b| {
+                    let deficit = |k: usize| {
+                        stages[k].1 as f64 * m_layers as f64 / plan_total as f64 - layers[k] as f64
+                    };
+                    deficit(a).partial_cmp(&deficit(b)).expect("finite deficits")
+                })
+                .expect("non-empty stages");
+            layers[j] += 1;
+        }
+        if plan.model_layers != m_layers {
+            adjustments.push(format!(
+                "replica {i}: rescaled layer split {} ({} layers) -> {} ({m_layers} layers)",
+                r.layer_string(),
+                plan.model_layers,
+                layers.iter().map(|l| l.to_string()).collect::<Vec<_>>().join("/"),
+            ));
+        }
+
+        // ---- clamp TP degrees to compiled artifacts ------------------
+        let mut out = Vec::with_capacity(stages.len());
+        let mut start = 0usize;
+        for (j, (&(want_tp, _), &lc)) in stages.iter().zip(&layers).enumerate() {
+            let tp = avail.iter().copied().filter(|&t| t <= want_tp).max().unwrap_or(min_tp);
+            if tp != want_tp {
+                adjustments.push(format!(
+                    "replica {i} stage {j}: tp {want_tp} -> {tp} (compiled degrees {:?})",
+                    manifest.tp_degrees
+                ));
+            }
+            out.push(StagePlan { layer_start: start, layer_count: lc, tp });
+            start += lc;
+        }
+        debug_assert_eq!(start, m_layers);
+        replicas.push(out);
+    }
+
+    Ok(LoweredPlan { replicas, speeds: plan_speeds(plan), adjustments })
+}
+
+/// Normalized relative speed seeds from the plan's Eq. 2 cost estimates:
+/// speed ∝ 1/cost, scaled so the mean over estimated replicas is 1.0;
+/// replicas without an estimate default to 1.0.
+fn plan_speeds(plan: &DeploymentPlan) -> Vec<f64> {
+    let raw: Vec<Option<f64>> = plan
+        .replicas
+        .iter()
+        .map(|r| {
+            r.cost_estimate
+                .and_then(|c| if c.is_finite() && c > 0.0 { Some(1.0 / c) } else { None })
+        })
+        .collect();
+    let known: Vec<f64> = raw.iter().flatten().copied().collect();
+    if known.is_empty() {
+        return vec![1.0; plan.replicas.len()];
+    }
+    let mean = known.iter().sum::<f64>() / known.len() as f64;
+    raw.iter().map(|o| o.map(|v| v / mean).unwrap_or(1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallelism::{PlanStage, ReplicaPlan};
+
+    /// 6-layer manifest with tp {1,2,4} compiled (4 heads), no artifacts
+    /// — lowering only consults model shape + tp_degrees.
+    fn manifest_6l() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "model": {"name":"demo","layers":6,"hidden":128,"heads":4,"vocab":256,
+                        "prompt_len":32,"max_seq":64,"head_dim":32,"ffn":512},
+              "tp_degrees":[1,2,4],
+              "batch_buckets":[1,4],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    /// 2-layer fixture-shaped manifest (2 heads, tp {1,2}).
+    fn manifest_2l() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "model": {"name":"ref-demo","layers":2,"hidden":16,"heads":2,"vocab":256,
+                        "prompt_len":8,"max_seq":16,"head_dim":8,"ffn":64},
+              "tp_degrees":[1,2],
+              "batch_buckets":[1,2],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn plan(model_layers: usize, replicas: Vec<ReplicaPlan>) -> DeploymentPlan {
+        DeploymentPlan {
+            cluster: "test".into(),
+            model_name: "m".into(),
+            model_layers,
+            fitness: None,
+            replicas,
+        }
+    }
+
+    fn replica(stages: Vec<(usize, usize)>, cost: Option<f64>) -> ReplicaPlan {
+        // Device bindings: consecutive ids, sized to each stage's tp.
+        let mut next = NEXT_DEVICE.with(|n| *n.borrow());
+        let stages = stages
+            .into_iter()
+            .map(|(tp, layers)| {
+                let devices: Vec<usize> = (next..next + tp).collect();
+                next += tp;
+                PlanStage { tp, layers, devices }
+            })
+            .collect();
+        NEXT_DEVICE.with(|n| *n.borrow_mut() = next);
+        ReplicaPlan { stages, cost_estimate: cost }
+    }
+
+    thread_local! {
+        static NEXT_DEVICE: std::cell::RefCell<usize> = const { std::cell::RefCell::new(0) };
+    }
+
+    fn reset_devices() {
+        NEXT_DEVICE.with(|n| *n.borrow_mut() = 0);
+    }
+
+    #[test]
+    fn identity_lowering_when_shapes_match() {
+        reset_devices();
+        let p = plan(6, vec![replica(vec![(2, 4), (1, 2)], None)]);
+        let l = lower_plan(&p, &manifest_6l()).unwrap();
+        assert_eq!(
+            l.replicas[0],
+            vec![
+                StagePlan { layer_start: 0, layer_count: 4, tp: 2 },
+                StagePlan { layer_start: 4, layer_count: 2, tp: 1 },
+            ]
+        );
+        assert!(l.adjustments.is_empty(), "{:?}", l.adjustments);
+        assert_eq!(l.speeds, vec![1.0]);
+    }
+
+    #[test]
+    fn tp_clamps_to_largest_compiled_degree() {
+        reset_devices();
+        let p = plan(6, vec![replica(vec![(8, 6)], None)]);
+        let l = lower_plan(&p, &manifest_6l()).unwrap();
+        assert_eq!(l.replicas[0], vec![StagePlan { layer_start: 0, layer_count: 6, tp: 4 }]);
+        assert_eq!(l.adjustments.len(), 1);
+        assert!(l.adjustments[0].contains("tp 8 -> 4"), "{:?}", l.adjustments);
+    }
+
+    #[test]
+    fn layers_rescale_proportionally() {
+        reset_devices();
+        // §3.1 layout 48/20/12 over 80 layers → 4/1/1 over 6.
+        let p = plan(80, vec![replica(vec![(4, 48), (2, 20), (2, 12)], None)]);
+        let l = lower_plan(&p, &manifest_6l()).unwrap();
+        let counts: Vec<usize> = l.replicas[0].iter().map(|s| s.layer_count).collect();
+        assert_eq!(counts, vec![4, 1, 1]);
+        assert!(l.adjustments.iter().any(|a| a.contains("rescaled")), "{:?}", l.adjustments);
+        // contiguous coverage
+        assert_eq!(l.replicas[0][0].layers(), 0..4);
+        assert_eq!(l.replicas[0][1].layers(), 4..5);
+        assert_eq!(l.replicas[0][2].layers(), 5..6);
+    }
+
+    #[test]
+    fn deep_pipelines_merge_to_fit() {
+        reset_devices();
+        // 8-stage TP=1 swarm chain → 2-layer fixture model: merge to 2.
+        let p = plan(80, vec![replica(vec![(1, 10); 8], None)]);
+        let l = lower_plan(&p, &manifest_2l()).unwrap();
+        assert_eq!(
+            l.replicas[0],
+            vec![
+                StagePlan { layer_start: 0, layer_count: 1, tp: 1 },
+                StagePlan { layer_start: 1, layer_count: 1, tp: 1 },
+            ]
+        );
+        assert!(l.adjustments.iter().any(|a| a.contains("merged 8 stages into 2")));
+    }
+
+    #[test]
+    fn merge_keeps_the_larger_tp() {
+        reset_devices();
+        // [4,2,2] 48/20/12 → 2 layers: merge (20,12) first, keep tp 2;
+        // then clamp 4 → 2.
+        let p = plan(80, vec![replica(vec![(4, 48), (2, 20), (2, 12)], None)]);
+        let l = lower_plan(&p, &manifest_2l()).unwrap();
+        assert_eq!(
+            l.replicas[0],
+            vec![
+                StagePlan { layer_start: 0, layer_count: 1, tp: 2 },
+                StagePlan { layer_start: 1, layer_count: 1, tp: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn speeds_normalize_around_mean() {
+        reset_devices();
+        let p = plan(
+            6,
+            vec![
+                replica(vec![(1, 6)], Some(0.5)),
+                replica(vec![(1, 6)], Some(2.0)),
+                replica(vec![(1, 6)], None),
+            ],
+        );
+        let l = lower_plan(&p, &manifest_6l()).unwrap();
+        // raw 1/cost = [2.0, 0.5], mean 1.25 → [1.6, 0.4]; unknown → 1.0
+        assert!((l.speeds[0] - 1.6).abs() < 1e-12, "{:?}", l.speeds);
+        assert!((l.speeds[1] - 0.4).abs() < 1e-12, "{:?}", l.speeds);
+        assert_eq!(l.speeds[2], 1.0);
+    }
+
+    #[test]
+    fn invalid_plans_are_rejected() {
+        reset_devices();
+        let mut p = plan(6, vec![replica(vec![(2, 4), (1, 2)], None)]);
+        p.replicas[0].stages[0].layers = 3; // sum 5 != 6
+        assert!(lower_plan(&p, &manifest_6l()).is_err());
+    }
+}

@@ -8,12 +8,14 @@
 
 pub mod batcher;
 pub mod collective;
+pub mod lowering;
 pub mod pipeline;
 pub mod router;
 pub mod service;
 
 pub use batcher::{AdmissionQueue, BatchPolicy};
 pub use collective::{add_residual, all_reduce_sum, CommStats};
+pub use lowering::{lower_plan, LoweredPlan};
 pub use pipeline::{
     argmax_rows, plan_from_strategy, DecodeSession, GenerationResult, PipelineExecutor,
     SlotRequest, StagePlan,

@@ -2,11 +2,26 @@
 //!
 //! The task coordinator (paper Appendix C) directs each request to a
 //! worker group according to the schedule. Policies: round-robin and
-//! least-outstanding-work (queue depth weighted by the replica's measured
-//! speed).
+//! least-outstanding-work (queue depth weighted by the replica's speed).
+//!
+//! Speeds are **heterogeneity-aware** and live behind interior
+//! mutability so the shared (post-`start`) router can keep them fresh:
+//!
+//! - [`Router::set_speeds`] seeds relative weights at service start —
+//!   the normalized 1/cost estimates of a lowered deployment plan
+//!   (Eq. 2), so a replica the scheduler expects to be 4× faster
+//!   absorbs proportionally more traffic from the first request on;
+//! - [`Router::observe_rate`] folds each replica's *measured* decode
+//!   throughput (tokens/s) into an EWMA at runtime. Measured replicas
+//!   route by their EWMA; replicas not yet measured route by their seed,
+//!   calibrated onto the measured scale (mean measured/seed ratio), so
+//!   relative plan estimates and absolute token rates mix consistently.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// EWMA smoothing factor for measured decode throughput.
+const SPEED_EWMA_ALPHA: f64 = 0.2;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,13 +31,22 @@ pub enum RoutePolicy {
     LeastLoaded,
 }
 
+/// Per-replica speed accounting (behind the router's mutex).
+#[derive(Debug)]
+struct SpeedState {
+    /// Relative seed weight per replica (1.0 = baseline).
+    seed: Vec<f64>,
+    /// EWMA of measured decode throughput (tokens/s); `None` until the
+    /// replica reports its first measurement.
+    measured: Vec<Option<f64>>,
+}
+
 /// Shared per-replica load accounting.
 #[derive(Debug)]
 pub struct Router {
     policy: RoutePolicy,
     outstanding: Vec<Arc<AtomicUsize>>,
-    /// Relative speed weight per replica (1.0 = baseline; higher = faster).
-    speed: Vec<f64>,
+    speeds: Mutex<SpeedState>,
     rr_next: AtomicUsize,
 }
 
@@ -32,16 +56,58 @@ impl Router {
         Router {
             policy,
             outstanding: (0..replicas).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
-            speed: vec![1.0; replicas],
+            speeds: Mutex::new(SpeedState {
+                seed: vec![1.0; replicas],
+                measured: vec![None; replicas],
+            }),
             rr_next: AtomicUsize::new(0),
         }
     }
 
-    /// Set relative speed weights (e.g. 1/measured-latency per replica).
-    pub fn set_speeds(&mut self, speed: Vec<f64>) {
+    /// Seed relative speed weights (e.g. normalized 1/cost-estimate per
+    /// replica from a lowered deployment plan). Callable on the shared
+    /// router at any time; measured EWMAs, where present, keep
+    /// precedence over seeds.
+    pub fn set_speeds(&self, speed: Vec<f64>) {
         assert_eq!(speed.len(), self.outstanding.len());
-        assert!(speed.iter().all(|&s| s > 0.0));
-        self.speed = speed;
+        assert!(speed.iter().all(|&s| s.is_finite() && s > 0.0));
+        self.state().seed = speed;
+    }
+
+    /// Fold a measured decode throughput sample (tokens/s) for `replica`
+    /// into its EWMA. Non-finite or non-positive samples are ignored.
+    pub fn observe_rate(&self, replica: usize, tokens_per_sec: f64) {
+        if !tokens_per_sec.is_finite() || tokens_per_sec <= 0.0 {
+            return;
+        }
+        let mut st = self.state();
+        st.measured[replica] = Some(match st.measured[replica] {
+            None => tokens_per_sec,
+            Some(prev) => (1.0 - SPEED_EWMA_ALPHA) * prev + SPEED_EWMA_ALPHA * tokens_per_sec,
+        });
+    }
+
+    /// Effective per-replica speeds the policy routes by: the measured
+    /// EWMA where available, otherwise the seed calibrated onto the
+    /// measured scale (mean measured/seed ratio over measured replicas).
+    pub fn speeds(&self) -> Vec<f64> {
+        let st = self.state();
+        let ratios: Vec<f64> = st
+            .measured
+            .iter()
+            .zip(&st.seed)
+            .filter_map(|(m, &s)| m.map(|m| m / s))
+            .collect();
+        let calib = if ratios.is_empty() {
+            1.0
+        } else {
+            ratios.iter().sum::<f64>() / ratios.len() as f64
+        };
+        st.measured.iter().zip(&st.seed).map(|(m, &s)| m.unwrap_or(s * calib)).collect()
+    }
+
+    fn state(&self) -> std::sync::MutexGuard<'_, SpeedState> {
+        self.speeds.lock().expect("router speed state")
     }
 
     pub fn replicas(&self) -> usize {
@@ -73,13 +139,14 @@ impl Router {
                 pick?
             }
             RoutePolicy::LeastLoaded => {
+                let speed = self.speeds();
                 let mut best = None;
                 let mut best_cost = f64::INFINITY;
                 for (i, o) in self.outstanding.iter().enumerate() {
                     if excluded.contains(&i) {
                         continue;
                     }
-                    let cost = (o.load(Ordering::Relaxed) as f64 + 1.0) / self.speed[i];
+                    let cost = (o.load(Ordering::Relaxed) as f64 + 1.0) / speed[i];
                     if cost < best_cost {
                         best_cost = cost;
                         best = Some(i);
@@ -125,13 +192,78 @@ mod tests {
 
     #[test]
     fn least_loaded_respects_speed() {
-        let mut r = Router::new(RoutePolicy::LeastLoaded, 2);
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
         r.set_speeds(vec![4.0, 1.0]);
         // replica 0 is 4× faster: it should absorb the first requests
         // before replica 1 gets one ((q+1)/speed tie at the 5th pick).
         let picks: Vec<usize> = (0..5).map(|_| r.route()).collect();
         assert!(picks[..4].iter().all(|&p| p == 0), "{picks:?}");
         assert_eq!(picks[4], 1, "{picks:?}");
+    }
+
+    #[test]
+    fn set_speeds_works_on_the_shared_router() {
+        // Regression: set_speeds used to take &mut self, making it
+        // uncallable once the router was shared behind an Arc (as the
+        // service does after start). Interior mutability fixes that.
+        let r = Arc::new(Router::new(RoutePolicy::LeastLoaded, 2));
+        let r2 = r.clone();
+        r2.set_speeds(vec![2.0, 1.0]);
+        assert_eq!(r.speeds(), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn speed_skews_traffic_proportionally() {
+        // With nothing completing, queue depths equilibrate to the speed
+        // ratio: a 4×-speed replica holds ~4× the outstanding work.
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_speeds(vec![4.0, 1.0]);
+        for _ in 0..20 {
+            r.route();
+        }
+        let (fast, slow) = (r.outstanding(0), r.outstanding(1));
+        assert_eq!(fast + slow, 20);
+        assert!(fast >= 3 * slow, "fast {fast} vs slow {slow}");
+        assert!(slow >= 1, "slow replica must not starve outright: {fast}/{slow}");
+    }
+
+    #[test]
+    fn observed_rates_override_seeds() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.observe_rate(0, 40.0);
+        r.observe_rate(1, 10.0);
+        let s = r.speeds();
+        assert!((s[0] - 40.0).abs() < 1e-9 && (s[1] - 10.0).abs() < 1e-9, "{s:?}");
+        // 40 vs 10 tok/s: the fast replica absorbs the first picks.
+        let picks: Vec<usize> = (0..4).map(|_| r.route()).collect();
+        assert!(picks.iter().all(|&p| p == 0), "{picks:?}");
+    }
+
+    #[test]
+    fn observe_rate_smooths_with_ewma() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 1);
+        r.observe_rate(0, 10.0);
+        r.observe_rate(0, 20.0);
+        // 0.8·10 + 0.2·20 = 12
+        assert!((r.speeds()[0] - 12.0).abs() < 1e-9, "{:?}", r.speeds());
+        // junk samples are ignored
+        r.observe_rate(0, f64::INFINITY);
+        r.observe_rate(0, -1.0);
+        r.observe_rate(0, 0.0);
+        assert!((r.speeds()[0] - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_bridges_seeded_and_measured_replicas() {
+        // Seeds are relative (2:1); only replica 0 has measured 10 tok/s.
+        // The unmeasured replica's seed is scaled by the measured/seed
+        // ratio (10/2 = 5), preserving the planned 2:1 relation.
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_speeds(vec![2.0, 1.0]);
+        r.observe_rate(0, 10.0);
+        let s = r.speeds();
+        assert!((s[0] - 10.0).abs() < 1e-9, "{s:?}");
+        assert!((s[1] - 5.0).abs() < 1e-9, "{s:?}");
     }
 
     #[test]

@@ -39,6 +39,15 @@ pub struct ServiceConfig {
     pub replicas: Vec<Vec<StagePlan>>,
     pub batch: BatchPolicy,
     pub route: RoutePolicy,
+    /// Optional per-replica routing speed seeds (relative; e.g. the
+    /// normalized 1/cost estimates of a lowered deployment plan —
+    /// [`super::lowering::LoweredPlan::speeds`]). Length must match
+    /// `replicas`; `None` routes every replica at weight 1.0.
+    pub speeds: Option<Vec<f64>>,
+    /// Keep router speeds fresh at runtime from an EWMA of each
+    /// replica's measured decode throughput
+    /// ([`Router::observe_rate`]).
+    pub adapt_speeds: bool,
     /// Default generation length (≤ max_seq − prompt_len).
     pub max_new_tokens: usize,
     /// Optional stop token: rows retire early when they emit it.
@@ -104,6 +113,15 @@ impl HexGenService {
         let manifest = Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
         let weights = Arc::new(WeightStore::load(&cfg.artifacts_dir.join("weights.bin"))?);
         let router = Arc::new(Router::new(cfg.route, cfg.replicas.len()));
+        if let Some(speeds) = &cfg.speeds {
+            if speeds.len() != cfg.replicas.len() {
+                bail!("{} speed seeds for {} replicas", speeds.len(), cfg.replicas.len());
+            }
+            if speeds.iter().any(|&s| !s.is_finite() || s <= 0.0) {
+                bail!("replica speed seeds must be positive and finite, got {speeds:?}");
+            }
+            router.set_speeds(speeds.clone());
+        }
 
         let (comm_tx, comm_rx) = channel::<CommStats>();
         let mut queues = Vec::with_capacity(cfg.replicas.len());
@@ -119,13 +137,14 @@ impl HexGenService {
             let batch = cfg.batch;
             let backend = cfg.backend;
             let stop_token = cfg.stop_token;
+            let adapt_speeds = cfg.adapt_speeds;
             let router = router.clone();
             let comm_tx = comm_tx.clone();
             let ready_tx = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    rid, backend, dir, manifest, weights, plan, batch, stop_token, rx, router,
-                    comm_tx, ready_tx,
+                    rid, backend, dir, manifest, weights, plan, batch, stop_token, adapt_speeds,
+                    rx, router, comm_tx, ready_tx,
                 )
             }));
         }
@@ -145,6 +164,12 @@ impl HexGenService {
 
     pub fn replicas(&self) -> usize {
         self.queues.len()
+    }
+
+    /// Effective per-replica routing speeds (plan seeds, overridden by
+    /// measured decode-throughput EWMAs as replicas report in).
+    pub fn router_speeds(&self) -> Vec<f64> {
+        self.router.speeds()
     }
 
     /// Submit a prompt; returns a receiver for the completion. If the
@@ -236,6 +261,7 @@ fn worker_loop(
     plan: Vec<StagePlan>,
     batch: BatchPolicy,
     stop_token: Option<i32>,
+    adapt_speeds: bool,
     rx: Receiver<WorkItem>,
     router: Arc<Router>,
     comm_tx: Sender<CommStats>,
@@ -370,8 +396,19 @@ fn worker_loop(
 
         // ---- one decode iteration for every in-flight row -------------
         if session.active() > 0 {
+            let rows = session.active();
+            let t0 = Instant::now();
             match session.decode_step() {
                 Ok(finished) => {
+                    if adapt_speeds {
+                        // One token per active row per iteration: fold the
+                        // measured decode throughput into the router's
+                        // per-replica speed EWMA.
+                        let dt = t0.elapsed().as_secs_f64();
+                        if dt > 0.0 {
+                            router.observe_rate(rid, rows as f64 / dt);
+                        }
+                    }
                     for (slot, tokens) in finished {
                         if let Some(a) = active[slot].take() {
                             deliver(a, tokens);

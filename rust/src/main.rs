@@ -31,12 +31,18 @@ Experiments (regenerate the paper's evaluation):
   all                run every experiment in sequence
 
 Serving & tools:
-  serve --prompt <text> [--replicas N] [--max-new N] [--artifacts DIR]
-                     serve the demo model on the real PJRT runtime
-  schedule [--cluster NAME]
+  serve --prompt <text> [--plan FILE] [--replicas N] [--max-new N]
+        [--artifacts DIR]
+                     serve the demo model; --plan boots the replicas from
+                     a scheduler --emit-plan file (lowered onto the
+                     artifact manifest, with plan cost estimates seeding
+                     the router's per-replica speeds), otherwise toy
+                     presets via --replicas
+  schedule [--cluster NAME] [--emit-plan FILE]
                      run the two-phase scheduler on a cluster preset and
                      print the deployment (presets: homogeneous,
-                     full-price, half-price, case-study)
+                     full-price, half-price, case-study); --emit-plan
+                     writes the chosen deployment as a servable plan JSON
   simulate [--cluster NAME] [--rate R] [--requests N] [--s-out N]
                      schedule + simulate one serving point
 
@@ -91,31 +97,59 @@ fn main() -> Result<()> {
     }
 }
 
-/// Serve the demo model end-to-end on the PJRT runtime.
+/// Serve the demo model end-to-end: replica plans from a scheduler
+/// `--emit-plan` file (lowered onto the artifact manifest) or from the
+/// toy `--replicas` presets.
 fn serve(args: &Args) -> Result<()> {
     use hexgen::coordinator::{
-        plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+        lower_plan, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
     };
+    use hexgen::parallelism::DeploymentPlan;
+    use hexgen::runtime::Manifest;
     let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
     if !dir.join("manifest.json").exists() {
         bail!("artifacts not found in {dir:?}; run `make artifacts` first");
     }
-    let replicas = args.get_usize("replicas", 2);
-    let plans = match replicas {
-        1 => vec![plan_from_strategy(&[2, 1], &[4, 2])?],
-        2 => vec![
-            plan_from_strategy(&[2, 1], &[4, 2])?,
-            plan_from_strategy(&[1, 1], &[3, 3])?,
-        ],
-        n => (0..n)
-            .map(|i| {
-                if i % 2 == 0 {
-                    plan_from_strategy(&[2, 1], &[4, 2])
-                } else {
-                    plan_from_strategy(&[1], &[6])
-                }
-            })
-            .collect::<Result<Vec<_>>>()?,
+    let (plans, speeds) = if let Some(path) = args.get("plan") {
+        let plan = DeploymentPlan::load(std::path::Path::new(path))?;
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let lowered = lower_plan(&plan, &manifest)?;
+        println!(
+            "lowered plan {path} (cluster '{}', model {}) onto served model {}:",
+            plan.cluster, plan.model_name, manifest.model.name
+        );
+        for a in &lowered.adjustments {
+            println!("  adjusted: {a}");
+        }
+        for (i, (p, s)) in lowered.replicas.iter().zip(&lowered.speeds).enumerate() {
+            let tps: Vec<String> = p.iter().map(|sp| sp.tp.to_string()).collect();
+            let lay: Vec<String> = p.iter().map(|sp| sp.layer_count.to_string()).collect();
+            println!(
+                "  replica {i}: [{}] layers {} routing speed {s:.3}",
+                tps.join(","),
+                lay.join("/")
+            );
+        }
+        (lowered.replicas, Some(lowered.speeds))
+    } else {
+        let replicas = args.get_usize("replicas", 2);
+        let plans = match replicas {
+            1 => vec![plan_from_strategy(&[2, 1], &[4, 2])?],
+            2 => vec![
+                plan_from_strategy(&[2, 1], &[4, 2])?,
+                plan_from_strategy(&[1, 1], &[3, 3])?,
+            ],
+            n => (0..n)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        plan_from_strategy(&[2, 1], &[4, 2])
+                    } else {
+                        plan_from_strategy(&[1], &[6])
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        (plans, None)
     };
     println!("starting service with {} replica(s)...", plans.len());
     let service = HexGenService::start(ServiceConfig {
@@ -124,6 +158,8 @@ fn serve(args: &Args) -> Result<()> {
         replicas: plans,
         batch: BatchPolicy::default(),
         route: RoutePolicy::LeastLoaded,
+        speeds,
+        adapt_speeds: true,
         max_new_tokens: args.get_usize("max-new", 16),
         stop_token: None,
     })?;
@@ -148,6 +184,14 @@ fn serve(args: &Args) -> Result<()> {
         comm.pp_sends,
         hexgen::util::fmt_bytes(comm.pp_bytes),
     );
+    println!(
+        "routing  : effective replica speeds {:?}",
+        service
+            .router_speeds()
+            .iter()
+            .map(|s| (s * 1e3).round() / 1e3)
+            .collect::<Vec<_>>()
+    );
     service.shutdown();
     Ok(())
 }
@@ -171,6 +215,16 @@ fn schedule(args: &Args) -> Result<()> {
         res.fitness
     );
     print!("{}", res.deployment.describe(&c));
+    if let Some(path) = args.get("emit-plan") {
+        let plan = hexgen::parallelism::DeploymentPlan::from_deployment(
+            &res.deployment,
+            &c,
+            &m,
+            Some(res.fitness),
+        );
+        plan.save(std::path::Path::new(path))?;
+        println!("wrote deployment plan ({} replicas) to {path}", plan.replicas.len());
+    }
     Ok(())
 }
 

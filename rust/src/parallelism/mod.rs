@@ -7,8 +7,10 @@
 //! subset of the device pool, each serving one replica of the model.
 
 pub mod group;
+pub mod plan;
 
 pub use group::TypeVec;
+pub use plan::{DeploymentPlan, PlanStage, ReplicaPlan};
 
 use std::collections::BTreeSet;
 

@@ -1,0 +1,423 @@
+//! Deployment-plan serialization: the bridge from `hexgen schedule` to
+//! `hexgen serve`.
+//!
+//! The §4 scheduler's output is a [`Deployment`] — per-replica stage TP
+//! degrees, layer counts and device bindings. A [`DeploymentPlan`] is
+//! that assignment σ written down (`util::json`-based, schema v1) so a
+//! separate serving process can pick it up: `hexgen schedule --emit-plan
+//! plan.json` writes one, `hexgen serve --plan plan.json` lowers it onto
+//! the artifact manifest (see [`crate::coordinator::lowering`]) and
+//! boots the live service from it. Each replica additionally carries its
+//! Eq. 2 end-to-end latency estimate for a reference task, which seeds
+//! the live router's per-replica speed weights.
+//!
+//! Schema (all keys required unless noted):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "cluster": "heterogeneous-full-price",
+//!   "model": {"name": "llama2-70b", "layers": 80},
+//!   "fitness": 0.93,                       // optional: scheduler fitness
+//!   "replicas": [
+//!     {
+//!       "cost_estimate": 1.25,             // optional: Eq. 2 seconds
+//!       "stages": [
+//!         {"tp": 4, "layers": 48, "devices": [0, 1, 2, 3]},
+//!         {"tp": 2, "layers": 32, "devices": [4, 5]}
+//!       ]
+//!     }
+//!   ]
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{Cluster, DeviceId};
+use crate::costmodel::{CostModel, InferenceTask, Phase};
+use crate::model::ModelSpec;
+use crate::util::json::Json;
+
+use super::{Deployment, Pipeline, Stage};
+
+/// Plan schema version this build reads and writes.
+pub const PLAN_VERSION: u64 = 1;
+
+/// Reference task for the per-replica Eq. 2 cost estimates — the same
+/// single-request task the simulator uses for its routing estimates.
+pub fn plan_reference_task() -> InferenceTask {
+    InferenceTask::new(1, 64, 64)
+}
+
+/// One pipeline stage of a serialized plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanStage {
+    /// Tensor-parallel degree (`d_ij`; equals `devices.len()`).
+    pub tp: usize,
+    /// Transformer layers held by this stage (`l_ij`).
+    pub layers: usize,
+    /// Device bindings into the scheduled cluster.
+    pub devices: Vec<DeviceId>,
+}
+
+/// One model replica (an independent pipeline) of a serialized plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaPlan {
+    pub stages: Vec<PlanStage>,
+    /// Eq. 2 end-to-end latency estimate (seconds) of
+    /// [`plan_reference_task`] on this replica; `None` when the cost
+    /// model flags the replica memory-infeasible.
+    pub cost_estimate: Option<f64>,
+}
+
+impl ReplicaPlan {
+    /// Appendix-F strategy notation, e.g. `[4,2,2]`.
+    pub fn strategy_string(&self) -> String {
+        let v: Vec<String> = self.stages.iter().map(|s| s.tp.to_string()).collect();
+        format!("[{}]", v.join(","))
+    }
+
+    /// Layer counts per stage, e.g. `48/20/12`.
+    pub fn layer_string(&self) -> String {
+        let v: Vec<String> = self.stages.iter().map(|s| s.layers.to_string()).collect();
+        v.join("/")
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.stages.iter().map(|s| s.layers).sum()
+    }
+}
+
+/// A serialized scheduler assignment σ (schema above).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentPlan {
+    /// Name of the cluster the plan was scheduled for.
+    pub cluster: String,
+    /// Name of the model the plan partitions.
+    pub model_name: String,
+    /// Total transformer layers the stage layer counts must sum to.
+    pub model_layers: usize,
+    /// Scheduler fitness (estimated SLO attainment), when known.
+    pub fitness: Option<f64>,
+    pub replicas: Vec<ReplicaPlan>,
+}
+
+impl DeploymentPlan {
+    /// Capture a scheduler [`Deployment`] with per-replica Eq. 2 cost
+    /// estimates evaluated against `cluster` + `model`.
+    pub fn from_deployment(
+        deployment: &Deployment,
+        cluster: &Cluster,
+        model: &ModelSpec,
+        fitness: Option<f64>,
+    ) -> DeploymentPlan {
+        let cm = CostModel::new(cluster, model);
+        let task = plan_reference_task();
+        let replicas = deployment
+            .pipelines
+            .iter()
+            .map(|p| ReplicaPlan {
+                stages: p
+                    .stages
+                    .iter()
+                    .map(|s| PlanStage {
+                        tp: s.tp_degree(),
+                        layers: s.layers,
+                        devices: s.devices.clone(),
+                    })
+                    .collect(),
+                cost_estimate: p.cost(&cm, &task, Phase::Both),
+            })
+            .collect();
+        DeploymentPlan {
+            cluster: cluster.name.clone(),
+            model_name: model.name.clone(),
+            model_layers: model.layers,
+            fitness,
+            replicas,
+        }
+    }
+
+    /// Reconstruct the [`Deployment`] this plan serializes.
+    pub fn deployment(&self) -> Deployment {
+        Deployment {
+            pipelines: self
+                .replicas
+                .iter()
+                .map(|r| Pipeline {
+                    stages: r
+                        .stages
+                        .iter()
+                        .map(|s| Stage { devices: s.devices.clone(), layers: s.layers })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Structural validation: non-empty replicas/stages, consistent TP
+    /// degrees vs device bindings, plan-wide device disjointness, and
+    /// per-replica layer sums equal to the plan's model layer count.
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas.is_empty() {
+            bail!("plan has no replicas");
+        }
+        if self.model_layers == 0 {
+            bail!("plan model has zero layers");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.stages.is_empty() {
+                bail!("replica {i} has no stages");
+            }
+            if r.total_layers() != self.model_layers {
+                bail!(
+                    "replica {i}: layer sum {} != model layers {}",
+                    r.total_layers(),
+                    self.model_layers
+                );
+            }
+            if let Some(c) = r.cost_estimate {
+                if !c.is_finite() || c <= 0.0 {
+                    bail!("replica {i}: cost estimate {c} is not a positive finite number");
+                }
+            }
+            for (j, s) in r.stages.iter().enumerate() {
+                if s.layers == 0 {
+                    bail!("replica {i} stage {j} has zero layers");
+                }
+                if s.tp == 0 || s.tp != s.devices.len() {
+                    bail!(
+                        "replica {i} stage {j}: tp {} != {} bound devices",
+                        s.tp,
+                        s.devices.len()
+                    );
+                }
+                for &d in &s.devices {
+                    if !seen.insert(d) {
+                        bail!("device {d} bound twice in the plan");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ----- JSON ------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("version", Json::from(PLAN_VERSION));
+        root.set("cluster", Json::from(self.cluster.as_str()));
+        let mut model = Json::obj();
+        model.set("name", Json::from(self.model_name.as_str()));
+        model.set("layers", Json::from(self.model_layers));
+        root.set("model", model);
+        if let Some(f) = self.fitness {
+            root.set("fitness", Json::from(f));
+        }
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                let mut rep = Json::obj();
+                if let Some(c) = r.cost_estimate {
+                    rep.set("cost_estimate", Json::from(c));
+                }
+                let stages: Vec<Json> = r
+                    .stages
+                    .iter()
+                    .map(|s| {
+                        let mut st = Json::obj();
+                        st.set("tp", Json::from(s.tp));
+                        st.set("layers", Json::from(s.layers));
+                        st.set("devices", Json::from(s.devices.clone()));
+                        st
+                    })
+                    .collect();
+                rep.set("stages", Json::Arr(stages));
+                rep
+            })
+            .collect();
+        root.set("replicas", Json::Arr(replicas));
+        root
+    }
+
+    /// Parse and validate a plan from its JSON form.
+    pub fn from_json(j: &Json) -> Result<DeploymentPlan> {
+        let version = j.get("version")?.as_u64()?;
+        if version != PLAN_VERSION {
+            bail!("unsupported plan version {version} (this build reads v{PLAN_VERSION})");
+        }
+        let model = j.get("model")?;
+        let mut replicas = Vec::new();
+        for (i, rep) in j.arr("replicas")?.iter().enumerate() {
+            let cost_estimate = match rep.opt("cost_estimate") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().with_context(|| format!("replica {i} cost_estimate"))?),
+            };
+            let mut stages = Vec::new();
+            for (s_idx, st) in rep.arr("stages")?.iter().enumerate() {
+                let devices: Vec<DeviceId> = st
+                    .arr("devices")?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_, _>>()
+                    .with_context(|| format!("replica {i} stage {s_idx} devices"))?;
+                stages.push(PlanStage {
+                    tp: st.usize("tp")?,
+                    layers: st.usize("layers")?,
+                    devices,
+                });
+            }
+            replicas.push(ReplicaPlan { stages, cost_estimate });
+        }
+        let plan = DeploymentPlan {
+            cluster: j.str("cluster")?.to_string(),
+            model_name: model.str("name")?.to_string(),
+            model_layers: model.usize("layers")?,
+            fitness: match j.opt("fitness") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().context("fitness")?),
+            },
+            replicas,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Write the plan (pretty JSON) to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing deployment plan {}", path.display()))
+    }
+
+    /// Load and validate a plan from `path`.
+    pub fn load(path: &Path) -> Result<DeploymentPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading deployment plan {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing deployment plan {}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster;
+
+    fn case_deployment() -> Deployment {
+        // §3.1 winning layout: [4,2,2] with 48/20/12 layers.
+        Deployment {
+            pipelines: vec![Pipeline {
+                stages: vec![
+                    Stage { devices: vec![0, 1, 2, 3], layers: 48 },
+                    Stage { devices: vec![4, 5], layers: 20 },
+                    Stage { devices: vec![6, 7], layers: 12 },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn capture_records_costs_and_shape() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let d = case_deployment();
+        let plan = DeploymentPlan::from_deployment(&d, &c, &m, Some(0.9));
+        assert_eq!(plan.cluster, "case-study");
+        assert_eq!(plan.model_layers, 80);
+        assert_eq!(plan.replicas.len(), 1);
+        assert_eq!(plan.replicas[0].strategy_string(), "[4,2,2]");
+        assert_eq!(plan.replicas[0].layer_string(), "48/20/12");
+        let cost = plan.replicas[0].cost_estimate.expect("feasible replica has a cost");
+        assert!(cost.is_finite() && cost > 0.0);
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn json_round_trip_preserves_the_deployment() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let d = case_deployment();
+        let plan = DeploymentPlan::from_deployment(&d, &c, &m, Some(0.875));
+        let j = plan.to_json();
+        let back = DeploymentPlan::from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.deployment(), d);
+        assert_eq!(back.fitness, Some(0.875));
+    }
+
+    #[test]
+    fn infeasible_replica_has_no_cost_estimate() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        // 70 layers on 2×A4000-16G violates memory (cf. parallelism tests).
+        let d = Deployment {
+            pipelines: vec![Pipeline {
+                stages: vec![
+                    Stage { devices: vec![0, 1, 2, 3], layers: 10 },
+                    Stage { devices: vec![6, 7], layers: 70 },
+                ],
+            }],
+        };
+        let plan = DeploymentPlan::from_deployment(&d, &c, &m, None);
+        assert_eq!(plan.replicas[0].cost_estimate, None);
+    }
+
+    #[test]
+    fn validation_rejects_bad_plans() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let good = DeploymentPlan::from_deployment(&case_deployment(), &c, &m, None);
+
+        let mut wrong_sum = good.clone();
+        wrong_sum.replicas[0].stages[0].layers = 10;
+        let err = wrong_sum.validate().unwrap_err().to_string();
+        assert!(err.contains("layer sum"), "{err}");
+
+        let mut dup = good.clone();
+        dup.replicas[0].stages[1].devices = vec![0, 5];
+        assert!(dup.validate().is_err());
+
+        let mut bad_tp = good.clone();
+        bad_tp.replicas[0].stages[0].tp = 3;
+        assert!(bad_tp.validate().is_err());
+
+        let empty = DeploymentPlan {
+            cluster: "x".into(),
+            model_name: "m".into(),
+            model_layers: 4,
+            fitness: None,
+            replicas: vec![],
+        };
+        assert!(empty.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_future_versions() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let mut j = DeploymentPlan::from_deployment(&case_deployment(), &c, &m, None).to_json();
+        j.set("version", Json::from(2u64));
+        assert!(DeploymentPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let plan = DeploymentPlan::from_deployment(&case_deployment(), &c, &m, Some(0.5));
+        let dir = std::env::temp_dir().join("hexgen_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        plan.save(&path).unwrap();
+        let back = DeploymentPlan::load(&path).unwrap();
+        assert_eq!(back, plan);
+        let _ = std::fs::remove_file(&path);
+    }
+}

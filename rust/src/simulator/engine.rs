@@ -104,13 +104,20 @@ impl SimOutcome {
     /// per-request normalized latency distribution) — the paper's
     /// "minimum latency deadline" metric.
     pub fn min_scale_for_attainment(&self, slo: &SloModel, target: f64) -> f64 {
+        // Guard the degenerate inputs like `attainment` does: with no
+        // records (or a target rounding `target·n` to 0) the old index
+        // arithmetic underflowed `0 - 1`.
+        if self.records.is_empty() {
+            return f64::INFINITY;
+        }
         let mut norms: Vec<f64> = self
             .records
             .iter()
             .map(|r| r.latency / slo.reference_latency(&r.task))
             .collect();
         norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((target * norms.len() as f64).ceil() as usize).min(norms.len()) - 1;
+        let n = norms.len();
+        let idx = ((target * n as f64).ceil() as usize).clamp(1, n) - 1;
         norms[idx]
     }
 
@@ -165,6 +172,10 @@ struct ReplicaState {
     /// Reference single-request (latency, period) for routing estimates.
     ref_latency: f64,
     ref_period: f64,
+    /// False when the reference batch violates memory on this replica:
+    /// the router must not estimate it (its reference timings are ∞, and
+    /// `0 × ∞ = NaN` used to poison the least-loaded comparison).
+    feasible: bool,
     /// Jobs in flight (for least-loaded accounting).
     in_flight: usize,
 }
@@ -187,14 +198,15 @@ pub fn simulate(
                 .iter()
                 .map(|s| (s.devices.clone(), s.layers))
                 .collect();
-            let (lat, per) = batch_timing(cm, &stages, &ref_task, cfg.batch.continuous)
-                .unwrap_or((f64::INFINITY, f64::INFINITY));
+            let timing = batch_timing(cm, &stages, &ref_task, cfg.batch.continuous);
+            let (lat, per) = timing.unwrap_or((f64::INFINITY, f64::INFINITY));
             ReplicaState {
                 stages,
                 queue: VecDeque::new(),
                 next_admit: 0.0,
                 ref_latency: lat,
                 ref_period: per,
+                feasible: timing.is_some(),
                 in_flight: 0,
             }
         })
@@ -367,18 +379,26 @@ fn pick_replica(
         }
         RouterPolicy::LeastLoaded => {
             // Estimated completion if routed here: admission backlog plus
-            // one reference latency.
-            let mut best = 0;
+            // one reference latency. Replicas whose reference batch
+            // violates memory are explicitly non-routable — an idle one
+            // used to estimate `0 × ∞ = NaN` and silently fall through
+            // the comparison.
+            let mut best = None;
             let mut best_est = f64::INFINITY;
             for (i, rep) in replicas.iter().enumerate() {
+                if !rep.feasible {
+                    continue;
+                }
                 let backlog = rep.queue.len() as f64 * rep.ref_period;
                 let est = rep.next_admit.max(now) + backlog + rep.ref_latency;
                 if est < best_est {
                     best_est = est;
-                    best = i;
+                    best = Some(i);
                 }
             }
-            best
+            // Every replica infeasible: fall back to replica 0, where the
+            // requests are recorded as failed.
+            best.unwrap_or(0)
         }
     }
 }
@@ -594,6 +614,80 @@ mod tests {
         assert!(att >= 0.99, "att={att} at scale {s99}");
         let att_below = out.attainment(&slo, s99 * 0.95);
         assert!(att_below <= att);
+    }
+
+    #[test]
+    fn min_scale_guards_degenerate_inputs() {
+        // Regression: empty records (or a target rounding target·n to 0)
+        // used to underflow `0 - 1` in the index arithmetic.
+        let (c, m) = fixture();
+        let slo = SloModel::new(&m);
+        let empty = SimOutcome { records: vec![], makespan: 0.0 };
+        assert!(empty.min_scale_for_attainment(&slo, 0.99).is_infinite());
+        assert!(empty.min_scale_for_attainment(&slo, 0.0).is_infinite());
+
+        let cm = CostModel::new(&c, &m);
+        let d = a100_deploy(1);
+        let task = InferenceTask::new(1, 128, 32);
+        let trace = vec![Request { id: 0, arrival: 0.0, task }];
+        let out = simulate(&cm, &d, &trace, &SimConfig::default());
+        // target 0 clamps to the fastest request instead of indexing -1
+        let s = out.min_scale_for_attainment(&slo, 0.0);
+        assert!(s.is_finite() && s > 0.0);
+        assert_eq!(s, out.min_scale_for_attainment(&slo, 1.0));
+    }
+
+    #[test]
+    fn least_loaded_skips_memory_infeasible_replicas() {
+        // Regression for the NaN load estimate: an idle replica whose
+        // reference batch violates memory had ref_period = ∞, so its
+        // backlog estimate was 0 × ∞ = NaN and the comparison silently
+        // fell through. Infeasible replicas must be explicitly
+        // non-routable.
+        let (c, m) = fixture();
+        let cm = CostModel::new(&c, &m);
+        // replica 0: one A100-40G cannot hold 80 fp16 layers (~129 GB);
+        // replica 1: the feasible TP=8 pipeline.
+        let infeasible = Pipeline { stages: vec![Stage { devices: vec![8], layers: 80 }] };
+        let feasible = Pipeline {
+            stages: vec![Stage { devices: (0..8).collect(), layers: 80 }],
+        };
+        let d = Deployment { pipelines: vec![infeasible, feasible] };
+        let trace = WorkloadSpec {
+            rate: 1.0,
+            num_requests: 50,
+            lengths: LengthDist::Fixed { s_in: 64, s_out: 32 },
+            seed: 9,
+        }
+        .generate();
+        let out = simulate(&cm, &d, &trace, &SimConfig::default());
+        assert!(
+            out.records.iter().all(|r| r.replica == 1),
+            "traffic reached the infeasible replica"
+        );
+        assert!(out.records.iter().all(|r| r.latency.is_finite()));
+    }
+
+    #[test]
+    fn all_infeasible_replicas_fail_without_panicking() {
+        let (c, m) = fixture();
+        let cm = CostModel::new(&c, &m);
+        let slo = SloModel::new(&m);
+        let d = Deployment {
+            pipelines: vec![Pipeline { stages: vec![Stage { devices: vec![8], layers: 80 }] }],
+        };
+        let trace = WorkloadSpec {
+            rate: 1.0,
+            num_requests: 10,
+            lengths: LengthDist::Fixed { s_in: 64, s_out: 32 },
+            seed: 10,
+        }
+        .generate();
+        let out = simulate(&cm, &d, &trace, &SimConfig::default());
+        assert_eq!(out.records.len(), 10);
+        assert!(out.records.iter().all(|r| r.latency.is_infinite()));
+        assert_eq!(out.attainment(&slo, 100.0), 0.0);
+        assert!(out.min_scale_for_attainment(&slo, 0.99).is_infinite());
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! Plan serialization round-trip and lowering, pinned to a golden file:
+//! `Deployment` → plan JSON → `Vec<StagePlan>` is the contract that lets
+//! `hexgen schedule --emit-plan` feed `hexgen serve --plan`.
+
+use std::path::PathBuf;
+
+use hexgen::cluster;
+use hexgen::coordinator::{lower_plan, StagePlan};
+use hexgen::model::ModelSpec;
+use hexgen::parallelism::{Deployment, DeploymentPlan, Pipeline, PlanStage, ReplicaPlan, Stage};
+use hexgen::runtime::Manifest;
+use hexgen::util::json::Json;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/plan_golden.json")
+}
+
+fn fixture_manifest() -> Manifest {
+    Manifest::load(
+        &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo/manifest.json"),
+    )
+    .unwrap()
+}
+
+/// The deployment the golden file serializes: a TP=8 replica and an
+/// 8-stage PP=8 chain on the homogeneous 16×A100 pool.
+fn golden_plan() -> DeploymentPlan {
+    DeploymentPlan {
+        cluster: "homogeneous-a100".into(),
+        model_name: "llama2-70b".into(),
+        model_layers: 80,
+        fitness: Some(0.875),
+        replicas: vec![
+            ReplicaPlan {
+                stages: vec![PlanStage { tp: 8, layers: 80, devices: (0..8).collect() }],
+                cost_estimate: Some(0.5),
+            },
+            ReplicaPlan {
+                stages: (0..8)
+                    .map(|i| PlanStage { tp: 1, layers: 10, devices: vec![8 + i] })
+                    .collect(),
+                cost_estimate: Some(2.0),
+            },
+        ],
+    }
+}
+
+#[test]
+fn golden_file_parses_to_the_expected_plan() {
+    let plan = DeploymentPlan::load(&golden_path()).unwrap();
+    assert_eq!(plan, golden_plan());
+}
+
+#[test]
+fn serialization_matches_the_golden_file() {
+    // What this build writes is (JSON-value-)identical to the checked-in
+    // golden file — the schema cannot drift silently.
+    let text = std::fs::read_to_string(golden_path()).unwrap();
+    assert_eq!(golden_plan().to_json(), Json::parse(&text).unwrap());
+}
+
+#[test]
+fn golden_plan_lowers_onto_the_fixture_manifest() {
+    let plan = DeploymentPlan::load(&golden_path()).unwrap();
+    let lowered = lower_plan(&plan, &fixture_manifest()).unwrap();
+    // replica 0: TP=8 clamps to the largest compiled degree (2); the 80
+    // layers rescale onto the fixture's 2.
+    assert_eq!(lowered.replicas[0], vec![StagePlan { layer_start: 0, layer_count: 2, tp: 2 }]);
+    // replica 1: the 8-stage chain merges down to one stage per fixture
+    // layer, keeping TP=1.
+    assert_eq!(
+        lowered.replicas[1],
+        vec![
+            StagePlan { layer_start: 0, layer_count: 1, tp: 1 },
+            StagePlan { layer_start: 1, layer_count: 1, tp: 1 },
+        ]
+    );
+    // cost estimates 0.5s vs 2.0s → normalized speeds 1.6 / 0.4.
+    assert!((lowered.speeds[0] - 1.6).abs() < 1e-12, "{:?}", lowered.speeds);
+    assert!((lowered.speeds[1] - 0.4).abs() < 1e-12, "{:?}", lowered.speeds);
+    // every clamp is reported
+    assert!(lowered.adjustments.iter().any(|a| a.contains("tp 8 -> 2")), "{:?}", lowered.adjustments);
+    assert!(lowered.adjustments.iter().any(|a| a.contains("merged 8 stages into 2")));
+}
+
+#[test]
+fn full_cycle_from_scheduler_deployment() {
+    // Deployment → plan → JSON → plan → Deployment is the identity, and
+    // the captured Eq. 2 cost estimates are usable routing weights.
+    let c = cluster::case_study();
+    let m = ModelSpec::llama2_70b();
+    let d = Deployment {
+        pipelines: vec![Pipeline {
+            stages: vec![
+                Stage { devices: vec![0, 1, 2, 3], layers: 48 },
+                Stage { devices: vec![4, 5], layers: 20 },
+                Stage { devices: vec![6, 7], layers: 12 },
+            ],
+        }],
+    };
+    let plan = DeploymentPlan::from_deployment(&d, &c, &m, Some(0.75));
+    let text = plan.to_json().to_pretty();
+    let back = DeploymentPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, plan);
+    assert_eq!(back.deployment(), d);
+    assert!(back.replicas[0].cost_estimate.unwrap() > 0.0);
+    // and it still lowers onto the fixture
+    let lowered = lower_plan(&back, &fixture_manifest()).unwrap();
+    assert_eq!(lowered.replicas.len(), 1);
+    assert_eq!(lowered.replicas[0].iter().map(|s| s.layer_count).sum::<usize>(), 2);
+}
+
+#[test]
+fn rejects_layer_sums_not_matching_the_model() {
+    let text = std::fs::read_to_string(golden_path()).unwrap();
+    // corrupt one stage's layer count: 80 → 79 total
+    let bad = text.replacen("\"layers\": 10,", "\"layers\": 9,", 1);
+    assert_ne!(bad, text, "corruption failed to apply");
+    let err = DeploymentPlan::from_json(&Json::parse(&bad).unwrap()).unwrap_err().to_string();
+    assert!(err.contains("layer sum"), "{err}");
+}
+
+#[test]
+fn rejects_tampered_structure() {
+    let plan = golden_plan();
+
+    let mut dup = plan.clone();
+    dup.replicas[1].stages[0].devices = vec![0]; // device 0 already bound
+    assert!(DeploymentPlan::from_json(&dup.to_json()).is_err());
+
+    let mut bad_tp = plan.clone();
+    bad_tp.replicas[0].stages[0].tp = 4; // 4 != 8 bound devices
+    assert!(DeploymentPlan::from_json(&bad_tp.to_json()).is_err());
+
+    let mut future = plan.to_json();
+    future.set("version", Json::from(99u64));
+    assert!(DeploymentPlan::from_json(&future).is_err());
+}

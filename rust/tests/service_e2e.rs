@@ -30,6 +30,8 @@ fn two_replica_config(dir: PathBuf) -> ServiceConfig {
         ],
         batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(10), continuous: true },
         route: RoutePolicy::LeastLoaded,
+        speeds: None,
+        adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
     }
@@ -44,6 +46,8 @@ fn one_replica_config(dir: PathBuf, window: Duration) -> ServiceConfig {
         replicas: vec![plan_from_strategy(&[2], &[2]).unwrap()],
         batch: BatchPolicy { max_batch: 2, window, continuous: true },
         route: RoutePolicy::RoundRobin,
+        speeds: None,
+        adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
     }
@@ -112,9 +116,21 @@ fn startup_fails_cleanly_on_bad_plan() {
         replicas: vec![plan_from_strategy(&[4], &[2]).unwrap()], // tp=4 unsupported
         batch: BatchPolicy::default(),
         route: RoutePolicy::RoundRobin,
+        speeds: None,
+        adapt_speeds: true,
         max_new_tokens: 2,
         stop_token: None,
     };
+    assert!(HexGenService::start(cfg).is_err());
+}
+
+#[test]
+fn startup_rejects_mismatched_speed_seeds() {
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.speeds = Some(vec![1.0]); // 1 seed for 2 replicas
+    assert!(HexGenService::start(cfg).is_err());
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.speeds = Some(vec![1.0, 0.0]); // non-positive seed
     assert!(HexGenService::start(cfg).is_err());
 }
 
@@ -224,6 +240,115 @@ fn invalid_max_new_rejected_without_failing_neighbours() {
     assert!(bad.is_err(), "max_new=0 must be rejected");
     let good = rx_good.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
     assert_eq!(good.tokens.len(), 3);
+    service.shutdown();
+}
+
+#[test]
+fn unequal_speeds_skew_traffic_toward_fast_replica() {
+    // Seeded speeds must skew live LeastLoaded routing toward the fast
+    // replica. (The proportional 4:1 equilibrium is pinned by the router
+    // unit test `speed_skews_traffic_proportionally`; here the ratio is
+    // chosen so the outcome is invariant under any completion timing:
+    // routing cost is (outstanding+1)/speed, and with 12 requests the
+    // fast replica's cost never exceeds 13/100 while an idle slow
+    // replica already costs 1/1 — so every pick is the fast replica, no
+    // matter how the burst interleaves with retirements.)
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.speeds = Some(vec![100.0, 1.0]);
+    cfg.adapt_speeds = false; // pin the seeds: this test is about them
+    let service = HexGenService::start(cfg).unwrap();
+    assert_eq!(service.router_speeds(), vec![100.0, 1.0]);
+
+    let rxs: Vec<_> = (0..12).map(|i| service.submit(&format!("skew probe {i}"), Some(4))).collect();
+    let results = collect_all(rxs, Duration::from_secs(120));
+    let mut counts = [0usize; 2];
+    for r in &results {
+        counts[r.as_ref().expect("request failed").replica] += 1;
+    }
+    assert_eq!(counts, [12, 0], "all traffic must skew to the 100x replica");
+    service.shutdown();
+}
+
+#[test]
+fn adaptive_speeds_reflect_measured_throughput() {
+    // With adapt_speeds on, serving traffic folds each replica's
+    // measured decode rate into the router: effective speeds leave the
+    // uniform 1.0 seeds and become real tokens/s figures.
+    let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
+    let rxs: Vec<_> = (0..6).map(|i| service.submit(&format!("adapt probe {i}"), Some(6))).collect();
+    for r in collect_all(rxs, Duration::from_secs(120)) {
+        r.expect("request failed");
+    }
+    let speeds = service.router_speeds();
+    assert_eq!(speeds.len(), 2);
+    // Both replicas served traffic, so both report measured rates —
+    // strictly positive and (being real token rates on this fixture)
+    // far above the 1.0 seed scale.
+    assert!(speeds.iter().all(|&s| s > 0.0), "{speeds:?}");
+    assert!(speeds.iter().any(|&s| s != 1.0), "speeds never adapted: {speeds:?}");
+    service.shutdown();
+}
+
+#[test]
+fn scheduler_plan_lowers_and_serves_end_to_end() {
+    // The plan→serve loop in-process: a llama2-70b-shaped scheduler plan
+    // (as `hexgen schedule --emit-plan` writes) lowers onto the 2-layer
+    // fixture manifest and boots the live service, with the plan's Eq. 2
+    // cost estimates seeding the router speeds.
+    use hexgen::coordinator::lower_plan;
+    use hexgen::parallelism::{DeploymentPlan, PlanStage, ReplicaPlan};
+    use hexgen::runtime::Manifest;
+
+    let dir = fixture_dir();
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let plan = DeploymentPlan {
+        cluster: "case-study".into(),
+        model_name: "llama2-70b".into(),
+        model_layers: 80,
+        fitness: Some(0.9),
+        replicas: vec![
+            ReplicaPlan {
+                stages: vec![
+                    PlanStage { tp: 4, layers: 48, devices: vec![0, 1, 2, 3] },
+                    PlanStage { tp: 2, layers: 20, devices: vec![4, 5] },
+                    PlanStage { tp: 2, layers: 12, devices: vec![6, 7] },
+                ],
+                cost_estimate: Some(0.5),
+            },
+            ReplicaPlan {
+                stages: vec![PlanStage { tp: 1, layers: 80, devices: vec![8] }],
+                cost_estimate: Some(2.0),
+            },
+        ],
+    };
+    let lowered = lower_plan(&plan, &manifest).unwrap();
+    assert_eq!(lowered.replicas.len(), 2);
+    for p in &lowered.replicas {
+        assert_eq!(p.iter().map(|s| s.layer_count).sum::<usize>(), manifest.model.layers);
+        for s in p {
+            assert!(manifest.tp_degrees.contains(&s.tp), "tp {} not compiled", s.tp);
+        }
+    }
+    // 80 layers / tp 4 cannot serve verbatim on the fixture: the report
+    // must say what was adjusted.
+    assert!(!lowered.adjustments.is_empty());
+    // plan costs 0.5s vs 2.0s → the first replica routes 4× faster
+    assert!((lowered.speeds[0] / lowered.speeds[1] - 4.0).abs() < 1e-9, "{:?}", lowered.speeds);
+
+    let service = HexGenService::start(ServiceConfig {
+        artifacts_dir: dir,
+        backend: BackendKind::Reference,
+        replicas: lowered.replicas,
+        batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(5), continuous: true },
+        route: RoutePolicy::LeastLoaded,
+        speeds: Some(lowered.speeds),
+        adapt_speeds: true,
+        max_new_tokens: 4,
+        stop_token: None,
+    })
+    .unwrap();
+    let c = service.generate("plan served prompt", Some(4)).unwrap();
+    assert_eq!(c.tokens.len(), 4);
     service.shutdown();
 }
 
