@@ -36,4 +36,10 @@ plan-serve:
 		--artifacts rust/tests/fixtures/ref_demo \
 		--prompt "the quick brown fox" --max-new 8
 
-.PHONY: artifacts fixture build test bench-batching plan-serve
+# Boot `serve --listen` on an ephemeral port against the checked-in
+# fixture, run a streaming + a non-streaming completion through the HTTP
+# front-end, and assert token parity with the blocking generate() path.
+serve-smoke: build
+	bash scripts/serve_smoke.sh
+
+.PHONY: artifacts fixture build test bench-batching plan-serve serve-smoke

@@ -21,7 +21,8 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, RoutePolicy,
+    ServiceConfig,
 };
 use hexgen::runtime::BackendKind;
 use hexgen::util::stats::Summary;
@@ -55,15 +56,16 @@ fn run(continuous: bool) -> RunStats {
     let service = HexGenService::start(cfg).unwrap();
 
     let t0 = std::time::Instant::now();
-    let mut rxs = Vec::with_capacity(REQUESTS);
+    let mut handles = Vec::with_capacity(REQUESTS);
     for i in 0..REQUESTS {
         // Mixed per-request limits: a short row next to a long one is
         // exactly where run-to-completion batching wastes slot time.
         let max_new = if i % 2 == 0 { 2 } else { 8 };
-        rxs.push(service.submit(&format!("bench request {i}"), Some(max_new)));
+        let req = GenRequest::new(format!("bench request {i}")).with_max_new(max_new);
+        handles.push(service.submit(req));
         std::thread::sleep(STAGGER);
     }
-    let results = collect_all(rxs, Duration::from_secs(600));
+    let results = collect_all(handles, Duration::from_secs(600));
     let wall = t0.elapsed().as_secs_f64();
     service.shutdown();
 

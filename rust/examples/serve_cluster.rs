@@ -13,7 +13,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, RoutePolicy,
+    ServiceConfig,
 };
 use hexgen::util::cli::Args;
 use hexgen::util::rng::Xoshiro256pp;
@@ -66,14 +67,14 @@ fn main() -> Result<()> {
     let mut rng = Xoshiro256pp::seed_from_u64(7);
     println!("replaying {n_requests} requests at {rate} req/s (Poisson)...");
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(n_requests);
+    let mut handles = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
         let gap = rng.exponential(rate);
         std::thread::sleep(Duration::from_secs_f64(gap));
         let prompt = PROMPTS[i % PROMPTS.len()];
-        rxs.push(service.submit(prompt, Some(max_new)));
+        handles.push(service.submit(GenRequest::new(prompt).with_max_new(max_new)));
     }
-    let results = collect_all(rxs, Duration::from_secs(600));
+    let results = collect_all(handles, Duration::from_secs(600));
     let wall = t0.elapsed().as_secs_f64();
 
     let mut latencies = Vec::new();

@@ -1,0 +1,418 @@
+//! The serving request API: an explicit, streamable, cancellable request
+//! lifecycle over the threaded service (paper §4's open-loop coordinator
+//! needs request *identity*, not one-shot calls).
+//!
+//! A [`GenRequest`] submitted to
+//! [`HexGenService::submit`](super::service::HexGenService::submit) is
+//! identified by a [`RequestId`] and observed through a
+//! [`RequestHandle`] — a typed stream of [`RequestEvent`]s:
+//!
+//! ```text
+//! submit ─▶ Queued ─▶ Admitted{replica, batch_size}
+//!                         │
+//!                         ▼
+//!           Token{0} ─ Token{1} ─ … ─┬─▶ Done(Completion)
+//!                                    └─▶ Failed(ServiceError)
+//! ```
+//!
+//! `Token{0}` is the token argmaxed from the prefill logits; every later
+//! `Token{i}` is one decode iteration, emitted the moment the step
+//! retires — so a consumer sees tokens while the row is still decoding.
+//! Exactly one terminal event (`Done` or `Failed`) is ever sent.
+//!
+//! **Cancellation.** [`RequestHandle::cancel`] (or dropping the handle
+//! before a terminal event — e.g. an HTTP client hanging up mid-stream)
+//! flips a shared flag the replica worker honours at the next
+//! decode-step boundary: the row's KV-cache slot is freed for admission
+//! ([`DecodeSession::cancel_slot`](super::pipeline::DecodeSession::cancel_slot)),
+//! the router's load count is released, and the request terminates with
+//! [`ServiceError::Cancelled`]. A request cancelled while still queued
+//! never runs at all.
+
+use std::cell::Cell;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Unique id of a submitted request (monotonic per service instance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+impl fmt::Display for RequestId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "req-{}", self.0)
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    /// Per-request generation limit; `None` falls back to
+    /// [`ServiceConfig::max_new_tokens`](super::service::ServiceConfig::max_new_tokens).
+    pub max_new: Option<usize>,
+    /// Per-request stop token; `None` falls back to
+    /// [`ServiceConfig::stop_token`](super::service::ServiceConfig::stop_token).
+    pub stop: Option<i32>,
+}
+
+impl GenRequest {
+    pub fn new(prompt: impl Into<String>) -> GenRequest {
+        GenRequest { prompt: prompt.into(), max_new: None, stop: None }
+    }
+
+    pub fn with_max_new(mut self, max_new: usize) -> GenRequest {
+        self.max_new = Some(max_new);
+        self
+    }
+
+    pub fn with_stop(mut self, stop: i32) -> GenRequest {
+        self.stop = Some(stop);
+        self
+    }
+}
+
+/// Typed failure modes of the serving path (replaces the stringly
+/// `Result<Completion, String>` the coordinator API used to expose).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Rejected before admission (bad parameters).
+    InvalidRequest(String),
+    /// Every configured replica is down.
+    AllReplicasDown,
+    /// The replica serving the request failed mid-flight.
+    ReplicaFailed { replica: usize, message: String },
+    /// Cancelled via [`RequestHandle::cancel`] or handle drop.
+    Cancelled,
+    /// The service (or its worker) dropped the request channel.
+    Disconnected,
+    /// A caller-imposed deadline expired while waiting.
+    Timeout,
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ServiceError::AllReplicasDown => write!(f, "all replicas are down"),
+            ServiceError::ReplicaFailed { replica, message } => {
+                write!(f, "replica {replica} failed: {message}")
+            }
+            ServiceError::Cancelled => write!(f, "request cancelled"),
+            ServiceError::Disconnected => write!(f, "service dropped the request"),
+            ServiceError::Timeout => write!(f, "timed out waiting for the request"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// A completed generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub id: RequestId,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    /// Prompt tokens actually placed in the model context
+    /// (≤ the artifact `prompt_len`).
+    pub prompt_tokens: usize,
+    /// True when the prompt exceeded the artifact `prompt_len` and its
+    /// oldest tokens were dropped (left truncation) — previously a
+    /// silent data loss.
+    pub truncated: bool,
+    /// End-to-end latency (submit → response), seconds.
+    pub latency: f64,
+    /// Queueing delay before this request was admitted into a slot,
+    /// seconds.
+    pub queued: f64,
+    pub replica: usize,
+    /// Rows in flight on the replica when this request was admitted
+    /// (including itself).
+    pub batch_size: usize,
+    /// Wall time of this request's prefill pass, seconds.
+    pub prefill_seconds: f64,
+    /// Wall time from this request's prefill to its retirement, seconds.
+    pub decode_seconds: f64,
+    /// Decode iterations this request participated in
+    /// (`tokens.len() - 1`; the first token comes from prefill).
+    pub decode_steps: usize,
+}
+
+/// One step of a request's lifecycle, streamed through a
+/// [`RequestHandle`].
+#[derive(Debug, Clone)]
+pub enum RequestEvent {
+    /// Accepted and routed; waiting for a KV-cache slot.
+    Queued,
+    /// Admitted into a decode-session slot on `replica`, co-batched with
+    /// `batch_size - 1` other rows.
+    Admitted { replica: usize, batch_size: usize },
+    /// One generated token. `index` 0 comes from the prefill logits;
+    /// each later index is one decode iteration. `text_delta` is the
+    /// token's own decoded text (byte-level vocab: multi-byte UTF-8
+    /// sequences only assemble in [`Completion::text`]).
+    Token { index: usize, token: i32, text_delta: String },
+    /// Terminal: the request finished.
+    Done(Completion),
+    /// Terminal: the request failed (including cancellation).
+    Failed(ServiceError),
+}
+
+impl RequestEvent {
+    /// True for `Done` / `Failed` — the last event a request ever emits.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RequestEvent::Done(_) | RequestEvent::Failed(_))
+    }
+}
+
+/// Shared cancellation flag between a [`RequestHandle`] and the replica
+/// worker serving the request.
+#[derive(Debug, Default)]
+pub struct CancelFlag(AtomicBool);
+
+impl CancelFlag {
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Caller's view of an in-flight request: the event stream plus
+/// cancellation. Dropping the handle before a terminal event cancels the
+/// request (a departed caller must not keep burning decode slots).
+#[derive(Debug)]
+pub struct RequestHandle {
+    id: RequestId,
+    rx: Receiver<RequestEvent>,
+    cancel: Arc<CancelFlag>,
+    /// Set once a terminal event was observed (drop then skips cancel).
+    terminal: Cell<bool>,
+}
+
+impl RequestHandle {
+    pub(crate) fn new(
+        id: RequestId,
+        rx: Receiver<RequestEvent>,
+        cancel: Arc<CancelFlag>,
+    ) -> RequestHandle {
+        RequestHandle { id, rx, cancel, terminal: Cell::new(false) }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Ask the service to stop this request at the next decode-step
+    /// boundary. Idempotent; a no-op once the request finished.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    fn observe(&self, ev: RequestEvent) -> RequestEvent {
+        if ev.is_terminal() {
+            self.terminal.set(true);
+        }
+        ev
+    }
+
+    /// Block for the next lifecycle event.
+    pub fn next_event(&self) -> Result<RequestEvent, ServiceError> {
+        match self.rx.recv() {
+            Ok(ev) => Ok(self.observe(ev)),
+            Err(_) => {
+                self.terminal.set(true);
+                Err(ServiceError::Disconnected)
+            }
+        }
+    }
+
+    /// Block for the next event until `deadline`.
+    pub fn next_event_before(&self, deadline: Instant) -> Result<RequestEvent, ServiceError> {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(left) {
+            Ok(ev) => Ok(self.observe(ev)),
+            Err(RecvTimeoutError::Timeout) => Err(ServiceError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => {
+                self.terminal.set(true);
+                Err(ServiceError::Disconnected)
+            }
+        }
+    }
+
+    /// Non-blocking poll for the next event.
+    pub fn try_event(&self) -> Result<Option<RequestEvent>, ServiceError> {
+        match self.rx.try_recv() {
+            Ok(ev) => Ok(Some(self.observe(ev))),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                self.terminal.set(true);
+                Err(ServiceError::Disconnected)
+            }
+        }
+    }
+
+    /// Drain events until the terminal one; the blocking convenience
+    /// `generate()` is a thin wrapper over this.
+    pub fn wait(&self) -> Result<Completion, ServiceError> {
+        loop {
+            match self.next_event()? {
+                RequestEvent::Done(c) => return Ok(c),
+                RequestEvent::Failed(e) => return Err(e),
+                _ => {}
+            }
+        }
+    }
+
+    /// [`Self::wait`] bounded by an absolute deadline. On
+    /// [`ServiceError::Timeout`] the request is still in flight — drop
+    /// the handle to cancel it, or keep waiting.
+    pub fn wait_deadline(&self, deadline: Instant) -> Result<Completion, ServiceError> {
+        loop {
+            match self.next_event_before(deadline)? {
+                RequestEvent::Done(c) => return Ok(c),
+                RequestEvent::Failed(e) => return Err(e),
+                _ => {}
+            }
+        }
+    }
+}
+
+impl Drop for RequestHandle {
+    fn drop(&mut self) {
+        if !self.terminal.get() {
+            self.cancel.cancel();
+        }
+    }
+}
+
+/// Wait on many submissions under **one shared deadline**: every handle
+/// gets at most `timeout` from *now*, not `timeout` each (the old
+/// per-`recv_timeout` form let N requests wait up to N×timeout).
+/// Handles that time out are dropped — which cancels them.
+pub fn collect_all(
+    handles: Vec<RequestHandle>,
+    timeout: Duration,
+) -> Vec<Result<Completion, ServiceError>> {
+    let deadline = Instant::now() + timeout;
+    handles.into_iter().map(|h| h.wait_deadline(deadline)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn handle() -> (std::sync::mpsc::Sender<RequestEvent>, RequestHandle) {
+        let (tx, rx) = channel();
+        (tx, RequestHandle::new(RequestId(7), rx, Arc::new(CancelFlag::default())))
+    }
+
+    fn completion(id: RequestId) -> Completion {
+        Completion {
+            id,
+            text: String::new(),
+            tokens: vec![1, 2],
+            prompt_tokens: 2,
+            truncated: false,
+            latency: 0.0,
+            queued: 0.0,
+            replica: 0,
+            batch_size: 1,
+            prefill_seconds: 0.0,
+            decode_seconds: 0.0,
+            decode_steps: 1,
+        }
+    }
+
+    #[test]
+    fn wait_drains_to_done() {
+        let (tx, h) = handle();
+        tx.send(RequestEvent::Queued).unwrap();
+        tx.send(RequestEvent::Admitted { replica: 0, batch_size: 1 }).unwrap();
+        tx.send(RequestEvent::Token { index: 0, token: 1, text_delta: String::new() }).unwrap();
+        tx.send(RequestEvent::Done(completion(RequestId(7)))).unwrap();
+        let c = h.wait().unwrap();
+        assert_eq!(c.id, RequestId(7));
+        assert_eq!(c.tokens, vec![1, 2]);
+    }
+
+    #[test]
+    fn wait_surfaces_failure() {
+        let (tx, h) = handle();
+        tx.send(RequestEvent::Failed(ServiceError::Cancelled)).unwrap();
+        assert_eq!(h.wait(), Err(ServiceError::Cancelled));
+    }
+
+    #[test]
+    fn disconnected_channel_is_an_error() {
+        let (tx, h) = handle();
+        drop(tx);
+        assert_eq!(h.wait(), Err(ServiceError::Disconnected));
+    }
+
+    #[test]
+    fn drop_before_terminal_cancels() {
+        let (_tx, h) = handle();
+        let flag = h.cancel.clone();
+        assert!(!flag.is_cancelled());
+        drop(h);
+        assert!(flag.is_cancelled());
+    }
+
+    #[test]
+    fn drop_after_terminal_does_not_cancel() {
+        let (tx, h) = handle();
+        tx.send(RequestEvent::Done(completion(RequestId(7)))).unwrap();
+        let flag = h.cancel.clone();
+        h.wait().unwrap();
+        drop(h);
+        assert!(!flag.is_cancelled());
+    }
+
+    #[test]
+    fn collect_all_shares_one_deadline() {
+        // Regression for the timeout-compounding bug: 5 handles that never
+        // resolve must collectively miss one 100ms deadline, not wait
+        // 5 × 100ms back to back.
+        let (senders, handles): (Vec<_>, Vec<_>) = (0..5).map(|_| handle()).unzip();
+        let t0 = Instant::now();
+        let results = collect_all(handles, Duration::from_millis(100));
+        let elapsed = t0.elapsed();
+        drop(senders);
+        assert!(results.iter().all(|r| r == &Err(ServiceError::Timeout)), "{results:?}");
+        assert!(
+            elapsed < Duration::from_millis(400),
+            "shared deadline must not compound: waited {elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn try_event_polls_without_blocking() {
+        let (tx, h) = handle();
+        assert!(h.try_event().unwrap().is_none());
+        tx.send(RequestEvent::Queued).unwrap();
+        assert!(matches!(h.try_event().unwrap(), Some(RequestEvent::Queued)));
+    }
+
+    #[test]
+    fn request_id_formats() {
+        assert_eq!(RequestId(42).to_string(), "req-42");
+    }
+
+    #[test]
+    fn gen_request_builder() {
+        let r = GenRequest::new("hi").with_max_new(3).with_stop(9);
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.max_new, Some(3));
+        assert_eq!(r.stop, Some(9));
+    }
+}

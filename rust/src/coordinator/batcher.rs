@@ -35,6 +35,18 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Outcome of a bounded idle wait ([`AdmissionQueue::wait_for`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitOutcome {
+    /// At least one request is pending.
+    Ready,
+    /// Nothing arrived within the timeout (channel still open) — the
+    /// caller gets control back, e.g. to honour cancellations.
+    TimedOut,
+    /// Channel closed and fully drained: shut down.
+    Closed,
+}
+
 /// Buffered view over a worker's request channel.
 pub struct AdmissionQueue<T> {
     rx: Receiver<T>,
@@ -91,6 +103,57 @@ impl<T> AdmissionQueue<T> {
                 false
             }
         }
+    }
+
+    /// Bounded [`Self::wait`]: block until a request is available, the
+    /// channel closes, or `timeout` elapses. The timeout arm lets the
+    /// serving loop wake periodically while idle to sweep cancelled
+    /// requests out of its queue.
+    pub fn wait_for(&mut self, timeout: Duration) -> WaitOutcome {
+        self.poll();
+        if !self.pending.is_empty() {
+            return WaitOutcome::Ready;
+        }
+        if self.disconnected {
+            return WaitOutcome::Closed;
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(item) => {
+                self.pending.push_back(item);
+                WaitOutcome::Ready
+            }
+            Err(RecvTimeoutError::Timeout) => WaitOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => {
+                self.disconnected = true;
+                WaitOutcome::Closed
+            }
+        }
+    }
+
+    /// Remove and return the buffered requests matching `pred` (the
+    /// channel is polled first so newly arrived items are considered).
+    /// The serving loop uses this to purge cancelled requests before
+    /// they ever occupy a slot.
+    pub fn drain_where<F: FnMut(&T) -> bool>(&mut self, mut pred: F) -> Vec<T> {
+        self.poll();
+        let mut out = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.pending.len());
+        for item in self.pending.drain(..) {
+            if pred(&item) {
+                out.push(item);
+            } else {
+                kept.push_back(item);
+            }
+        }
+        self.pending = kept;
+        out
+    }
+
+    /// Remove and return everything buffered (worker teardown: a dying
+    /// replica must fail its queued requests, not drop them silently).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.poll();
+        self.pending.drain(..).collect()
     }
 
     /// Hand out up to `min(free, policy.max_batch)` requests. When `idle`
@@ -205,6 +268,42 @@ mod tests {
         assert!(!q.wait());
         assert!(q.is_closed());
         assert!(q.admit(4, true, &BatchPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn wait_for_times_out_then_sees_items() {
+        let (tx, rx) = channel();
+        let mut q = AdmissionQueue::new(rx);
+        assert_eq!(q.wait_for(Duration::from_millis(5)), WaitOutcome::TimedOut);
+        tx.send(3).unwrap();
+        assert_eq!(q.wait_for(Duration::from_millis(5)), WaitOutcome::Ready);
+        drop(tx);
+        assert_eq!(q.admit(4, false, &BatchPolicy::default()), vec![3]);
+        assert_eq!(q.wait_for(Duration::from_millis(5)), WaitOutcome::Closed);
+    }
+
+    #[test]
+    fn drain_where_removes_matching_keeps_order() {
+        let (tx, rx) = channel();
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        let mut q = AdmissionQueue::new(rx);
+        assert_eq!(q.drain_where(|&x| x % 2 == 0), vec![0, 2, 4]);
+        assert_eq!(q.pending(), 3);
+        assert_eq!(q.admit(8, false, &BatchPolicy::default()), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn drain_all_empties_queue_and_channel() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let mut q = AdmissionQueue::new(rx);
+        q.poll();
+        tx.send(3).unwrap();
+        assert_eq!(q.drain_all(), vec![1, 2, 3]);
+        assert_eq!(q.pending(), 0);
     }
 
     #[test]

@@ -1,24 +1,31 @@
-//! The HexGen coordinator (Layer 3): request routing, continuous
-//! (iteration-level) batching, leader-side collectives, and the
-//! asymmetric TP×PP pipeline executor — the real serving path (paper
-//! §3.2, Appendix C). Python never runs
+//! The HexGen coordinator (Layer 3): the request-lifecycle serving API
+//! (streaming, cancellable [`RequestHandle`]s), request routing,
+//! continuous (iteration-level) batching, leader-side collectives, the
+//! asymmetric TP×PP pipeline executor, and a std-only HTTP/1.1 front-end
+//! — the real serving path (paper §3.2, Appendix C). Python never runs
 //! here; the executors run stage artifacts through a pluggable
 //! [`crate::runtime::ExecutionBackend`] (pure-Rust reference by default,
 //! PJRT behind the `pjrt` feature).
 
+pub mod api;
 pub mod batcher;
 pub mod collective;
 pub mod lowering;
 pub mod pipeline;
 pub mod router;
+pub mod server;
 pub mod service;
 
+pub use api::{
+    collect_all, Completion, GenRequest, RequestEvent, RequestHandle, RequestId, ServiceError,
+};
 pub use batcher::{AdmissionQueue, BatchPolicy};
 pub use collective::{add_residual, all_reduce_sum, CommStats};
 pub use lowering::{lower_plan, LoweredPlan};
 pub use pipeline::{
     argmax_rows, plan_from_strategy, DecodeSession, GenerationResult, PipelineExecutor,
-    SlotRequest, StagePlan,
+    SlotRequest, StagePlan, StepOutcome,
 };
 pub use router::{RoutePolicy, Router};
-pub use service::{collect_all, Completion, HexGenService, ServiceConfig};
+pub use server::HttpServer;
+pub use service::{HexGenService, ServiceConfig, ServiceStats};

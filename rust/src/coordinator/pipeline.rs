@@ -223,11 +223,11 @@ impl PipelineExecutor {
             })
             .collect();
         let mut out: Vec<Vec<i32>> = vec![Vec::new(); b_real];
-        for (slot, toks) in session.prefill_into_slots(reqs)? {
+        for (slot, toks) in session.prefill_into_slots(reqs)?.finished {
             out[slot] = toks;
         }
         while session.active() > 0 {
-            for (slot, toks) in session.decode_step()? {
+            for (slot, toks) in session.decode_step()?.finished {
                 out[slot] = toks;
             }
         }
@@ -391,6 +391,22 @@ impl PipelineExecutor {
     }
 }
 
+/// Result of one session step — an admission
+/// ([`DecodeSession::prefill_into_slots`]) or a decode iteration
+/// ([`DecodeSession::decode_step`]). `tokens` reports **every** row's new
+/// token for the step (the serving loop streams these as
+/// [`RequestEvent::Token`](super::api::RequestEvent) events while rows
+/// are still decoding); `finished` the subset that retired.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// One `(slot, token)` per row that produced a token this step, in
+    /// slot order.
+    pub tokens: Vec<(usize, i32)>,
+    /// Rows that retired this step: `(slot, full generated sequence)`.
+    /// Their slots are freed (cache rows zeroed) and admissible again.
+    pub finished: Vec<(usize, Vec<i32>)>,
+}
+
 /// A request to admit into a [`DecodeSession`] slot.
 #[derive(Debug, Clone)]
 pub struct SlotRequest {
@@ -476,21 +492,19 @@ impl<'a> DecodeSession<'a> {
     /// Admit requests into free slots: run their prefill (at the smallest
     /// bucket that fits the admission batch) and scatter the resulting KV
     /// rows into the slots' cache rows. Callable between any two decode
-    /// steps; in-flight rows are untouched. Returns the rows that already
-    /// finished at prefill (`max_new == 1` or stop token emitted) as
-    /// `(slot, tokens)`; their slots are freed again.
+    /// steps; in-flight rows are untouched. The outcome's `tokens` carry
+    /// each admitted row's prefill-produced token; `finished` the rows
+    /// that already completed at prefill (`max_new == 1` or stop token
+    /// emitted), whose slots are freed again.
     ///
     /// Admitting while other rows are mid-decode leaves rows at different
     /// cache depths, which requires
     /// [`ExecutionBackend::supports_rowwise_decode_positions`]; on
     /// scalar-position backends (the AOT artifact signature) only admit
     /// into an idle session, as the service loop does.
-    pub fn prefill_into_slots(
-        &mut self,
-        reqs: Vec<(usize, SlotRequest)>,
-    ) -> Result<Vec<(usize, Vec<i32>)>> {
+    pub fn prefill_into_slots(&mut self, reqs: Vec<(usize, SlotRequest)>) -> Result<StepOutcome> {
         if reqs.is_empty() {
-            return Ok(Vec::new());
+            return Ok(StepOutcome::default());
         }
         let info = self.exec.backend.manifest().model.clone();
         let mut claimed = vec![false; self.bucket];
@@ -542,9 +556,10 @@ impl<'a> DecodeSession<'a> {
         self.prefill_tokens += reqs.len();
 
         let max_decode = info.max_seq - info.prompt_len;
-        let mut finished = Vec::new();
+        let mut out = StepOutcome::default();
         for (row, (slot, r)) in reqs.into_iter().enumerate() {
             let tok = next[row];
+            out.tokens.push((slot, tok));
             let st = SlotState {
                 max_new: r.max_new.min(max_decode).max(1),
                 stop: r.stop,
@@ -554,21 +569,22 @@ impl<'a> DecodeSession<'a> {
             };
             if st.generated.len() >= st.max_new || Some(tok) == st.stop {
                 self.evict(slot);
-                finished.push((slot, st.generated));
+                out.finished.push((slot, st.generated));
             } else {
                 self.slots[slot] = Some(st);
             }
         }
-        Ok(finished)
+        Ok(out)
     }
 
-    /// Run one decode iteration for every active row. Rows that hit their
-    /// own `max_new` or stop token retire: their slots are freed (cache
-    /// rows zeroed) and their full token sequences returned as
-    /// `(slot, tokens)`. A no-op returning `[]` when nothing is active.
-    pub fn decode_step(&mut self) -> Result<Vec<(usize, Vec<i32>)>> {
+    /// Run one decode iteration for every active row, reporting each
+    /// row's new token in the outcome's `tokens`. Rows that hit their own
+    /// `max_new` or stop token retire into `finished`: their slots are
+    /// freed (cache rows zeroed) and their full token sequences returned.
+    /// A no-op returning an empty outcome when nothing is active.
+    pub fn decode_step(&mut self) -> Result<StepOutcome> {
         if self.active() == 0 {
-            return Ok(Vec::new());
+            return Ok(StepOutcome::default());
         }
         let info = self.exec.backend.manifest().model.clone();
         let t0 = Instant::now();
@@ -613,7 +629,7 @@ impl<'a> DecodeSession<'a> {
         self.decode_steps += 1;
         self.decode_seconds += t0.elapsed().as_secs_f64();
 
-        let mut finished = Vec::new();
+        let mut out = StepOutcome::default();
         for slot in 0..self.bucket {
             let done = {
                 let Some(st) = self.slots[slot].as_mut() else { continue };
@@ -621,15 +637,28 @@ impl<'a> DecodeSession<'a> {
                 st.generated.push(tok);
                 st.next = tok;
                 st.pos += 1;
+                out.tokens.push((slot, tok));
                 st.generated.len() >= st.max_new || Some(tok) == st.stop
             };
             if done {
                 let st = self.slots[slot].take().expect("slot state");
                 self.evict(slot);
-                finished.push((slot, st.generated));
+                out.finished.push((slot, st.generated));
             }
         }
-        Ok(finished)
+        Ok(out)
+    }
+
+    /// Cancel the request occupying `slot`: drop its decode state, zero
+    /// its KV-cache rows, and free the slot for admission. Returns the
+    /// tokens generated so far, or `None` when the slot was already free
+    /// (the request may have retired in the same step it was cancelled).
+    /// The serving loop calls this at decode-step boundaries, so
+    /// cancellation never tears a step in half.
+    pub fn cancel_slot(&mut self, slot: usize) -> Option<Vec<i32>> {
+        let st = self.slots.get_mut(slot).and_then(Option::take)?;
+        self.evict(slot);
+        Some(st.generated)
     }
 
     /// Zero a slot's cache rows across all stages/layers/shards (evict).

@@ -159,6 +159,17 @@ impl Router {
         Some(r)
     }
 
+    /// Per-replica `(outstanding requests, effective speed)` snapshot —
+    /// what the serving front-end reports as queue depths and routing
+    /// weights on `GET /metrics`.
+    pub fn load_snapshot(&self) -> Vec<(usize, f64)> {
+        self.speeds()
+            .into_iter()
+            .zip(&self.outstanding)
+            .map(|(s, o)| (o.load(Ordering::Relaxed), s))
+            .collect()
+    }
+
     /// Record completion of a request previously routed to `replica`.
     pub fn complete(&self, replica: usize) {
         self.outstanding[replica].fetch_sub(1, Ordering::Relaxed);
@@ -292,6 +303,17 @@ mod tests {
         assert_eq!(r.outstanding(dead), 0);
         let alive = r.route_excluding(&[dead]).unwrap();
         assert_ne!(alive, dead);
+    }
+
+    #[test]
+    fn load_snapshot_pairs_depth_with_speed() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_speeds(vec![4.0, 1.0]);
+        r.route();
+        let snap = r.load_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0], (1, 4.0));
+        assert_eq!(snap[1], (0, 1.0));
     }
 
     #[test]

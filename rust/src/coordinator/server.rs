@@ -1,0 +1,395 @@
+//! Std-only HTTP/1.1 front-end over the threaded service — the
+//! long-running face of `hexgen serve --listen ADDR`.
+//!
+//! No async runtime, no HTTP crate: a [`TcpListener`] accept loop with
+//! one thread per connection (the service's own worker threads do the
+//! heavy lifting; connection threads just block on event streams).
+//!
+//! Endpoints:
+//!
+//! | route | behaviour |
+//! |---|---|
+//! | `POST /v1/completions` | body `{"prompt", "max_new"?, "stop"?, "stream"?}`; `"stream": true` streams the request's [`RequestEvent`]s as Server-Sent Events (`queued` / `admitted` / `token` / `done` / `failed`), otherwise blocks and returns the completion JSON |
+//! | `GET /healthz` | liveness + replica count |
+//! | `GET /metrics` | router speeds & queue depths, request counters, comm stats |
+//! | `GET /v1/plan` | the per-replica stage plans being served |
+//!
+//! A client that disconnects mid-stream cancels its request: the SSE
+//! write fails, the handler drops the [`RequestHandle`], and handle drop
+//! propagates cancellation to the replica worker — freeing the KV slot
+//! for the next admission.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::api::{Completion, GenRequest, RequestEvent, ServiceError};
+use super::service::HexGenService;
+
+/// Hard ceiling on one request's wall time (queue + prefill + decode).
+const REQUEST_DEADLINE: Duration = Duration::from_secs(600);
+/// Socket read timeout while parsing a request head/body.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Largest accepted request body — the declared Content-Length is
+/// attacker-controlled and is allocated up front, so it must be bounded.
+const MAX_BODY_BYTES: usize = 1 << 20;
+/// Largest accepted request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 64 << 10;
+
+/// A running HTTP front-end (accept loop on its own thread).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port 0 picks an ephemeral
+    /// port — read it back from [`Self::addr`]) and serve the service on
+    /// it until [`Self::shutdown`].
+    pub fn serve(service: Arc<HexGenService>, addr: &str) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop_flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let service = service.clone();
+                        std::thread::spawn(move || {
+                            if let Err(e) = handle_connection(&service, stream) {
+                                crate::log_debug!("http connection ended: {e:#}");
+                            }
+                        });
+                    }
+                    Err(e) => crate::log_warn!("accept failed: {e}"),
+                }
+            }
+        });
+        Ok(HttpServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept loop. In-flight
+    /// connection handlers run to completion on their own threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a no-op connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block on the accept loop forever (`hexgen serve --listen`).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Read one request; errors carry the HTTP status to answer with.
+fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, (u16, String)> {
+    let bad = |e: &dyn std::fmt::Display| (400, format!("bad request: {e}"));
+    let mut reader = BufReader::new(&mut *stream);
+    let mut line = String::new();
+    if reader.read_line(&mut line).map_err(|e| bad(&e))? == 0 {
+        return Err((400, "empty request".to_string()));
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| bad(&"missing method"))?.to_string();
+    let path = parts.next().ok_or_else(|| bad(&"missing path"))?.to_string();
+    let mut content_length = 0usize;
+    let mut head_bytes = line.len();
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header).map_err(|e| bad(&e))? == 0 {
+            break;
+        }
+        head_bytes += header.len();
+        if head_bytes > MAX_HEAD_BYTES {
+            return Err((431, format!("request head exceeds {MAX_HEAD_BYTES} bytes")));
+        }
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    v.trim().parse().map_err(|_| bad(&format!("bad content-length '{v}'")))?;
+            }
+        }
+    }
+    // The declared length is allocated up front: bound it before trusting it.
+    if content_length > MAX_BODY_BYTES {
+        return Err((413, format!("body of {content_length} bytes exceeds {MAX_BODY_BYTES}")));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| bad(&e))?;
+    Ok(HttpRequest { method, path, body: String::from_utf8_lossy(&body).into_owned() })
+}
+
+fn handle_connection(service: &HexGenService, mut stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err((status, msg)) => {
+            respond_error(&mut stream, status, &msg)?;
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => respond_json(&mut stream, 200, &health_json(service))?,
+        ("GET", "/metrics") => respond_json(&mut stream, 200, &metrics_json(service))?,
+        ("GET", "/v1/plan") => respond_json(&mut stream, 200, &plan_json(service))?,
+        ("POST", "/v1/completions") => handle_completions(service, &mut stream, &req.body)?,
+        _ => respond_error(&mut stream, 404, &format!("no route {} {}", req.method, req.path))?,
+    }
+    Ok(())
+}
+
+fn handle_completions(service: &HexGenService, stream: &mut TcpStream, body: &str) -> Result<()> {
+    let parsed = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return respond_error(stream, 400, &format!("bad json body: {e}")),
+    };
+    let Ok(prompt) = parsed.str("prompt") else {
+        return respond_error(stream, 400, "missing required string field 'prompt'");
+    };
+    let mut req = GenRequest::new(prompt);
+    if let Some(v) = parsed.opt("max_new") {
+        match v.as_usize() {
+            Ok(n) => req.max_new = Some(n),
+            Err(_) => return respond_error(stream, 400, "'max_new' must be a non-negative integer"),
+        }
+    }
+    if let Some(v) = parsed.opt("stop") {
+        match v.as_f64() {
+            Ok(x) if x.fract() == 0.0 => req.stop = Some(x as i32),
+            _ => return respond_error(stream, 400, "'stop' must be an integer token id"),
+        }
+    }
+    let streaming = match parsed.opt("stream") {
+        None => false,
+        Some(v) => match v.as_bool() {
+            Ok(b) => b,
+            Err(_) => return respond_error(stream, 400, "'stream' must be a boolean"),
+        },
+    };
+
+    let handle = service.submit(req);
+    let deadline = Instant::now() + REQUEST_DEADLINE;
+    if !streaming {
+        return match handle.wait_deadline(deadline) {
+            Ok(c) => respond_json(stream, 200, &completion_json(&c)),
+            Err(e) => respond_error(stream, error_status(&e), &e.to_string()),
+        };
+    }
+
+    // SSE: stream lifecycle events as they happen. A failed write means
+    // the client hung up — bailing out drops `handle`, which cancels the
+    // request at the next decode-step boundary.
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\n\
+          Content-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\n\
+          Connection: close\r\n\r\n",
+    )?;
+    loop {
+        let ev = match handle.next_event_before(deadline) {
+            Ok(ev) => ev,
+            Err(e) => {
+                write_sse(stream, "failed", &error_json(&e))?;
+                break;
+            }
+        };
+        match ev {
+            RequestEvent::Queued => {
+                let mut j = Json::obj();
+                j.set("id", Json::from(handle.id().to_string()));
+                write_sse(stream, "queued", &j)?;
+            }
+            RequestEvent::Admitted { replica, batch_size } => {
+                let mut j = Json::obj();
+                j.set("replica", Json::from(replica)).set("batch_size", Json::from(batch_size));
+                write_sse(stream, "admitted", &j)?;
+            }
+            RequestEvent::Token { index, token, text_delta } => {
+                let mut j = Json::obj();
+                j.set("index", Json::from(index))
+                    .set("token", Json::from(token as i64))
+                    .set("text", Json::from(text_delta));
+                write_sse(stream, "token", &j)?;
+            }
+            RequestEvent::Done(c) => {
+                write_sse(stream, "done", &completion_json(&c))?;
+                break;
+            }
+            RequestEvent::Failed(e) => {
+                write_sse(stream, "failed", &error_json(&e))?;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---- JSON views ---------------------------------------------------------
+
+fn health_json(service: &HexGenService) -> Json {
+    let mut j = Json::obj();
+    j.set("status", Json::from("ok")).set("replicas", Json::from(service.replicas()));
+    j
+}
+
+fn metrics_json(service: &HexGenService) -> Json {
+    let snapshot = service.router_snapshot();
+    let mut router = Json::obj();
+    router
+        .set("speeds", Json::Arr(snapshot.iter().map(|&(_, s)| Json::from(s)).collect()))
+        .set("outstanding", Json::Arr(snapshot.iter().map(|&(o, _)| Json::from(o)).collect()));
+    let stats = service.stats();
+    let mut requests = Json::obj();
+    requests
+        .set("submitted", Json::from(stats.submitted))
+        .set("completed", Json::from(stats.completed))
+        .set("failed", Json::from(stats.failed))
+        .set("cancelled", Json::from(stats.cancelled))
+        .set("tokens_out", Json::from(stats.tokens_out));
+    let c = service.comm_stats();
+    let mut comm = Json::obj();
+    comm.set("allreduce_ops", Json::from(c.allreduce_ops))
+        .set("allreduce_bytes", Json::from(c.allreduce_bytes))
+        .set("pp_sends", Json::from(c.pp_sends))
+        .set("pp_bytes", Json::from(c.pp_bytes));
+    let mut j = Json::obj();
+    j.set("replicas", Json::from(service.replicas()))
+        .set("router", router)
+        .set("requests", requests)
+        .set("comm", comm);
+    j
+}
+
+fn plan_json(service: &HexGenService) -> Json {
+    let replicas: Vec<Json> = service
+        .stage_plans()
+        .iter()
+        .map(|plan| {
+            let stages: Vec<Json> = plan
+                .iter()
+                .map(|s| {
+                    let mut j = Json::obj();
+                    j.set("tp", Json::from(s.tp))
+                        .set("layer_start", Json::from(s.layer_start))
+                        .set("layer_count", Json::from(s.layer_count));
+                    j
+                })
+                .collect();
+            let tps: Vec<String> = plan.iter().map(|s| s.tp.to_string()).collect();
+            let mut j = Json::obj();
+            j.set("strategy", Json::from(format!("[{}]", tps.join(","))))
+                .set("stages", Json::Arr(stages));
+            j
+        })
+        .collect();
+    let mut j = Json::obj();
+    j.set("replicas", Json::Arr(replicas))
+        .set("speeds", Json::Arr(service.router_speeds().into_iter().map(Json::from).collect()));
+    j
+}
+
+fn completion_json(c: &Completion) -> Json {
+    let mut j = Json::obj();
+    j.set("id", Json::from(c.id.to_string()))
+        .set("text", Json::from(c.text.clone()))
+        .set("tokens", Json::Arr(c.tokens.iter().map(|&t| Json::from(t as i64)).collect()))
+        .set("prompt_tokens", Json::from(c.prompt_tokens))
+        .set("truncated", Json::from(c.truncated))
+        .set("replica", Json::from(c.replica))
+        .set("batch_size", Json::from(c.batch_size))
+        .set("latency_seconds", Json::from(c.latency))
+        .set("queued_seconds", Json::from(c.queued))
+        .set("prefill_seconds", Json::from(c.prefill_seconds))
+        .set("decode_seconds", Json::from(c.decode_seconds))
+        .set("decode_steps", Json::from(c.decode_steps));
+    j
+}
+
+fn error_json(e: &ServiceError) -> Json {
+    let mut j = Json::obj();
+    j.set("error", Json::from(e.to_string()));
+    j
+}
+
+fn error_status(e: &ServiceError) -> u16 {
+    match e {
+        ServiceError::InvalidRequest(_) => 400,
+        ServiceError::Cancelled => 499,
+        ServiceError::ReplicaFailed { .. } => 500,
+        ServiceError::AllReplicasDown | ServiceError::Disconnected => 503,
+        ServiceError::Timeout => 504,
+    }
+}
+
+// ---- wire helpers -------------------------------------------------------
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn respond_json(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
+    let body = body.to_string();
+    let resp = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        reason_phrase(status),
+        body.len(),
+    );
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+fn respond_error(stream: &mut TcpStream, status: u16, msg: &str) -> Result<()> {
+    let mut j = Json::obj();
+    j.set("error", Json::from(msg));
+    respond_json(stream, status, &j)
+}
+
+fn write_sse(stream: &mut TcpStream, event: &str, data: &Json) -> Result<()> {
+    stream.write_all(format!("event: {event}\ndata: {data}\n\n").as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}

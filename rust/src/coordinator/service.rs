@@ -7,27 +7,42 @@
 //! batching** admission loop over a persistent
 //! [`DecodeSession`](super::pipeline::DecodeSession): at every
 //! decode-step boundary it retires rows that hit their own `max_new` (or
-//! stop token), frees their KV-cache slots, and prefills queued requests
-//! into the free slots — so a late request joins the in-flight batch
-//! instead of waiting behind it.
+//! stop token), frees their KV-cache slots, honours cancellations
+//! ([`RequestHandle::cancel`] / handle drop), and prefills queued
+//! requests into the free slots — so a late request joins the in-flight
+//! batch instead of waiting behind it.
+//!
+//! The public surface is the request-lifecycle API of [`super::api`]:
+//! [`HexGenService::submit`] takes a [`GenRequest`] and returns a
+//! [`RequestHandle`] streaming [`RequestEvent`]s (per-token streaming,
+//! typed [`ServiceError`] failures, cancellation). The blocking
+//! [`HexGenService::generate`] is a thin wrapper that drains the stream.
 //!
 //! [`ExecutionBackend`]: crate::runtime::ExecutionBackend
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::runtime::{make_backend, tokenizer, BackendKind, Manifest, WeightStore};
 
-use super::batcher::{AdmissionQueue, BatchPolicy};
+use super::api::{
+    CancelFlag, Completion, GenRequest, RequestEvent, RequestHandle, RequestId, ServiceError,
+};
+use super::batcher::{AdmissionQueue, BatchPolicy, WaitOutcome};
 use super::collective::CommStats;
 
 use super::pipeline::{PipelineExecutor, SlotRequest, StagePlan};
 use super::router::{RoutePolicy, Router};
+
+/// How often an idle worker wakes from its request-channel wait to sweep
+/// cancelled requests out of its queue.
+const CANCEL_SWEEP_INTERVAL: Duration = Duration::from_millis(25);
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -50,38 +65,64 @@ pub struct ServiceConfig {
     pub adapt_speeds: bool,
     /// Default generation length (≤ max_seq − prompt_len).
     pub max_new_tokens: usize,
-    /// Optional stop token: rows retire early when they emit it.
+    /// Default stop token: rows retire early when they emit it
+    /// (overridable per request via [`GenRequest::stop`]).
     pub stop_token: Option<i32>,
 }
 
-/// A completed generation.
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub text: String,
-    pub tokens: Vec<i32>,
-    /// End-to-end latency (submit → response), seconds.
-    pub latency: f64,
-    /// Queueing delay before this request was admitted into a slot,
-    /// seconds.
-    pub queued: f64,
-    pub replica: usize,
-    /// Rows in flight on the replica when this request was admitted
-    /// (including itself).
-    pub batch_size: usize,
-    /// Wall time of this request's prefill pass, seconds.
-    pub prefill_seconds: f64,
-    /// Wall time from this request's prefill to its retirement, seconds.
-    pub decode_seconds: f64,
-    /// Decode iterations this request participated in
-    /// (`tokens.len() - 1`; the first token comes from prefill).
-    pub decode_steps: usize,
+/// Monotonic lifetime counters of a running service (`GET /metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Total generated tokens across completed requests.
+    pub tokens_out: u64,
 }
 
+#[derive(Debug, Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+    tokens_out: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ServiceStats {
+        ServiceStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            tokens_out: self.tokens_out.load(Ordering::Relaxed),
+        }
+    }
+
+    fn count_terminal(&self, err: &ServiceError) {
+        if *err == ServiceError::Cancelled {
+            self.cancelled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A routed request travelling to a replica worker.
 struct WorkItem {
+    id: RequestId,
     prompt_tokens: Vec<i32>,
+    /// Prompt tokens actually in context (≤ prompt_len).
+    prompt_used: usize,
+    /// Oldest prompt tokens were dropped at encode time.
+    truncated: bool,
     max_new: usize,
+    stop: Option<i32>,
     submitted: Instant,
-    reply: Sender<Result<Completion, String>>,
+    events: Sender<RequestEvent>,
+    cancel: Arc<CancelFlag>,
 }
 
 /// A request occupying a decode-session slot.
@@ -92,6 +133,8 @@ struct ActiveItem {
     cohort: usize,
     prefill_seconds: f64,
     decode_start: Instant,
+    /// Token events emitted so far (the next event's `index`).
+    emitted: usize,
 }
 
 /// Handle to a running service.
@@ -101,7 +144,12 @@ pub struct HexGenService {
     workers: Vec<JoinHandle<()>>,
     manifest: Manifest,
     cfg: ServiceConfig,
-    comm_rx: Receiver<CommStats>,
+    // Behind mutexes so the service can be shared (`Arc<HexGenService>`
+    // across HTTP handler threads): stats accumulate into `comm_total`.
+    comm_rx: Mutex<Receiver<CommStats>>,
+    comm_total: Mutex<CommStats>,
+    counters: Arc<Counters>,
+    next_id: AtomicU64,
 }
 
 impl HexGenService {
@@ -123,6 +171,7 @@ impl HexGenService {
             router.set_speeds(speeds.clone());
         }
 
+        let counters = Arc::new(Counters::default());
         let (comm_tx, comm_rx) = channel::<CommStats>();
         let mut queues = Vec::with_capacity(cfg.replicas.len());
         let mut workers = Vec::with_capacity(cfg.replicas.len());
@@ -136,15 +185,15 @@ impl HexGenService {
             let weights = weights.clone();
             let batch = cfg.batch;
             let backend = cfg.backend;
-            let stop_token = cfg.stop_token;
             let adapt_speeds = cfg.adapt_speeds;
             let router = router.clone();
+            let counters = counters.clone();
             let comm_tx = comm_tx.clone();
             let ready_tx = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    rid, backend, dir, manifest, weights, plan, batch, stop_token, adapt_speeds,
-                    rx, router, comm_tx, ready_tx,
+                    rid, backend, dir, manifest, weights, plan, batch, adapt_speeds, rx, router,
+                    counters, comm_tx, ready_tx,
                 )
             }));
         }
@@ -152,10 +201,20 @@ impl HexGenService {
         for _ in 0..cfg.replicas.len() {
             ready_rx
                 .recv()
-                .context("worker died during startup")?
+                .map_err(|_| anyhow::anyhow!("worker died during startup"))?
                 .map_err(|e| anyhow::anyhow!("replica startup failed: {e}"))?;
         }
-        Ok(HexGenService { router, queues, workers, manifest, cfg, comm_rx })
+        Ok(HexGenService {
+            router,
+            queues,
+            workers,
+            manifest,
+            cfg,
+            comm_rx: Mutex::new(comm_rx),
+            comm_total: Mutex::new(CommStats::default()),
+            counters,
+            next_id: AtomicU64::new(0),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -166,39 +225,75 @@ impl HexGenService {
         self.queues.len()
     }
 
+    /// The per-replica stage plans being served (`GET /v1/plan`).
+    pub fn stage_plans(&self) -> &[Vec<StagePlan>] {
+        &self.cfg.replicas
+    }
+
     /// Effective per-replica routing speeds (plan seeds, overridden by
     /// measured decode-throughput EWMAs as replicas report in).
     pub fn router_speeds(&self) -> Vec<f64> {
         self.router.speeds()
     }
 
-    /// Submit a prompt; returns a receiver for the completion. If the
-    /// routed replica is dead (its queue hung up), the router's load
-    /// count is released and the request re-routed to a live replica.
-    pub fn submit(&self, prompt: &str, max_new: Option<usize>) -> Receiver<Result<Completion, String>> {
-        let (reply_tx, reply_rx) = channel();
-        let tokens = tokenizer::encode(prompt, self.manifest.model.prompt_len);
-        let mut item = WorkItem {
-            prompt_tokens: tokens,
-            max_new: max_new.unwrap_or(self.cfg.max_new_tokens),
-            submitted: Instant::now(),
-            reply: reply_tx,
-        };
+    /// Per-replica `(outstanding requests, effective speed)` snapshot.
+    pub fn router_snapshot(&self) -> Vec<(usize, f64)> {
+        self.router.load_snapshot()
+    }
+
+    /// Lifetime request counters.
+    pub fn stats(&self) -> ServiceStats {
+        self.counters.snapshot()
+    }
+
+    /// Submit a request; returns a [`RequestHandle`] streaming its
+    /// lifecycle events (`Queued → Admitted → Token… → Done/Failed`).
+    /// If the routed replica is dead (its queue hung up), the router's
+    /// load count is released and the request re-routed to a live
+    /// replica. Dropping the handle before its terminal event cancels
+    /// the request.
+    pub fn submit(&self, req: GenRequest) -> RequestHandle {
+        let id = RequestId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let cancel = Arc::new(CancelFlag::default());
+        let handle = RequestHandle::new(id, rx, cancel.clone());
+
         // Reject invalid limits here, per request — admission batches
         // several requests into one prefill, and one bad request must not
         // fail its co-batched neighbours.
-        if item.max_new == 0 {
-            let _ = item.reply.send(Err("max_new must be >= 1".to_string()));
-            return reply_rx;
+        let max_new = req.max_new.unwrap_or(self.cfg.max_new_tokens);
+        if max_new == 0 {
+            self.counters.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(RequestEvent::Failed(ServiceError::InvalidRequest(
+                "max_new must be >= 1".to_string(),
+            )));
+            return handle;
         }
+        let prompt_len = self.manifest.model.prompt_len;
+        let (prompt_tokens, full) = tokenizer::encode_report(&req.prompt, prompt_len);
+        let mut item = WorkItem {
+            id,
+            prompt_tokens,
+            prompt_used: full.min(prompt_len),
+            truncated: full > prompt_len,
+            max_new,
+            stop: req.stop.or(self.cfg.stop_token),
+            submitted: Instant::now(),
+            events: tx,
+            cancel,
+        };
+        // Queued is emitted before the worker can race an Admitted in.
+        let _ = item.events.send(RequestEvent::Queued);
         let mut dead: Vec<usize> = Vec::new();
         loop {
             let Some(replica) = self.router.route_excluding(&dead) else {
-                let _ = item.reply.send(Err("all replicas are down".to_string()));
-                return reply_rx;
+                self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = item.events.send(RequestEvent::Failed(ServiceError::AllReplicasDown));
+                return handle;
             };
             match self.queues[replica].send(item) {
-                Ok(()) => return reply_rx,
+                Ok(()) => return handle,
                 Err(SendError(returned)) => {
                     // The worker hung up: release the routed load count so
                     // the policy stops charging the dead replica, then try
@@ -211,21 +306,23 @@ impl HexGenService {
         }
     }
 
-    /// Submit and block for the completion.
+    /// Submit and block for the completion: a thin wrapper draining the
+    /// event stream ([`RequestHandle::wait`]).
     pub fn generate(&self, prompt: &str, max_new: Option<usize>) -> Result<Completion> {
-        let rx = self.submit(prompt, max_new);
-        rx.recv()
-            .context("service dropped the request")?
-            .map_err(|e| anyhow::anyhow!(e))
+        let mut req = GenRequest::new(prompt);
+        req.max_new = max_new;
+        self.submit(req).wait().map_err(anyhow::Error::from)
     }
 
-    /// Drain accumulated communication stats from all workers.
+    /// Accumulated communication stats from all workers (cumulative
+    /// since service start).
     pub fn comm_stats(&self) -> CommStats {
-        let mut total = CommStats::default();
-        while let Ok(s) = self.comm_rx.try_recv() {
+        let rx = self.comm_rx.lock().expect("comm receiver");
+        let mut total = self.comm_total.lock().expect("comm total");
+        while let Ok(s) = rx.try_recv() {
             total.merge(&s);
         }
-        total
+        *total
     }
 
     /// Shut down: close queues and join workers.
@@ -260,10 +357,10 @@ fn worker_loop(
     weights: Arc<WeightStore>,
     plan: Vec<StagePlan>,
     batch: BatchPolicy,
-    stop_token: Option<i32>,
     adapt_speeds: bool,
     rx: Receiver<WorkItem>,
     router: Arc<Router>,
+    counters: Arc<Counters>,
     comm_tx: Sender<CommStats>,
     ready_tx: Sender<Result<(), String>>,
 ) {
@@ -307,16 +404,22 @@ fn worker_loop(
         if continuous { "continuous batching" } else { "run-to-completion batching" },
     );
 
-    let mut queue = AdmissionQueue::new(rx);
+    let mut queue: AdmissionQueue<WorkItem> = AdmissionQueue::new(rx);
     let mut active: Vec<Option<ActiveItem>> = (0..bucket).map(|_| None).collect();
 
-    let fail = |active_item: ActiveItem, msg: &str| {
-        let _ = active_item.item.reply.send(Err(msg.to_string()));
+    let fail_item = |item: WorkItem, err: ServiceError| {
+        counters.count_terminal(&err);
+        let _ = item.events.send(RequestEvent::Failed(err));
         router.complete(rid);
     };
     let deliver = |active_item: ActiveItem, tokens: Vec<i32>| {
+        counters.completed.fetch_add(1, Ordering::Relaxed);
+        counters.tokens_out.fetch_add(tokens.len() as u64, Ordering::Relaxed);
         let completion = Completion {
+            id: active_item.item.id,
             text: tokenizer::decode(&tokens),
+            prompt_tokens: active_item.item.prompt_used,
+            truncated: active_item.item.truncated,
             latency: active_item.item.submitted.elapsed().as_secs_f64(),
             queued: (active_item.admitted - active_item.item.submitted).as_secs_f64(),
             replica: rid,
@@ -326,14 +429,42 @@ fn worker_loop(
             decode_steps: tokens.len().saturating_sub(1),
             tokens,
         };
-        let _ = active_item.item.reply.send(Ok(completion));
+        let _ = active_item.item.events.send(RequestEvent::Done(completion));
         router.complete(rid);
+    };
+    let emit_token = |a: &mut ActiveItem, token: i32| {
+        let _ = a.item.events.send(RequestEvent::Token {
+            index: a.emitted,
+            token,
+            text_delta: tokenizer::decode(&[token]),
+        });
+        a.emitted += 1;
     };
 
     loop {
-        // ---- block when idle, otherwise just sweep the channel --------
-        if session.active() == 0 && !queue.wait() {
-            break; // shutdown: channel closed and drained, nothing in flight
+        // ---- cancellation sweep at the step boundary ------------------
+        // Cancelled active rows release their KV slots (admissible again
+        // below) and the router's load count; cancelled queued requests
+        // never run at all.
+        for slot in 0..bucket {
+            let hit = active[slot].as_ref().is_some_and(|a| a.item.cancel.is_cancelled());
+            if hit {
+                let a = active[slot].take().expect("active row");
+                let _ = session.cancel_slot(slot);
+                fail_item(a.item, ServiceError::Cancelled);
+            }
+        }
+        for item in queue.drain_where(|it| it.cancel.is_cancelled()) {
+            fail_item(item, ServiceError::Cancelled);
+        }
+
+        // ---- block when idle (waking periodically for the sweep) ------
+        if session.active() == 0 && queue.pending() == 0 {
+            match queue.wait_for(CANCEL_SWEEP_INTERVAL) {
+                WaitOutcome::Ready => {}
+                WaitOutcome::TimedOut => continue,
+                WaitOutcome::Closed => break, // shutdown: drained, nothing in flight
+            }
         }
 
         // ---- admission at a step boundary -----------------------------
@@ -341,7 +472,15 @@ fn worker_loop(
         // retired; continuous mode admits into any freed slot.
         let free = session.free_slots();
         let avail = if continuous || session.active() == 0 { free.len() } else { 0 };
-        let admitted = queue.admit(avail, session.active() == 0, &batch);
+        let mut admitted = Vec::new();
+        for item in queue.admit(avail, session.active() == 0, &batch) {
+            // Cancelled between the sweep and the admit: never runs.
+            if item.cancel.is_cancelled() {
+                fail_item(item, ServiceError::Cancelled);
+            } else {
+                admitted.push(item);
+            }
+        }
         if !admitted.is_empty() {
             let now = Instant::now();
             let cohort = session.active() + admitted.len();
@@ -353,21 +492,25 @@ fn worker_loop(
                     SlotRequest {
                         prompt: item.prompt_tokens.clone(),
                         max_new: item.max_new,
-                        stop: stop_token,
+                        stop: item.stop,
                     },
                 ));
+                let _ = item
+                    .events
+                    .send(RequestEvent::Admitted { replica: rid, batch_size: cohort });
                 active[slot] = Some(ActiveItem {
                     item,
                     admitted: now,
                     cohort,
                     prefill_seconds: 0.0,
                     decode_start: now,
+                    emitted: 0,
                 });
                 slots_used.push(slot);
             }
             let t0 = Instant::now();
             match session.prefill_into_slots(reqs) {
-                Ok(finished) => {
+                Ok(out) => {
                     let pf = t0.elapsed().as_secs_f64();
                     let end = Instant::now();
                     for &slot in &slots_used {
@@ -376,18 +519,26 @@ fn worker_loop(
                             a.decode_start = end;
                         }
                     }
-                    for (slot, tokens) in finished {
+                    for (slot, tok) in out.tokens {
+                        if let Some(a) = active[slot].as_mut() {
+                            emit_token(a, tok);
+                        }
+                    }
+                    for (slot, tokens) in out.finished {
                         if let Some(a) = active[slot].take() {
                             deliver(a, tokens);
                         }
                     }
                 }
                 Err(e) => {
-                    let msg = format!("replica {rid} prefill failed: {e:#}");
-                    crate::log_error!("{msg}");
+                    let message = format!("prefill failed: {e:#}");
+                    crate::log_error!("replica {rid} {message}");
                     for slot in slots_used {
                         if let Some(a) = active[slot].take() {
-                            fail(a, &msg);
+                            fail_item(
+                                a.item,
+                                ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
+                            );
                         }
                     }
                 }
@@ -399,7 +550,7 @@ fn worker_loop(
             let rows = session.active();
             let t0 = Instant::now();
             match session.decode_step() {
-                Ok(finished) => {
+                Ok(out) => {
                     if adapt_speeds {
                         // One token per active row per iteration: fold the
                         // measured decode throughput into the router's
@@ -409,25 +560,51 @@ fn worker_loop(
                             router.observe_rate(rid, rows as f64 / dt);
                         }
                     }
-                    for (slot, tokens) in finished {
+                    for (slot, tok) in out.tokens {
+                        if let Some(a) = active[slot].as_mut() {
+                            emit_token(a, tok);
+                        }
+                    }
+                    for (slot, tokens) in out.finished {
                         if let Some(a) = active[slot].take() {
                             deliver(a, tokens);
                         }
                     }
                 }
                 Err(e) => {
-                    let msg = format!("replica {rid} decode failed: {e:#}");
-                    crate::log_error!("{msg}");
+                    let message = format!("decode failed: {e:#}");
+                    crate::log_error!("replica {rid} {message}");
                     for slot_item in active.iter_mut() {
                         if let Some(a) = slot_item.take() {
-                            fail(a, &msg);
+                            fail_item(
+                                a.item,
+                                ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
+                            );
                         }
                     }
                     // The session's slot state may be inconsistent after a
-                    // mid-step failure: start from a fresh one.
+                    // mid-step failure: start from a fresh one. If even the
+                    // rebuild fails, the replica is dead — fail everything
+                    // still buffered in its queue instead of dropping the
+                    // requests silently (their senders would hang forever).
                     session = match exec.new_session(bucket) {
                         Ok(s) => s,
-                        Err(_) => return,
+                        Err(e2) => {
+                            let message = format!("session rebuild failed: {e2:#}");
+                            crate::log_error!(
+                                "replica {rid} {message}; failing queued requests and exiting"
+                            );
+                            for item in queue.drain_all() {
+                                fail_item(
+                                    item,
+                                    ServiceError::ReplicaFailed {
+                                        replica: rid,
+                                        message: message.clone(),
+                                    },
+                                );
+                            }
+                            return;
+                        }
                     };
                 }
             }
@@ -438,17 +615,4 @@ fn worker_loop(
             let _ = comm_tx.send(comm);
         }
     }
-}
-
-/// Convenience: wait on many submissions.
-pub fn collect_all(
-    rxs: Vec<Receiver<Result<Completion, String>>>,
-    timeout: Duration,
-) -> Vec<Result<Completion, String>> {
-    rxs.into_iter()
-        .map(|rx| {
-            rx.recv_timeout(timeout)
-                .unwrap_or_else(|e| Err(format!("timeout: {e}")))
-        })
-        .collect()
 }

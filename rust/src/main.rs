@@ -31,13 +31,19 @@ Experiments (regenerate the paper's evaluation):
   all                run every experiment in sequence
 
 Serving & tools:
-  serve --prompt <text> [--plan FILE] [--replicas N] [--max-new N]
-        [--artifacts DIR]
+  serve [--listen ADDR] [--prompt <text>] [--plan FILE] [--replicas N]
+        [--max-new N] [--artifacts DIR]
                      serve the demo model; --plan boots the replicas from
                      a scheduler --emit-plan file (lowered onto the
                      artifact manifest, with plan cost estimates seeding
                      the router's per-replica speeds), otherwise toy
-                     presets via --replicas
+                     presets via --replicas.
+                     --listen ADDR (e.g. 127.0.0.1:8080; port 0 picks an
+                     ephemeral port) runs a long-lived HTTP/1.1 front-end:
+                       POST /v1/completions   {"prompt": ..., "max_new": N,
+                                               "stream": true -> SSE tokens}
+                       GET  /healthz | /metrics | /v1/plan
+                     Without --listen, serves --prompt once and exits.
   schedule [--cluster NAME] [--emit-plan FILE]
                      run the two-phase scheduler on a cluster preset and
                      print the deployment (presets: homogeneous,
@@ -102,17 +108,41 @@ fn main() -> Result<()> {
 /// toy `--replicas` presets.
 fn serve(args: &Args) -> Result<()> {
     use hexgen::coordinator::{
-        lower_plan, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+        lower_plan, plan_from_strategy, BatchPolicy, HexGenService, HttpServer, RoutePolicy,
+        ServiceConfig, StagePlan,
     };
     use hexgen::parallelism::DeploymentPlan;
     use hexgen::runtime::Manifest;
+
+    /// Toy replica presets shaped to whatever model the artifacts serve:
+    /// even replicas get an asymmetric TP(high)→TP1 split (front-loaded
+    /// layers, as the paper's §3.1 case study), odd ones a uniform TP1
+    /// pipeline.
+    fn toy_plans(m: &Manifest, n: usize) -> Result<Vec<Vec<StagePlan>>> {
+        let layers = m.model.layers;
+        let tp_hi = m.tp_degrees.iter().copied().max().unwrap_or(1);
+        (0..n.max(1))
+            .map(|i| {
+                if layers >= 2 && i % 2 == 0 {
+                    let front = (layers * 2 / 3).clamp(1, layers - 1);
+                    plan_from_strategy(&[tp_hi, 1], &[front, layers - front])
+                } else if layers >= 2 {
+                    let front = layers / 2;
+                    plan_from_strategy(&[1, 1], &[front, layers - front])
+                } else {
+                    plan_from_strategy(&[1], &[layers])
+                }
+            })
+            .collect()
+    }
+
     let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
     if !dir.join("manifest.json").exists() {
         bail!("artifacts not found in {dir:?}; run `make artifacts` first");
     }
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
     let (plans, speeds) = if let Some(path) = args.get("plan") {
         let plan = DeploymentPlan::load(std::path::Path::new(path))?;
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
         let lowered = lower_plan(&plan, &manifest)?;
         println!(
             "lowered plan {path} (cluster '{}', model {}) onto served model {}:",
@@ -132,24 +162,7 @@ fn serve(args: &Args) -> Result<()> {
         }
         (lowered.replicas, Some(lowered.speeds))
     } else {
-        let replicas = args.get_usize("replicas", 2);
-        let plans = match replicas {
-            1 => vec![plan_from_strategy(&[2, 1], &[4, 2])?],
-            2 => vec![
-                plan_from_strategy(&[2, 1], &[4, 2])?,
-                plan_from_strategy(&[1, 1], &[3, 3])?,
-            ],
-            n => (0..n)
-                .map(|i| {
-                    if i % 2 == 0 {
-                        plan_from_strategy(&[2, 1], &[4, 2])
-                    } else {
-                        plan_from_strategy(&[1], &[6])
-                    }
-                })
-                .collect::<Result<Vec<_>>>()?,
-        };
-        (plans, None)
+        (toy_plans(&manifest, args.get_usize("replicas", 2))?, None)
     };
     println!("starting service with {} replica(s)...", plans.len());
     let service = HexGenService::start(ServiceConfig {
@@ -163,9 +176,27 @@ fn serve(args: &Args) -> Result<()> {
         max_new_tokens: args.get_usize("max-new", 16),
         stop_token: None,
     })?;
+
+    // Long-running mode: expose the service over HTTP and block.
+    if let Some(listen) = args.get("listen") {
+        let service = std::sync::Arc::new(service);
+        let server = HttpServer::serve(service, listen)?;
+        println!("listening on http://{}", server.addr());
+        println!("  POST /v1/completions   (\"stream\": true -> SSE token events)");
+        println!("  GET  /healthz | /metrics | /v1/plan");
+        server.join();
+        return Ok(());
+    }
+
     let prompt = args.get_str("prompt", "the quick brown fox jumps over the lazy dog");
     let c = service.generate(&prompt, None)?;
     println!("prompt   : {prompt}");
+    if c.truncated {
+        println!(
+            "           (truncated: only the last {} prompt tokens fit the context)",
+            c.prompt_tokens
+        );
+    }
     println!("tokens   : {:?}", c.tokens);
     println!("text     : {:?}", c.text);
     println!(

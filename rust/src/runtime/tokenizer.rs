@@ -9,11 +9,19 @@ pub const PAD: i32 = 0;
 
 /// Encode text to exactly `prompt_len` byte tokens.
 pub fn encode(text: &str, prompt_len: usize) -> Vec<i32> {
+    encode_report(text, prompt_len).0
+}
+
+/// [`encode`], also reporting the prompt's full pre-truncation token
+/// count so callers can surface truncation instead of dropping the
+/// oldest tokens silently: `full > prompt_len` means the prompt was
+/// left-truncated to its most recent `prompt_len` tokens.
+pub fn encode_report(text: &str, prompt_len: usize) -> (Vec<i32>, usize) {
     let bytes = text.as_bytes();
     let take = bytes.len().min(prompt_len);
     let mut out = vec![PAD; prompt_len - take];
     out.extend(bytes[bytes.len() - take..].iter().map(|&b| b as i32));
-    out
+    (out, bytes.len())
 }
 
 /// Decode generated tokens back to text (lossy; PAD dropped).
@@ -51,6 +59,16 @@ mod tests {
     #[test]
     fn decode_skips_pad_and_out_of_range() {
         assert_eq!(decode(&[0, 72, 105, 300, -5]), "Hi");
+    }
+
+    #[test]
+    fn encode_report_surfaces_truncation() {
+        let (tokens, full) = encode_report("abcdef", 3);
+        assert_eq!(tokens, vec![b'd' as i32, b'e' as i32, b'f' as i32]);
+        assert_eq!(full, 6, "full pre-truncation length");
+        let (tokens, full) = encode_report("hi", 5);
+        assert_eq!(tokens.len(), 5);
+        assert_eq!(full, 2, "short prompts report their own length");
     }
 
     #[test]

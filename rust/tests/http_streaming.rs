@@ -1,0 +1,224 @@
+//! End-to-end tests of the std-only HTTP/1.1 front-end over a real
+//! socket: non-streaming completions (token parity with the blocking
+//! `generate()`), SSE streaming (`Token` events strictly before `Done`),
+//! and the observability endpoints.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hexgen::coordinator::{
+    plan_from_strategy, BatchPolicy, HexGenService, HttpServer, RoutePolicy, ServiceConfig,
+};
+use hexgen::runtime::BackendKind;
+use hexgen::util::json::Json;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
+}
+
+/// One TP=2 replica on the fixture model + an HTTP front-end bound to an
+/// ephemeral port.
+fn start() -> (Arc<HexGenService>, HttpServer) {
+    let cfg = ServiceConfig {
+        artifacts_dir: fixture_dir(),
+        backend: BackendKind::Reference,
+        replicas: vec![plan_from_strategy(&[2], &[2]).unwrap()],
+        batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(5), continuous: true },
+        route: RoutePolicy::LeastLoaded,
+        speeds: None,
+        adapt_speeds: true,
+        max_new_tokens: 4,
+        stop_token: None,
+    };
+    let service = Arc::new(HexGenService::start(cfg).unwrap());
+    let server = HttpServer::serve(service.clone(), "127.0.0.1:0").unwrap();
+    (service, server)
+}
+
+/// One raw HTTP/1.1 exchange; the server closes after each response, so
+/// read-to-EOF returns the full response.
+fn exchange(addr: SocketAddr, raw: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(raw.as_bytes()).unwrap();
+    let mut out = String::new();
+    stream.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn get(addr: SocketAddr, path: &str) -> String {
+    exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: hexgen\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+    exchange(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: hexgen\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split_whitespace().nth(1).unwrap().parse().unwrap()
+}
+
+fn body_json(resp: &str) -> Json {
+    let body = resp.split("\r\n\r\n").nth(1).expect("response has a body");
+    Json::parse(body).unwrap_or_else(|e| panic!("bad json body: {e}\n{body}"))
+}
+
+fn tokens_of(j: &Json) -> Vec<i64> {
+    j.arr("tokens").unwrap().iter().map(|t| t.as_f64().unwrap() as i64).collect()
+}
+
+/// Extract `(event, data)` pairs from an SSE body.
+fn sse_events(resp: &str) -> Vec<(String, Json)> {
+    let body = resp.split("\r\n\r\n").nth(1).expect("response has a body");
+    let mut out = Vec::new();
+    let mut event = String::new();
+    for line in body.lines() {
+        if let Some(e) = line.strip_prefix("event: ") {
+            event = e.trim().to_string();
+        } else if let Some(d) = line.strip_prefix("data: ") {
+            out.push((event.clone(), Json::parse(d.trim()).unwrap()));
+        }
+    }
+    out
+}
+
+#[test]
+fn health_metrics_and_plan_endpoints() {
+    let (service, server) = start();
+    let addr = server.addr();
+
+    let health = get(addr, "/healthz");
+    assert_eq!(status_of(&health), 200);
+    let j = body_json(&health);
+    assert_eq!(j.str("status").unwrap(), "ok");
+    assert_eq!(j.usize("replicas").unwrap(), 1);
+
+    // Serve one request so metrics have something to report.
+    let resp = post(addr, "/v1/completions", r#"{"prompt": "metrics probe", "max_new": 3}"#);
+    assert_eq!(status_of(&resp), 200);
+
+    let metrics = get(addr, "/metrics");
+    assert_eq!(status_of(&metrics), 200);
+    let j = body_json(&metrics);
+    assert_eq!(j.get("router").unwrap().arr("speeds").unwrap().len(), 1);
+    assert_eq!(j.get("router").unwrap().arr("outstanding").unwrap().len(), 1);
+    assert!(j.get("requests").unwrap().usize("completed").unwrap() >= 1);
+    assert!(j.get("comm").unwrap().usize("allreduce_ops").unwrap() > 0, "TP=2 ran collectives");
+
+    let plan = get(addr, "/v1/plan");
+    assert_eq!(status_of(&plan), 200);
+    let j = body_json(&plan);
+    let replicas = j.arr("replicas").unwrap();
+    assert_eq!(replicas.len(), 1);
+    assert_eq!(replicas[0].str("strategy").unwrap(), "[2]");
+    assert_eq!(replicas[0].arr("stages").unwrap()[0].usize("tp").unwrap(), 2);
+
+    let missing = get(addr, "/nope");
+    assert_eq!(status_of(&missing), 404);
+
+    server.shutdown();
+    drop(service);
+}
+
+#[test]
+fn nonstreaming_completion_matches_blocking_generate() {
+    let (service, server) = start();
+    let addr = server.addr();
+
+    // "parity" is 6 bytes, under the fixture's 8-token prompt_len: no
+    // truncation expected.
+    let reference = service.generate("parity", Some(4)).unwrap();
+    let resp = post(addr, "/v1/completions", r#"{"prompt": "parity", "max_new": 4}"#);
+    assert_eq!(status_of(&resp), 200);
+    let j = body_json(&resp);
+    let got: Vec<i64> = tokens_of(&j);
+    let want: Vec<i64> = reference.tokens.iter().map(|&t| t as i64).collect();
+    assert_eq!(got, want, "HTTP completion diverged from blocking generate()");
+    assert_eq!(j.str("text").unwrap(), reference.text);
+    assert!(!j.get("truncated").unwrap().as_bool().unwrap());
+    assert_eq!(j.usize("prompt_tokens").unwrap(), 6);
+
+    // Over-long prompts surface truncation in the HTTP response too.
+    let long = "a prompt much longer than the fixture context window";
+    let resp = post(
+        addr,
+        "/v1/completions",
+        &format!(r#"{{"prompt": "{long}", "max_new": 2}}"#),
+    );
+    assert!(body_json(&resp).get("truncated").unwrap().as_bool().unwrap());
+
+    server.shutdown();
+    drop(service);
+}
+
+#[test]
+fn streaming_sse_delivers_tokens_before_done() {
+    let (service, server) = start();
+    let addr = server.addr();
+
+    let reference = service.generate("sse streaming prompt", Some(6)).unwrap();
+    let resp = post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "sse streaming prompt", "max_new": 6, "stream": true}"#,
+    );
+    assert!(resp.contains("text/event-stream"), "SSE content type missing:\n{resp}");
+
+    // Byte-order in the stream: the first token event strictly precedes
+    // the terminal done event.
+    let first_token = resp.find("event: token").expect("no token event in stream");
+    let done = resp.find("event: done").expect("no done event in stream");
+    assert!(first_token < done, "token events must stream before the terminal Done");
+
+    let events = sse_events(&resp);
+    assert_eq!(events.first().map(|(e, _)| e.as_str()), Some("queued"));
+    assert_eq!(events.get(1).map(|(e, _)| e.as_str()), Some("admitted"));
+    let streamed: Vec<i64> = events
+        .iter()
+        .filter(|(e, _)| e == "token")
+        .map(|(_, d)| d.f64("token").unwrap() as i64)
+        .collect();
+    let want: Vec<i64> = reference.tokens.iter().map(|&t| t as i64).collect();
+    assert_eq!(streamed, want, "streamed SSE tokens diverged from blocking generate()");
+    let (last_event, last_data) = events.last().unwrap();
+    assert_eq!(last_event, "done");
+    assert_eq!(tokens_of(last_data), want);
+
+    server.shutdown();
+    drop(service);
+}
+
+#[test]
+fn malformed_requests_get_typed_errors() {
+    let (service, server) = start();
+    let addr = server.addr();
+
+    let resp = post(addr, "/v1/completions", "{not json");
+    assert_eq!(status_of(&resp), 400);
+    let resp = post(addr, "/v1/completions", r#"{"max_new": 4}"#);
+    assert_eq!(status_of(&resp), 400);
+    assert!(body_json(&resp).str("error").unwrap().contains("prompt"));
+    let resp = post(addr, "/v1/completions", r#"{"prompt": "x", "max_new": 0}"#);
+    assert_eq!(status_of(&resp), 400, "max_new=0 maps InvalidRequest to 400");
+    let resp = post(addr, "/v1/completions", r#"{"prompt": "x", "stream": "yes"}"#);
+    assert_eq!(status_of(&resp), 400);
+
+    // A huge declared Content-Length must be rejected up front (413),
+    // not allocated.
+    let resp = exchange(
+        addr,
+        "POST /v1/completions HTTP/1.1\r\nHost: hexgen\r\nContent-Length: 99999999999\r\n\r\n",
+    );
+    assert_eq!(status_of(&resp), 413);
+
+    server.shutdown();
+    drop(service);
+}

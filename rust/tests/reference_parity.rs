@@ -224,25 +224,30 @@ fn staggered_admission_matches_solo_runs() {
     let mut session = exec.new_session(2).unwrap();
     assert_eq!(session.bucket(), 2);
     assert_eq!(session.free_slots(), vec![0, 1]);
-    let fin = session
+    let out = session
         .prefill_into_slots(vec![(0, SlotRequest { prompt: pa, max_new: 8, stop: None })])
         .unwrap();
-    assert!(fin.is_empty());
+    assert!(out.finished.is_empty());
+    assert_eq!(out.tokens.len(), 1, "prefill reports the admitted row's first token");
     assert_eq!(session.active(), 1);
 
-    // Three decode steps with A alone, then admit B mid-flight.
+    // Three decode steps with A alone, then admit B mid-flight. Every
+    // step must report A's new token even though nothing finished.
     for _ in 0..3 {
-        assert!(session.decode_step().unwrap().is_empty());
+        let step = session.decode_step().unwrap();
+        assert!(step.finished.is_empty());
+        assert_eq!(step.tokens.len(), 1, "in-flight rows stream one token per step");
+        assert_eq!(step.tokens[0].0, 0);
     }
-    let fin = session
+    let out = session
         .prefill_into_slots(vec![(1, SlotRequest { prompt: pb, max_new: 3, stop: None })])
         .unwrap();
-    assert!(fin.is_empty());
+    assert!(out.finished.is_empty());
     assert_eq!(session.active(), 2);
 
     let mut done = std::collections::BTreeMap::new();
     while session.active() > 0 {
-        for (slot, toks) in session.decode_step().unwrap() {
+        for (slot, toks) in session.decode_step().unwrap().finished {
             done.insert(slot, toks);
         }
     }
@@ -254,6 +259,61 @@ fn staggered_admission_matches_solo_runs() {
     assert_eq!(done[&1], solo_b, "late-admitted row diverged from solo run");
     // A needed 7 decode iterations; B's 2 rode along within them.
     assert_eq!(session.decode_steps(), 7);
+}
+
+#[test]
+fn cancel_slot_frees_mid_decode_and_readmits() {
+    // Deterministic session-level cancellation: cancel a row mid-decode,
+    // admit a queued request into the freed slot, and verify the
+    // survivor and the newcomer both match their solo greedy runs.
+    use hexgen::coordinator::SlotRequest;
+    let dir = fixture_dir();
+    let exec = PipelineExecutor::with_backend(
+        load_backend(BackendKind::Reference, &dir).unwrap(),
+        plan_from_strategy(&[1], &[2]).unwrap(),
+    )
+    .unwrap();
+    let prompt_len = exec.manifest().model.prompt_len;
+    // Distinct once left-truncated to the 8-token prompt_len ("doomed
+    // request"-style pairs would collapse to the same " request" tail).
+    let pa = tokenizer::encode("doomed row", prompt_len);
+    let pb = tokenizer::encode("survivor", prompt_len);
+    let pc = tokenizer::encode("late join", prompt_len);
+    let solo_b = exec.generate(&[pb.clone()], 8).unwrap().tokens[0].clone();
+    let solo_c = exec.generate(&[pc.clone()], 4).unwrap().tokens[0].clone();
+
+    let mut session = exec.new_session(2).unwrap();
+    session
+        .prefill_into_slots(vec![
+            (0, SlotRequest { prompt: pa, max_new: 8, stop: None }),
+            (1, SlotRequest { prompt: pb, max_new: 8, stop: None }),
+        ])
+        .unwrap();
+    for _ in 0..2 {
+        session.decode_step().unwrap();
+    }
+    assert_eq!(session.active(), 2);
+
+    // Cancel A at the step boundary: prefill token + 2 decode tokens so
+    // far, slot 0 freed for admission.
+    let partial = session.cancel_slot(0).expect("active row must cancel");
+    assert_eq!(partial.len(), 3, "partial tokens generated before cancellation");
+    assert_eq!(session.active(), 1);
+    assert_eq!(session.free_slots(), vec![0]);
+    assert!(session.cancel_slot(0).is_none(), "double-cancel is a no-op");
+
+    // The freed slot serves a new request; B is unperturbed.
+    session
+        .prefill_into_slots(vec![(0, SlotRequest { prompt: pc, max_new: 4, stop: None })])
+        .unwrap();
+    let mut done = std::collections::BTreeMap::new();
+    while session.active() > 0 {
+        for (slot, toks) in session.decode_step().unwrap().finished {
+            done.insert(slot, toks);
+        }
+    }
+    assert_eq!(done[&0], solo_c, "readmitted row diverged from its solo run");
+    assert_eq!(done[&1], solo_b, "surviving row perturbed by cancellation");
 }
 
 #[test]
@@ -292,16 +352,16 @@ fn stop_token_retires_row_early() {
     )
     .unwrap();
     let mut session = exec.new_session(1).unwrap();
-    let fin = session
+    let out = session
         .prefill_into_slots(vec![(
             0,
             SlotRequest { prompt, max_new: want.len(), stop: Some(want[2]) },
         )])
         .unwrap();
-    assert!(fin.is_empty());
+    assert!(out.finished.is_empty());
     let mut got = None;
     while session.active() > 0 {
-        for (_, toks) in session.decode_step().unwrap() {
+        for (_, toks) in session.decode_step().unwrap().finished {
             got = Some(toks);
         }
     }

@@ -4,12 +4,18 @@
 //! native dependencies. The workers run continuous (iteration-level)
 //! batching: requests are admitted into KV-cache slots at decode-step
 //! boundaries and each row stops at its own `max_new`.
+//!
+//! The public surface under test is the request-lifecycle API: a
+//! submitted [`GenRequest`] is observed through a [`RequestHandle`]
+//! streaming `Queued → Admitted → Token… → Done/Failed` events, with
+//! typed [`ServiceError`]s and cancellation.
 
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, HexGenService, RoutePolicy, ServiceConfig,
+    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, RequestEvent,
+    RoutePolicy, ServiceConfig, ServiceError,
 };
 use hexgen::runtime::BackendKind;
 use hexgen::util::json::Json;
@@ -53,6 +59,10 @@ fn one_replica_config(dir: PathBuf, window: Duration) -> ServiceConfig {
     }
 }
 
+fn req(prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest::new(prompt).with_max_new(max_new)
+}
+
 #[test]
 fn service_serves_batched_requests() {
     let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
@@ -66,8 +76,8 @@ fn service_serves_batched_requests() {
         "llama seventy billion",
         "scheduling via genetic algorithm",
     ];
-    let rxs: Vec<_> = prompts.iter().map(|p| service.submit(p, Some(4))).collect();
-    let results = collect_all(rxs, Duration::from_secs(120));
+    let handles: Vec<_> = prompts.iter().map(|p| service.submit(req(p, 4))).collect();
+    let results = collect_all(handles, Duration::from_secs(120));
 
     let mut replicas_used = std::collections::BTreeSet::new();
     for r in &results {
@@ -77,14 +87,70 @@ fn service_serves_batched_requests() {
         assert!(c.latency >= c.queued);
         assert!(c.batch_size >= 1 && c.batch_size <= 2);
         assert_eq!(c.decode_steps, c.tokens.len() - 1);
+        assert!(c.prompt_tokens > 0);
         replicas_used.insert(c.replica);
     }
     // 6 concurrent requests over 2 replicas: both should see traffic.
     assert_eq!(replicas_used.len(), 2, "router never used one replica");
+    // Request ids are unique.
+    let mut ids: Vec<_> = results.iter().map(|r| r.as_ref().unwrap().id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), prompts.len(), "request ids must be unique");
 
     let comm = service.comm_stats();
     assert!(comm.allreduce_ops > 0, "TP collectives should have run");
     assert!(comm.pp_sends > 0, "PP hand-offs should have run");
+
+    let stats = service.stats();
+    assert_eq!(stats.submitted, 6);
+    assert_eq!(stats.completed, 6);
+    assert_eq!(stats.failed + stats.cancelled, 0);
+    assert_eq!(stats.tokens_out, 24);
+    service.shutdown();
+}
+
+#[test]
+fn lifecycle_events_stream_in_order_with_token_parity() {
+    // One request through an idle service: the event stream must be
+    // Queued, Admitted, Token{0..n}, Done — with the streamed tokens
+    // exactly equal to the completion's tokens (streaming parity).
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(5))).unwrap();
+    let handle = service.submit(req("lifecycle probe", 5));
+    let mut events = Vec::new();
+    loop {
+        let ev = handle.next_event().unwrap();
+        let terminal = ev.is_terminal();
+        events.push(ev);
+        if terminal {
+            break;
+        }
+    }
+    assert!(matches!(events[0], RequestEvent::Queued), "{events:?}");
+    assert!(
+        matches!(events[1], RequestEvent::Admitted { batch_size: 1, .. }),
+        "{events:?}"
+    );
+    let streamed: Vec<i32> = events
+        .iter()
+        .filter_map(|e| match e {
+            RequestEvent::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    let indexes: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            RequestEvent::Token { index, .. } => Some(*index),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(indexes, (0..5usize).collect::<Vec<_>>(), "token indexes must be contiguous");
+    let RequestEvent::Done(c) = events.last().unwrap() else {
+        panic!("expected Done terminal, got {:?}", events.last());
+    };
+    assert_eq!(streamed, c.tokens, "streamed tokens must match the completion");
     service.shutdown();
 }
 
@@ -142,8 +208,8 @@ fn overcommitted_queue_drains_through_slot_reuse() {
     let mut cfg = two_replica_config(fixture_dir());
     cfg.batch = BatchPolicy { max_batch: 4, window: Duration::from_millis(30), continuous: true };
     let service = HexGenService::start(cfg).unwrap();
-    let rxs: Vec<_> = (0..4).map(|_| service.submit("overflow probe", Some(2))).collect();
-    let results = collect_all(rxs, Duration::from_secs(60));
+    let handles: Vec<_> = (0..4).map(|_| service.submit(req("overflow probe", 2))).collect();
+    let results = collect_all(handles, Duration::from_secs(60));
     for r in &results {
         let c = r.as_ref().expect("request failed");
         assert_eq!(c.tokens.len(), 2);
@@ -159,10 +225,11 @@ fn mixed_max_new_each_row_gets_exactly_its_own_length() {
     // max). The wide idle window makes the co-batching deterministic.
     let service =
         HexGenService::start(one_replica_config(fixture_dir(), Duration::from_secs(2))).unwrap();
-    let rx_small = service.submit("short request", Some(2));
-    let rx_large = service.submit("long request please", Some(7));
-    let small = rx_small.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
-    let large = rx_large.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let h_small = service.submit(req("short request", 2));
+    let h_large = service.submit(req("long request please", 7));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let small = h_small.wait_deadline(deadline).unwrap();
+    let large = h_large.wait_deadline(deadline).unwrap();
     assert_eq!(small.tokens.len(), 2, "small row must stop at its own max_new");
     assert_eq!(large.tokens.len(), 7);
     // Both were admitted in one cohort, so the small row really did stop
@@ -183,11 +250,11 @@ fn burst_with_staggered_limits_all_exact() {
         HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(5)))
             .unwrap();
     let limits: Vec<usize> = vec![1, 2, 3, 4, 5, 6];
-    let rxs: Vec<_> = limits
+    let handles: Vec<_> = limits
         .iter()
-        .map(|&n| service.submit(&format!("burst request {n}"), Some(n)))
+        .map(|&n| service.submit(req(&format!("burst request {n}"), n)))
         .collect();
-    let results = collect_all(rxs, Duration::from_secs(120));
+    let results = collect_all(handles, Duration::from_secs(120));
     for (r, &n) in results.iter().zip(&limits) {
         let c = r.as_ref().expect("request failed");
         assert_eq!(c.tokens.len(), n, "row asked for {n} tokens");
@@ -211,17 +278,17 @@ fn continuous_batching_preserves_greedy_parity() {
         .collect();
 
     let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
-    let mut golden_rxs = Vec::new();
-    let mut noise_rxs = Vec::new();
+    let mut golden_handles = Vec::new();
+    let mut noise_handles = Vec::new();
     for i in 0..4 {
-        golden_rxs.push(service.submit(&prompt, Some(want.len())));
-        noise_rxs.push(service.submit(&format!("noise traffic {i}"), Some(i + 1)));
+        golden_handles.push(service.submit(req(&prompt, want.len())));
+        noise_handles.push(service.submit(req(&format!("noise traffic {i}"), i + 1)));
     }
-    for r in collect_all(golden_rxs, Duration::from_secs(120)) {
+    for r in collect_all(golden_handles, Duration::from_secs(120)) {
         let c = r.expect("golden request failed");
         assert_eq!(c.tokens, want, "continuous batching diverged from golden greedy tokens");
     }
-    for r in collect_all(noise_rxs, Duration::from_secs(120)) {
+    for r in collect_all(noise_handles, Duration::from_secs(120)) {
         r.expect("noise request failed");
     }
     service.shutdown();
@@ -229,17 +296,145 @@ fn continuous_batching_preserves_greedy_parity() {
 
 #[test]
 fn invalid_max_new_rejected_without_failing_neighbours() {
-    // A max_new=0 request is rejected at submit; a valid request sent in
-    // the same window must be unaffected.
+    // A max_new=0 request is rejected at submit with a typed error; a
+    // valid request sent in the same window must be unaffected.
     let service =
         HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(20)))
             .unwrap();
-    let rx_bad = service.submit("zero tokens please", Some(0));
-    let rx_good = service.submit("valid neighbour", Some(3));
-    let bad = rx_bad.recv_timeout(Duration::from_secs(60)).unwrap();
-    assert!(bad.is_err(), "max_new=0 must be rejected");
-    let good = rx_good.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let h_bad = service.submit(req("zero tokens please", 0));
+    let h_good = service.submit(req("valid neighbour", 3));
+    match h_bad.wait() {
+        Err(ServiceError::InvalidRequest(msg)) => assert!(msg.contains("max_new"), "{msg}"),
+        other => panic!("max_new=0 must be InvalidRequest, got {other:?}"),
+    }
+    let good = h_good.wait_deadline(Instant::now() + Duration::from_secs(120)).unwrap();
     assert_eq!(good.tokens.len(), 3);
+    service.shutdown();
+}
+
+#[test]
+fn prompt_truncation_is_reported() {
+    // The fixture model's prompt_len is 8; a 34-byte prompt must be
+    // flagged as truncated instead of silently losing its oldest tokens.
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(5))).unwrap();
+    let prompt_len = service.manifest().model.prompt_len;
+    let long_prompt = "this prompt is longer than the context";
+    assert!(long_prompt.len() > prompt_len);
+    let c = service.generate(long_prompt, Some(2)).unwrap();
+    assert!(c.truncated, "over-long prompt must report truncation");
+    assert_eq!(c.prompt_tokens, prompt_len, "in-context token count caps at prompt_len");
+
+    let c = service.generate("tiny", Some(2)).unwrap();
+    assert!(!c.truncated);
+    assert_eq!(c.prompt_tokens, 4);
+    service.shutdown();
+}
+
+#[test]
+fn cancelling_queued_request_frees_it_and_neighbours_complete() {
+    // Two slots, four long requests: C and D start queued. Cancelling C
+    // right away must terminate it with Cancelled (it never runs), while
+    // A, B and D all complete at their full lengths through the slots
+    // that cancellation + retirement free up.
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(20)))
+            .unwrap();
+    let h_a = service.submit(req("request a", 8));
+    let h_b = service.submit(req("request b", 8));
+    let h_c = service.submit(req("request c", 8));
+    let h_d = service.submit(req("request d", 3));
+    h_c.cancel();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    assert_eq!(h_a.wait_deadline(deadline).unwrap().tokens.len(), 8);
+    assert_eq!(h_b.wait_deadline(deadline).unwrap().tokens.len(), 8);
+    assert_eq!(h_c.wait_deadline(deadline), Err(ServiceError::Cancelled));
+    assert_eq!(h_d.wait_deadline(deadline).unwrap().tokens.len(), 3);
+    let stats = service.stats();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.completed, 3);
+    service.shutdown();
+}
+
+#[test]
+fn cancel_mid_decode_frees_the_slot_for_queued_work() {
+    // Streaming + cancellation: receive a Token event for an in-flight
+    // request, cancel it, and observe Failed(Cancelled) — proof the token
+    // was delivered while decode was still running. The freed slot must
+    // then serve a follow-up request. The fixture decodes fast, so a
+    // single attempt can race the request to completion; any Cancelled
+    // outcome within the attempts proves the path.
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(2))).unwrap();
+    let mut cancelled_mid_decode = false;
+    for _ in 0..10 {
+        let handle = service.submit(req("cancel me mid flight", 8));
+        // Wait for the first streamed token (request is in a slot now).
+        loop {
+            match handle.next_event().unwrap() {
+                RequestEvent::Token { .. } => break,
+                ev if ev.is_terminal() => panic!("terminal before first token: {ev:?}"),
+                _ => {}
+            }
+        }
+        handle.cancel();
+        let outcome = handle.wait();
+        match outcome {
+            Err(ServiceError::Cancelled) => {
+                cancelled_mid_decode = true;
+                break;
+            }
+            Ok(c) => assert_eq!(c.tokens.len(), 8, "uncancelled run must still be exact"),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(
+        cancelled_mid_decode,
+        "10 attempts never cancelled mid-decode — cancellation path is broken"
+    );
+    // The freed slot must admit and serve new work.
+    let c = service.generate("after cancellation", Some(4)).unwrap();
+    assert_eq!(c.tokens.len(), 4);
+    // Cancellation released the router's load count: nothing outstanding.
+    // (The worker sends the terminal event just before releasing the
+    // count, so poll briefly instead of asserting instantaneously.)
+    let t0 = Instant::now();
+    while !service.router_snapshot().iter().all(|&(o, _)| o == 0) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "router load leaked after cancellation: {:?}",
+            service.router_snapshot()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    service.shutdown();
+}
+
+#[test]
+fn dropping_a_handle_cancels_the_request() {
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(2))).unwrap();
+    for _ in 0..4 {
+        let handle = service.submit(req("dropped request", 8));
+        drop(handle); // no terminal event observed -> cancels
+    }
+    // The service keeps serving and the dropped requests release their
+    // router load counts (poll briefly: cancellation lands at the
+    // worker's next sweep).
+    let c = service.generate("survivor", Some(4)).unwrap();
+    assert_eq!(c.tokens.len(), 4);
+    let t0 = Instant::now();
+    loop {
+        if service.router_snapshot().iter().all(|&(o, _)| o == 0) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "dropped handles never released the router: {:?}",
+            service.router_snapshot()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
     service.shutdown();
 }
 
@@ -259,8 +454,9 @@ fn unequal_speeds_skew_traffic_toward_fast_replica() {
     let service = HexGenService::start(cfg).unwrap();
     assert_eq!(service.router_speeds(), vec![100.0, 1.0]);
 
-    let rxs: Vec<_> = (0..12).map(|i| service.submit(&format!("skew probe {i}"), Some(4))).collect();
-    let results = collect_all(rxs, Duration::from_secs(120));
+    let handles: Vec<_> =
+        (0..12).map(|i| service.submit(req(&format!("skew probe {i}"), 4))).collect();
+    let results = collect_all(handles, Duration::from_secs(120));
     let mut counts = [0usize; 2];
     for r in &results {
         counts[r.as_ref().expect("request failed").replica] += 1;
@@ -275,8 +471,9 @@ fn adaptive_speeds_reflect_measured_throughput() {
     // measured decode rate into the router: effective speeds leave the
     // uniform 1.0 seeds and become real tokens/s figures.
     let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
-    let rxs: Vec<_> = (0..6).map(|i| service.submit(&format!("adapt probe {i}"), Some(6))).collect();
-    for r in collect_all(rxs, Duration::from_secs(120)) {
+    let handles: Vec<_> =
+        (0..6).map(|i| service.submit(req(&format!("adapt probe {i}"), 6))).collect();
+    for r in collect_all(handles, Duration::from_secs(120)) {
         r.expect("request failed");
     }
     let speeds = service.router_speeds();
@@ -360,10 +557,11 @@ fn static_mode_still_serves() {
     let mut cfg = one_replica_config(fixture_dir(), Duration::from_secs(2));
     cfg.batch.continuous = false;
     let service = HexGenService::start(cfg).unwrap();
-    let rx_a = service.submit("static mode a", Some(2));
-    let rx_b = service.submit("static mode b", Some(5));
-    let a = rx_a.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
-    let b = rx_b.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    let h_a = service.submit(req("static mode a", 2));
+    let h_b = service.submit(req("static mode b", 5));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let a = h_a.wait_deadline(deadline).unwrap();
+    let b = h_b.wait_deadline(deadline).unwrap();
     assert_eq!(a.tokens.len(), 2);
     assert_eq!(b.tokens.len(), 5);
     service.shutdown();

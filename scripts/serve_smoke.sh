@@ -1,0 +1,74 @@
+#!/usr/bin/env bash
+# serve-smoke: boot `hexgen serve --listen` on an ephemeral port against
+# the checked-in fixture model, run a streaming and a non-streaming
+# completion through the HTTP front-end, and assert token parity with the
+# blocking one-shot `generate()` path. Run via `make serve-smoke`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${BIN:-target/release/hexgen}
+FIXTURE=rust/tests/fixtures/ref_demo
+PROMPT="serve smoke prompt"
+MAX_NEW=6
+LOG=$(mktemp)
+cleanup() {
+    if [ -n "${SERVER_PID:-}" ]; then
+        kill "$SERVER_PID" 2>/dev/null || true
+    fi
+    rm -f "$LOG"
+}
+trap cleanup EXIT
+
+[ -x "$BIN" ] || { echo "binary $BIN missing — run 'make build' first" >&2; exit 1; }
+
+# 1) Reference tokens from the blocking generate() path (one-shot serve).
+REF=$("$BIN" serve --artifacts "$FIXTURE" --replicas 1 \
+        --prompt "$PROMPT" --max-new "$MAX_NEW" | sed -n 's/^tokens   : //p')
+[ -n "$REF" ] || { echo "one-shot serve printed no tokens" >&2; exit 1; }
+echo "blocking generate() tokens: $REF"
+
+# 2) Long-running HTTP front-end on an ephemeral port.
+"$BIN" serve --artifacts "$FIXTURE" --replicas 1 --listen 127.0.0.1:0 >"$LOG" 2>&1 &
+SERVER_PID=$!
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's|^listening on http://||p' "$LOG" | head -n1)
+    [ -n "$ADDR" ] && break
+    kill -0 "$SERVER_PID" 2>/dev/null || { echo "server died:" >&2; cat "$LOG" >&2; exit 1; }
+    sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "server never reported its address:" >&2; cat "$LOG" >&2; exit 1; }
+echo "server up at $ADDR"
+
+curl -fsS "http://$ADDR/healthz" >/dev/null
+curl -fsS "http://$ADDR/metrics" >/dev/null
+curl -fsS "http://$ADDR/v1/plan" >/dev/null
+
+NONSTREAM=$(curl -fsS -X POST "http://$ADDR/v1/completions" \
+    -d "{\"prompt\": \"$PROMPT\", \"max_new\": $MAX_NEW}")
+STREAM=$(curl -fsS -N -X POST "http://$ADDR/v1/completions" \
+    -d "{\"prompt\": \"$PROMPT\", \"max_new\": $MAX_NEW, \"stream\": true}")
+
+python3 - "$REF" "$NONSTREAM" "$STREAM" <<'EOF'
+import json
+import sys
+
+ref = json.loads(sys.argv[1])                 # "[1, 2, 3]" printed by one-shot serve
+nonstream = json.loads(sys.argv[2])["tokens"]
+
+stream_tokens, event, saw_done_after_token = [], None, False
+for line in sys.argv[3].splitlines():
+    if line.startswith("event: "):
+        event = line[len("event: "):].strip()
+    elif line.startswith("data: "):
+        data = json.loads(line[len("data: "):])
+        if event == "token":
+            stream_tokens.append(data["token"])
+        elif event == "done":
+            saw_done_after_token = bool(stream_tokens)
+
+assert nonstream == ref, f"non-streaming HTTP diverged: {nonstream} != {ref}"
+assert stream_tokens == ref, f"SSE stream diverged: {stream_tokens} != {ref}"
+assert saw_done_after_token, "done event must follow the token events"
+print(f"serve-smoke OK: {len(ref)} tokens, parity across generate()/HTTP/SSE: {ref}")
+EOF
