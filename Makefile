@@ -23,6 +23,17 @@ test:
 bench-batching:
 	cargo bench -p hexgen --bench batching
 
+# Decode hot-path microbenchmark: in-place caches + threaded TP shards +
+# tiled matmul vs the seed's functional baseline, over a synthetic model
+# (tp x bucket sweep). Writes machine-readable BENCH_decode.json at the
+# repo root — the tracked perf baseline (CI runs the quick variant and
+# uploads the JSON as an artifact).
+bench-decode:
+	cargo bench -p hexgen --bench decode
+
+bench-decode-quick:
+	cargo bench -p hexgen --bench decode -- --quick
+
 # Close the plan→serve loop end-to-end on the checked-in fixture model:
 # schedule the §3.1 case-study pool (small search budget), emit the
 # deployment plan, then boot the live service from it with the reference
@@ -42,4 +53,4 @@ plan-serve:
 serve-smoke: build
 	bash scripts/serve_smoke.sh
 
-.PHONY: artifacts fixture build test bench-batching plan-serve serve-smoke
+.PHONY: artifacts fixture build test bench-batching bench-decode bench-decode-quick plan-serve serve-smoke

@@ -1,0 +1,260 @@
+//! Decode hot-path microbenchmark: the in-place/threaded/tiled decode
+//! path vs the seed's functional baseline, with machine-readable output.
+//!
+//! Runs a synthetic model (large enough that KV-cache traffic matters;
+//! the checked-in 2-layer fixture is too small to resolve the clone
+//! cost) through a full-batch [`DecodeSession`] per config and measures:
+//!
+//! * decode tokens/s and per-step p50/p99 latency,
+//! * prefill tokens/s,
+//! * the same numbers over [`FunctionalBackend`] — the exact seed
+//!   semantics (two full cache clones + two full returned copies per
+//!   shard per layer per token, serial TP shards) — and the speedup.
+//!
+//! Configs sweep `tp ∈ {1, 2} × bucket ∈ {1, 4, 8}`; the headline number
+//! is `(tp=2, bucket=8)`. Results are printed and written as JSON to
+//! `BENCH_decode.json` at the repository root (override with `--out`),
+//! so CI can track the perf trajectory as an artifact:
+//!
+//! ```bash
+//! make bench-decode          # full run
+//! make bench-decode-quick    # CI variant (fewer steps)
+//! ```
+//!
+//! [`DecodeSession`]: hexgen::coordinator::DecodeSession
+//! [`FunctionalBackend`]: hexgen::runtime::FunctionalBackend
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use hexgen::coordinator::{plan_from_strategy, PipelineExecutor, SlotRequest};
+use hexgen::runtime::{
+    ExecutionBackend, FunctionalBackend, Manifest, ReferenceBackend, Tensor, WeightStore,
+};
+use hexgen::util::json::Json;
+use hexgen::util::rng::Xoshiro256pp;
+use hexgen::util::stats::percentile;
+
+const LAYERS: usize = 4;
+const HIDDEN: usize = 64;
+const HEADS: usize = 8;
+const HEAD_DIM: usize = 8;
+const FFN: usize = 256;
+const VOCAB: usize = 256;
+const PROMPT_LEN: usize = 16;
+const MAX_SEQ: usize = 160;
+const TPS: [usize; 2] = [1, 2];
+const BUCKETS: [usize; 3] = [1, 4, 8];
+/// Decode iterations measured per config (the quick CI variant quarters
+/// this). Positions advance identically for both paths, so per-step
+/// attention depth — which grows with position — stays comparable.
+const STEPS: usize = 64;
+const WARMUP_STEPS: usize = 2;
+
+fn synthetic_manifest() -> Manifest {
+    let text = format!(
+        r#"{{
+          "model": {{"name":"bench-decode","layers":{LAYERS},"hidden":{HIDDEN},
+                    "heads":{HEADS},"vocab":{VOCAB},"prompt_len":{PROMPT_LEN},
+                    "max_seq":{MAX_SEQ},"head_dim":{HEAD_DIM},"ffn":{FFN}}},
+          "tp_degrees":[1,2],
+          "batch_buckets":[1,4,8],
+          "weight_order":[],
+          "artifacts":{{}}
+        }}"#
+    );
+    Manifest::parse(&text).expect("synthetic manifest")
+}
+
+fn rand_tensor(rng: &mut Xoshiro256pp, dims: Vec<usize>) -> Tensor {
+    let n: usize = dims.iter().product();
+    // Small weights keep activations bounded over many layers.
+    let data = (0..n).map(|_| (rng.next_f64() * 0.2 - 0.1) as f32).collect();
+    Tensor { dims, data }
+}
+
+fn ones(dims: Vec<usize>) -> Tensor {
+    let n: usize = dims.iter().product();
+    Tensor { dims, data: vec![1.0; n] }
+}
+
+/// Deterministic synthetic weights for every TP degree the sweep uses.
+fn synthetic_weights() -> WeightStore {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xDEC0DE);
+    let mut ws = WeightStore::default();
+    ws.insert("embed", rand_tensor(&mut rng, vec![VOCAB, HIDDEN]));
+    ws.insert("final_ln", ones(vec![HIDDEN]));
+    ws.insert("lm_head", rand_tensor(&mut rng, vec![HIDDEN, VOCAB]));
+    for layer in 0..LAYERS {
+        ws.insert(format!("layers.{layer}.ln1"), ones(vec![HIDDEN]));
+        ws.insert(format!("layers.{layer}.ln2"), ones(vec![HIDDEN]));
+        for tp in TPS {
+            let hs = HEADS / tp * HEAD_DIM;
+            let fs = FFN / tp;
+            for rank in 0..tp {
+                for (w, dims) in [
+                    ("wq", vec![HIDDEN, hs]),
+                    ("wk", vec![HIDDEN, hs]),
+                    ("wv", vec![HIDDEN, hs]),
+                    ("wo", vec![hs, HIDDEN]),
+                    ("w1", vec![HIDDEN, fs]),
+                    ("w2", vec![fs, HIDDEN]),
+                ] {
+                    ws.insert(
+                        WeightStore::shard_name(layer, w, tp, rank),
+                        rand_tensor(&mut rng, dims),
+                    );
+                }
+            }
+        }
+    }
+    ws
+}
+
+struct RunStats {
+    decode_tok_s: f64,
+    step_p50_ms: f64,
+    step_p99_ms: f64,
+    prefill_tok_s: f64,
+}
+
+fn run_config(exec: &PipelineExecutor, bucket: usize, steps: usize) -> RunStats {
+    let m = exec.manifest().model.clone();
+    let mut session = exec.new_session(bucket).expect("session");
+    let reqs: Vec<(usize, SlotRequest)> = (0..bucket)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..m.prompt_len).map(|j| ((i * 31 + j * 7) % 255 + 1) as i32).collect();
+            // Rows stay active for the whole measured run and retire on
+            // the final step.
+            (i, SlotRequest { prompt, max_new: WARMUP_STEPS + steps + 1, stop: None })
+        })
+        .collect();
+    let t0 = Instant::now();
+    let out = session.prefill_into_slots(reqs).expect("prefill");
+    let prefill_s = t0.elapsed().as_secs_f64();
+    assert!(out.finished.is_empty());
+    for _ in 0..WARMUP_STEPS {
+        session.decode_step().expect("warmup step");
+    }
+    let mut samples = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let t = Instant::now();
+        let out = session.decode_step().expect("decode step");
+        samples.push(t.elapsed().as_secs_f64());
+        assert_eq!(out.tokens.len(), bucket, "every row decodes each step");
+    }
+    assert_eq!(session.active(), 0, "rows retire on the final measured step");
+    let total: f64 = samples.iter().sum();
+    RunStats {
+        decode_tok_s: (bucket * steps) as f64 / total,
+        step_p50_ms: percentile(&samples, 0.50) * 1e3,
+        step_p99_ms: percentile(&samples, 0.99) * 1e3,
+        prefill_tok_s: (bucket * m.prompt_len) as f64 / prefill_s,
+    }
+}
+
+fn stats_json(s: &RunStats) -> Json {
+    let mut j = Json::obj();
+    j.set("decode_tok_s", Json::from(s.decode_tok_s))
+        .set("step_p50_ms", Json::from(s.step_p50_ms))
+        .set("step_p99_ms", Json::from(s.step_p99_ms))
+        .set("prefill_tok_s", Json::from(s.prefill_tok_s));
+    j
+}
+
+fn main() {
+    let mut quick = false;
+    let mut out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("BENCH_decode.json");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--out" => {
+                out_path = PathBuf::from(args.next().expect("--out needs a path"));
+            }
+            // cargo bench forwards a `--bench` flag; ignore it and
+            // anything else the harness passes through.
+            _ => {}
+        }
+    }
+    let steps = if quick { STEPS / 4 } else { STEPS };
+
+    let manifest = synthetic_manifest();
+    let weights = Arc::new(synthetic_weights());
+
+    hexgen::util::bench::group(&format!(
+        "decode hot path vs functional baseline ({LAYERS} layers, hidden {HIDDEN}, \
+         max_seq {MAX_SEQ}, {steps} steps/config)"
+    ));
+    let mut configs = Vec::new();
+    let mut headline = 0.0;
+    for tp in TPS {
+        for bucket in BUCKETS {
+            let plan = plan_from_strategy(&[tp], &[LAYERS]).expect("plan");
+            let hot = PipelineExecutor::with_backend(
+                Box::new(ReferenceBackend::with_weights(manifest.clone(), weights.clone())),
+                plan.clone(),
+            )
+            .expect("hot executor");
+            let base = PipelineExecutor::with_backend(
+                Box::new(FunctionalBackend::new(ReferenceBackend::with_weights(
+                    manifest.clone(),
+                    weights.clone(),
+                ))),
+                plan,
+            )
+            .expect("baseline executor");
+            assert!(hot.backend().sync_view().is_some());
+            assert!(base.backend().sync_view().is_none());
+
+            let opt = run_config(&hot, bucket, steps);
+            let fun = run_config(&base, bucket, steps);
+            let speedup = opt.decode_tok_s / fun.decode_tok_s;
+            println!(
+                "tp{tp} b{bucket}: {:>9.0} tok/s vs {:>9.0} baseline ({speedup:>5.2}x)  \
+                 p50 {:.3}ms p99 {:.3}ms",
+                opt.decode_tok_s, fun.decode_tok_s, opt.step_p50_ms, opt.step_p99_ms
+            );
+            if tp == 2 && bucket == 8 {
+                headline = speedup;
+            }
+            let mut j = Json::obj();
+            j.set("tp", Json::from(tp))
+                .set("bucket", Json::from(bucket))
+                .set("optimized", stats_json(&opt))
+                .set("baseline", stats_json(&fun))
+                .set("decode_speedup", Json::from(speedup));
+            configs.push(j);
+        }
+    }
+    println!("headline (tp=2, bucket=8): {headline:.2}x decode tokens/s over the seed baseline");
+
+    let mut model = Json::obj();
+    model
+        .set("layers", Json::from(LAYERS))
+        .set("hidden", Json::from(HIDDEN))
+        .set("heads", Json::from(HEADS))
+        .set("head_dim", Json::from(HEAD_DIM))
+        .set("ffn", Json::from(FFN))
+        .set("prompt_len", Json::from(PROMPT_LEN))
+        .set("max_seq", Json::from(MAX_SEQ));
+    let mut headline_j = Json::obj();
+    headline_j
+        .set("tp", Json::from(2usize))
+        .set("bucket", Json::from(8usize))
+        .set("decode_speedup", Json::from(headline));
+    let mut j = Json::obj();
+    j.set("bench", Json::from("decode"))
+        .set("quick", Json::from(quick))
+        .set("decode_steps", Json::from(steps))
+        .set("model", model)
+        .set("configs", Json::Arr(configs))
+        .set("headline", headline_j);
+    std::fs::write(&out_path, format!("{j}\n")).expect("write BENCH_decode.json");
+    println!("wrote {}", out_path.display());
+}

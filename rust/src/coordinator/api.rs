@@ -151,8 +151,12 @@ pub enum RequestEvent {
     Admitted { replica: usize, batch_size: usize },
     /// One generated token. `index` 0 comes from the prefill logits;
     /// each later index is one decode iteration. `text_delta` is the
-    /// token's own decoded text (byte-level vocab: multi-byte UTF-8
-    /// sequences only assemble in [`Completion::text`]).
+    /// newly decodable text: the byte-level vocab emits multi-byte UTF-8
+    /// characters one token at a time, so the worker buffers incomplete
+    /// sequences ([`Utf8Stream`](crate::runtime::Utf8Stream)) and a
+    /// delta may be empty mid-character. The request's final token
+    /// flushes the buffer, so the concatenation of all deltas equals
+    /// [`Completion::text`] exactly.
     Token { index: usize, token: i32, text_delta: String },
     /// Terminal: the request finished.
     Done(Completion),

@@ -21,13 +21,37 @@
 //! their own `max_new` or emit their stop token. The monolithic
 //! [`PipelineExecutor::generate`] remains as a thin run-to-completion
 //! wrapper over a session.
+//!
+//! **Decode hot path.** Three properties keep the per-token loop lean
+//! (see rust/README.md §Performance):
+//!
+//! * KV caches are updated **in place** through
+//!   [`ExecutionBackend::execute_attn_decode_inplace`] — a decode step
+//!   writes each row's one new `[head_dim]` K/V slice per (layer, shard)
+//!   instead of cloning and re-materializing whole caches;
+//! * TP shards of a layer execute **concurrently** under
+//!   `std::thread::scope` whenever the backend is shareable
+//!   ([`ExecutionBackend::sync_view`]); shard order is preserved at the
+//!   AllReduce, so results are bit-identical to serial execution;
+//! * decode steps are **active-row-aware**: each step runs at the
+//!   smallest manifest bucket covering the live rows, gathering occupied
+//!   cache prefixes into a compact scratch and scattering back only the
+//!   newly appended entries — a session draining from 8 rows to 1 stops
+//!   paying 8-row attention, MLP, and lm_head cost.
+//!
+//! All artifact and shard-weight name strings are precomputed at
+//! executor construction ([`NameCache`]); the steady-state loop performs
+//! no name formatting.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{tokenizer, BackendKind, ExecutionBackend, InputArg, Tensor, WeightStore};
+use crate::runtime::{
+    tokenizer, AttnShardWeights, BackendKind, DecodePositions, ExecutionBackend, InputArg, Tensor,
+    WeightStore,
+};
 
 use super::collective::{add_residual, all_reduce_sum, record_pp_send, CommStats};
 
@@ -84,10 +108,112 @@ pub struct GenerationResult {
 /// KV caches for one stage: `[layer][shard] -> (k, v)`.
 type StageCaches = Vec<Vec<(Tensor, Tensor)>>;
 
-/// Executes generation through an asymmetric TP×PP plan on one thread.
+/// Precomputed artifact and weight-name strings: every name the steady
+/// state needs, built once at executor construction so the per-token
+/// loop allocates no strings (the per-step `format!`/`shard_name` calls
+/// used to dominate small-model decode profiles).
+struct NameCache {
+    /// The manifest's batch buckets, in manifest order; the per-bucket
+    /// vectors below are indexed by position in this list.
+    buckets: Vec<usize>,
+    embed_prefill: Vec<String>,
+    embed_decode: Vec<String>,
+    lm_head_prefill: Vec<String>,
+    lm_head_decode: Vec<String>,
+    stages: Vec<StageNameCache>,
+}
+
+struct StageNameCache {
+    attn_prefill: Vec<String>,
+    attn_decode: Vec<String>,
+    mlp_prefill: Vec<String>,
+    mlp_decode: Vec<String>,
+    /// Indexed by layer offset within the stage.
+    layers: Vec<LayerNameCache>,
+}
+
+struct LayerNameCache {
+    ln1: String,
+    ln2: String,
+    /// Indexed by TP rank.
+    shards: Vec<ShardNameCache>,
+}
+
+struct ShardNameCache {
+    wq: String,
+    wk: String,
+    wv: String,
+    wo: String,
+    w1: String,
+    w2: String,
+}
+
+impl NameCache {
+    fn new(buckets: Vec<usize>, stages: &[StagePlan]) -> NameCache {
+        let stage_names = stages
+            .iter()
+            .map(|stage| {
+                let tp = stage.tp;
+                StageNameCache {
+                    attn_prefill: buckets
+                        .iter()
+                        .map(|b| format!("attn_prefill_tp{tp}_b{b}"))
+                        .collect(),
+                    attn_decode: buckets
+                        .iter()
+                        .map(|b| format!("attn_decode_tp{tp}_b{b}"))
+                        .collect(),
+                    mlp_prefill: buckets
+                        .iter()
+                        .map(|b| format!("mlp_prefill_tp{tp}_b{b}"))
+                        .collect(),
+                    mlp_decode: buckets
+                        .iter()
+                        .map(|b| format!("mlp_decode_tp{tp}_b{b}"))
+                        .collect(),
+                    layers: stage
+                        .layers()
+                        .map(|layer| LayerNameCache {
+                            ln1: format!("layers.{layer}.ln1"),
+                            ln2: format!("layers.{layer}.ln2"),
+                            shards: (0..tp)
+                                .map(|r| ShardNameCache {
+                                    wq: WeightStore::shard_name(layer, "wq", tp, r),
+                                    wk: WeightStore::shard_name(layer, "wk", tp, r),
+                                    wv: WeightStore::shard_name(layer, "wv", tp, r),
+                                    wo: WeightStore::shard_name(layer, "wo", tp, r),
+                                    w1: WeightStore::shard_name(layer, "w1", tp, r),
+                                    w2: WeightStore::shard_name(layer, "w2", tp, r),
+                                })
+                                .collect(),
+                        })
+                        .collect(),
+                }
+            })
+            .collect();
+        NameCache {
+            embed_prefill: buckets.iter().map(|b| format!("embed_prefill_b{b}")).collect(),
+            embed_decode: buckets.iter().map(|b| format!("embed_decode_b{b}")).collect(),
+            lm_head_prefill: buckets.iter().map(|b| format!("lm_head_prefill_b{b}")).collect(),
+            lm_head_decode: buckets.iter().map(|b| format!("lm_head_decode_b{b}")).collect(),
+            buckets,
+            stages: stage_names,
+        }
+    }
+
+    fn bucket_idx(&self, bucket: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .position(|&b| b == bucket)
+            .with_context(|| format!("bucket {bucket} not in manifest buckets {:?}", self.buckets))
+    }
+}
+
+/// Executes generation through an asymmetric TP×PP plan.
 pub struct PipelineExecutor {
     backend: Box<dyn ExecutionBackend>,
     stages: Vec<StagePlan>,
+    names: NameCache,
 }
 
 impl PipelineExecutor {
@@ -106,22 +232,25 @@ impl PipelineExecutor {
         backend: Box<dyn ExecutionBackend>,
         stages: Vec<StagePlan>,
     ) -> Result<PipelineExecutor> {
-        let m = backend.manifest();
-        let total: usize = stages.iter().map(|s| s.layer_count).sum();
-        if total != m.model.layers {
-            bail!("plan covers {total} layers, model has {}", m.model.layers);
-        }
-        let mut next = 0;
-        for s in &stages {
-            if s.layer_start != next {
-                bail!("stages not contiguous at layer {next}");
+        let names = {
+            let m = backend.manifest();
+            let total: usize = stages.iter().map(|s| s.layer_count).sum();
+            if total != m.model.layers {
+                bail!("plan covers {total} layers, model has {}", m.model.layers);
             }
-            next += s.layer_count;
-            if !m.tp_degrees.contains(&s.tp) {
-                bail!("tp={} has no artifacts (available {:?})", s.tp, m.tp_degrees);
+            let mut next = 0;
+            for s in &stages {
+                if s.layer_start != next {
+                    bail!("stages not contiguous at layer {next}");
+                }
+                next += s.layer_count;
+                if !m.tp_degrees.contains(&s.tp) {
+                    bail!("tp={} has no artifacts (available {:?})", s.tp, m.tp_degrees);
+                }
             }
-        }
-        Ok(PipelineExecutor { backend, stages })
+            NameCache::new(m.batch_buckets.clone(), &stages)
+        };
+        Ok(PipelineExecutor { backend, stages, names })
     }
 
     pub fn stages(&self) -> &[StagePlan] {
@@ -144,16 +273,21 @@ impl PipelineExecutor {
         format!("[{}]", v.join(","))
     }
 
-    /// Open a persistent decode session with `bucket` KV-cache slots
-    /// (`bucket` must be one of the manifest's batch buckets). Caches are
-    /// allocated zeroed; requests are admitted with
-    /// [`DecodeSession::prefill_into_slots`].
-    pub fn new_session(&self, bucket: usize) -> Result<DecodeSession<'_>> {
-        let m = self.backend.manifest();
-        if !m.batch_buckets.contains(&bucket) {
-            bail!("session bucket {bucket} not in manifest buckets {:?}", m.batch_buckets);
+    /// The backend as a shareable trait object when this stage's TP
+    /// fan-out should use threads; `None` runs shards serially (tp=1, or
+    /// a thread-confined backend such as PJRT).
+    fn sync_backend_for(&self, tp: usize) -> Option<&(dyn ExecutionBackend + Sync)> {
+        if tp > 1 {
+            self.backend.sync_view()
+        } else {
+            None
         }
-        let info = &m.model;
+    }
+
+    /// Allocate zeroed per-stage/layer/shard KV caches with `bucket`
+    /// dim-0 slots.
+    fn alloc_caches(&self, bucket: usize) -> Result<Vec<StageCaches>> {
+        let info = &self.backend.manifest().model;
         let mut caches: Vec<StageCaches> = Vec::with_capacity(self.stages.len());
         for stage in &self.stages {
             if stage.tp == 0 || info.heads % stage.tp != 0 {
@@ -176,10 +310,24 @@ impl PipelineExecutor {
             }
             caches.push(stage_caches);
         }
+        Ok(caches)
+    }
+
+    /// Open a persistent decode session with `bucket` KV-cache slots
+    /// (`bucket` must be one of the manifest's batch buckets). Caches are
+    /// allocated zeroed; requests are admitted with
+    /// [`DecodeSession::prefill_into_slots`].
+    pub fn new_session(&self, bucket: usize) -> Result<DecodeSession<'_>> {
+        let m = self.backend.manifest();
+        if !m.batch_buckets.contains(&bucket) {
+            bail!("session bucket {bucket} not in manifest buckets {:?}", m.batch_buckets);
+        }
+        let caches = self.alloc_caches(bucket)?;
         Ok(DecodeSession {
             exec: self,
             bucket,
             caches,
+            step_caches: Vec::new(),
             slots: (0..bucket).map(|_| None).collect(),
             comm: CommStats::default(),
             decode_steps: 0,
@@ -236,156 +384,219 @@ impl PipelineExecutor {
 
     // ---- stage pieces ---------------------------------------------------
 
-    fn embed(&self, tokens: &[i32], bucket: usize, s: usize, prefill: bool) -> Result<Tensor> {
+    fn embed(&self, tokens: &[i32], bucket: usize, s: usize, prefill: bool, bidx: usize) -> Result<Tensor> {
         let name = if prefill {
-            format!("embed_prefill_b{bucket}")
+            self.names.embed_prefill[bidx].as_str()
         } else {
-            format!("embed_decode_b{bucket}")
+            self.names.embed_decode[bidx].as_str()
         };
         let mut outs = self.backend.execute(
-            &name,
+            name,
             &[InputArg::I32(tokens, vec![bucket, s]), InputArg::Weight("embed")],
         )?;
         Ok(outs.remove(0))
     }
 
-    fn lm_head(&self, x: &Tensor, bucket: usize, prefill: bool) -> Result<Tensor> {
+    fn lm_head(&self, x: &Tensor, prefill: bool, bidx: usize) -> Result<Tensor> {
         let name = if prefill {
-            format!("lm_head_prefill_b{bucket}")
+            self.names.lm_head_prefill[bidx].as_str()
         } else {
-            format!("lm_head_decode_b{bucket}")
+            self.names.lm_head_decode[bidx].as_str()
         };
         let mut outs = self.backend.execute(
-            &name,
+            name,
             &[InputArg::F32(x), InputArg::Weight("final_ln"), InputArg::Weight("lm_head")],
         )?;
         Ok(outs.remove(0))
     }
 
+    /// Run `f` once per TP rank — concurrently under `std::thread::scope`
+    /// when the backend is shareable, serially otherwise — returning the
+    /// results in rank order (which keeps the downstream AllReduce
+    /// deterministic). Shard executions that need per-rank `&mut` state
+    /// (decode's cache pair) have their own fan-out in
+    /// [`Self::layer_decode`].
+    fn tp_fan_out<T, F>(&self, tp: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&dyn ExecutionBackend, usize) -> Result<T> + Sync,
+    {
+        match self.sync_backend_for(tp) {
+            Some(be) => {
+                let joined: Result<Vec<T>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..tp)
+                        .map(|rank| {
+                            let run = &f;
+                            scope.spawn(move || run(be, rank))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("TP shard thread panicked"))
+                        .collect()
+                });
+                joined
+            }
+            None => (0..tp).map(|rank| f(self.backend.as_ref(), rank)).collect(),
+        }
+    }
+
+    /// Execute one MLP per TP shard (threaded when the backend allows)
+    /// and return the partials in rank order.
+    fn mlp_partials(
+        &self,
+        h: &Tensor,
+        tp: usize,
+        layer_names: &LayerNameCache,
+        mlp_name: &str,
+    ) -> Result<Vec<Tensor>> {
+        self.tp_fan_out(tp, |be: &dyn ExecutionBackend, rank: usize| -> Result<Tensor> {
+            let sh = &layer_names.shards[rank];
+            let mut outs = be.execute(
+                mlp_name,
+                &[
+                    InputArg::F32(h),
+                    InputArg::Weight(&layer_names.ln2),
+                    InputArg::Weight(&sh.w1),
+                    InputArg::Weight(&sh.w2),
+                ],
+            )?;
+            Ok(outs.remove(0))
+        })
+    }
+
     /// One prefill layer: TP-sharded attention + MLP with host AllReduce.
-    /// Returns (new hidden state, per-shard (k, v) caches).
+    /// Shards execute concurrently when the backend is shareable; their
+    /// partials are reduced in rank order either way, so the result is
+    /// identical to serial execution. Returns (new hidden state,
+    /// per-shard (k, v) caches).
     fn layer_prefill(
         &self,
         x: &Tensor,
-        layer: usize,
-        tp: usize,
-        bucket: usize,
+        si: usize,
+        li: usize,
+        bidx: usize,
         comm: &mut CommStats,
     ) -> Result<(Tensor, Vec<(Tensor, Tensor)>)> {
-        let attn_name = format!("attn_prefill_tp{tp}_b{bucket}");
-        let ln1 = format!("layers.{layer}.ln1");
+        let tp = self.stages[si].tp;
+        let stage_names = &self.names.stages[si];
+        let layer_names = &stage_names.layers[li];
+        let attn_name = stage_names.attn_prefill[bidx].as_str();
+
+        let shard_outs: Vec<(Tensor, Tensor, Tensor)> = self.tp_fan_out(
+            tp,
+            |be: &dyn ExecutionBackend, rank: usize| -> Result<(Tensor, Tensor, Tensor)> {
+                let sh = &layer_names.shards[rank];
+                let mut outs = be.execute(
+                    attn_name,
+                    &[
+                        InputArg::F32(x),
+                        InputArg::Weight(&layer_names.ln1),
+                        InputArg::Weight(&sh.wq),
+                        InputArg::Weight(&sh.wk),
+                        InputArg::Weight(&sh.wv),
+                        InputArg::Weight(&sh.wo),
+                    ],
+                )?;
+                let v_cache = outs.pop().context("missing v_cache")?;
+                let k_cache = outs.pop().context("missing k_cache")?;
+                let partial = outs.pop().context("missing partial")?;
+                Ok((partial, k_cache, v_cache))
+            },
+        )?;
         let mut partials = Vec::with_capacity(tp);
         let mut layer_caches = Vec::with_capacity(tp);
-        for r in 0..tp {
-            let wq = WeightStore::shard_name(layer, "wq", tp, r);
-            let wk = WeightStore::shard_name(layer, "wk", tp, r);
-            let wv = WeightStore::shard_name(layer, "wv", tp, r);
-            let wo = WeightStore::shard_name(layer, "wo", tp, r);
-            let mut outs = self.backend.execute(
-                &attn_name,
-                &[
-                    InputArg::F32(x),
-                    InputArg::Weight(&ln1),
-                    InputArg::Weight(&wq),
-                    InputArg::Weight(&wk),
-                    InputArg::Weight(&wv),
-                    InputArg::Weight(&wo),
-                ],
-            )?;
-            let v_cache = outs.pop().context("missing v_cache")?;
-            let k_cache = outs.pop().context("missing k_cache")?;
-            let partial = outs.pop().context("missing partial")?;
+        for (partial, kc, vc) in shard_outs {
             partials.push(partial);
-            layer_caches.push((k_cache, v_cache));
+            layer_caches.push((kc, vc));
         }
         let mut h = x.clone();
         let reduced = all_reduce_sum(partials, comm);
         add_residual(&mut h, &reduced);
 
-        let mlp_name = format!("mlp_prefill_tp{tp}_b{bucket}");
-        let ln2 = format!("layers.{layer}.ln2");
-        let mut mlp_partials = Vec::with_capacity(tp);
-        for r in 0..tp {
-            let w1 = WeightStore::shard_name(layer, "w1", tp, r);
-            let w2 = WeightStore::shard_name(layer, "w2", tp, r);
-            let mut outs = self.backend.execute(
-                &mlp_name,
-                &[InputArg::F32(&h), InputArg::Weight(&ln2), InputArg::Weight(&w1), InputArg::Weight(&w2)],
-            )?;
-            mlp_partials.push(outs.remove(0));
-        }
-        let reduced = all_reduce_sum(mlp_partials, comm);
+        let mlp = self.mlp_partials(&h, tp, layer_names, stage_names.mlp_prefill[bidx].as_str())?;
+        let reduced = all_reduce_sum(mlp, comm);
         add_residual(&mut h, &reduced);
         Ok((h, layer_caches))
     }
 
-    /// One decode layer; updates the per-shard caches in place.
-    /// `positions[row]` is where that row's new KV entry lands (its cache
-    /// depth); a uniform batch lowers to the scalar-position artifact
-    /// signature, mixed depths (continuous batching) to a per-row vector.
+    /// One decode layer; updates the per-shard caches **in place**
+    /// through [`ExecutionBackend::execute_attn_decode_inplace`] — no
+    /// cache clones or copies on this path. `positions[row]` is where
+    /// that row's new KV entry lands (its cache depth); a uniform batch
+    /// lowers to the scalar-position artifact signature, mixed depths
+    /// (continuous batching) to a per-row vector. Shards execute
+    /// concurrently when the backend is shareable, each owning its own
+    /// `&mut` cache pair.
     #[allow(clippy::too_many_arguments)]
     fn layer_decode(
         &self,
         x: &Tensor,
-        layer: usize,
-        tp: usize,
-        bucket: usize,
+        si: usize,
+        li: usize,
+        bidx: usize,
         positions: &[i32],
-        caches: &mut Vec<(Tensor, Tensor)>,
+        caches: &mut [(Tensor, Tensor)],
         comm: &mut CommStats,
     ) -> Result<Tensor> {
-        let attn_name = format!("attn_decode_tp{tp}_b{bucket}");
-        let ln1 = format!("layers.{layer}.ln1");
+        let tp = self.stages[si].tp;
+        let stage_names = &self.names.stages[si];
+        let layer_names = &stage_names.layers[li];
+        let attn_name = stage_names.attn_decode[bidx].as_str();
         let uniform = positions.windows(2).all(|w| w[0] == w[1]);
-        let mut partials = Vec::with_capacity(tp);
-        for (r, (k_cache, v_cache)) in caches.iter_mut().enumerate() {
-            let wq = WeightStore::shard_name(layer, "wq", tp, r);
-            let wk = WeightStore::shard_name(layer, "wk", tp, r);
-            let wv = WeightStore::shard_name(layer, "wv", tp, r);
-            let wo = WeightStore::shard_name(layer, "wo", tp, r);
-            let pos_arg = if uniform {
-                InputArg::ScalarI32(positions[0])
+
+        let exec_attn = |be: &dyn ExecutionBackend,
+                         rank: usize,
+                         k_cache: &mut Tensor,
+                         v_cache: &mut Tensor|
+         -> Result<Tensor> {
+            let sh = &layer_names.shards[rank];
+            let pos = if uniform {
+                DecodePositions::Scalar(positions[0])
             } else {
-                InputArg::I32(positions, vec![bucket])
+                DecodePositions::PerRow(positions)
             };
-            let mut outs = self.backend.execute(
-                &attn_name,
-                &[
-                    InputArg::F32(x),
-                    InputArg::F32(k_cache),
-                    InputArg::F32(v_cache),
-                    pos_arg,
-                    InputArg::Weight(&ln1),
-                    InputArg::Weight(&wq),
-                    InputArg::Weight(&wk),
-                    InputArg::Weight(&wv),
-                    InputArg::Weight(&wo),
-                ],
-            )?;
-            let new_v = outs.pop().context("missing v_cache")?;
-            let new_k = outs.pop().context("missing k_cache")?;
-            let partial = outs.pop().context("missing partial")?;
-            *k_cache = new_k;
-            *v_cache = new_v;
-            partials.push(partial);
-        }
+            let w = AttnShardWeights {
+                ln1: &layer_names.ln1,
+                wq: &sh.wq,
+                wk: &sh.wk,
+                wv: &sh.wv,
+                wo: &sh.wo,
+            };
+            be.execute_attn_decode_inplace(attn_name, x, k_cache, v_cache, pos, &w)
+        };
+        let partials: Vec<Tensor> = match self.sync_backend_for(tp) {
+            Some(be) => {
+                let joined: Result<Vec<_>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = caches
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(rank, (k_cache, v_cache))| {
+                            let run = &exec_attn;
+                            scope.spawn(move || run(be, rank, k_cache, v_cache))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("TP shard thread panicked"))
+                        .collect()
+                });
+                joined?
+            }
+            None => caches
+                .iter_mut()
+                .enumerate()
+                .map(|(rank, (k_cache, v_cache))| {
+                    exec_attn(self.backend.as_ref(), rank, k_cache, v_cache)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
         let mut h = x.clone();
         let reduced = all_reduce_sum(partials, comm);
         add_residual(&mut h, &reduced);
 
-        let mlp_name = format!("mlp_decode_tp{tp}_b{bucket}");
-        let ln2 = format!("layers.{layer}.ln2");
-        let mut mlp_partials = Vec::with_capacity(tp);
-        for r in 0..tp {
-            let w1 = WeightStore::shard_name(layer, "w1", tp, r);
-            let w2 = WeightStore::shard_name(layer, "w2", tp, r);
-            let mut outs = self.backend.execute(
-                &mlp_name,
-                &[InputArg::F32(&h), InputArg::Weight(&ln2), InputArg::Weight(&w1), InputArg::Weight(&w2)],
-            )?;
-            mlp_partials.push(outs.remove(0));
-        }
-        let reduced = all_reduce_sum(mlp_partials, comm);
+        let mlp = self.mlp_partials(&h, tp, layer_names, stage_names.mlp_decode[bidx].as_str())?;
+        let reduced = all_reduce_sum(mlp, comm);
         add_residual(&mut h, &reduced);
         Ok(h)
     }
@@ -442,6 +653,10 @@ pub struct DecodeSession<'a> {
     bucket: usize,
     /// `[stage][layer][shard] -> (k, v)`, each `[bucket, nhs, max_seq, dh]`.
     caches: Vec<StageCaches>,
+    /// Compact scratch caches for down-shifted decode steps, keyed by
+    /// bucket and allocated lazily on the first step that needs each
+    /// size. Contents are scratch: every step gathers the rows it reads.
+    step_caches: Vec<(usize, Vec<StageCaches>)>,
     slots: Vec<Option<SlotState>>,
     comm: CommStats,
     decode_steps: usize,
@@ -506,7 +721,8 @@ impl<'a> DecodeSession<'a> {
         if reqs.is_empty() {
             return Ok(StepOutcome::default());
         }
-        let info = self.exec.backend.manifest().model.clone();
+        let exec = self.exec;
+        let info = exec.backend.manifest().model.clone();
         let mut claimed = vec![false; self.bucket];
         for (slot, r) in &reqs {
             if *slot >= self.bucket {
@@ -523,7 +739,8 @@ impl<'a> DecodeSession<'a> {
                 bail!("max_new must be >= 1");
             }
         }
-        let pb = self.exec.backend.manifest().bucket_for(reqs.len())?;
+        let pb = exec.backend.manifest().bucket_for(reqs.len())?;
+        let bidx = exec.names.bucket_idx(pb)?;
 
         let t0 = Instant::now();
         let mut tokens: Vec<i32> = Vec::with_capacity(pb * info.prompt_len);
@@ -532,11 +749,10 @@ impl<'a> DecodeSession<'a> {
         }
         tokens.resize(pb * info.prompt_len, tokenizer::PAD);
 
-        let mut x = self.exec.embed(&tokens, pb, info.prompt_len, true)?;
-        for (si, stage) in self.exec.stages.iter().enumerate() {
-            for (li, layer) in stage.layers().enumerate() {
-                let (h, layer_caches) =
-                    self.exec.layer_prefill(&x, layer, stage.tp, pb, &mut self.comm)?;
+        let mut x = exec.embed(&tokens, pb, info.prompt_len, true, bidx)?;
+        for (si, stage) in exec.stages.iter().enumerate() {
+            for li in 0..stage.layer_count {
+                let (h, layer_caches) = exec.layer_prefill(&x, si, li, bidx, &mut self.comm)?;
                 x = h;
                 for (shard, (kc, vc)) in layer_caches.iter().enumerate() {
                     for (row, (slot, _)) in reqs.iter().enumerate() {
@@ -546,11 +762,11 @@ impl<'a> DecodeSession<'a> {
                     }
                 }
             }
-            if si + 1 < self.exec.stages.len() {
+            if si + 1 < exec.stages.len() {
                 record_pp_send(&x, &mut self.comm);
             }
         }
-        let logits = self.exec.lm_head(&x, pb, true)?;
+        let logits = exec.lm_head(&x, true, bidx)?;
         let next = argmax_rows(&logits, info.vocab);
         self.prefill_seconds += t0.elapsed().as_secs_f64();
         self.prefill_tokens += reqs.len();
@@ -568,7 +784,7 @@ impl<'a> DecodeSession<'a> {
                 pos: info.prompt_len,
             };
             if st.generated.len() >= st.max_new || Some(tok) == st.stop {
-                self.evict(slot);
+                self.evict(slot, st.pos);
                 out.finished.push((slot, st.generated));
             } else {
                 self.slots[slot] = Some(st);
@@ -582,58 +798,85 @@ impl<'a> DecodeSession<'a> {
     /// `max_new` or stop token retire into `finished`: their slots are
     /// freed (cache rows zeroed) and their full token sequences returned.
     /// A no-op returning an empty outcome when nothing is active.
+    ///
+    /// The step is **active-row-aware**: it executes at the smallest
+    /// manifest bucket covering the live rows. When that is smaller than
+    /// the session bucket, the occupied cache prefixes are gathered into
+    /// a compact scratch, the step runs there, and only each row's newly
+    /// appended entry is scattered back — so a draining session's
+    /// attention, MLP, and lm_head cost tracks its live rows, not its
+    /// slot count. Row results are bit-identical either way (every
+    /// per-row computation is independent of batch padding).
     pub fn decode_step(&mut self) -> Result<StepOutcome> {
         if self.active() == 0 {
             return Ok(StepOutcome::default());
         }
-        let info = self.exec.backend.manifest().model.clone();
+        let exec = self.exec;
+        let info = exec.backend.manifest().model.clone();
         let t0 = Instant::now();
 
-        let mut tok_batch = vec![tokenizer::PAD; self.bucket];
-        let mut positions = vec![0i32; self.bucket];
+        let active_slots: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        let sb = exec.backend.manifest().bucket_for(active_slots.len())?.min(self.bucket);
+        let compact = sb < self.bucket;
+        let bidx = exec.names.bucket_idx(sb)?;
+        let step_idx =
+            if compact { Some(self.gather_step_caches(&active_slots, sb)?) } else { None };
+
+        // Row layout: compact steps pack active rows into [0, n); full
+        // steps keep row == slot.
+        let mut tok_batch = vec![tokenizer::PAD; sb];
+        let mut positions = vec![0i32; sb];
         let mut filler_pos = 0i32;
-        for (slot, st) in self.slots.iter().enumerate() {
-            if let Some(st) = st {
-                tok_batch[slot] = st.next;
-                positions[slot] = st.pos as i32;
-                filler_pos = st.pos as i32;
-            }
+        for (row, &slot) in active_slots.iter().enumerate() {
+            let st = self.slots[slot].as_ref().expect("active slot");
+            let ridx = if compact { row } else { slot };
+            tok_batch[ridx] = st.next;
+            positions[ridx] = st.pos as i32;
+            filler_pos = st.pos as i32;
         }
-        // Free slots mirror an active row's position so a uniform batch
+        // Pad rows mirror an active row's position so a uniform batch
         // keeps the scalar-position artifact signature available.
-        for (slot, st) in self.slots.iter().enumerate() {
-            if st.is_none() {
-                positions[slot] = filler_pos;
+        for ridx in 0..sb {
+            let occupied =
+                if compact { ridx < active_slots.len() } else { self.slots[ridx].is_some() };
+            if !occupied {
+                positions[ridx] = filler_pos;
             }
         }
 
-        let mut x = self.exec.embed(&tok_batch, self.bucket, 1, false)?;
-        for (si, stage) in self.exec.stages.iter().enumerate() {
-            for (li, layer) in stage.layers().enumerate() {
-                x = self.exec.layer_decode(
-                    &x,
-                    layer,
-                    stage.tp,
-                    self.bucket,
-                    &positions,
-                    &mut self.caches[si][li],
-                    &mut self.comm,
-                )?;
+        let mut x = exec.embed(&tok_batch, sb, 1, false, bidx)?;
+        for (si, stage) in exec.stages.iter().enumerate() {
+            for li in 0..stage.layer_count {
+                let caches = match step_idx {
+                    Some(ci) => &mut self.step_caches[ci].1[si][li],
+                    None => &mut self.caches[si][li],
+                };
+                x = exec.layer_decode(&x, si, li, bidx, &positions, caches, &mut self.comm)?;
             }
-            if si + 1 < self.exec.stages.len() {
+            if si + 1 < exec.stages.len() {
                 record_pp_send(&x, &mut self.comm);
             }
         }
-        let logits = self.exec.lm_head(&x, self.bucket, false)?;
+        if let Some(ci) = step_idx {
+            self.scatter_step_caches(&active_slots, ci)?;
+        }
+        let logits = exec.lm_head(&x, false, bidx)?;
         let next = argmax_rows(&logits, info.vocab);
         self.decode_steps += 1;
         self.decode_seconds += t0.elapsed().as_secs_f64();
 
         let mut out = StepOutcome::default();
-        for slot in 0..self.bucket {
+        for (row, &slot) in active_slots.iter().enumerate() {
+            let ridx = if compact { row } else { slot };
             let done = {
-                let Some(st) = self.slots[slot].as_mut() else { continue };
-                let tok = next[slot];
+                let st = self.slots[slot].as_mut().expect("active slot");
+                let tok = next[ridx];
                 st.generated.push(tok);
                 st.next = tok;
                 st.pos += 1;
@@ -642,7 +885,7 @@ impl<'a> DecodeSession<'a> {
             };
             if done {
                 let st = self.slots[slot].take().expect("slot state");
-                self.evict(slot);
+                self.evict(slot, st.pos);
                 out.finished.push((slot, st.generated));
             }
         }
@@ -657,17 +900,74 @@ impl<'a> DecodeSession<'a> {
     /// cancellation never tears a step in half.
     pub fn cancel_slot(&mut self, slot: usize) -> Option<Vec<i32>> {
         let st = self.slots.get_mut(slot).and_then(Option::take)?;
-        self.evict(slot);
+        self.evict(slot, st.pos);
         Some(st.generated)
     }
 
-    /// Zero a slot's cache rows across all stages/layers/shards (evict).
-    fn evict(&mut self, slot: usize) {
+    /// Ensure compact scratch caches exist for bucket `sb` and gather
+    /// each active row's occupied prefix `[0, pos)` into its compact row.
+    /// The scratch persists across steps and is never zeroed: every cache
+    /// row a step reads is gathered here first, and pad rows' leftover
+    /// contents are never observed (per-row attention reads only that
+    /// row's entries, and pad-row outputs are discarded).
+    fn gather_step_caches(&mut self, active_slots: &[usize], sb: usize) -> Result<usize> {
+        let ci = match self.step_caches.iter().position(|(b, _)| *b == sb) {
+            Some(i) => i,
+            None => {
+                let fresh = self.exec.alloc_caches(sb)?;
+                self.step_caches.push((sb, fresh));
+                self.step_caches.len() - 1
+            }
+        };
+        let (_, step) = &mut self.step_caches[ci];
+        for (si, stage_caches) in self.caches.iter().enumerate() {
+            for (li, layer) in stage_caches.iter().enumerate() {
+                for (shard, (sk, sv)) in layer.iter().enumerate() {
+                    let (dk, dv) = &mut step[si][li][shard];
+                    for (row, &slot) in active_slots.iter().enumerate() {
+                        let depth = self.slots[slot].as_ref().expect("active slot").pos;
+                        dk.copy_cache_rows(row, sk, slot, 0..depth)?;
+                        dv.copy_cache_rows(row, sv, slot, 0..depth)?;
+                    }
+                }
+            }
+        }
+        Ok(ci)
+    }
+
+    /// Write each active row's newly appended cache entry (at its `pos`)
+    /// back into its session slot. A decode step mutates nothing else:
+    /// the rest of the scratch row is byte-identical to what gather
+    /// copied in.
+    fn scatter_step_caches(&mut self, active_slots: &[usize], ci: usize) -> Result<()> {
+        let (_, step) = &self.step_caches[ci];
+        for (si, stage_caches) in self.caches.iter_mut().enumerate() {
+            for (li, layer) in stage_caches.iter_mut().enumerate() {
+                for (shard, (dk, dv)) in layer.iter_mut().enumerate() {
+                    let (sk, sv) = &step[si][li][shard];
+                    for (row, &slot) in active_slots.iter().enumerate() {
+                        let pos = self.slots[slot].as_ref().expect("active slot").pos;
+                        dk.copy_cache_rows(slot, sk, row, pos..pos + 1)?;
+                        dv.copy_cache_rows(slot, sv, row, pos..pos + 1)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Zero `[0, depth)` of a slot's cache rows across all
+    /// stages/layers/shards (evict). Rows at and beyond the slot's
+    /// written depth never hold live data — decode reads `[0, pos]` and
+    /// admission rewrites the whole slot — so evict cost tracks what the
+    /// request actually used instead of `max_seq`
+    /// (`tests/reference_parity.rs` pins cancel→readmit parity on this).
+    fn evict(&mut self, slot: usize, depth: usize) {
         for stage in self.caches.iter_mut() {
             for layer in stage.iter_mut() {
                 for (k, v) in layer.iter_mut() {
-                    let _ = k.clear_slot(slot);
-                    let _ = v.clear_slot(slot);
+                    let _ = k.clear_cache_rows(slot, depth);
+                    let _ = v.clear_cache_rows(slot, depth);
                 }
             }
         }
@@ -731,5 +1031,21 @@ mod tests {
     fn argmax_rows_basic() {
         let t = Tensor { dims: vec![2, 3], data: vec![0.1, 0.9, 0.3, 5.0, -1.0, 2.0] };
         assert_eq!(argmax_rows(&t, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn name_cache_precomputes_all_names() {
+        let stages = plan_from_strategy(&[2, 1], &[1, 1]).unwrap();
+        let names = NameCache::new(vec![1, 4], &stages);
+        assert_eq!(names.bucket_idx(4).unwrap(), 1);
+        assert!(names.bucket_idx(2).is_err());
+        assert_eq!(names.embed_decode[0], "embed_decode_b1");
+        assert_eq!(names.lm_head_prefill[1], "lm_head_prefill_b4");
+        assert_eq!(names.stages[0].attn_decode[1], "attn_decode_tp2_b4");
+        assert_eq!(names.stages[1].mlp_prefill[0], "mlp_prefill_tp1_b1");
+        assert_eq!(names.stages[0].layers[0].ln1, "layers.0.ln1");
+        assert_eq!(names.stages[0].layers[0].shards[1].wq, "layers.0.wq.tp2.r1");
+        assert_eq!(names.stages[1].layers[0].ln2, "layers.1.ln2");
+        assert_eq!(names.stages[1].layers[0].shards[0].w1, "layers.1.w1");
     }
 }

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{make_backend, tokenizer, BackendKind, Manifest, WeightStore};
+use crate::runtime::{make_backend, tokenizer, BackendKind, Manifest, Utf8Stream, WeightStore};
 
 use super::api::{
     CancelFlag, Completion, GenRequest, RequestEvent, RequestHandle, RequestId, ServiceError,
@@ -135,6 +135,10 @@ struct ActiveItem {
     decode_start: Instant,
     /// Token events emitted so far (the next event's `index`).
     emitted: usize,
+    /// Incremental UTF-8 decoder for `Token.text_delta`: multi-byte
+    /// characters buffer until complete instead of rendering as
+    /// replacement glyphs mid-stream.
+    text: Utf8Stream,
 }
 
 /// Handle to a running service.
@@ -432,12 +436,15 @@ fn worker_loop(
         let _ = active_item.item.events.send(RequestEvent::Done(completion));
         router.complete(rid);
     };
-    let emit_token = |a: &mut ActiveItem, token: i32| {
-        let _ = a.item.events.send(RequestEvent::Token {
-            index: a.emitted,
-            token,
-            text_delta: tokenizer::decode(&[token]),
-        });
+    // `last` marks the row's final token: any bytes still buffered in
+    // its UTF-8 stream flush into this delta, so the concatenation of a
+    // request's deltas equals its completion text exactly.
+    let emit_token = |a: &mut ActiveItem, token: i32, last: bool| {
+        let mut text_delta = a.text.push(token);
+        if last {
+            text_delta.push_str(&a.text.finish());
+        }
+        let _ = a.item.events.send(RequestEvent::Token { index: a.emitted, token, text_delta });
         a.emitted += 1;
     };
 
@@ -505,6 +512,7 @@ fn worker_loop(
                     prefill_seconds: 0.0,
                     decode_start: now,
                     emitted: 0,
+                    text: Utf8Stream::new(),
                 });
                 slots_used.push(slot);
             }
@@ -519,9 +527,10 @@ fn worker_loop(
                             a.decode_start = end;
                         }
                     }
-                    for (slot, tok) in out.tokens {
+                    for &(slot, tok) in &out.tokens {
                         if let Some(a) = active[slot].as_mut() {
-                            emit_token(a, tok);
+                            let last = out.finished.iter().any(|&(s, _)| s == slot);
+                            emit_token(a, tok, last);
                         }
                     }
                     for (slot, tokens) in out.finished {
@@ -560,9 +569,10 @@ fn worker_loop(
                             router.observe_rate(rid, rows as f64 / dt);
                         }
                     }
-                    for (slot, tok) in out.tokens {
+                    for &(slot, tok) in &out.tokens {
                         if let Some(a) = active[slot].as_mut() {
-                            emit_token(a, tok);
+                            let last = out.finished.iter().any(|&(s, _)| s == slot);
+                            emit_token(a, tok, last);
                         }
                     }
                     for (slot, tokens) in out.finished {

@@ -15,11 +15,14 @@
 //! Backends need not be `Send`: each pipeline worker thread constructs
 //! its own instance from a shared [`BackendKind`] + parsed
 //! [`WeightStore`] (PJRT handles are `Rc`-based and thread-confined).
+//! Backends that *are* shareable across threads advertise it through
+//! [`ExecutionBackend::sync_view`], which the pipeline uses to fan TP
+//! shard executions out over scoped threads.
 
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::manifest::Manifest;
 use super::weights::{Tensor, WeightStore};
@@ -35,6 +38,29 @@ pub enum InputArg<'a> {
     /// Named weight, resolved through the backend's weight store (and
     /// any backend-side upload cache).
     Weight(&'a str),
+}
+
+/// Decode positions for [`ExecutionBackend::execute_attn_decode_inplace`]:
+/// a batch-wide scalar (uniform batches, the shape the AOT artifacts
+/// compile) or a per-row vector (continuous batching co-batches rows at
+/// different cache depths).
+#[derive(Debug, Clone, Copy)]
+pub enum DecodePositions<'a> {
+    Scalar(i32),
+    PerRow(&'a [i32]),
+}
+
+/// Weight names of one attention shard, resolved through the backend's
+/// weight store by the decode hot-path entry point. Precomputed per
+/// (stage, layer, rank) by the pipeline so the per-token loop allocates
+/// no name strings.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnShardWeights<'a> {
+    pub ln1: &'a str,
+    pub wq: &'a str,
+    pub wk: &'a str,
+    pub wv: &'a str,
+    pub wo: &'a str,
 }
 
 /// Stage-execution substrate: load artifacts once, then run prefill and
@@ -60,6 +86,64 @@ pub trait ExecutionBackend {
     /// and the serving loop degrades to run-to-completion batching.
     fn supports_rowwise_decode_positions(&self) -> bool {
         false
+    }
+
+    /// This backend as a shareable trait object, when it can execute
+    /// concurrently from several threads (`Sync` state, e.g. the
+    /// pure-Rust reference backend). The pipeline uses it to run TP
+    /// shard executions under `std::thread::scope`; thread-confined
+    /// backends (PJRT's `Rc`-based handles) return `None` and shards run
+    /// serially on the caller's thread.
+    fn sync_view(&self) -> Option<&(dyn ExecutionBackend + Sync)> {
+        None
+    }
+
+    /// Decode-step attention with the KV caches updated **in place**:
+    /// writes only each row's new `[head_dim]` K/V slice at its position
+    /// and reads the caches where they live, returning just the `[b, 1,
+    /// h]` attention partial. This is the serving decode hot path — the
+    /// value-passing [`Self::execute`] contract costs two full cache
+    /// clones plus two full returned copies per call.
+    ///
+    /// The default implementation adapts backends bound to the
+    /// functional artifact signature: it routes through
+    /// [`Self::execute`] and moves the returned caches into place. Hot
+    /// backends (the reference backend) override it with a true
+    /// in-place kernel.
+    fn execute_attn_decode_inplace(
+        &self,
+        artifact: &str,
+        x: &Tensor,
+        k_cache: &mut Tensor,
+        v_cache: &mut Tensor,
+        positions: DecodePositions<'_>,
+        w: &AttnShardWeights<'_>,
+    ) -> Result<Tensor> {
+        let b = x.dims.first().copied().unwrap_or(1);
+        let pos_arg = match positions {
+            DecodePositions::Scalar(p) => InputArg::ScalarI32(p),
+            DecodePositions::PerRow(p) => InputArg::I32(p, vec![b]),
+        };
+        let mut outs = self.execute(
+            artifact,
+            &[
+                InputArg::F32(x),
+                InputArg::F32(k_cache),
+                InputArg::F32(v_cache),
+                pos_arg,
+                InputArg::Weight(w.ln1),
+                InputArg::Weight(w.wq),
+                InputArg::Weight(w.wk),
+                InputArg::Weight(w.wv),
+                InputArg::Weight(w.wo),
+            ],
+        )?;
+        if outs.len() != 3 {
+            bail!("'{artifact}' returned {} outputs, expected (partial, k, v)", outs.len());
+        }
+        *v_cache = outs.pop().expect("v_cache");
+        *k_cache = outs.pop().expect("k_cache");
+        Ok(outs.pop().expect("partial"))
     }
 
     /// Cumulative stage executions (hot-path metric).

@@ -14,9 +14,13 @@ pub mod reference;
 pub mod tokenizer;
 pub mod weights;
 
-pub use backend::{load_backend, make_backend, BackendKind, ExecutionBackend, InputArg};
+pub use backend::{
+    load_backend, make_backend, AttnShardWeights, BackendKind, DecodePositions, ExecutionBackend,
+    InputArg,
+};
 #[cfg(feature = "pjrt")]
 pub use engine::{literal_to_tensor_f32, literal_to_vec_i32, tensor_to_literal, ModelRuntime};
 pub use manifest::{ArtifactSpec, Manifest, ModelInfo, ParamSpec};
-pub use reference::ReferenceBackend;
+pub use reference::{FunctionalBackend, ReferenceBackend};
+pub use tokenizer::Utf8Stream;
 pub use weights::{Tensor, WeightStore};

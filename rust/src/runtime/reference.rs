@@ -8,16 +8,26 @@
 //! (`attn_prefill_tp{T}_b{B}`, `embed_decode_b{B}`, …); no `.hlo.txt`
 //! files are read — only `manifest.json` + `weights.bin`.
 //!
+//! The backend is `Sync` (the execution counter is atomic, everything
+//! else is read-only), so the pipeline can fan TP shard executions out
+//! over scoped threads ([`ExecutionBackend::sync_view`]), and it serves
+//! the decode hot path through the in-place cache entry point
+//! ([`ExecutionBackend::execute_attn_decode_inplace`]) — no cache clones
+//! on the per-token path. The value-passing [`ExecutionBackend::execute`]
+//! contract (caches in, updated caches out) is retained for artifact
+//! parity; [`FunctionalBackend`] pins exactly those seed semantics for
+//! parity tests and the `benches/decode.rs` baseline.
+//!
 //! Checked against golden values emitted by
 //! `python/compile/make_ref_fixture.py` (see `tests/reference_parity.rs`).
 
-use std::cell::Cell;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::backend::{ExecutionBackend, InputArg};
+use super::backend::{AttnShardWeights, DecodePositions, ExecutionBackend, InputArg};
 use super::manifest::Manifest;
 use super::weights::{Tensor, WeightStore};
 
@@ -27,7 +37,7 @@ const RMSNORM_EPS: f32 = 1e-6;
 pub struct ReferenceBackend {
     manifest: Manifest,
     weights: Arc<WeightStore>,
-    exec_count: Cell<usize>,
+    exec_count: AtomicUsize,
 }
 
 impl ReferenceBackend {
@@ -40,7 +50,7 @@ impl ReferenceBackend {
 
     /// Create a backend re-using an already-parsed weight store.
     pub fn with_weights(manifest: Manifest, weights: Arc<WeightStore>) -> ReferenceBackend {
-        ReferenceBackend { manifest, weights, exec_count: Cell::new(0) }
+        ReferenceBackend { manifest, weights, exec_count: AtomicUsize::new(0) }
     }
 
     fn tensor_arg<'t>(&'t self, a: &'t InputArg<'t>, what: &str) -> Result<&'t Tensor> {
@@ -49,6 +59,29 @@ impl ReferenceBackend {
             InputArg::Weight(n) => self.weights.get(n),
             _ => bail!("{what}: expected an f32 tensor or weight"),
         }
+    }
+
+    /// Parse an artifact name and check it against the manifest's bucket
+    /// and TP catalogs.
+    fn validate_stage(&self, artifact: &str) -> Result<StageName> {
+        let Some(st) = StageName::parse(artifact) else {
+            bail!("reference backend cannot execute artifact '{artifact}' (unknown stage name)");
+        };
+        if !self.manifest.batch_buckets.contains(&st.bucket) {
+            bail!(
+                "artifact '{artifact}': bucket {} not in manifest {:?}",
+                st.bucket,
+                self.manifest.batch_buckets
+            );
+        }
+        if !self.manifest.tp_degrees.contains(&st.tp) {
+            bail!(
+                "artifact '{artifact}': tp {} not in manifest {:?}",
+                st.tp,
+                self.manifest.tp_degrees
+            );
+        }
+        Ok(st)
     }
 
     // ---- stage implementations -----------------------------------------
@@ -132,12 +165,13 @@ impl ReferenceBackend {
         // layout is [row, head*dh + d] with row = bi*s + position.
         let mut merged = vec![0f32; b * s * hs];
         let scale = 1.0 / (dh as f32).sqrt();
+        let mut scores: Vec<f32> = Vec::with_capacity(s);
         for bi in 0..b {
             for head in 0..nhs {
                 let off = head * dh;
                 for i in 0..s {
                     let qrow = (bi * s + i) * hs + off;
-                    let mut scores = Vec::with_capacity(i + 1);
+                    scores.clear();
                     let mut max_s = f32::NEG_INFINITY;
                     for j in 0..=i {
                         let krow = (bi * s + j) * hs + off;
@@ -190,6 +224,10 @@ impl ReferenceBackend {
         ])
     }
 
+    /// The functional decode contract (`execute` path): caches flow
+    /// through as values, so the updated pair is materialized as fresh
+    /// tensors. The serving hot path avoids this entirely via
+    /// [`ExecutionBackend::execute_attn_decode_inplace`].
     fn run_attn_decode(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
         expect_inputs(inputs, 9, "attn_decode")?;
         let x = self.tensor_arg(&inputs[0], "attn x")?;
@@ -200,6 +238,48 @@ impl ReferenceBackend {
         let wk = self.tensor_arg(&inputs[6], "wk")?;
         let wv = self.tensor_arg(&inputs[7], "wv")?;
         let wo = self.tensor_arg(&inputs[8], "wo")?;
+        let (b, _, _) = dims3(x, "attn x")?;
+        // Decode positions: a batch-wide scalar (uniform batches, the shape
+        // the AOT artifacts compile) or a per-row `[b]` int32 vector — what
+        // continuous batching needs when co-batched rows sit at different
+        // sequence depths.
+        let positions = match &inputs[3] {
+            InputArg::ScalarI32(p) => DecodePositions::Scalar(*p),
+            InputArg::I32(data, dims) => {
+                if data.len() != b || dims.first() != Some(&b) {
+                    bail!(
+                        "decode positions: {} values (dims {dims:?}) for batch {b}",
+                        data.len()
+                    );
+                }
+                DecodePositions::PerRow(data)
+            }
+            _ => bail!("pos: expected an int32 scalar or per-row int32 vector"),
+        };
+        let mut kc = kc_in.clone();
+        let mut vc = vc_in.clone();
+        let partial = self.attn_decode_core(st, x, &mut kc, &mut vc, positions, ln, wq, wk, wv, wo)?;
+        Ok(vec![partial, kc, vc])
+    }
+
+    /// Decode-attention kernel shared by the functional and in-place
+    /// entry points: writes each row's new K/V slice into the caches at
+    /// its own position and attends over that row's `[0, pos]` entries,
+    /// reading the caches where they live.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_decode_core(
+        &self,
+        st: &StageName,
+        x: &Tensor,
+        kc: &mut Tensor,
+        vc: &mut Tensor,
+        positions: DecodePositions<'_>,
+        ln: &Tensor,
+        wq: &Tensor,
+        wk: &Tensor,
+        wv: &Tensor,
+        wo: &Tensor,
+    ) -> Result<Tensor> {
         let m = &self.manifest.model;
         let (b, s, h) = dims3(x, "attn x")?;
         check_bucket(b, st)?;
@@ -210,72 +290,47 @@ impl ReferenceBackend {
         let (nhs, dh, hs) = (shard.nhs, shard.dh, shard.hs);
         let s_max = m.max_seq;
         let cache_dims = vec![b, nhs, s_max, dh];
-        if kc_in.dims != cache_dims || vc_in.dims != cache_dims {
+        if kc.dims != cache_dims || vc.dims != cache_dims {
             bail!(
                 "decode caches have shapes {:?}/{:?}, expected {cache_dims:?}",
-                kc_in.dims,
-                vc_in.dims
+                kc.dims,
+                vc.dims
             );
         }
-        // Decode positions: a batch-wide scalar (uniform batches, the shape
-        // the AOT artifacts compile) or a per-row `[b]` int32 vector — what
-        // continuous batching needs when co-batched rows sit at different
-        // sequence depths.
-        let positions: Vec<usize> = match &inputs[3] {
-            InputArg::ScalarI32(p) => vec![*p; b],
-            InputArg::I32(data, dims) => {
-                if data.len() != b || dims.first() != Some(&b) {
-                    bail!(
-                        "decode positions: {} values (dims {dims:?}) for batch {b}",
-                        data.len()
-                    );
-                }
-                data.to_vec()
-            }
-            _ => bail!("pos: expected an int32 scalar or per-row int32 vector"),
-        }
-        .into_iter()
-        .map(|p| {
-            if p < 0 || p as usize >= s_max {
-                bail!("decode position {p} outside cache of length {s_max}");
-            }
-            Ok(p as usize)
-        })
-        .collect::<Result<_>>()?;
+        let positions = resolve_positions(positions, b, s_max)?;
 
         let xn = rmsnorm_rows(&x.data, h, &ln.data)?;
         let q = matmul(&xn, b, h, wq, "wq")?;
         let k_new = matmul(&xn, b, h, wk, "wk")?;
         let v_new = matmul(&xn, b, h, wv, "wv")?;
 
-        // Functionally-updated caches: write each row's token at its own
-        // position.
-        let mut kc = kc_in.data.clone();
-        let mut vc = vc_in.data.clone();
+        // Write each row's new entry at its own position — the only cache
+        // bytes this step touches.
         for bi in 0..b {
             for head in 0..nhs {
                 let dst = ((bi * nhs + head) * s_max + positions[bi]) * dh;
                 let src = bi * hs + head * dh;
-                kc[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
-                vc[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
+                kc.data[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
+                vc.data[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
             }
         }
 
         // Single-token attention over each row's first pos+1 cache entries.
         let mut merged = vec![0f32; b * hs];
         let scale = 1.0 / (dh as f32).sqrt();
+        let mut scores: Vec<f32> = Vec::new();
         for bi in 0..b {
             let pos = positions[bi];
             for head in 0..nhs {
                 let qrow = bi * hs + head * dh;
                 let base = (bi * nhs + head) * s_max;
-                let mut scores = Vec::with_capacity(pos + 1);
+                scores.clear();
                 let mut max_s = f32::NEG_INFINITY;
                 for j in 0..=pos {
                     let krow = (base + j) * dh;
                     let mut dot = 0f32;
                     for d in 0..dh {
-                        dot += q[qrow + d] * kc[krow + d];
+                        dot += q[qrow + d] * kc.data[krow + d];
                     }
                     let sc = dot * scale;
                     if sc > max_s {
@@ -291,18 +346,14 @@ impl ReferenceBackend {
                 for d in 0..dh {
                     let mut acc = 0f32;
                     for (j, p) in scores.iter().enumerate() {
-                        acc += p * vc[(base + j) * dh + d];
+                        acc += p * vc.data[(base + j) * dh + d];
                     }
                     merged[qrow + d] = acc / denom;
                 }
             }
         }
         let partial = matmul(&merged, b, hs, wo, "wo")?;
-        Ok(vec![
-            Tensor { dims: vec![b, 1, h], data: partial },
-            Tensor { dims: cache_dims.clone(), data: kc },
-            Tensor { dims: cache_dims, data: vc },
-        ])
+        Ok(Tensor { dims: vec![b, 1, h], data: partial })
     }
 
     fn run_mlp(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
@@ -375,6 +426,31 @@ struct ShardDims {
     hs: usize,
 }
 
+/// Resolve a [`DecodePositions`] into validated per-row cache positions.
+fn resolve_positions(
+    positions: DecodePositions<'_>,
+    b: usize,
+    s_max: usize,
+) -> Result<Vec<usize>> {
+    let raw: Vec<i32> = match positions {
+        DecodePositions::Scalar(p) => vec![p; b],
+        DecodePositions::PerRow(p) => {
+            if p.len() != b {
+                bail!("decode positions: {} values for batch {b}", p.len());
+            }
+            p.to_vec()
+        }
+    };
+    raw.into_iter()
+        .map(|p| {
+            if p < 0 || p as usize >= s_max {
+                bail!("decode position {p} outside cache of length {s_max}");
+            }
+            Ok(p as usize)
+        })
+        .collect()
+}
+
 impl ExecutionBackend for ReferenceBackend {
     fn name(&self) -> &'static str {
         "reference"
@@ -392,25 +468,13 @@ impl ExecutionBackend for ReferenceBackend {
         true
     }
 
+    fn sync_view(&self) -> Option<&(dyn ExecutionBackend + Sync)> {
+        Some(self)
+    }
+
     fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
-        let Some(st) = StageName::parse(artifact) else {
-            bail!("reference backend cannot execute artifact '{artifact}' (unknown stage name)");
-        };
-        if !self.manifest.batch_buckets.contains(&st.bucket) {
-            bail!(
-                "artifact '{artifact}': bucket {} not in manifest {:?}",
-                st.bucket,
-                self.manifest.batch_buckets
-            );
-        }
-        if !self.manifest.tp_degrees.contains(&st.tp) {
-            bail!(
-                "artifact '{artifact}': tp {} not in manifest {:?}",
-                st.tp,
-                self.manifest.tp_degrees
-            );
-        }
-        self.exec_count.set(self.exec_count.get() + 1);
+        let st = self.validate_stage(artifact)?;
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
         match (st.op, st.prefill) {
             (Op::Embed, _) => self.run_embed(&st, inputs),
             (Op::LmHead, _) => self.run_lm_head(&st, inputs),
@@ -420,8 +484,81 @@ impl ExecutionBackend for ReferenceBackend {
         }
     }
 
+    fn execute_attn_decode_inplace(
+        &self,
+        artifact: &str,
+        x: &Tensor,
+        k_cache: &mut Tensor,
+        v_cache: &mut Tensor,
+        positions: DecodePositions<'_>,
+        w: &AttnShardWeights<'_>,
+    ) -> Result<Tensor> {
+        let st = self.validate_stage(artifact)?;
+        if st.op != Op::Attn || st.prefill {
+            bail!("'{artifact}' is not a decode attention artifact");
+        }
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+        let ln = self.weights.get(w.ln1)?;
+        let wq = self.weights.get(w.wq)?;
+        let wk = self.weights.get(w.wk)?;
+        let wv = self.weights.get(w.wv)?;
+        let wo = self.weights.get(w.wo)?;
+        self.attn_decode_core(&st, x, k_cache, v_cache, positions, ln, wq, wk, wv, wo)
+    }
+
     fn exec_count(&self) -> usize {
-        self.exec_count.get()
+        self.exec_count.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`ReferenceBackend`] pinned to the **seed's functional decode
+/// semantics**: caches flow through [`ExecutionBackend::execute`] as
+/// values (two full clones plus two full returned copies per shard per
+/// layer per token) and TP shards run serially (no
+/// [`ExecutionBackend::sync_view`]). Numerically identical to the hot
+/// path by construction — parity tests assert it token-for-token, and
+/// `benches/decode.rs` measures the hot path against it as the
+/// pre-optimization baseline.
+pub struct FunctionalBackend(ReferenceBackend);
+
+impl FunctionalBackend {
+    pub fn new(inner: ReferenceBackend) -> FunctionalBackend {
+        FunctionalBackend(inner)
+    }
+
+    /// Load from an artifacts directory (fixture models).
+    pub fn load(dir: &Path) -> Result<FunctionalBackend> {
+        Ok(FunctionalBackend(ReferenceBackend::load(dir)?))
+    }
+}
+
+impl ExecutionBackend for FunctionalBackend {
+    fn name(&self) -> &'static str {
+        "reference-functional"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.0.manifest()
+    }
+
+    fn weights(&self) -> &Arc<WeightStore> {
+        self.0.weights()
+    }
+
+    fn supports_rowwise_decode_positions(&self) -> bool {
+        true
+    }
+
+    // Deliberately NOT overriding `sync_view` (shards stay serial) or
+    // `execute_attn_decode_inplace` (decode takes the default
+    // clone-and-copy adapter through `execute`).
+
+    fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        self.0.execute(artifact, inputs)
+    }
+
+    fn exec_count(&self) -> usize {
+        self.0.exec_count()
     }
 }
 
@@ -500,6 +637,13 @@ fn rmsnorm_rows(x: &[f32], h: usize, scale: &[f32]) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// Rows processed together by the blocked matmul kernel (weight-panel
+/// loads amortize across the block).
+const MM_ROW_BLOCK: usize = 4;
+/// Output-column panel width: the per-block accumulator stays resident
+/// in registers / L1 instead of streaming the output row every k step.
+const MM_COL_PANEL: usize = 32;
+
 /// `[rows, k] @ w[k, n]` row-major matmul.
 fn matmul(x: &[f32], rows: usize, k: usize, w: &Tensor, what: &str) -> Result<Vec<f32>> {
     if w.dims.len() != 2 || w.dims[0] != k {
@@ -510,17 +654,46 @@ fn matmul(x: &[f32], rows: usize, k: usize, w: &Tensor, what: &str) -> Result<Ve
     }
     let n = w.dims[1];
     let mut out = vec![0f32; rows * n];
-    for r in 0..rows {
-        let xrow = &x[r * k..(r + 1) * k];
-        let orow = &mut out[r * n..(r + 1) * n];
-        for (i, &xv) in xrow.iter().enumerate() {
-            let wrow = &w.data[i * n..(i + 1) * n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-        }
-    }
+    matmul_into(x, rows, k, &w.data, n, &mut out);
     Ok(out)
+}
+
+/// Blocked matmul kernel: [`MM_ROW_BLOCK`]×[`MM_COL_PANEL`] register
+/// tiles, each weight panel row loaded once per row block instead of
+/// once per row. Every output element still accumulates over k in
+/// ascending order from 0.0 — bit-identical to the scalar triple loop it
+/// replaced (f32 addition order is preserved; nothing is re-associated).
+fn matmul_into(x: &[f32], rows: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), rows * n);
+    let mut acc = [[0f32; MM_COL_PANEL]; MM_ROW_BLOCK];
+    let mut col = 0;
+    while col < n {
+        let cw = MM_COL_PANEL.min(n - col);
+        let mut r0 = 0;
+        while r0 < rows {
+            let rb = MM_ROW_BLOCK.min(rows - r0);
+            for a in acc[..rb].iter_mut() {
+                a[..cw].fill(0.0);
+            }
+            for i in 0..k {
+                let wrow = &w[i * n + col..i * n + col + cw];
+                for (ri, a) in acc[..rb].iter_mut().enumerate() {
+                    let xv = x[(r0 + ri) * k + i];
+                    for (av, &wv) in a[..cw].iter_mut().zip(wrow) {
+                        *av += xv * wv;
+                    }
+                }
+            }
+            for (ri, a) in acc[..rb].iter().enumerate() {
+                let dst = (r0 + ri) * n + col;
+                out[dst..dst + cw].copy_from_slice(&a[..cw]);
+            }
+            r0 += rb;
+        }
+        col += cw;
+    }
 }
 
 fn dims3(t: &Tensor, what: &str) -> Result<(usize, usize, usize)> {
@@ -598,6 +771,44 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_matches_scalar_loop_bitwise() {
+        // The tiled kernel must be bit-identical to the scalar triple
+        // loop across shapes that straddle the block boundaries.
+        let mut state = 0xC0FFEEu64;
+        for (rows, k, n) in [
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 16, 32),
+            (5, 16, 33),
+            (9, 31, 65),
+            (2, 8, 100),
+        ] {
+            let x: Vec<f32> = (0..rows * k)
+                .map(|_| (crate::util::rng::splitmix64(&mut state) % 1000) as f32 / 500.0 - 1.0)
+                .collect();
+            let wdata: Vec<f32> = (0..k * n)
+                .map(|_| (crate::util::rng::splitmix64(&mut state) % 1000) as f32 / 500.0 - 1.0)
+                .collect();
+            let w = Tensor { dims: vec![k, n], data: wdata.clone() };
+            let got = matmul(&x, rows, k, &w, "t").unwrap();
+            // Scalar reference: the seed's triple loop.
+            let mut want = vec![0f32; rows * n];
+            for r in 0..rows {
+                for i in 0..k {
+                    let xv = x[r * k + i];
+                    for j in 0..n {
+                        want[r * n + j] += xv * wdata[i * n + j];
+                    }
+                }
+            }
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "tiled matmul drifted from the scalar loop at [{rows},{k}]x[{k},{n}]"
+            );
+        }
+    }
+
+    #[test]
     fn softmax_attention_single_position_returns_v() {
         // With one position the softmax weight is exactly 1, so attention
         // output == v regardless of q/k. Exercise via run_attn_prefill on
@@ -644,6 +855,103 @@ mod tests {
     }
 
     #[test]
+    fn inplace_decode_matches_functional_execute() {
+        // The in-place entry point and the value-passing execute()
+        // contract must produce bit-identical partials and caches.
+        let manifest = Manifest::parse(
+            r#"{
+              "model": {"name":"t","layers":1,"hidden":2,"heads":1,"vocab":4,
+                        "prompt_len":1,"max_seq":4,"head_dim":2,"ffn":8},
+              "tp_degrees":[1],
+              "batch_buckets":[2],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap();
+        let mut ws = WeightStore::default();
+        let eye = Tensor { dims: vec![2, 2], data: vec![1.0, 0.0, 0.0, 1.0] };
+        let ln = Tensor { dims: vec![2], data: vec![1.0, 1.0] };
+        ws.insert("layers.0.ln1", ln);
+        for name in ["layers.0.wq", "layers.0.wk", "layers.0.wv", "layers.0.wo"] {
+            ws.insert(name, eye.clone());
+        }
+        let be = ReferenceBackend::with_weights(manifest, Arc::new(ws));
+        let x = Tensor { dims: vec![2, 1, 2], data: vec![0.5, -0.25, 1.5, 0.75] };
+        let mut kc = Tensor { dims: vec![2, 1, 4, 2], data: (0..16).map(|i| i as f32 * 0.1).collect() };
+        let mut vc = Tensor { dims: vec![2, 1, 4, 2], data: (0..16).map(|i| i as f32 * -0.1).collect() };
+
+        let functional = be
+            .execute(
+                "attn_decode_tp1_b2",
+                &[
+                    InputArg::F32(&x),
+                    InputArg::F32(&kc),
+                    InputArg::F32(&vc),
+                    InputArg::I32(&[2, 1], vec![2]),
+                    InputArg::Weight("layers.0.ln1"),
+                    InputArg::Weight("layers.0.wq"),
+                    InputArg::Weight("layers.0.wk"),
+                    InputArg::Weight("layers.0.wv"),
+                    InputArg::Weight("layers.0.wo"),
+                ],
+            )
+            .unwrap();
+
+        let w = AttnShardWeights {
+            ln1: "layers.0.ln1",
+            wq: "layers.0.wq",
+            wk: "layers.0.wk",
+            wv: "layers.0.wv",
+            wo: "layers.0.wo",
+        };
+        let partial = be
+            .execute_attn_decode_inplace(
+                "attn_decode_tp1_b2",
+                &x,
+                &mut kc,
+                &mut vc,
+                DecodePositions::PerRow(&[2, 1]),
+                &w,
+            )
+            .unwrap();
+        assert_eq!(partial, functional[0], "partials diverged");
+        assert_eq!(kc, functional[1], "k caches diverged");
+        assert_eq!(vc, functional[2], "v caches diverged");
+        // Outside each row's written position, the caches are untouched.
+        assert_eq!(kc.data[0..4], (0..4).map(|i| i as f32 * 0.1).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn inplace_decode_rejects_non_decode_artifacts() {
+        let manifest = Manifest::parse(
+            r#"{
+              "model": {"name":"t","layers":1,"hidden":2,"heads":1,"vocab":4,
+                        "prompt_len":1,"max_seq":2,"head_dim":2,"ffn":8},
+              "tp_degrees":[1],
+              "batch_buckets":[1],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap();
+        let be = ReferenceBackend::with_weights(manifest, Arc::new(WeightStore::default()));
+        let x = Tensor { dims: vec![1, 1, 2], data: vec![0.0; 2] };
+        let mut kc = Tensor { dims: vec![1, 1, 2, 2], data: vec![0.0; 4] };
+        let mut vc = kc.clone();
+        let w = AttnShardWeights { ln1: "a", wq: "b", wk: "c", wv: "d", wo: "e" };
+        let err = be.execute_attn_decode_inplace(
+            "attn_prefill_tp1_b1",
+            &x,
+            &mut kc,
+            &mut vc,
+            DecodePositions::Scalar(0),
+            &w,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
     fn unknown_artifacts_rejected() {
         let manifest = Manifest::parse(
             r#"{
@@ -660,5 +968,32 @@ mod tests {
         assert!(be.execute("full_prefill_b1", &[]).is_err());
         assert!(be.execute("attn_prefill_tp2_b1", &[]).is_err()); // tp 2 absent
         assert!(be.execute("embed_prefill_b4", &[]).is_err()); // bucket 4 absent
+    }
+
+    #[test]
+    fn backend_is_sync_and_exposes_sync_view() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<ReferenceBackend>();
+        let manifest = Manifest::parse(
+            r#"{
+              "model": {"name":"t","layers":1,"hidden":2,"heads":1,"vocab":4,
+                        "prompt_len":1,"max_seq":2,"head_dim":2,"ffn":8},
+              "tp_degrees":[1],
+              "batch_buckets":[1],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap();
+        let be = ReferenceBackend::with_weights(manifest.clone(), Arc::new(WeightStore::default()));
+        assert!(be.sync_view().is_some());
+        // The functional baseline deliberately stays serial.
+        let fb = FunctionalBackend::new(ReferenceBackend::with_weights(
+            manifest,
+            Arc::new(WeightStore::default()),
+        ));
+        assert!(fb.sync_view().is_none());
+        assert_eq!(fb.name(), "reference-functional");
+        assert!(fb.supports_rowwise_decode_positions());
     }
 }

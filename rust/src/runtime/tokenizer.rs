@@ -34,6 +34,123 @@ pub fn decode(tokens: &[i32]) -> String {
     String::from_utf8_lossy(&bytes).into_owned()
 }
 
+const REPLACEMENT: char = '\u{FFFD}';
+
+/// Incremental UTF-8 decoder for per-token text deltas.
+///
+/// The vocab is byte-level, so a multi-byte UTF-8 character arrives one
+/// token at a time; decoding each token alone renders every such
+/// character as replacement glyphs mid-stream. `Utf8Stream` buffers an
+/// incomplete (but still valid) sequence — at most 3 bytes — and emits
+/// its text the moment it completes or becomes invalid, with exactly the
+/// "U+FFFD substitution of maximal subparts" semantics of
+/// [`String::from_utf8_lossy`]: the concatenation of every
+/// [`Self::push`] delta plus the final [`Self::finish`] equals
+/// [`decode`] over the same tokens.
+#[derive(Debug, Clone, Default)]
+pub struct Utf8Stream {
+    buf: [u8; 4],
+    len: usize,
+}
+
+impl Utf8Stream {
+    pub fn new() -> Utf8Stream {
+        Utf8Stream::default()
+    }
+
+    /// Feed one generated token; returns the text now safe to emit
+    /// (empty while a multi-byte sequence is incomplete). PAD and
+    /// out-of-range tokens are dropped, mirroring [`decode`].
+    pub fn push(&mut self, token: i32) -> String {
+        if token == PAD || !(0..256).contains(&token) {
+            return String::new();
+        }
+        self.buf[self.len] = token as u8;
+        self.len += 1;
+        let mut out = String::new();
+        while self.len > 0 {
+            let lead = self.buf[0];
+            if lead < 0x80 {
+                out.push(lead as char);
+                self.pop_front(1);
+                continue;
+            }
+            let (want, lo, hi) = lead_info(lead);
+            if want == 0 {
+                // Continuation byte or invalid lead in lead position.
+                out.push(REPLACEMENT);
+                self.pop_front(1);
+                continue;
+            }
+            // Scan the continuation bytes present so far; an invalid one
+            // ends the maximal subpart `buf[..i]` as one replacement and
+            // reprocesses the offender as a fresh lead.
+            let mut bad_at = None;
+            for (i, &b) in self.buf[..self.len].iter().enumerate().skip(1) {
+                let (lo_i, hi_i) = if i == 1 { (lo, hi) } else { (0x80, 0xBF) };
+                if b < lo_i || b > hi_i {
+                    bad_at = Some(i);
+                    break;
+                }
+            }
+            if let Some(i) = bad_at {
+                out.push(REPLACEMENT);
+                self.pop_front(i);
+                continue;
+            }
+            if self.len < want {
+                break; // valid prefix: wait for the rest of the character
+            }
+            match std::str::from_utf8(&self.buf[..want]) {
+                Ok(s) => out.push_str(s),
+                // Unreachable: the ranges above admit exactly valid UTF-8.
+                Err(_) => out.push(REPLACEMENT),
+            }
+            self.pop_front(want);
+        }
+        out
+    }
+
+    /// Bytes buffered awaiting the rest of a multi-byte character.
+    pub fn pending(&self) -> usize {
+        self.len
+    }
+
+    /// Flush at end of stream: a trailing incomplete sequence is one
+    /// maximal subpart, i.e. a single replacement character.
+    pub fn finish(&mut self) -> String {
+        if self.len == 0 {
+            String::new()
+        } else {
+            self.len = 0;
+            REPLACEMENT.to_string()
+        }
+    }
+
+    fn pop_front(&mut self, n: usize) {
+        self.buf.copy_within(n..self.len, 0);
+        self.len -= n;
+    }
+}
+
+/// `(sequence length, valid second-byte range)` for a UTF-8 lead byte;
+/// length 0 marks an invalid lead. The second-byte ranges are the WHATWG
+/// table (overlongs and surrogates excluded), which is what makes the
+/// maximal-subpart accounting agree with [`String::from_utf8_lossy`].
+fn lead_info(b: u8) -> (usize, u8, u8) {
+    match b {
+        0xC2..=0xDF => (2, 0x80, 0xBF),
+        0xE0 => (3, 0xA0, 0xBF),
+        0xE1..=0xEC => (3, 0x80, 0xBF),
+        0xED => (3, 0x80, 0x9F),
+        0xEE..=0xEF => (3, 0x80, 0xBF),
+        0xF0 => (4, 0x90, 0xBF),
+        0xF1..=0xF3 => (4, 0x80, 0xBF),
+        0xF4 => (4, 0x80, 0x8F),
+        _ => (0, 0, 0),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +193,89 @@ mod tests {
         for len in [1, 16, 32] {
             assert_eq!(encode("some text", len).len(), len);
         }
+    }
+
+    fn stream_all(tokens: &[i32]) -> String {
+        let mut s = Utf8Stream::new();
+        let mut out: String = tokens.iter().map(|&t| s.push(t)).collect();
+        out.push_str(&s.finish());
+        out
+    }
+
+    #[test]
+    fn utf8_stream_buffers_split_characters() {
+        // "月" = E6 9C 88: nothing emits until the sequence completes.
+        let mut s = Utf8Stream::new();
+        assert_eq!(s.push(0xE6), "");
+        assert_eq!(s.pending(), 1);
+        assert_eq!(s.push(0x9C), "");
+        assert_eq!(s.push(0x88), "月");
+        assert_eq!(s.pending(), 0);
+        // 4-byte emoji split across pushes, with ASCII on either side.
+        let mut s = Utf8Stream::new();
+        let mut out = String::new();
+        for &b in b"a\xF0\x9F\xA6\x80b" {
+            out.push_str(&s.push(b as i32));
+        }
+        assert_eq!(out, "a🦀b");
+    }
+
+    #[test]
+    fn utf8_stream_replacement_semantics_match_lossy_decode() {
+        // Directed cases: invalid continuation ends a maximal subpart as
+        // ONE replacement; truncated tails flush to one replacement.
+        for bytes in [
+            &b"\xE2\x28"[..],       // 3-byte lead + invalid continuation
+            b"\xF0\x9F\x28",        // 2-byte maximal subpart, then '('
+            b"\xE6",                // truncated tail
+            b"\xE6\x9C",            // longer truncated tail
+            b"\xC0\xAF",            // overlong encoding is invalid per byte
+            b"\xED\xA0\x80",        // surrogate
+            b"\xF4\x90\x80\x80",    // above U+10FFFF
+            b"\x80",                // bare continuation
+            b"a\xC2b",              // aborted 2-byte sequence
+        ] {
+            let tokens: Vec<i32> = bytes.iter().map(|&b| b as i32).collect();
+            assert_eq!(
+                stream_all(&tokens),
+                String::from_utf8_lossy(bytes),
+                "stream drifted from from_utf8_lossy on {bytes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn utf8_stream_drops_pad_like_decode() {
+        // PAD (and out-of-range tokens) vanish even mid-sequence,
+        // mirroring decode()'s filter-then-decode order.
+        let tokens = [0xE6, PAD, 0x9C, 999, 0x88, -3];
+        assert_eq!(stream_all(&tokens), "月");
+        assert_eq!(stream_all(&tokens), decode(&tokens));
+    }
+
+    #[test]
+    fn utf8_stream_fuzz_matches_decode() {
+        // Random byte soup (PAD included): the concatenated deltas plus
+        // the flush must equal decode() exactly.
+        let mut state = 0x5EEDu64;
+        for _ in 0..2000 {
+            let n = (crate::util::rng::splitmix64(&mut state) % 12) as usize;
+            let tokens: Vec<i32> = (0..n)
+                .map(|_| (crate::util::rng::splitmix64(&mut state) % 256) as i32)
+                .collect();
+            assert_eq!(
+                stream_all(&tokens),
+                decode(&tokens),
+                "stream drifted from decode() on {tokens:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn utf8_stream_finish_is_idempotent() {
+        let mut s = Utf8Stream::new();
+        s.push(0xE6);
+        assert_eq!(s.finish(), "\u{FFFD}");
+        assert_eq!(s.finish(), "");
     }
 }

@@ -74,6 +74,74 @@ impl Tensor {
         }
         Ok(())
     }
+
+    /// Copy the depth range `rows` of dim-0 slot `src_slot` in `src` into
+    /// slot `dst_slot` of `self`, per head — the depth-bounded sibling of
+    /// [`Self::copy_slot_from`] for rank-4 KV caches `[slots, heads,
+    /// max_seq, head_dim]`. Moving only a row's occupied prefix (and, on
+    /// scatter-back, just its newest entry) is what keeps the decode
+    /// bucket down-shift cheaper than the attention it saves.
+    pub fn copy_cache_rows(
+        &mut self,
+        dst_slot: usize,
+        src: &Tensor,
+        src_slot: usize,
+        rows: std::ops::Range<usize>,
+    ) -> Result<()> {
+        if self.dims.len() != 4 || src.dims.len() != 4 || self.dims[1..] != src.dims[1..] {
+            bail!(
+                "cache-row copy between incompatible shapes {:?} and {:?}",
+                self.dims,
+                src.dims
+            );
+        }
+        let (heads, depth, dh) = (self.dims[1], self.dims[2], self.dims[3]);
+        if dst_slot >= self.dims[0] || src_slot >= src.dims[0] {
+            bail!(
+                "cache-row copy {src_slot}->{dst_slot} out of range ({} src, {} dst slots)",
+                src.dims[0],
+                self.dims[0]
+            );
+        }
+        if rows.start > rows.end || rows.end > depth {
+            bail!("cache rows {rows:?} outside depth {depth}");
+        }
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let slot_elems = heads * depth * dh;
+        let len = (rows.end - rows.start) * dh;
+        for head in 0..heads {
+            let head_off = head * depth * dh + rows.start * dh;
+            let dst = dst_slot * slot_elems + head_off;
+            let so = src_slot * slot_elems + head_off;
+            self.data[dst..dst + len].copy_from_slice(&src.data[so..so + len]);
+        }
+        Ok(())
+    }
+
+    /// Zero cache rows `[0, depth)` of `slot`, per head (depth-bounded
+    /// evict for rank-4 KV caches). Rows at and beyond a slot's written
+    /// depth never hold live data — decode reads `[0, pos]` and admission
+    /// rewrites the whole slot — so evicting only the occupied prefix is
+    /// equivalent to [`Self::clear_slot`] at a fraction of the traffic.
+    pub fn clear_cache_rows(&mut self, slot: usize, depth_rows: usize) -> Result<()> {
+        if self.dims.len() != 4 || slot >= self.dims[0] {
+            bail!("clear_cache_rows {slot} out of range for shape {:?}", self.dims);
+        }
+        let (heads, depth, dh) = (self.dims[1], self.dims[2], self.dims[3]);
+        if depth_rows > depth {
+            bail!("clear_cache_rows depth {depth_rows} exceeds cache depth {depth}");
+        }
+        let slot_elems = heads * depth * dh;
+        for head in 0..heads {
+            let start = slot * slot_elems + head * depth * dh;
+            for v in &mut self.data[start..start + depth_rows * dh] {
+                *v = 0.0;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// All tensors from a weights.bin, by name.
@@ -155,6 +223,12 @@ impl WeightStore {
         let mut v: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).collect();
         v.sort_unstable();
         v
+    }
+
+    /// Insert (or replace) a tensor by name — synthetic models for
+    /// benches and tests, built without a `weights.bin` round-trip.
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
     }
 
     /// Sharded-weight name for a layer weight (`tp == 1` → unsharded name).
@@ -267,6 +341,63 @@ mod tests {
         assert!(dst.clear_slot(3).is_err());
         let bad = Tensor { dims: vec![2, 3], data: vec![0.0; 6] };
         assert!(dst.copy_slot_from(0, &bad, 0).is_err());
+    }
+
+    #[test]
+    fn cache_row_copy_and_clear_are_depth_bounded() {
+        // Two-slot, two-head cache of depth 3, head_dim 2: slot layout is
+        // [head0: r0 r1 r2][head1: r0 r1 r2], 12 elements per slot.
+        let mut dst = Tensor { dims: vec![2, 2, 3, 2], data: vec![9.0; 24] };
+        let src = Tensor { dims: vec![3, 2, 3, 2], data: (0..36).map(|i| i as f32).collect() };
+        // Copy depth [0, 2) of src slot 1 into dst slot 0.
+        dst.copy_cache_rows(0, &src, 1, 0..2).unwrap();
+        // src slot 1 starts at 12: head0 rows 0..2 = 12..16, head1 = 18..22.
+        assert_eq!(dst.data[0..4], [12.0, 13.0, 14.0, 15.0]);
+        assert_eq!(dst.data[4..6], [9.0, 9.0], "row 2 of head 0 untouched");
+        assert_eq!(dst.data[6..10], [18.0, 19.0, 20.0, 21.0]);
+        assert_eq!(dst.data[10..12], [9.0, 9.0], "row 2 of head 1 untouched");
+        assert_eq!(dst.data[12..], [9.0; 12], "slot 1 untouched");
+        // Scatter-back shape: a single entry at depth 2.
+        dst.copy_cache_rows(1, &src, 0, 2..3).unwrap();
+        assert_eq!(dst.data[12..16], [9.0; 4]);
+        assert_eq!(dst.data[16..18], [4.0, 5.0], "head 0 entry 2");
+        assert_eq!(dst.data[22..24], [10.0, 11.0], "head 1 entry 2");
+        // Empty range is a no-op.
+        dst.copy_cache_rows(0, &src, 0, 1..1).unwrap();
+        // Depth-bounded clear: zero [0, 1) of slot 0 only.
+        dst.clear_cache_rows(0, 1).unwrap();
+        assert_eq!(dst.data[0..2], [0.0, 0.0]);
+        assert_eq!(dst.data[2..4], [14.0, 15.0], "row 1 survives a depth-1 clear");
+        assert_eq!(dst.data[6..8], [0.0, 0.0], "head 1 row 0 cleared too");
+        // Full-depth clear equals clear_slot.
+        let mut a = dst.clone();
+        let mut b = dst.clone();
+        a.clear_cache_rows(1, 3).unwrap();
+        b.clear_slot(1).unwrap();
+        assert_eq!(a.data, b.data);
+        // Errors: bad ranks, slots, and depths.
+        assert!(dst.copy_cache_rows(2, &src, 0, 0..1).is_err());
+        assert!(dst.copy_cache_rows(0, &src, 3, 0..1).is_err());
+        assert!(dst.copy_cache_rows(0, &src, 0, 0..4).is_err());
+        #[allow(clippy::reversed_empty_ranges)]
+        {
+            assert!(dst.copy_cache_rows(0, &src, 0, 2..1).is_err());
+        }
+        assert!(dst.clear_cache_rows(2, 1).is_err());
+        assert!(dst.clear_cache_rows(0, 4).is_err());
+        let rank3 = Tensor { dims: vec![2, 3, 2], data: vec![0.0; 12] };
+        let mut r3 = rank3.clone();
+        assert!(r3.copy_cache_rows(0, &rank3, 0, 0..1).is_err());
+        assert!(r3.clear_cache_rows(0, 1).is_err());
+    }
+
+    #[test]
+    fn insert_adds_tensor() {
+        let mut ws = WeightStore::default();
+        assert!(ws.is_empty());
+        ws.insert("w", Tensor { dims: vec![2], data: vec![1.0, 2.0] });
+        assert_eq!(ws.get("w").unwrap().data, vec![1.0, 2.0]);
+        assert_eq!(ws.len(), 1);
     }
 
     #[test]

@@ -197,6 +197,40 @@ fn streaming_sse_delivers_tokens_before_done() {
 }
 
 #[test]
+fn streaming_text_deltas_reassemble_to_completion_text() {
+    let (service, server) = start();
+    let addr = server.addr();
+
+    // The fixture's greedy continuation of this prompt contains bytes
+    // ≥ 0x80 (golden tokens include 136/230/180), so this exercises the
+    // worker's incremental UTF-8 buffering over a real SSE stream: the
+    // concatenation of every token event's `text` must equal the
+    // terminal completion text exactly — no spurious replacement chars
+    // mid-stream, and the final token flushes any buffered bytes.
+    let resp = post(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "hexgen parity", "max_new": 6, "stream": true}"#,
+    );
+    let events = sse_events(&resp);
+    let deltas: String = events
+        .iter()
+        .filter(|(e, _)| e == "token")
+        .map(|(_, d)| d.str("text").unwrap().to_string())
+        .collect();
+    let (last_event, last_data) = events.last().unwrap();
+    assert_eq!(last_event, "done");
+    assert_eq!(
+        deltas,
+        last_data.str("text").unwrap(),
+        "concatenated token text_deltas must reassemble the completion text"
+    );
+
+    server.shutdown();
+    drop(service);
+}
+
+#[test]
 fn malformed_requests_get_typed_errors() {
     let (service, server) = start();
     let addr = server.addr();

@@ -8,13 +8,24 @@ use std::path::PathBuf;
 
 use hexgen::coordinator::{add_residual, plan_from_strategy, PipelineExecutor};
 use hexgen::runtime::{
-    load_backend, tokenizer, BackendKind, ExecutionBackend, InputArg, ReferenceBackend, Tensor,
-    WeightStore,
+    load_backend, tokenizer, BackendKind, ExecutionBackend, FunctionalBackend, InputArg,
+    ReferenceBackend, Tensor, WeightStore,
 };
 use hexgen::util::json::Json;
 
 fn fixture_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
+}
+
+/// Executor over the fixture — the hot path (in-place caches, threaded
+/// TP shards, bucket down-shift) or the seed-pinned functional baseline.
+fn exec_with(functional: bool, tps: &[usize], layers: &[usize]) -> PipelineExecutor {
+    let be: Box<dyn ExecutionBackend> = if functional {
+        Box::new(FunctionalBackend::load(&fixture_dir()).unwrap())
+    } else {
+        Box::new(ReferenceBackend::load(&fixture_dir()).unwrap())
+    };
+    PipelineExecutor::with_backend(be, plan_from_strategy(tps, layers).unwrap()).unwrap()
 }
 
 fn golden() -> Json {
@@ -204,6 +215,133 @@ fn invalid_plans_rejected() {
 }
 
 #[test]
+fn hot_path_generate_matches_functional_and_golden() {
+    // The rebuilt decode hot path (in-place KV caches, threaded TP
+    // shards, tiled matmul) must stay bit-identical to the seed's
+    // functional path — both pinned to the ref.py golden tokens.
+    let g = golden();
+    let prompt = golden_tokens(&g, "prompt_tokens");
+    let want = golden_tokens(&g, "greedy_tokens");
+    for (tps, layers) in [
+        (vec![1usize], vec![2usize]),
+        (vec![2], vec![2]),
+        (vec![2, 1], vec![1, 1]),
+    ] {
+        let hot = exec_with(false, &tps, &layers);
+        let seed = exec_with(true, &tps, &layers);
+        let a = hot.generate(&[prompt.clone()], want.len()).unwrap();
+        let b = seed.generate(&[prompt.clone()], want.len()).unwrap();
+        assert_eq!(
+            a.tokens[0],
+            want,
+            "in-place hot path diverged from golden at {}",
+            hot.strategy_string()
+        );
+        assert_eq!(b.tokens[0], want, "functional baseline diverged from golden");
+    }
+}
+
+#[test]
+fn threaded_staggered_admission_and_cancel_match_functional_path() {
+    // Drive an identical admission/step/cancel/readmit schedule over the
+    // hot path (threaded tp=2 shards, in-place caches, down-shifted
+    // single-row steps) and the serial functional baseline; every step
+    // outcome must agree exactly.
+    fn drive(exec: &PipelineExecutor) -> Vec<(usize, Vec<i32>)> {
+        let prompt_len = exec.manifest().model.prompt_len;
+        let pa = tokenizer::encode("doomed row", prompt_len);
+        let pb = tokenizer::encode("survivor", prompt_len);
+        let pc = tokenizer::encode("late join", prompt_len);
+        let mut session = exec.new_session(2).unwrap();
+        let mut events: Vec<(usize, Vec<i32>)> = Vec::new();
+        let mut record = |tag: usize, toks: Vec<i32>| events.push((tag, toks));
+        let out = session
+            .prefill_into_slots(vec![
+                (0, hexgen::coordinator::SlotRequest { prompt: pa, max_new: 8, stop: None }),
+                (1, hexgen::coordinator::SlotRequest { prompt: pb, max_new: 8, stop: None }),
+            ])
+            .unwrap();
+        record(100, out.tokens.iter().map(|&(_, t)| t).collect());
+        for _ in 0..2 {
+            let step = session.decode_step().unwrap();
+            record(101, step.tokens.iter().map(|&(_, t)| t).collect());
+        }
+        record(102, session.cancel_slot(0).unwrap());
+        // Survivor alone: the hot path down-shifts this step to bucket 1.
+        let step = session.decode_step().unwrap();
+        record(101, step.tokens.iter().map(|&(_, t)| t).collect());
+        let out = session
+            .prefill_into_slots(vec![(
+                0,
+                hexgen::coordinator::SlotRequest { prompt: pc, max_new: 4, stop: None },
+            )])
+            .unwrap();
+        record(100, out.tokens.iter().map(|&(_, t)| t).collect());
+        while session.active() > 0 {
+            for (slot, toks) in session.decode_step().unwrap().finished {
+                events.push((slot, toks));
+            }
+        }
+        events
+    }
+    let hot = exec_with(false, &[2], &[2]);
+    assert!(hot.backend().sync_view().is_some(), "hot path must expose threaded shards");
+    let seed = exec_with(true, &[2], &[2]);
+    assert!(seed.backend().sync_view().is_none(), "baseline must stay serial");
+    assert_eq!(drive(&hot), drive(&seed), "hot decode path diverged from the functional path");
+}
+
+#[test]
+fn bucket_downshift_tracks_live_rows_when_draining() {
+    // Mixed max_new drains the batch mid-flight: once row 0 retires, the
+    // hot path shapes each step to bucket 1. Tokens must match the solo
+    // runs bit-for-bit and the per-step AllReduce traffic must shrink
+    // with the live rows (the honest Eq. 2 decode-cost signal).
+    use hexgen::coordinator::SlotRequest;
+    let exec = exec_with(false, &[2], &[2]);
+    let prompt_len = exec.manifest().model.prompt_len;
+    let p1 = tokenizer::encode("short", prompt_len);
+    let p2 = tokenizer::encode("longer request", prompt_len);
+    let solo1 = exec.generate(&[p1.clone()], 2).unwrap().tokens[0].clone();
+    let solo2 = exec.generate(&[p2.clone()], 6).unwrap().tokens[0].clone();
+
+    let mut session = exec.new_session(2).unwrap();
+    session
+        .prefill_into_slots(vec![
+            (0, SlotRequest { prompt: p1, max_new: 2, stop: None }),
+            (1, SlotRequest { prompt: p2, max_new: 6, stop: None }),
+        ])
+        .unwrap();
+    session.take_comm();
+    let mut finished = std::collections::BTreeMap::new();
+    // Step 1 runs with both rows live (full bucket 2) and retires row 0.
+    let out = session.decode_step().unwrap();
+    assert_eq!(out.finished.len(), 1, "row 0 retires at its max_new");
+    let full_bytes = session.take_comm().allreduce_bytes;
+    for (slot, toks) in out.finished {
+        finished.insert(slot, toks);
+    }
+    // Step 2 has one live row: the step down-shifts to bucket 1, halving
+    // the reduced activation bytes.
+    let out = session.decode_step().unwrap();
+    let compact_bytes = session.take_comm().allreduce_bytes;
+    assert!(
+        compact_bytes * 1.9 < full_bytes,
+        "down-shifted step must move ~half the bytes: {compact_bytes} vs {full_bytes}"
+    );
+    for (slot, toks) in out.finished {
+        finished.insert(slot, toks);
+    }
+    while session.active() > 0 {
+        for (slot, toks) in session.decode_step().unwrap().finished {
+            finished.insert(slot, toks);
+        }
+    }
+    assert_eq!(finished[&0], solo1, "drained row diverged from its solo run");
+    assert_eq!(finished[&1], solo2, "surviving row perturbed by the bucket down-shift");
+}
+
+#[test]
 fn staggered_admission_matches_solo_runs() {
     // The continuous-batching core claim: a request admitted into an
     // in-flight batch at a decode-step boundary decodes token-for-token
@@ -295,12 +433,19 @@ fn cancel_slot_frees_mid_decode_and_readmits() {
     assert_eq!(session.active(), 2);
 
     // Cancel A at the step boundary: prefill token + 2 decode tokens so
-    // far, slot 0 freed for admission.
+    // far, slot 0 freed for admission. The evict zeroes only A's written
+    // depth — the cancel→readmit parity below pins that this is enough.
     let partial = session.cancel_slot(0).expect("active row must cancel");
     assert_eq!(partial.len(), 3, "partial tokens generated before cancellation");
     assert_eq!(session.active(), 1);
     assert_eq!(session.free_slots(), vec![0]);
     assert!(session.cancel_slot(0).is_none(), "double-cancel is a no-op");
+
+    // Let the survivor decode on with the slot idle before readmitting
+    // (the freed slot must stay clean across intervening steps).
+    for _ in 0..2 {
+        session.decode_step().unwrap();
+    }
 
     // The freed slot serves a new request; B is unperturbed.
     session
