@@ -53,4 +53,26 @@ plan-serve:
 serve-smoke: build
 	bash scripts/serve_smoke.sh
 
-.PHONY: artifacts fixture build test bench-batching bench-decode bench-decode-quick plan-serve serve-smoke
+# Project-invariant static analysis over rust/src (serving-path panic
+# freedom, hot-path allocation freedom, lock discipline). Zero external
+# deps; see rust/README.md "Correctness tooling" for the rule catalog.
+lint:
+	cargo xtask lint
+
+# ThreadSanitizer over the concurrency-heavy integration tests. Needs a
+# nightly toolchain with the rust-src component (TSan instruments std
+# via -Zbuild-std).
+TSAN_TARGET ?= x86_64-unknown-linux-gnu
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
+		--target $(TSAN_TARGET) -p hexgen \
+		--test service_e2e --test http_streaming --test reference_parity
+
+# Miri over the unit tests that exercise raw indexing arithmetic and the
+# sync primitives (full integration tests are too slow under Miri).
+# Needs: rustup +nightly component add miri.
+miri:
+	MIRIFLAGS="-Zmiri-disable-isolation" cargo +nightly miri test \
+		-p hexgen --lib -- util:: runtime::weights
+
+.PHONY: artifacts fixture build test bench-batching bench-decode bench-decode-quick plan-serve serve-smoke lint tsan miri

@@ -73,9 +73,15 @@ pub fn lower_plan(plan: &DeploymentPlan, manifest: &Manifest) -> Result<LoweredP
         // ---- merge until the pipeline fits the served layer count ----
         if stages.len() > m_layers {
             while stages.len() > m_layers {
-                let j = (0..stages.len() - 1)
-                    .min_by_key(|&j| stages[j].1 + stages[j + 1].1)
-                    .expect("at least two stages while merging");
+                // `stages.len() > m_layers >= 1` here, so there is always
+                // an adjacent pair; bailing (not breaking) keeps the
+                // re-apportionment below from underflowing if that
+                // invariant ever breaks.
+                let Some(j) =
+                    (0..stages.len() - 1).min_by_key(|&j| stages[j].1 + stages[j + 1].1)
+                else {
+                    bail!("internal: replica {i} has no adjacent stage pair to merge");
+                };
                 stages[j] = (stages[j].0.max(stages[j + 1].0), stages[j].1 + stages[j + 1].1);
                 stages.remove(j + 1);
             }
@@ -92,14 +98,14 @@ pub fn lower_plan(plan: &DeploymentPlan, manifest: &Manifest) -> Result<LoweredP
         for _ in 0..(m_layers - stages.len()) {
             // Greedy largest-deficit apportionment: deterministic and
             // proportional to the plan's layer split.
-            let j = (0..stages.len())
-                .max_by(|&a, &b| {
-                    let deficit = |k: usize| {
-                        stages[k].1 as f64 * m_layers as f64 / plan_total as f64 - layers[k] as f64
-                    };
-                    deficit(a).partial_cmp(&deficit(b)).expect("finite deficits")
-                })
-                .expect("non-empty stages");
+            let Some(j) = (0..stages.len()).max_by(|&a, &b| {
+                let deficit = |k: usize| {
+                    stages[k].1 as f64 * m_layers as f64 / plan_total as f64 - layers[k] as f64
+                };
+                deficit(a).total_cmp(&deficit(b))
+            }) else {
+                bail!("internal: replica {i} lowered to zero stages");
+            };
             layers[j] += 1;
         }
         if plan.model_layers != m_layers {

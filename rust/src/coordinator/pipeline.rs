@@ -46,7 +46,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::{
     tokenizer, AttnShardWeights, BackendKind, DecodePositions, ExecutionBackend, InputArg, Tensor,
@@ -334,6 +334,10 @@ impl PipelineExecutor {
             prefill_tokens: 0,
             prefill_seconds: 0.0,
             decode_seconds: 0.0,
+            scratch_active: Vec::with_capacity(bucket),
+            scratch_tokens: Vec::with_capacity(bucket),
+            scratch_positions: Vec::with_capacity(bucket),
+            scratch_prompt: Vec::with_capacity(bucket * m.model.prompt_len),
         })
     }
 
@@ -410,6 +414,19 @@ impl PipelineExecutor {
         Ok(outs.remove(0))
     }
 
+    /// Surface a TP shard thread's panic payload as a typed error so the
+    /// worker loop can fail the batch and rebuild its session, instead of
+    /// the panic tearing down the whole replica (and poisoning whatever
+    /// locks the worker held).
+    fn shard_panic_error(payload: &(dyn std::any::Any + Send)) -> anyhow::Error {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+            .unwrap_or("opaque panic payload");
+        anyhow!("TP shard thread panicked: {msg}")
+    }
+
     /// Run `f` once per TP rank — concurrently under `std::thread::scope`
     /// when the backend is shareable, serially otherwise — returning the
     /// results in rank order (which keeps the downstream AllReduce
@@ -432,7 +449,10 @@ impl PipelineExecutor {
                         .collect();
                     handles
                         .into_iter()
-                        .map(|h| h.join().expect("TP shard thread panicked"))
+                        .map(|h| match h.join() {
+                            Ok(res) => res,
+                            Err(payload) => Err(Self::shard_panic_error(payload.as_ref())),
+                        })
                         .collect()
                 });
                 joined
@@ -510,9 +530,11 @@ impl PipelineExecutor {
             partials.push(partial);
             layer_caches.push((kc, vc));
         }
-        let mut h = x.clone();
-        let reduced = all_reduce_sum(partials, comm);
-        add_residual(&mut h, &reduced);
+        // Reduce the attention partials first and add the residual into
+        // the reduction's buffer: identical bits (f32 addition of two
+        // operands commutes), one tensor clone fewer per layer.
+        let mut h = all_reduce_sum(partials, comm);
+        add_residual(&mut h, x);
 
         let mlp = self.mlp_partials(&h, tp, layer_names, stage_names.mlp_prefill[bidx].as_str())?;
         let reduced = all_reduce_sum(mlp, comm);
@@ -578,7 +600,10 @@ impl PipelineExecutor {
                         .collect();
                     handles
                         .into_iter()
-                        .map(|h| h.join().expect("TP shard thread panicked"))
+                        .map(|h| match h.join() {
+                            Ok(res) => res,
+                            Err(payload) => Err(Self::shard_panic_error(payload.as_ref())),
+                        })
                         .collect()
                 });
                 joined?
@@ -591,9 +616,10 @@ impl PipelineExecutor {
                 })
                 .collect::<Result<Vec<_>>>()?,
         };
-        let mut h = x.clone();
-        let reduced = all_reduce_sum(partials, comm);
-        add_residual(&mut h, &reduced);
+        // Same clone-free residual as layer_prefill: reduce, then add x
+        // into the reduction's buffer.
+        let mut h = all_reduce_sum(partials, comm);
+        add_residual(&mut h, x);
 
         let mlp = self.mlp_partials(&h, tp, layer_names, stage_names.mlp_decode[bidx].as_str())?;
         let reduced = all_reduce_sum(mlp, comm);
@@ -663,6 +689,17 @@ pub struct DecodeSession<'a> {
     prefill_tokens: usize,
     prefill_seconds: f64,
     decode_seconds: f64,
+    // Step-scoped scratch, reused across calls so the `lint: hot-path`
+    // regions in decode_step / prefill_into_slots stay allocation-free
+    // in steady state (capacity is reserved once at session creation).
+    /// Indices of the active slots for the step in flight.
+    scratch_active: Vec<usize>,
+    /// Per-row input tokens for a decode step.
+    scratch_tokens: Vec<i32>,
+    /// Per-row cache depths for a decode step.
+    scratch_positions: Vec<i32>,
+    /// Flattened, padded prompt batch for an admission prefill.
+    scratch_prompt: Vec<i32>,
 }
 
 impl<'a> DecodeSession<'a> {
@@ -721,17 +758,17 @@ impl<'a> DecodeSession<'a> {
         if reqs.is_empty() {
             return Ok(StepOutcome::default());
         }
+        // lint: hot-path — admission runs at every step boundary; no
+        // allocations beyond growth into the session's reserved scratch.
         let exec = self.exec;
-        let info = exec.backend.manifest().model.clone();
-        let mut claimed = vec![false; self.bucket];
-        for (slot, r) in &reqs {
+        let info = &exec.backend.manifest().model;
+        for (i, (slot, r)) in reqs.iter().enumerate() {
             if *slot >= self.bucket {
                 bail!("slot {slot} outside session bucket {}", self.bucket);
             }
-            if self.slots[*slot].is_some() || claimed[*slot] {
+            if self.slots[*slot].is_some() || reqs[..i].iter().any(|(s, _)| s == slot) {
                 bail!("slot {slot} is already occupied");
             }
-            claimed[*slot] = true;
             if r.prompt.len() != info.prompt_len {
                 bail!("prompt must be exactly {} tokens, got {}", info.prompt_len, r.prompt.len());
             }
@@ -743,7 +780,9 @@ impl<'a> DecodeSession<'a> {
         let bidx = exec.names.bucket_idx(pb)?;
 
         let t0 = Instant::now();
-        let mut tokens: Vec<i32> = Vec::with_capacity(pb * info.prompt_len);
+        let mut tokens = std::mem::take(&mut self.scratch_prompt);
+        tokens.clear();
+        tokens.reserve(pb * info.prompt_len);
         for (_, r) in &reqs {
             tokens.extend_from_slice(&r.prompt);
         }
@@ -766,6 +805,7 @@ impl<'a> DecodeSession<'a> {
                 record_pp_send(&x, &mut self.comm);
             }
         }
+        self.scratch_prompt = tokens;
         let logits = exec.lm_head(&x, true, bidx)?;
         let next = argmax_rows(&logits, info.vocab);
         self.prefill_seconds += t0.elapsed().as_secs_f64();
@@ -776,13 +816,14 @@ impl<'a> DecodeSession<'a> {
         for (row, (slot, r)) in reqs.into_iter().enumerate() {
             let tok = next[row];
             out.tokens.push((slot, tok));
-            let st = SlotState {
+            let mut st = SlotState {
                 max_new: r.max_new.min(max_decode).max(1),
                 stop: r.stop,
-                generated: vec![tok],
+                generated: Vec::new(),
                 next: tok,
                 pos: info.prompt_len,
             };
+            st.generated.push(tok);
             if st.generated.len() >= st.max_new || Some(tok) == st.stop {
                 self.evict(slot, st.pos);
                 out.finished.push((slot, st.generated));
@@ -791,6 +832,7 @@ impl<'a> DecodeSession<'a> {
             }
         }
         Ok(out)
+        // lint: hot-path-end
     }
 
     /// Run one decode iteration for every active row, reporting each
@@ -811,17 +853,19 @@ impl<'a> DecodeSession<'a> {
         if self.active() == 0 {
             return Ok(StepOutcome::default());
         }
+        // lint: hot-path — the per-token loop; allocation-free in steady
+        // state (scratch buffers are reserved at session creation).
         let exec = self.exec;
-        let info = exec.backend.manifest().model.clone();
+        let info = &exec.backend.manifest().model;
         let t0 = Instant::now();
 
-        let active_slots: Vec<usize> = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.is_some())
-            .map(|(i, _)| i)
-            .collect();
+        let mut active_slots = std::mem::take(&mut self.scratch_active);
+        active_slots.clear();
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.is_some() {
+                active_slots.push(i);
+            }
+        }
         let sb = exec.backend.manifest().bucket_for(active_slots.len())?.min(self.bucket);
         let compact = sb < self.bucket;
         let bidx = exec.names.bucket_idx(sb)?;
@@ -830,11 +874,17 @@ impl<'a> DecodeSession<'a> {
 
         // Row layout: compact steps pack active rows into [0, n); full
         // steps keep row == slot.
-        let mut tok_batch = vec![tokenizer::PAD; sb];
-        let mut positions = vec![0i32; sb];
+        let mut tok_batch = std::mem::take(&mut self.scratch_tokens);
+        tok_batch.clear();
+        tok_batch.resize(sb, tokenizer::PAD);
+        let mut positions = std::mem::take(&mut self.scratch_positions);
+        positions.clear();
+        positions.resize(sb, 0i32);
         let mut filler_pos = 0i32;
         for (row, &slot) in active_slots.iter().enumerate() {
-            let st = self.slots[slot].as_ref().expect("active slot");
+            let Some(st) = self.slots[slot].as_ref() else {
+                bail!("internal: active slot {slot} lost its state mid-step");
+            };
             let ridx = if compact { row } else { slot };
             tok_batch[ridx] = st.next;
             positions[ridx] = st.pos as i32;
@@ -875,7 +925,9 @@ impl<'a> DecodeSession<'a> {
         for (row, &slot) in active_slots.iter().enumerate() {
             let ridx = if compact { row } else { slot };
             let done = {
-                let st = self.slots[slot].as_mut().expect("active slot");
+                let Some(st) = self.slots[slot].as_mut() else {
+                    bail!("internal: active slot {slot} lost its state mid-step");
+                };
                 let tok = next[ridx];
                 st.generated.push(tok);
                 st.next = tok;
@@ -884,12 +936,18 @@ impl<'a> DecodeSession<'a> {
                 st.generated.len() >= st.max_new || Some(tok) == st.stop
             };
             if done {
-                let st = self.slots[slot].take().expect("slot state");
+                let Some(st) = self.slots[slot].take() else {
+                    bail!("internal: active slot {slot} lost its state mid-step");
+                };
                 self.evict(slot, st.pos);
                 out.finished.push((slot, st.generated));
             }
         }
+        self.scratch_active = active_slots;
+        self.scratch_tokens = tok_batch;
+        self.scratch_positions = positions;
         Ok(out)
+        // lint: hot-path-end
     }
 
     /// Cancel the request occupying `slot`: drop its decode state, zero
@@ -925,7 +983,10 @@ impl<'a> DecodeSession<'a> {
                 for (shard, (sk, sv)) in layer.iter().enumerate() {
                     let (dk, dv) = &mut step[si][li][shard];
                     for (row, &slot) in active_slots.iter().enumerate() {
-                        let depth = self.slots[slot].as_ref().expect("active slot").pos;
+                        let Some(st) = self.slots[slot].as_ref() else {
+                            bail!("internal: gathering inactive slot {slot}");
+                        };
+                        let depth = st.pos;
                         dk.copy_cache_rows(row, sk, slot, 0..depth)?;
                         dv.copy_cache_rows(row, sv, slot, 0..depth)?;
                     }
@@ -946,7 +1007,10 @@ impl<'a> DecodeSession<'a> {
                 for (shard, (dk, dv)) in layer.iter_mut().enumerate() {
                     let (sk, sv) = &step[si][li][shard];
                     for (row, &slot) in active_slots.iter().enumerate() {
-                        let pos = self.slots[slot].as_ref().expect("active slot").pos;
+                        let Some(st) = self.slots[slot].as_ref() else {
+                            bail!("internal: scattering inactive slot {slot}");
+                        };
+                        let pos = st.pos;
                         dk.copy_cache_rows(slot, sk, row, pos..pos + 1)?;
                         dv.copy_cache_rows(slot, sv, row, pos..pos + 1)?;
                     }

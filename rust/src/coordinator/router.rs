@@ -17,8 +17,9 @@
 //!   calibrated onto the measured scale (mean measured/seed ratio), so
 //!   relative plan estimates and absolute token rates mix consistently.
 
+use crate::util::sync::{locks, OrderedMutex, OrderedMutexGuard};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// EWMA smoothing factor for measured decode throughput.
 const SPEED_EWMA_ALPHA: f64 = 0.2;
@@ -31,7 +32,7 @@ pub enum RoutePolicy {
     LeastLoaded,
 }
 
-/// Per-replica speed accounting (behind the router's mutex).
+/// Per-replica speed accounting (behind the router's ranked mutex).
 #[derive(Debug)]
 struct SpeedState {
     /// Relative seed weight per replica (1.0 = baseline).
@@ -46,7 +47,7 @@ struct SpeedState {
 pub struct Router {
     policy: RoutePolicy,
     outstanding: Vec<Arc<AtomicUsize>>,
-    speeds: Mutex<SpeedState>,
+    speeds: OrderedMutex<SpeedState>,
     rr_next: AtomicUsize,
 }
 
@@ -56,10 +57,11 @@ impl Router {
         Router {
             policy,
             outstanding: (0..replicas).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
-            speeds: Mutex::new(SpeedState {
-                seed: vec![1.0; replicas],
-                measured: vec![None; replicas],
-            }),
+            speeds: OrderedMutex::new(
+                locks::ROUTER_SPEEDS,
+                "router.speeds",
+                SpeedState { seed: vec![1.0; replicas], measured: vec![None; replicas] },
+            ),
             rr_next: AtomicUsize::new(0),
         }
     }
@@ -106,8 +108,8 @@ impl Router {
         st.measured.iter().zip(&st.seed).map(|(m, &s)| m.unwrap_or(s * calib)).collect()
     }
 
-    fn state(&self) -> std::sync::MutexGuard<'_, SpeedState> {
-        self.speeds.lock().expect("router speed state")
+    fn state(&self) -> OrderedMutexGuard<'_, SpeedState> {
+        self.speeds.lock()
     }
 
     pub fn replicas(&self) -> usize {
@@ -116,7 +118,16 @@ impl Router {
 
     /// Pick a replica for a new request and record the assignment.
     pub fn route(&self) -> usize {
-        self.route_excluding(&[]).expect("router has at least one replica")
+        match self.route_excluding(&[]) {
+            Some(r) => r,
+            // Unreachable with nothing excluded (`new` asserts replicas
+            // > 0), but a panic here would kill a handler thread; fall
+            // back to replica 0 and keep the complete() pairing intact.
+            None => {
+                self.outstanding[0].fetch_add(1, Ordering::Relaxed);
+                0
+            }
+        }
     }
 
     /// Pick a replica, skipping `excluded` (replicas observed dead by the
@@ -314,6 +325,24 @@ mod tests {
         assert_eq!(snap.len(), 2);
         assert_eq!(snap[0], (1, 4.0));
         assert_eq!(snap[1], (0, 1.0));
+    }
+
+    #[test]
+    fn panicked_holder_does_not_poison_routing() {
+        // Regression for the poisoning cascade: a worker thread dying
+        // while holding the speed lock must not take the router (and
+        // with it every handler thread) down.
+        let r = Arc::new(Router::new(RoutePolicy::LeastLoaded, 2));
+        let r2 = r.clone();
+        let died = std::thread::spawn(move || {
+            let _guard = r2.speeds.lock();
+            panic!("worker died mid-update");
+        })
+        .join();
+        assert!(died.is_err());
+        r.set_speeds(vec![2.0, 1.0]);
+        assert_eq!(r.speeds(), vec![2.0, 1.0]);
+        let _ = r.route();
     }
 
     #[test]

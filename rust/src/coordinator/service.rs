@@ -23,13 +23,14 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::runtime::{make_backend, tokenizer, BackendKind, Manifest, Utf8Stream, WeightStore};
+use crate::util::sync::{locks, OrderedMutex};
 
 use super::api::{
     CancelFlag, Completion, GenRequest, RequestEvent, RequestHandle, RequestId, ServiceError,
@@ -148,10 +149,12 @@ pub struct HexGenService {
     workers: Vec<JoinHandle<()>>,
     manifest: Manifest,
     cfg: ServiceConfig,
-    // Behind mutexes so the service can be shared (`Arc<HexGenService>`
-    // across HTTP handler threads): stats accumulate into `comm_total`.
-    comm_rx: Mutex<Receiver<CommStats>>,
-    comm_total: Mutex<CommStats>,
+    // Behind ranked mutexes so the service can be shared
+    // (`Arc<HexGenService>` across HTTP handler threads): stats
+    // accumulate into `comm_total`, which is only taken under `comm_rx`
+    // (ranks in `util::sync::locks`).
+    comm_rx: OrderedMutex<Receiver<CommStats>>,
+    comm_total: OrderedMutex<CommStats>,
     counters: Arc<Counters>,
     next_id: AtomicU64,
 }
@@ -214,8 +217,12 @@ impl HexGenService {
             workers,
             manifest,
             cfg,
-            comm_rx: Mutex::new(comm_rx),
-            comm_total: Mutex::new(CommStats::default()),
+            comm_rx: OrderedMutex::new(locks::COMM_RX, "service.comm_rx", comm_rx),
+            comm_total: OrderedMutex::new(
+                locks::COMM_TOTAL,
+                "service.comm_total",
+                CommStats::default(),
+            ),
             counters,
             next_id: AtomicU64::new(0),
         })
@@ -321,8 +328,8 @@ impl HexGenService {
     /// Accumulated communication stats from all workers (cumulative
     /// since service start).
     pub fn comm_stats(&self) -> CommStats {
-        let rx = self.comm_rx.lock().expect("comm receiver");
-        let mut total = self.comm_total.lock().expect("comm total");
+        let rx = self.comm_rx.lock();
+        let mut total = self.comm_total.lock();
         while let Ok(s) = rx.try_recv() {
             total.merge(&s);
         }
@@ -455,8 +462,10 @@ fn worker_loop(
         // never run at all.
         for slot in 0..bucket {
             let hit = active[slot].as_ref().is_some_and(|a| a.item.cancel.is_cancelled());
-            if hit {
-                let a = active[slot].take().expect("active row");
+            if !hit {
+                continue;
+            }
+            if let Some(a) = active[slot].take() {
                 let _ = session.cancel_slot(slot);
                 fail_item(a.item, ServiceError::Cancelled);
             }
@@ -624,5 +633,75 @@ fn worker_loop(
         if comm != CommStats::default() {
             let _ = comm_tx.send(comm);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan_from_strategy;
+    use super::super::server::HttpServer;
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    fn fixture_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
+    }
+
+    fn one_replica_config() -> ServiceConfig {
+        ServiceConfig {
+            artifacts_dir: fixture_dir(),
+            backend: BackendKind::Reference,
+            replicas: vec![plan_from_strategy(&[1], &[2]).unwrap()],
+            batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(5), continuous: true },
+            route: RoutePolicy::LeastLoaded,
+            speeds: None,
+            adapt_speeds: true,
+            max_new_tokens: 4,
+            stop_token: None,
+        }
+    }
+
+    fn get(addr: std::net::SocketAddr, path: &str) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        resp
+    }
+
+    /// Regression for the mutex-poisoning cascade: a thread that panics
+    /// while holding the comm-stat locks must not take down
+    /// `comm_stats()` — and with it `/healthz` and `/metrics`, which
+    /// run on unrelated handler threads.
+    #[test]
+    fn panicked_lock_holder_leaves_healthz_and_metrics_serving() {
+        let service = Arc::new(HexGenService::start(one_replica_config()).unwrap());
+
+        let svc = service.clone();
+        let died = std::thread::spawn(move || {
+            // Rank order: comm_rx (20) before comm_total (30).
+            let _rx = svc.comm_rx.lock();
+            let _total = svc.comm_total.lock();
+            panic!("deliberate panic while holding the comm locks");
+        })
+        .join();
+        assert!(died.is_err(), "the helper thread must have panicked");
+
+        // Both locks are now poisoned; comm_stats must recover, not
+        // propagate.
+        let _ = service.comm_stats();
+
+        let server = HttpServer::serve(service.clone(), "127.0.0.1:0").unwrap();
+        for path in ["/healthz", "/metrics"] {
+            let resp = get(server.addr(), path);
+            assert!(resp.starts_with("HTTP/1.1 200"), "{path} after poison: {resp}");
+        }
+        server.shutdown();
+
+        // The serving loop itself is also still alive end to end.
+        let done = service.generate("the quick brown fox", Some(2)).unwrap();
+        assert_eq!(done.tokens.len(), 2);
     }
 }

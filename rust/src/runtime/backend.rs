@@ -141,9 +141,14 @@ pub trait ExecutionBackend {
         if outs.len() != 3 {
             bail!("'{artifact}' returned {} outputs, expected (partial, k, v)", outs.len());
         }
-        *v_cache = outs.pop().expect("v_cache");
-        *k_cache = outs.pop().expect("k_cache");
-        Ok(outs.pop().expect("partial"))
+        match (outs.pop(), outs.pop(), outs.pop()) {
+            (Some(v), Some(k), Some(partial)) => {
+                *v_cache = v;
+                *k_cache = k;
+                Ok(partial)
+            }
+            _ => bail!("'{artifact}' outputs vanished while unpacking (partial, k, v)"),
+        }
     }
 
     /// Cumulative stage executions (hot-path metric).

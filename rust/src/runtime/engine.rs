@@ -206,7 +206,9 @@ fn arg_to_literal(arg: &InputArg<'_>) -> Result<xla::Literal> {
             Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
         }
         InputArg::ScalarI32(x) => Ok(xla::Literal::scalar(*x)),
-        InputArg::Weight(_) => unreachable!("resolved by execute_t"),
+        InputArg::Weight(name) => {
+            bail!("weight argument '{name}' reached literal lowering; execute_t resolves weights")
+        }
     }
 }
 

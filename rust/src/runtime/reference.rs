@@ -304,8 +304,8 @@ impl ReferenceBackend {
         let k_new = matmul(&xn, b, h, wk, "wk")?;
         let v_new = matmul(&xn, b, h, wv, "wv")?;
 
-        // Write each row's new entry at its own position — the only cache
-        // bytes this step touches.
+        // lint: hot-path — write each row's new entry at its own position
+        // (the only cache bytes this step touches), then attend in place.
         for bi in 0..b {
             for head in 0..nhs {
                 let dst = ((bi * nhs + head) * s_max + positions[bi]) * dh;
@@ -314,11 +314,15 @@ impl ReferenceBackend {
                 vc.data[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
             }
         }
+        // lint: hot-path-end — `merged`/`scores` setup below allocates
+        // once per call, outside the per-row loops.
 
         // Single-token attention over each row's first pos+1 cache entries.
         let mut merged = vec![0f32; b * hs];
         let scale = 1.0 / (dh as f32).sqrt();
         let mut scores: Vec<f32> = Vec::new();
+        // lint: hot-path — the attention loops themselves: reused scratch
+        // and in-place cache reads only.
         for bi in 0..b {
             let pos = positions[bi];
             for head in 0..nhs {
@@ -352,6 +356,7 @@ impl ReferenceBackend {
                 }
             }
         }
+        // lint: hot-path-end
         let partial = matmul(&merged, b, hs, wo, "wo")?;
         Ok(Tensor { dims: vec![b, 1, h], data: partial })
     }
@@ -493,6 +498,8 @@ impl ExecutionBackend for ReferenceBackend {
         positions: DecodePositions<'_>,
         w: &AttnShardWeights<'_>,
     ) -> Result<Tensor> {
+        // lint: hot-path — weight lookups are by-reference; the kernel
+        // mutates the caller's caches in place.
         let st = self.validate_stage(artifact)?;
         if st.op != Op::Attn || st.prefill {
             bail!("'{artifact}' is not a decode attention artifact");
@@ -504,6 +511,7 @@ impl ExecutionBackend for ReferenceBackend {
         let wv = self.weights.get(w.wv)?;
         let wo = self.weights.get(w.wo)?;
         self.attn_decode_core(&st, x, k_cache, v_cache, positions, ln, wq, wk, wv, wo)
+        // lint: hot-path-end
     }
 
     fn exec_count(&self) -> usize {

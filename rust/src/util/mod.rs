@@ -10,6 +10,7 @@ pub mod logging;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Format seconds human-readably (`1.234s`, `12.3ms`, `456us`).
 pub fn fmt_duration(secs: f64) -> String {

@@ -1,0 +1,324 @@
+//! Rank-ordered synchronization primitives for the serving path.
+//!
+//! HexGen's premise is serving over unreliable nodes, so worker panics
+//! are steady-state events, not edge cases. [`OrderedMutex`] wraps
+//! `std::sync::Mutex` with the two policies the serving path needs and
+//! the raw type cannot enforce:
+//!
+//! * **Poison recovery.** A thread that panics while holding a std
+//!   mutex poisons it; every later `.lock().unwrap()` then panics too,
+//!   cascading one worker failure into unrelated handler threads (the
+//!   `/healthz` outage mode). [`OrderedMutex::lock`] never fails: a
+//!   poisoned acquisition logs a warning and recovers the inner value.
+//!   The state guarded on this path — routing EWMAs, comm-stat
+//!   accumulators — is internally consistent after every write, so
+//!   recovery is always sound here.
+//! * **Deadlock prevention by lock ranking.** Every mutex carries a
+//!   static rank from the project lock-order table ([`locks`]). A
+//!   thread may only acquire a lock whose rank is **strictly greater**
+//!   than every rank it already holds; debug builds maintain a
+//!   per-thread held-rank stack and panic on violation (including
+//!   re-entrant acquisition — a guaranteed self-deadlock). Release
+//!   builds compile the bookkeeping out; the ordering is validated by
+//!   the debug test suite and, lexically, by `cargo xtask lint`'s
+//!   `lock-order` rule.
+//!
+//! [`OrderedCondvar`] is the matching condition variable: it parks on
+//! an [`OrderedMutexGuard`] and applies the same poison-recovery policy
+//! on wake.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// The project lock-order table. Locks must be acquired in strictly
+/// ascending rank order; a gap of 10 between entries leaves room to
+/// slot future locks between existing ones.
+///
+/// | rank | lock                   | held while …                          |
+/// |------|------------------------|---------------------------------------|
+/// | 10   | `Router::speeds`       | leaf: nothing else is acquired        |
+/// | 20   | `HexGenService::comm_rx`    | folding stats into `comm_total`  |
+/// | 30   | `HexGenService::comm_total` | leaf (acquired under `comm_rx`)  |
+///
+/// Keep this table in sync with `xtask/src/rules.rs` (`LOCK_RANKS`),
+/// which enforces the same order lexically.
+pub mod locks {
+    /// Router per-replica speed state (EWMAs + seeds).
+    pub const ROUTER_SPEEDS: u16 = 10;
+    /// Service-side receiver of worker comm-stat messages.
+    pub const COMM_RX: u16 = 20;
+    /// Accumulated comm totals; only ever taken under [`COMM_RX`].
+    pub const COMM_TOTAL: u16 = 30;
+}
+
+#[cfg(debug_assertions)]
+mod held {
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Ranks (and names, for diagnostics) of the locks this thread
+        /// currently holds, in acquisition order.
+        static HELD: RefCell<Vec<(u16, &'static str)>> = RefCell::new(Vec::new());
+    }
+
+    pub fn acquire(rank: u16, name: &'static str) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(&(top_rank, top_name)) = held.iter().max_by_key(|&&(r, _)| r) {
+                assert!(
+                    rank > top_rank,
+                    "lock order violation: acquiring {name} (rank {rank}) while holding \
+                     {top_name} (rank {top_rank}); see util::sync::locks"
+                );
+            }
+            held.push((rank, name));
+        });
+    }
+
+    pub fn release(rank: u16, name: &'static str) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(i) = held.iter().rposition(|&(r, n)| r == rank && n == name) {
+                held.remove(i);
+            }
+        });
+    }
+}
+
+/// A mutex carrying a static rank from the project lock-order table
+/// ([`locks`]). See the module docs for the acquisition and poison
+/// policies.
+#[derive(Debug)]
+pub struct OrderedMutex<T> {
+    rank: u16,
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// Wrap `value` under the given rank. `name` identifies the lock in
+    /// ordering panics and poison-recovery warnings.
+    pub const fn new(rank: u16, name: &'static str, value: T) -> OrderedMutex<T> {
+        OrderedMutex { rank, name, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock. Never fails: a poisoned mutex (some thread
+    /// panicked while holding it) is recovered with a warning instead
+    /// of propagating the poison. Debug builds panic if this
+    /// acquisition violates the lock order.
+    pub fn lock(&self) -> OrderedMutexGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        held::acquire(self.rank, self.name);
+        let guard = self.inner.lock().unwrap_or_else(|poisoned| {
+            crate::log_warn!(
+                "recovering poisoned lock {} (a thread panicked while holding it)",
+                self.name
+            );
+            poisoned.into_inner()
+        });
+        OrderedMutexGuard { guard: Some(guard), rank: self.rank, name: self.name }
+    }
+
+    pub fn rank(&self) -> u16 {
+        self.rank
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Guard for an [`OrderedMutex`]; pops the lock's rank from the
+/// per-thread held stack on drop (debug builds).
+pub struct OrderedMutexGuard<'a, T> {
+    /// `None` only transiently while parked inside [`OrderedCondvar`];
+    /// every guard observable outside this module holds `Some`.
+    guard: Option<MutexGuard<'a, T>>,
+    rank: u16,
+    name: &'static str,
+}
+
+impl<T> Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.guard.as_deref().expect("guard present outside condvar wait")
+    }
+}
+
+impl<T> DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_deref_mut().expect("guard present outside condvar wait")
+    }
+}
+
+impl<T> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        if self.guard.is_some() {
+            held::release(self.rank, self.name);
+        }
+    }
+}
+
+/// Condition variable over [`OrderedMutex`] guards. While a thread is
+/// parked its lock's rank stays on the held stack — the thread is
+/// blocked and cannot acquire elsewhere, and this keeps the push/pop
+/// pairing exact across the release-and-reacquire inside `wait`.
+#[derive(Debug, Default)]
+pub struct OrderedCondvar {
+    inner: Condvar,
+}
+
+impl OrderedCondvar {
+    pub const fn new() -> OrderedCondvar {
+        OrderedCondvar { inner: Condvar::new() }
+    }
+
+    /// Atomically release the guard and park until notified (or
+    /// spuriously woken); reacquires before returning, recovering
+    /// poison like [`OrderedMutex::lock`].
+    pub fn wait<'a, T>(&self, mut guard: OrderedMutexGuard<'a, T>) -> OrderedMutexGuard<'a, T> {
+        if let Some(inner) = guard.guard.take() {
+            let inner = self.inner.wait(inner).unwrap_or_else(PoisonError::into_inner);
+            guard.guard = Some(inner);
+        }
+        guard
+    }
+
+    /// Like [`Self::wait`] with an upper bound; the `bool` is true when
+    /// the wait timed out rather than being notified.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: OrderedMutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (OrderedMutexGuard<'a, T>, bool) {
+        let mut timed_out = false;
+        if let Some(inner) = guard.guard.take() {
+            let (inner, result) = match self.inner.wait_timeout(inner, dur) {
+                Ok((g, r)) => (g, r),
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            timed_out = result.timed_out();
+            guard.guard = Some(inner);
+        }
+        (guard, timed_out)
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_round_trips_data() {
+        let m = OrderedMutex::new(locks::ROUTER_SPEEDS, "test.roundtrip", 1u32);
+        assert_eq!(m.rank(), locks::ROUTER_SPEEDS);
+        assert_eq!(m.name(), "test.roundtrip");
+        *m.lock() += 41;
+        assert_eq!(*m.lock(), 42);
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_with_data_intact() {
+        let m = Arc::new(OrderedMutex::new(locks::COMM_TOTAL, "test.poison", 41u32));
+        let m2 = m.clone();
+        let panicked = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            *g = 42;
+            panic!("deliberate panic while holding the lock");
+        })
+        .join();
+        assert!(panicked.is_err(), "the helper thread must have panicked");
+        // The raw mutex is now poisoned; lock() must recover it with the
+        // last written value intact, and stay usable afterwards.
+        assert_eq!(*m.lock(), 42);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 43);
+    }
+
+    #[test]
+    fn ascending_acquisition_is_allowed() {
+        let rx = OrderedMutex::new(locks::COMM_RX, "test.asc.lo", 1u32);
+        let total = OrderedMutex::new(locks::COMM_TOTAL, "test.asc.hi", 2u32);
+        let a = rx.lock();
+        let b = total.lock();
+        assert_eq!(*a + *b, 3);
+    }
+
+    #[test]
+    fn out_of_order_release_keeps_bookkeeping_consistent() {
+        let lo = OrderedMutex::new(locks::COMM_RX, "test.rel.lo", ());
+        let hi = OrderedMutex::new(locks::COMM_TOTAL, "test.rel.hi", ());
+        let a = lo.lock();
+        let b = hi.lock();
+        drop(a); // release the lower rank first
+        drop(b);
+        // Both fully released: re-acquiring the low rank must not trip
+        // over stale held-stack entries.
+        let _again = lo.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock order violation")]
+    fn rank_inversion_panics_in_debug() {
+        let hi = OrderedMutex::new(locks::COMM_TOTAL, "test.inv.hi", ());
+        let lo = OrderedMutex::new(locks::COMM_RX, "test.inv.lo", ());
+        let _hi = hi.lock();
+        let _lo = lo.lock(); // descending rank: deadlock potential
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock order violation")]
+    fn reentrant_acquisition_panics_in_debug() {
+        let m = OrderedMutex::new(locks::ROUTER_SPEEDS, "test.reentrant", ());
+        let _a = m.lock();
+        let _b = m.lock(); // same rank on the same thread: self-deadlock
+    }
+
+    #[test]
+    fn condvar_wakes_waiter() {
+        let m = Arc::new(OrderedMutex::new(locks::ROUTER_SPEEDS, "test.cv", false));
+        let cv = Arc::new(OrderedCondvar::new());
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let waiter = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            while !*g {
+                g = cv2.wait(g);
+            }
+            *g
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        *m.lock() = true;
+        cv.notify_one();
+        assert!(waiter.join().expect("waiter thread"));
+    }
+
+    #[test]
+    fn condvar_wait_timeout_reports_timeout() {
+        let m = OrderedMutex::new(locks::ROUTER_SPEEDS, "test.cv.timeout", ());
+        let cv = OrderedCondvar::new();
+        let mut g = m.lock();
+        // Spurious wakeups return early with `timed_out == false`; keep
+        // waiting until the timeout genuinely fires.
+        loop {
+            let (guard, timed_out) = cv.wait_timeout(g, Duration::from_millis(5));
+            if timed_out {
+                break;
+            }
+            g = guard;
+        }
+    }
+}

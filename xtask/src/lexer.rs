@@ -1,0 +1,311 @@
+//! A hand-rolled Rust token scanner: just enough lexing for lexical
+//! lint rules. Comments and string/char literals are stripped (so
+//! `// calls unwrap()` or `"panic!"` never trip a rule), `lint:`
+//! directives inside line comments are surfaced as [`Marker`]s, and
+//! everything else is reduced to identifiers and single-character
+//! punctuation with 1-based line numbers.
+//!
+//! Deliberately NOT a full lexer: numbers, lifetimes, and operators are
+//! consumed or split without semantic meaning. The rules only ever
+//! match identifier/punctuation sequences (`lock ( ) . unwrap`,
+//! `vec !`, `Box :: new`), which this faithfully preserves.
+
+/// A significant token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Punct(char),
+}
+
+/// A token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// A `// lint: ...` directive found in a line comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Directive {
+    /// `// lint: hot-path` — opens an allocation-free region.
+    HotPathStart,
+    /// `// lint: hot-path-end` — closes it.
+    HotPathEnd,
+    /// `// lint: allow(<rule>)` — suppresses `<rule>` on this line.
+    Allow(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct Marker {
+    pub directive: Directive,
+    pub line: usize,
+}
+
+/// Scan result: token stream plus lint directives.
+pub struct Scan {
+    pub toks: Vec<Spanned>,
+    pub markers: Vec<Marker>,
+}
+
+/// Parse the text of a line comment into a lint directive, if any.
+/// Trailing prose after the directive is allowed and ignored.
+fn parse_directive(comment: &str) -> Option<Directive> {
+    let rest = comment.trim().strip_prefix("lint:")?.trim_start();
+    if rest.starts_with("hot-path-end") {
+        Some(Directive::HotPathEnd)
+    } else if rest.starts_with("hot-path") {
+        Some(Directive::HotPathStart)
+    } else if let Some(inner) = rest.strip_prefix("allow(") {
+        let rule = inner.split(')').next()?.trim();
+        if rule.is_empty() {
+            None
+        } else {
+            Some(Directive::Allow(rule.to_string()))
+        }
+    } else {
+        None
+    }
+}
+
+/// Raw-string opening at `b[i]` (`r"`, `r#"`, `br##"` …): returns
+/// `(index of the opening quote, number of hashes)`.
+fn raw_string_open(b: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become punctuation.
+pub fn scan(src: &str) -> Scan {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut markers = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            '/' if b.get(i + 1) == Some(&'/') => {
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != '\n' {
+                    j += 1;
+                }
+                let text: String = b[start..j].iter().collect();
+                if let Some(directive) = parse_directive(&text) {
+                    markers.push(Marker { directive, line });
+                }
+                i = j; // the newline arm advances `line`
+            }
+            '/' if b.get(i + 1) == Some(&'*') => {
+                // Block comments nest in Rust.
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        '\\' => i += 2,
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        ch => {
+                            if ch == '\n' {
+                                line += 1;
+                            }
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            'r' | 'b' if raw_string_open(&b, i).is_some() => {
+                let (quote, hashes) = match raw_string_open(&b, i) {
+                    Some(open) => open,
+                    None => unreachable!("guard checked"),
+                };
+                i = quote + 1;
+                'body: while i < b.len() {
+                    if b[i] == '"' {
+                        let mut k = 0;
+                        while k < hashes && b.get(i + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            i += 1 + hashes;
+                            break 'body;
+                        }
+                    }
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            'r' if b.get(i + 1) == Some(&'#') && b.get(i + 2).copied().is_some_and(is_ident_char) =>
+            {
+                // Raw identifier (`r#fn`): drop the `r#`, lex the name.
+                i += 2;
+            }
+            '\'' => {
+                if b.get(i + 1) == Some(&'\\') {
+                    // Escaped char literal: the closing quote is the
+                    // first `'` at or after i+3 (`'\''` closes at i+3).
+                    let mut j = i + 3;
+                    while j < b.len() && b[j] != '\'' {
+                        if b[j] == '\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                    i = j + 1;
+                } else if b.get(i + 2) == Some(&'\'') {
+                    i += 3; // plain char literal, e.g. 'a'
+                } else {
+                    i += 1; // lifetime or loop label: name lexes as ident
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && is_ident_char(b[i]) {
+                    i += 1;
+                }
+                toks.push(Spanned { tok: Tok::Ident(b[start..i].iter().collect()), line });
+            }
+            c if c.is_ascii_digit() => {
+                // Numbers with suffixes (`0f32`, `1_000`, `0x1F`); a `.`
+                // is part of the number only when a digit follows, so
+                // `1.to_string()` and `0..n` still tokenize the methods.
+                i += 1;
+                while i < b.len() {
+                    let ch = b[i];
+                    if ch.is_ascii_alphanumeric() || ch == '_' {
+                        i += 1;
+                    } else if ch == '.' && b.get(i + 1).is_some_and(char::is_ascii_digit) {
+                        i += 2;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            c if c.is_whitespace() => i += 1,
+            c => {
+                toks.push(Spanned { tok: Tok::Punct(c), line });
+                i += 1;
+            }
+        }
+    }
+    Scan { toks, markers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        scan(src)
+            .toks
+            .into_iter()
+            .filter_map(|s| match s.tok {
+                Tok::Ident(name) => Some(name),
+                Tok::Punct(_) => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let src = r##"
+            // this unwrap() is prose
+            /* and this panic! too /* nested */ still comment */
+            let s = "panic! inside a string";
+            let r = r#"raw with "quote" and unwrap()"#;
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(!ids.contains(&"panic".to_string()));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let ids = idents("fn f<'a>(x: &'a str) -> char { let c = '\\''; let d = 'x'; ' ' }");
+        assert!(ids.contains(&"a".to_string())); // lifetime name lexes as ident
+        assert!(ids.contains(&"str".to_string()));
+        assert!(ids.contains(&"d".to_string())); // code after the literals still lexes
+    }
+
+    #[test]
+    fn numbers_do_not_eat_method_calls() {
+        let ids = idents("let x = 1.to_string(); let y = 3.14f32; for i in 0..n {}");
+        assert!(ids.contains(&"to_string".to_string()));
+        assert!(ids.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn directives_parse_with_trailing_prose() {
+        let src = "// lint: hot-path — steady state allocates nothing\nx();\n// lint: hot-path-end\n// lint: allow(serving-unwrap) justified because reasons\n";
+        let markers = scan(src).markers;
+        assert_eq!(markers.len(), 3);
+        assert_eq!(markers[0].directive, Directive::HotPathStart);
+        assert_eq!(markers[0].line, 1);
+        assert_eq!(markers[1].directive, Directive::HotPathEnd);
+        assert_eq!(markers[2].directive, Directive::Allow("serving-unwrap".to_string()));
+        assert_eq!(markers[2].line, 4);
+    }
+
+    #[test]
+    fn doc_comments_do_not_parse_directives() {
+        assert!(scan("/// lint: hot-path\n").markers.is_empty());
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_constructs() {
+        let src = "/* a\nb */\nlet x = \"s\ntring\";\ntarget();\n";
+        let toks = scan(src).toks;
+        let target = toks
+            .iter()
+            .find(|t| t.tok == Tok::Ident("target".to_string()))
+            .expect("target token");
+        assert_eq!(target.line, 5);
+    }
+}

@@ -1,0 +1,183 @@
+//! `cargo xtask` — project automation. The only subcommand today is
+//! `lint`, which enforces HexGen's serving-path invariants over
+//! `rust/src` (see `rules.rs` for the catalog and `rust/README.md`
+//! § Correctness tooling for the policy).
+//!
+//! Exit status: 0 when the tree is clean, 1 when any diagnostic fires
+//! (including misused `lint:` markers), 2 on usage or I/O errors.
+
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Diagnostics plus allow notes for a whole tree.
+#[derive(Debug, Default)]
+struct TreeReport {
+    /// `(rel_path, diagnostic)` pairs, in path order.
+    diagnostics: Vec<(String, rules::Diagnostic)>,
+    /// `(rel_path, allow)` pairs, in path order.
+    allows: Vec<(String, rules::Allow)>,
+    files_scanned: usize,
+}
+
+/// Collect `.rs` files under `root`, sorted for deterministic output.
+fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|ext| ext == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+fn lint_tree(root: &Path) -> Result<TreeReport, String> {
+    let mut report = TreeReport::default();
+    for path in collect_rs_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|e| format!("relativizing {}: {e}", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            std::fs::read_to_string(&path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let file_report = rules::check_file(&rel, &src);
+        report.files_scanned += 1;
+        report.diagnostics.extend(file_report.diagnostics.into_iter().map(|d| (rel.clone(), d)));
+        report.allows.extend(file_report.allows.into_iter().map(|a| (rel.clone(), a)));
+    }
+    Ok(report)
+}
+
+fn default_root() -> PathBuf {
+    // xtask/ sits next to rust/ at the workspace root.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src")
+}
+
+fn print_usage() {
+    eprintln!("usage: cargo xtask lint [--root <dir>]");
+    eprintln!();
+    eprintln!("Checks HexGen project invariants over <dir> (default: rust/src).");
+    eprintln!("Rules: {}", rules::RULES.join(", "));
+}
+
+fn run_lint(root: &Path) -> ExitCode {
+    let report = match lint_tree(root) {
+        Ok(report) => report,
+        Err(err) => {
+            eprintln!("xtask lint: {err}");
+            return ExitCode::from(2);
+        }
+    };
+    for (rel, d) in &report.diagnostics {
+        println!("{}/{rel}:{}: [{}] {}", root.display(), d.line, d.rule, d.msg);
+    }
+    for (rel, a) in &report.allows {
+        if a.used {
+            println!("{}/{rel}:{}: note: allow({}) in effect", root.display(), a.line, a.rule);
+        }
+    }
+    let used_allows = report.allows.iter().filter(|(_, a)| a.used).count();
+    println!(
+        "lint: {} files scanned, {} diagnostics, {} allows in effect",
+        report.files_scanned,
+        report.diagnostics.len(),
+        used_allows
+    );
+    if report.diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = args.iter().map(String::as_str);
+    match args.next() {
+        Some("lint") => {
+            let mut root = default_root();
+            loop {
+                match args.next() {
+                    None => break,
+                    Some("--root") => match args.next() {
+                        Some(dir) => root = PathBuf::from(dir),
+                        None => {
+                            print_usage();
+                            return ExitCode::from(2);
+                        }
+                    },
+                    Some(other) => {
+                        eprintln!("xtask lint: unknown argument `{other}`");
+                        print_usage();
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            run_lint(&root)
+        }
+        _ => {
+            print_usage();
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance gate: the real tree must be lint-clean, with zero
+    /// `// lint: allow` entries under `rust/src/coordinator/`. Running
+    /// under plain `cargo test` makes tier-1 itself enforce the
+    /// invariants even where CI is unavailable.
+    #[test]
+    fn repository_tree_is_lint_clean() {
+        let root = default_root();
+        let report = lint_tree(&root).unwrap_or_else(|e| panic!("lint walk failed: {e}"));
+        assert!(report.files_scanned > 10, "suspiciously few files under {}", root.display());
+        let rendered: Vec<String> = report
+            .diagnostics
+            .iter()
+            .map(|(rel, d)| format!("{rel}:{}: [{}] {}", d.line, d.rule, d.msg))
+            .collect();
+        assert!(rendered.is_empty(), "lint diagnostics on the tree:\n{}", rendered.join("\n"));
+        let coordinator_allows: Vec<&String> = report
+            .allows
+            .iter()
+            .filter(|(rel, _)| rel.starts_with("coordinator/"))
+            .map(|(rel, _)| rel)
+            .collect();
+        assert!(coordinator_allows.is_empty(), "allows under coordinator/: {coordinator_allows:?}");
+    }
+
+    /// Seeding a forbidden pattern must fail with a file:line diagnostic
+    /// (acceptance criterion), exercised end-to-end through the walker.
+    #[test]
+    fn seeded_violation_fails_through_the_walker() {
+        let dir = std::env::temp_dir().join(format!("xtask-lint-seed-{}", std::process::id()));
+        let coord = dir.join("coordinator");
+        std::fs::create_dir_all(&coord).expect("create fixture dir");
+        std::fs::write(coord.join("bad.rs"), "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n")
+            .expect("write fixture");
+        let report = lint_tree(&dir).expect("lint fixture tree");
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(report.diagnostics.len(), 1);
+        let (rel, d) = &report.diagnostics[0];
+        assert_eq!(rel, "coordinator/bad.rs");
+        assert_eq!(d.rule, "serving-unwrap");
+        assert_eq!(d.line, 1);
+    }
+}

@@ -1,0 +1,604 @@
+//! The HexGen project-invariant rule set, applied to one file's token
+//! stream at a time. Paths are relative to `rust/src` with forward
+//! slashes (`coordinator/service.rs`).
+//!
+//! Rules (see `rust/README.md` § Correctness tooling for the catalog):
+//!
+//! * `serving-unwrap` — no `.unwrap()` / `.expect()` / `panic!` /
+//!   `unreachable!` in the serving path outside `#[cfg(test)]`.
+//!   `assert!` / `assert_eq!` are deliberately permitted: they state
+//!   call contracts, and the worker loop's panic recovery contains
+//!   them.
+//! * `lock-unwrap` — no bare `.lock().unwrap()` / `.try_lock().unwrap()`
+//!   anywhere, tests included: poison must be handled, not propagated.
+//! * `raw-mutex` — no raw `Mutex` / `Condvar` / `RwLock` in the serving
+//!   path; use `util::sync::OrderedMutex` with a declared rank.
+//! * `hot-path-alloc` — no allocating constructs inside
+//!   `// lint: hot-path` regions: `format!` / `vec!`, `.clone()`,
+//!   `.to_string()` / `.to_owned()` / `.to_vec()`, `with_capacity`,
+//!   `.collect()`, `Box::new`, `String::from`. Writing into
+//!   pre-reserved buffers (`push`, `extend_from_slice`, `resize`,
+//!   `copy_from_slice`, `clear`) is fine.
+//! * `lock-order` — lexical shadow of the `util::sync::locks` table:
+//!   within one `fn`, direct `<field>.lock()` calls on ranked fields
+//!   must appear in strictly ascending rank order.
+//! * `lint-marker` — the directives themselves must be well-formed:
+//!   balanced hot-path markers, known rule names in `allow(...)`, and
+//!   no allow that suppresses nothing.
+//! * `allow-in-coordinator` — `// lint: allow` is banned outright under
+//!   `coordinator/`; fix the code instead.
+
+use crate::lexer::{self, Directive, Spanned, Tok};
+use std::collections::BTreeSet;
+
+/// Rule names accepted by `// lint: allow(<rule>)`.
+pub const RULES: &[&str] =
+    &["serving-unwrap", "lock-unwrap", "raw-mutex", "hot-path-alloc", "lock-order"];
+
+/// Lexical mirror of the lock-order table in `rust/src/util/sync.rs`
+/// (`util::sync::locks`). Field name → rank; keep the two in sync.
+pub const LOCK_RANKS: &[(&str, u16)] = &[("speeds", 10), ("comm_rx", 20), ("comm_total", 30)];
+
+/// Allocating calls banned inside hot-path regions when followed by `(`.
+const HOT_BANNED_CALLS: &[&str] =
+    &["clone", "to_string", "to_owned", "to_vec", "with_capacity", "collect"];
+
+/// Allocating macros banned inside hot-path regions (`name!`).
+const HOT_BANNED_MACROS: &[&str] = &["format", "vec"];
+
+#[derive(Debug)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// One `// lint: allow(<rule>)` marker and whether it suppressed
+/// anything.
+#[derive(Debug)]
+pub struct Allow {
+    pub rule: String,
+    pub line: usize,
+    pub used: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub allows: Vec<Allow>,
+}
+
+/// Files where a panic kills a live replica or handler thread rather
+/// than a CLI invocation.
+fn is_serving_path(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || rel == "runtime/engine.rs" || rel == "runtime/backend.rs"
+}
+
+fn ident_at<'a>(toks: &'a [Spanned], i: usize) -> Option<&'a str> {
+    match toks.get(i)?.tok {
+        Tok::Ident(ref name) => Some(name),
+        Tok::Punct(_) => None,
+    }
+}
+
+fn punct_at(toks: &[Spanned], i: usize, c: char) -> bool {
+    matches!(toks.get(i), Some(Spanned { tok: Tok::Punct(p), .. }) if *p == c)
+}
+
+/// Parse an attribute starting at the `[` token index; returns the
+/// identifiers inside it and the token index just past the closing `]`.
+fn parse_attr(toks: &[Spanned], open: usize) -> (Vec<String>, usize) {
+    let mut idents = Vec::new();
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return (idents, i + 1);
+                }
+            }
+            Tok::Ident(name) => idents.push(name.clone()),
+            Tok::Punct(_) => {}
+        }
+        i += 1;
+    }
+    (idents, toks.len())
+}
+
+/// Does this attribute gate its item to test builds? `#[test]`,
+/// `#[cfg(test)]`, and `#[cfg(all(test, ...))]` do; `#[cfg(not(test))]`
+/// emphatically does not.
+fn is_test_gate(idents: &[String]) -> bool {
+    match idents.first().map(String::as_str) {
+        Some("test") => true,
+        Some("cfg") => idents.iter().any(|s| s == "test") && !idents.iter().any(|s| s == "not"),
+        _ => false,
+    }
+}
+
+/// Skip one item starting at `i` (past the gating attribute): consume
+/// any further attributes, then either a `;`-terminated item or a
+/// braced body. Returns the token index just past the item.
+fn skip_item(toks: &[Spanned], mut i: usize) -> usize {
+    while punct_at(toks, i, '#') && punct_at(toks, i + 1, '[') {
+        let (_, after) = parse_attr(toks, i + 1);
+        i = after;
+    }
+    let mut paren = 0i32;
+    let mut bracket = 0i32;
+    let mut brace = 0i32;
+    let mut seen_brace = false;
+    while i < toks.len() {
+        match toks[i].tok {
+            Tok::Punct('(') => paren += 1,
+            Tok::Punct(')') => paren -= 1,
+            Tok::Punct('[') => bracket += 1,
+            Tok::Punct(']') => bracket -= 1,
+            Tok::Punct('{') => {
+                brace += 1;
+                seen_brace = true;
+            }
+            Tok::Punct('}') => {
+                brace -= 1;
+                if seen_brace && brace == 0 {
+                    return i + 1;
+                }
+            }
+            Tok::Punct(';') if !seen_brace && paren == 0 && bracket == 0 => return i + 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Token-index ranges covered by test-gated items.
+fn test_token_ranges(toks: &[Spanned]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if punct_at(toks, i, '#') && punct_at(toks, i + 1, '[') {
+            let (idents, after) = parse_attr(toks, i + 1);
+            if is_test_gate(&idents) {
+                let end = skip_item(toks, after);
+                ranges.push((i, end));
+                i = end;
+            } else {
+                i = after;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    ranges
+}
+
+fn in_ranges(ranges: &[(usize, usize)], i: usize) -> bool {
+    ranges.iter().any(|&(s, e)| i >= s && i < e)
+}
+
+/// Bookkeeping for one allow marker while matching diagnostics.
+struct AllowEntry {
+    rule: String,
+    marker_line: usize,
+    /// The code line the marker covers: its own line, or — when the
+    /// marker sits on a line of its own — the next line holding code.
+    target_line: usize,
+    used: bool,
+}
+
+/// Run every rule over one file.
+pub fn check_file(rel_path: &str, src: &str) -> FileReport {
+    let scan = lexer::scan(src);
+    let toks = &scan.toks;
+    let serving = is_serving_path(rel_path);
+    let in_coordinator = rel_path.starts_with("coordinator/");
+    let test_ranges = test_token_ranges(toks);
+    let token_lines: BTreeSet<usize> = toks.iter().map(|t| t.line).collect();
+
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    // --- Marker validation: balanced hot-path regions, known allow rules.
+    let mut hot_regions: Vec<(usize, usize)> = Vec::new(); // (start line, end line]
+    let mut open_at: Option<usize> = None;
+    let mut allow_entries: Vec<AllowEntry> = Vec::new();
+    for m in &scan.markers {
+        match &m.directive {
+            Directive::HotPathStart => {
+                if let Some(start) = open_at {
+                    diags.push(Diagnostic {
+                        rule: "lint-marker",
+                        line: m.line,
+                        msg: format!("hot-path region opened here while one from line {start} is still open"),
+                    });
+                } else {
+                    open_at = Some(m.line);
+                }
+            }
+            Directive::HotPathEnd => match open_at.take() {
+                Some(start) => hot_regions.push((start, m.line)),
+                None => diags.push(Diagnostic {
+                    rule: "lint-marker",
+                    line: m.line,
+                    msg: "hot-path-end without a matching hot-path marker".to_string(),
+                }),
+            },
+            Directive::Allow(rule) => {
+                if !RULES.contains(&rule.as_str()) {
+                    diags.push(Diagnostic {
+                        rule: "lint-marker",
+                        line: m.line,
+                        msg: format!("allow({rule}) names an unknown rule; known: {}", RULES.join(", ")),
+                    });
+                    continue;
+                }
+                let target_line = if token_lines.contains(&m.line) {
+                    m.line
+                } else {
+                    token_lines.range(m.line + 1..).next().copied().unwrap_or(m.line)
+                };
+                allow_entries.push(AllowEntry {
+                    rule: rule.clone(),
+                    marker_line: m.line,
+                    target_line,
+                    used: false,
+                });
+            }
+        }
+    }
+    if let Some(start) = open_at {
+        diags.push(Diagnostic {
+            rule: "lint-marker",
+            line: start,
+            msg: "hot-path region is never closed (missing `// lint: hot-path-end`)".to_string(),
+        });
+        hot_regions.push((start, usize::MAX));
+    }
+    let in_hot = |line: usize| hot_regions.iter().any(|&(s, e)| line > s && line <= e);
+
+    // --- Token-stream rules.
+    let mut raw: Vec<Diagnostic> = Vec::new();
+    // Highest lock rank acquired so far in the current fn (lock-order).
+    let mut max_rank: Option<(u16, &'static str, usize)> = None;
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        let name = match ident_at(toks, i) {
+            Some(name) => name,
+            None => continue,
+        };
+        let in_test = in_ranges(&test_ranges, i);
+
+        if name == "fn" {
+            max_rank = None;
+        }
+
+        // lock-unwrap: `.lock().unwrap()` / `.try_lock().expect(...)`,
+        // everywhere, tests included.
+        if (name == "unwrap" || name == "expect")
+            && punct_at(toks, i.wrapping_sub(1), '.')
+            && punct_at(toks, i + 1, '(')
+        {
+            let on_lock = i >= 4
+                && punct_at(toks, i - 2, ')')
+                && punct_at(toks, i - 3, '(')
+                && matches!(ident_at(toks, i - 4), Some("lock" | "try_lock"));
+            if on_lock {
+                raw.push(Diagnostic {
+                    rule: "lock-unwrap",
+                    line,
+                    msg: format!(
+                        ".lock().{name}() propagates mutex poison; use util::sync::OrderedMutex \
+                         or handle PoisonError"
+                    ),
+                });
+            } else if serving && !in_test {
+                raw.push(Diagnostic {
+                    rule: "serving-unwrap",
+                    line,
+                    msg: format!(
+                        ".{name}() in the serving path can kill a replica thread; return a typed \
+                         error or recover"
+                    ),
+                });
+            }
+        }
+
+        // serving-unwrap: panicking macros in the serving path.
+        if serving && !in_test && (name == "panic" || name == "unreachable") && punct_at(toks, i + 1, '!')
+        {
+            raw.push(Diagnostic {
+                rule: "serving-unwrap",
+                line,
+                msg: format!(
+                    "{name}! in the serving path kills a replica thread and poisons shared locks; \
+                     return a typed error instead"
+                ),
+            });
+        }
+
+        // raw-mutex: unranked lock types in the serving path.
+        if serving && !in_test && matches!(name, "Mutex" | "Condvar" | "RwLock") {
+            raw.push(Diagnostic {
+                rule: "raw-mutex",
+                line,
+                msg: format!(
+                    "raw {name} in the serving path; use util::sync::OrderedMutex/OrderedCondvar \
+                     with a rank from util::sync::locks"
+                ),
+            });
+        }
+
+        // hot-path-alloc: allocation inside a marked region.
+        if in_hot(line) {
+            if HOT_BANNED_CALLS.contains(&name) && punct_at(toks, i + 1, '(') {
+                raw.push(Diagnostic {
+                    rule: "hot-path-alloc",
+                    line,
+                    msg: format!("{name}() allocates inside a `lint: hot-path` region"),
+                });
+            }
+            if HOT_BANNED_MACROS.contains(&name) && punct_at(toks, i + 1, '!') {
+                raw.push(Diagnostic {
+                    rule: "hot-path-alloc",
+                    line,
+                    msg: format!("{name}! allocates inside a `lint: hot-path` region"),
+                });
+            }
+            let static_ctor = (name == "Box" || name == "String")
+                && punct_at(toks, i + 1, ':')
+                && punct_at(toks, i + 2, ':')
+                && matches!(ident_at(toks, i + 3), Some("new" | "from"));
+            if static_ctor {
+                raw.push(Diagnostic {
+                    rule: "hot-path-alloc",
+                    line,
+                    msg: format!("{name}::… constructor allocates inside a `lint: hot-path` region"),
+                });
+            }
+        }
+
+        // lock-order: direct `<ranked field>.lock()` calls must ascend
+        // within one fn. Lexical approximation of the runtime check in
+        // util::sync (which is exact but debug-only).
+        if !in_test
+            && punct_at(toks, i + 1, '.')
+            && matches!(ident_at(toks, i + 2), Some("lock" | "try_lock"))
+            && punct_at(toks, i + 3, '(')
+        {
+            if let Some(&(field, rank)) = LOCK_RANKS.iter().find(|&&(f, _)| f == name) {
+                match max_rank {
+                    Some((held, held_field, held_line)) if rank <= held => {
+                        raw.push(Diagnostic {
+                            rule: "lock-order",
+                            line,
+                            msg: format!(
+                                "{field}.lock() (rank {rank}) after {held_field}.lock() (rank \
+                                 {held}, line {held_line}) in the same fn; acquire in ascending \
+                                 rank order (see util::sync::locks)"
+                            ),
+                        });
+                    }
+                    _ => max_rank = Some((rank, field, line)),
+                }
+            }
+        }
+    }
+
+    // --- Allow filtering: a marker suppresses same-rule diagnostics on
+    // its target line.
+    let mut kept: Vec<Diagnostic> = Vec::new();
+    for d in raw {
+        let slot = allow_entries
+            .iter_mut()
+            .find(|a| a.rule == d.rule && a.target_line == d.line);
+        match slot {
+            Some(a) => a.used = true,
+            None => kept.push(d),
+        }
+    }
+    diags.extend(kept);
+
+    for a in &allow_entries {
+        if !a.used {
+            diags.push(Diagnostic {
+                rule: "lint-marker",
+                line: a.marker_line,
+                msg: format!("allow({}) suppresses nothing on line {}; remove it", a.rule, a.target_line),
+            });
+        }
+        if in_coordinator {
+            diags.push(Diagnostic {
+                rule: "allow-in-coordinator",
+                line: a.marker_line,
+                msg: format!(
+                    "allow({}) is banned under coordinator/; fix the violation instead",
+                    a.rule
+                ),
+            });
+        }
+    }
+
+    diags.sort_by_key(|d| d.line);
+    FileReport {
+        diagnostics: diags,
+        allows: allow_entries
+            .into_iter()
+            .map(|a| Allow { rule: a.rule, line: a.marker_line, used: a.used })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(report: &FileReport) -> Vec<&'static str> {
+        report.diagnostics.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_in_serving_path_is_flagged_with_line() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let report = check_file("coordinator/service.rs", src);
+        assert_eq!(rules_fired(&report), vec!["serving-unwrap"]);
+        assert_eq!(report.diagnostics[0].line, 2);
+    }
+
+    #[test]
+    fn expect_and_panicking_macros_are_flagged() {
+        let src = "fn f() {\n    y.expect(\"msg\");\n    panic!(\"boom\");\n    unreachable!()\n}\n";
+        let report = check_file("runtime/engine.rs", src);
+        assert_eq!(rules_fired(&report), vec!["serving-unwrap"; 3]);
+    }
+
+    #[test]
+    fn non_serving_files_may_unwrap() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(check_file("planner/cost.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn asserts_are_permitted_in_serving_path() {
+        let src = "fn f(n: usize) {\n    assert!(n > 0);\n    assert_eq!(n % 2, 0);\n}\n";
+        assert!(check_file("coordinator/collective.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); panic!(\"in test\"); }\n}\n";
+        assert!(check_file("coordinator/api.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn test_fn_outside_mod_is_exempt_but_neighbors_are_not() {
+        let src = "#[test]\nfn t() { x.unwrap(); }\nfn live() { y.unwrap(); }\n";
+        let report = check_file("coordinator/api.rs", src);
+        assert_eq!(rules_fired(&report), vec!["serving-unwrap"]);
+        assert_eq!(report.diagnostics[0].line, 3);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_exempt() {
+        let src = "#[cfg(not(test))]\nfn f() { x.unwrap(); }\n";
+        assert_eq!(rules_fired(&check_file("coordinator/api.rs", src)), vec!["serving-unwrap"]);
+    }
+
+    #[test]
+    fn lock_unwrap_is_flagged_everywhere_even_in_tests() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { let g = m.lock().unwrap(); }\n}\n";
+        let report = check_file("util/stats.rs", src);
+        assert_eq!(rules_fired(&report), vec!["lock-unwrap"]);
+        assert_eq!(report.diagnostics[0].line, 3);
+    }
+
+    #[test]
+    fn try_lock_expect_is_flagged() {
+        let src = "fn f() { let g = m.try_lock().expect(\"lock\"); }\n";
+        assert_eq!(rules_fired(&check_file("planner/cost.rs", src)), vec!["lock-unwrap"]);
+    }
+
+    #[test]
+    fn raw_mutex_in_coordinator_is_flagged() {
+        let src = "use std::sync::Mutex;\nstruct S { m: Mutex<u32> }\n";
+        let report = check_file("coordinator/router.rs", src);
+        assert_eq!(rules_fired(&report), vec!["raw-mutex", "raw-mutex"]);
+    }
+
+    #[test]
+    fn ordered_mutex_is_not_raw() {
+        let src = "use crate::util::sync::{OrderedMutex, OrderedCondvar, OrderedMutexGuard};\n\
+                   struct S { m: OrderedMutex<u32> }\n";
+        assert!(check_file("coordinator/router.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn hot_path_allocations_are_flagged() {
+        let src = "fn step(&mut self) {\n    // lint: hot-path\n    let a = x.clone();\n    let b = format!(\"{a}\");\n    let c: Vec<u32> = ys.iter().collect();\n    let d = Vec::with_capacity(8);\n    let e = Box::new(3);\n    // lint: hot-path-end\n    let after = z.to_string();\n}\n";
+        let report = check_file("coordinator/pipeline.rs", src);
+        assert_eq!(rules_fired(&report), vec!["hot-path-alloc"; 5]);
+        let lines: Vec<usize> = report.diagnostics.iter().map(|d| d.line).collect();
+        assert_eq!(lines, vec![3, 4, 5, 6, 7]); // `after` is outside the region
+    }
+
+    #[test]
+    fn hot_path_writes_into_reserved_buffers_are_fine() {
+        let src = "fn step(&mut self) {\n    // lint: hot-path\n    buf.clear();\n    buf.push(1);\n    buf.extend_from_slice(&xs);\n    dst.copy_from_slice(&src);\n    // lint: hot-path-end\n}\n";
+        assert!(check_file("coordinator/pipeline.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn unbalanced_markers_are_diagnosed() {
+        let end_only = "fn f() {}\n// lint: hot-path-end\n";
+        assert_eq!(rules_fired(&check_file("runtime/reference.rs", end_only)), vec!["lint-marker"]);
+        let unclosed = "// lint: hot-path\nfn f() {}\n";
+        assert_eq!(rules_fired(&check_file("runtime/reference.rs", unclosed)), vec!["lint-marker"]);
+    }
+
+    #[test]
+    fn allow_suppresses_and_is_counted() {
+        let src = "fn f() {\n    x.unwrap() // lint: allow(serving-unwrap) startup-only path\n}\n";
+        let report = check_file("runtime/engine.rs", src);
+        assert!(report.diagnostics.is_empty());
+        assert_eq!(report.allows.len(), 1);
+        assert!(report.allows[0].used);
+        assert_eq!(report.allows[0].rule, "serving-unwrap");
+    }
+
+    #[test]
+    fn allow_on_its_own_line_covers_the_next_code_line() {
+        let src = "fn f() {\n    // lint: allow(serving-unwrap) wrapped by rustfmt\n    x.unwrap()\n}\n";
+        assert!(check_file("runtime/engine.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn unused_allow_is_a_diagnostic() {
+        let src = "fn f() {\n    // lint: allow(serving-unwrap)\n    let y = 1;\n}\n";
+        assert_eq!(rules_fired(&check_file("runtime/engine.rs", src)), vec!["lint-marker"]);
+    }
+
+    #[test]
+    fn unknown_allow_rule_is_a_diagnostic() {
+        let src = "// lint: allow(no-such-rule)\nfn f() {}\n";
+        assert_eq!(rules_fired(&check_file("runtime/engine.rs", src)), vec!["lint-marker"]);
+    }
+
+    #[test]
+    fn allow_in_coordinator_is_itself_a_violation() {
+        let src = "fn f() {\n    x.unwrap() // lint: allow(serving-unwrap)\n}\n";
+        let report = check_file("coordinator/service.rs", src);
+        assert_eq!(rules_fired(&report), vec!["allow-in-coordinator"]);
+    }
+
+    #[test]
+    fn lock_order_inversion_is_flagged() {
+        let src = "fn comm_stats(&self) {\n    let total = self.comm_total.lock();\n    let rx = self.comm_rx.lock();\n}\n";
+        let report = check_file("coordinator/service.rs", src);
+        assert_eq!(rules_fired(&report), vec!["lock-order"]);
+        assert_eq!(report.diagnostics[0].line, 3);
+    }
+
+    #[test]
+    fn ascending_lock_order_is_fine_and_resets_per_fn() {
+        let src = "fn a(&self) {\n    let rx = self.comm_rx.lock();\n    let total = self.comm_total.lock();\n}\nfn b(&self) {\n    let s = self.speeds.lock();\n}\n";
+        assert!(check_file("coordinator/service.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire_rules() {
+        let src = "fn f() {\n    // x.unwrap() would panic here\n    let s = \"panic! .lock().unwrap()\";\n}\n";
+        assert!(check_file("coordinator/service.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn clean_realistic_snippet_is_silent() {
+        let src = "use crate::util::sync::{locks, OrderedMutex};\n\
+                   pub struct Router {\n    speeds: OrderedMutex<SpeedState>,\n}\n\
+                   impl Router {\n    fn state(&self) -> OrderedMutexGuard<'_, SpeedState> {\n        self.speeds.lock()\n    }\n}\n";
+        let report = check_file("coordinator/router.rs", src);
+        assert!(report.diagnostics.is_empty(), "unexpected: {:?}", report.diagnostics);
+        assert!(report.allows.is_empty());
+    }
+}
