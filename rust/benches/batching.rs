@@ -52,6 +52,7 @@ fn run(continuous: bool) -> RunStats {
         adapt_speeds: true,
         max_new_tokens: 8,
         stop_token: None,
+        kv: Default::default(),
     };
     let service = HexGenService::start(cfg).unwrap();
 

@@ -11,6 +11,12 @@
 //!   semantics (two full cache clones + two full returned copies per
 //!   shard per layer per token, serial TP shards) — and the speedup.
 //!
+//! A paged-KV section reports what the block pool buys on top: admitted
+//! concurrent sessions per GB of KV memory (peak blocks actually used
+//! vs the dense max_seq footprint every slot used to pin) and a
+//! shared-prefix workload — the same prompt admitted across all slots —
+//! measuring the prefix-cache prefill speedup and block dedup.
+//!
 //! Configs sweep `tp ∈ {1, 2} × bucket ∈ {1, 4, 8}`; the headline number
 //! is `(tp=2, bucket=8)`. Results are printed and written as JSON to
 //! `BENCH_decode.json` at the repository root (override with `--out`),
@@ -117,6 +123,10 @@ struct RunStats {
     step_p50_ms: f64,
     step_p99_ms: f64,
     prefill_tok_s: f64,
+    /// High-water mark of KV blocks the whole run actually pinned.
+    kv_blocks_peak: usize,
+    /// KV rows per block in the session under test.
+    block_tokens: usize,
 }
 
 fn run_config(exec: &PipelineExecutor, bucket: usize, steps: usize) -> RunStats {
@@ -152,6 +162,64 @@ fn run_config(exec: &PipelineExecutor, bucket: usize, steps: usize) -> RunStats 
         step_p50_ms: percentile(&samples, 0.50) * 1e3,
         step_p99_ms: percentile(&samples, 0.99) * 1e3,
         prefill_tok_s: (bucket * m.prompt_len) as f64 / prefill_s,
+        kv_blocks_peak: session.kv_blocks_peak(),
+        block_tokens: session.block_tokens(),
+    }
+}
+
+/// Bytes of KV storage one block pins across all layers and both K/V
+/// tensors (f32).
+fn block_bytes(block_tokens: usize) -> usize {
+    2 * LAYERS * HEADS * block_tokens * HEAD_DIM * 4
+}
+
+struct SharedPrefixStats {
+    distinct_prefill_tok_s: f64,
+    shared_prefill_tok_s: f64,
+    /// Blocks pinned right after admitting the full batch.
+    distinct_blocks: usize,
+    shared_blocks: usize,
+    prefix_cache_hits: u64,
+}
+
+/// Admit a full batch of identical prompts vs distinct prompts and
+/// measure prefill throughput and the blocks each admission pins: the
+/// shared batch resolves all but the first row from the prefix cache
+/// (no KV hand-off copies, deduped prompt blocks).
+fn measure_shared_prefix(exec: &PipelineExecutor, bucket: usize, iters: usize) -> SharedPrefixStats {
+    let m = exec.manifest().model.clone();
+    let reqs_for = |shared: bool| -> Vec<(usize, SlotRequest)> {
+        (0..bucket)
+            .map(|i| {
+                let salt = if shared { 0 } else { i * 31 };
+                let prompt: Vec<i32> =
+                    (0..m.prompt_len).map(|j| ((salt + j * 7) % 255 + 1) as i32).collect();
+                (i, SlotRequest { prompt, max_new: 2, stop: None })
+            })
+            .collect()
+    };
+    let mut run = |shared: bool| -> (f64, usize, u64) {
+        let mut total = 0.0;
+        let mut blocks = 0;
+        let mut hits = 0;
+        for _ in 0..iters {
+            let mut session = exec.new_session(bucket).expect("session");
+            let t0 = Instant::now();
+            session.prefill_into_slots(reqs_for(shared)).expect("prefill");
+            total += t0.elapsed().as_secs_f64();
+            blocks = session.kv_blocks_used();
+            hits = session.prefix_cache_hits();
+        }
+        ((iters * bucket * m.prompt_len) as f64 / total, blocks, hits)
+    };
+    let (distinct_prefill_tok_s, distinct_blocks, _) = run(false);
+    let (shared_prefill_tok_s, shared_blocks, prefix_cache_hits) = run(true);
+    SharedPrefixStats {
+        distinct_prefill_tok_s,
+        shared_prefill_tok_s,
+        distinct_blocks,
+        shared_blocks,
+        prefix_cache_hits,
     }
 }
 
@@ -160,7 +228,8 @@ fn stats_json(s: &RunStats) -> Json {
     j.set("decode_tok_s", Json::from(s.decode_tok_s))
         .set("step_p50_ms", Json::from(s.step_p50_ms))
         .set("step_p99_ms", Json::from(s.step_p99_ms))
-        .set("prefill_tok_s", Json::from(s.prefill_tok_s));
+        .set("prefill_tok_s", Json::from(s.prefill_tok_s))
+        .set("kv_blocks_peak", Json::from(s.kv_blocks_peak));
     j
 }
 
@@ -193,6 +262,8 @@ fn main() {
     ));
     let mut configs = Vec::new();
     let mut headline = 0.0;
+    let mut headline_peak = 0usize;
+    let mut headline_bt = 0usize;
     for tp in TPS {
         for bucket in BUCKETS {
             let plan = plan_from_strategy(&[tp], &[LAYERS]).expect("plan");
@@ -222,6 +293,8 @@ fn main() {
             );
             if tp == 2 && bucket == 8 {
                 headline = speedup;
+                headline_peak = opt.kv_blocks_peak;
+                headline_bt = opt.block_tokens;
             }
             let mut j = Json::obj();
             j.set("tp", Json::from(tp))
@@ -233,6 +306,41 @@ fn main() {
         }
     }
     println!("headline (tp=2, bucket=8): {headline:.2}x decode tokens/s over the seed baseline");
+
+    // ---- paged-KV capacity and shared-prefix workload (tp=2, b=8) ------
+    hexgen::util::bench::group("paged KV: capacity per GB and shared-prefix prefill");
+    let headline_bucket = 8usize;
+    // Per-session KV footprint: what the headline run actually pinned at
+    // its peak (paged) vs the dense max_seq backing every slot used to
+    // pin up front.
+    let paged_session_bytes =
+        headline_peak as f64 / headline_bucket as f64 * block_bytes(headline_bt) as f64;
+    let dense_session_bytes = block_bytes(MAX_SEQ) as f64;
+    let gb = 1e9;
+    let sessions_per_gb_paged = gb / paged_session_bytes;
+    let sessions_per_gb_dense = gb / dense_session_bytes;
+    println!(
+        "capacity: {sessions_per_gb_paged:.0} admitted sessions/GB paged vs \
+         {sessions_per_gb_dense:.0} dense ({:.2}x, peak {headline_peak} blocks of \
+         {headline_bt} tokens)",
+        sessions_per_gb_paged / sessions_per_gb_dense
+    );
+    let shared_exec = PipelineExecutor::with_backend(
+        Box::new(ReferenceBackend::with_weights(manifest.clone(), weights.clone())),
+        plan_from_strategy(&[2], &[LAYERS]).expect("plan"),
+    )
+    .expect("shared-prefix executor");
+    let sp = measure_shared_prefix(&shared_exec, headline_bucket, if quick { 4 } else { 16 });
+    let prefill_speedup = sp.shared_prefill_tok_s / sp.distinct_prefill_tok_s;
+    println!(
+        "shared prefix: {:.0} prefill tok/s shared vs {:.0} distinct ({prefill_speedup:.2}x), \
+         {} blocks pinned vs {} ({} prefix-cache hits)",
+        sp.shared_prefill_tok_s,
+        sp.distinct_prefill_tok_s,
+        sp.shared_blocks,
+        sp.distinct_blocks,
+        sp.prefix_cache_hits
+    );
 
     let mut model = Json::obj();
     model
@@ -248,13 +356,30 @@ fn main() {
         .set("tp", Json::from(2usize))
         .set("bucket", Json::from(8usize))
         .set("decode_speedup", Json::from(headline));
+    let mut shared_j = Json::obj();
+    shared_j
+        .set("distinct_prefill_tok_s", Json::from(sp.distinct_prefill_tok_s))
+        .set("shared_prefill_tok_s", Json::from(sp.shared_prefill_tok_s))
+        .set("prefill_speedup", Json::from(prefill_speedup))
+        .set("distinct_blocks", Json::from(sp.distinct_blocks))
+        .set("shared_blocks", Json::from(sp.shared_blocks))
+        .set("prefix_cache_hits", Json::from(sp.prefix_cache_hits));
+    let mut paged = Json::obj();
+    paged
+        .set("block_tokens", Json::from(headline_bt))
+        .set("kv_blocks_peak", Json::from(headline_peak))
+        .set("sessions_per_gb_paged", Json::from(sessions_per_gb_paged))
+        .set("sessions_per_gb_dense", Json::from(sessions_per_gb_dense))
+        .set("capacity_gain", Json::from(sessions_per_gb_paged / sessions_per_gb_dense))
+        .set("shared_prefix", shared_j);
     let mut j = Json::obj();
     j.set("bench", Json::from("decode"))
         .set("quick", Json::from(quick))
         .set("decode_steps", Json::from(steps))
         .set("model", model)
         .set("configs", Json::Arr(configs))
-        .set("headline", headline_j);
+        .set("headline", headline_j)
+        .set("paged_kv", paged);
     std::fs::write(&out_path, format!("{j}\n")).expect("write BENCH_decode.json");
     println!("wrote {}", out_path.display());
 }

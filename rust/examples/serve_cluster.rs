@@ -57,6 +57,7 @@ fn main() -> Result<()> {
         adapt_speeds: true,
         max_new_tokens: max_new,
         stop_token: None,
+        kv: Default::default(),
     };
     println!("starting HexGen service: 2 replicas ([2,1] 4/2 and [1,1] 3/3)...");
     let t_start = Instant::now();

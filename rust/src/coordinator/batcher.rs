@@ -160,6 +160,27 @@ impl<T> AdmissionQueue<T> {
     /// and fewer are pending, waits up to `policy.window` for
     /// co-batchable arrivals first.
     pub fn admit(&mut self, free: usize, idle: bool, policy: &BatchPolicy) -> Vec<T> {
+        self.admit_budgeted(free, idle, policy, usize::MAX, |_| 0)
+    }
+
+    /// [`Self::admit`] with a resource budget: hand out the longest FIFO
+    /// prefix of the pending queue whose summed `cost` fits `budget`, up
+    /// to `min(free, policy.max_batch)` items. The serving loop passes
+    /// the KV pool's free-block count as the budget and each request's
+    /// worst-case block need as its cost, so admission **defers** when
+    /// the pool cannot cover a request (it stays queued for a later
+    /// boundary, after blocks are freed) instead of over-committing and
+    /// failing mid-decode. The scan is strictly FIFO — a cheap request
+    /// never jumps an expensive one, so an over-budget head blocks until
+    /// retirements free its budget (no starvation).
+    pub fn admit_budgeted<C: FnMut(&T) -> usize>(
+        &mut self,
+        free: usize,
+        idle: bool,
+        policy: &BatchPolicy,
+        budget: usize,
+        mut cost: C,
+    ) -> Vec<T> {
         self.poll();
         let cap = free.min(policy.max_batch);
         if cap == 0 || self.pending.is_empty() {
@@ -182,7 +203,16 @@ impl<T> AdmissionQueue<T> {
                 }
             }
         }
-        let n = cap.min(self.pending.len());
+        let mut n = 0;
+        let mut spent = 0usize;
+        while n < cap.min(self.pending.len()) {
+            let c = cost(&self.pending[n]);
+            match spent.checked_add(c) {
+                Some(total) if total <= budget => spent = total,
+                _ => break,
+            }
+            n += 1;
+        }
         self.pending.drain(..n).collect()
     }
 }
@@ -258,6 +288,46 @@ mod tests {
         assert!(b.contains(&1));
         // item 2 should usually join; tolerate scheduler jitter
         assert!(b.len() <= 2);
+    }
+
+    #[test]
+    fn budget_bounds_the_admitted_prefix() {
+        let (tx, rx) = channel();
+        // Costs: 3, 3, 1 — budget 4 covers only the first item; the
+        // cheap third item must NOT jump the over-budget second (FIFO).
+        for c in [3usize, 3, 1] {
+            tx.send(c).unwrap();
+        }
+        let mut q = AdmissionQueue::new(rx);
+        assert_eq!(q.admit_budgeted(8, false, &policy(8, 5), 4, |&c| c), vec![3]);
+        assert_eq!(q.pending(), 2);
+        // Budget freed up: the rest fits.
+        assert_eq!(q.admit_budgeted(8, false, &policy(8, 5), 4, |&c| c), vec![3, 1]);
+    }
+
+    #[test]
+    fn zero_budget_defers_everything() {
+        let (tx, rx) = channel();
+        tx.send(1usize).unwrap();
+        let mut q = AdmissionQueue::new(rx);
+        assert!(q.admit_budgeted(4, false, &policy(4, 5), 0, |&c| c).is_empty());
+        assert_eq!(q.pending(), 1, "deferred requests stay queued");
+        // Zero-cost items always fit (admit delegates with cost 0).
+        assert_eq!(q.admit_budgeted(4, false, &policy(4, 5), 0, |_| 0), vec![1]);
+    }
+
+    #[test]
+    fn budget_and_slots_bound_independently() {
+        let (tx, rx) = channel();
+        for i in 0..4usize {
+            tx.send(i).unwrap();
+        }
+        let mut q = AdmissionQueue::new(rx);
+        // 2 free slots but budget for 3 unit-cost items: slots win.
+        assert_eq!(q.admit_budgeted(2, false, &policy(8, 5), 3, |_| 1), vec![0, 1]);
+        // 8 slots but budget for 1: budget wins.
+        assert_eq!(q.admit_budgeted(8, false, &policy(8, 5), 1, |_| 1), vec![2]);
+        assert_eq!(q.pending(), 1);
     }
 
     #[test]

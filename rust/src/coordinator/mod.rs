@@ -29,3 +29,8 @@ pub use pipeline::{
 pub use router::{RoutePolicy, Router};
 pub use server::HttpServer;
 pub use service::{HexGenService, ServiceConfig, ServiceStats};
+
+// Convenience: the KV sizing policy lives with the block pool in
+// `runtime::kvcache`, but service configurations are assembled from this
+// layer — re-export it next to `ServiceConfig`.
+pub use crate::runtime::KvPolicy;

@@ -14,13 +14,37 @@
 //! with the KV caches held per (layer, shard) between decode steps.
 //!
 //! Serving runs **continuous (iteration-level) batching** through a
-//! persistent [`DecodeSession`]: slot-based KV caches sized to an
-//! artifact bucket, with [`DecodeSession::prefill_into_slots`] admitting
-//! requests into free slots at any decode-step boundary and
+//! persistent [`DecodeSession`]: paged KV caches sized to an artifact
+//! bucket, with [`DecodeSession::prefill_into_slots`] admitting requests
+//! into free slots at any decode-step boundary and
 //! [`DecodeSession::decode_step`] retiring rows the moment they hit
 //! their own `max_new` or emit their stop token. The monolithic
 //! [`PipelineExecutor::generate`] remains as a thin run-to-completion
 //! wrapper over a session.
+//!
+//! **Paged KV backing.** The storage of record is a block store: per
+//! (stage, layer, shard) tensors of `[pool_blocks, nhs, block_tokens,
+//! dh]` whose dim-0 rows are fixed-size physical blocks handed out by a
+//! [`BlockPool`] and mapped per sequence through [`BlockTable`]s (see
+//! [`crate::runtime::kvcache`]). Admission reserves a row's worst-case
+//! block budget up front (deferral instead of mid-decode exhaustion),
+//! prompts resolve chunk-by-chunk against a [`PrefixCache`] so
+//! concurrent requests with a common prefix share its blocks refcounted
+//! (copy-on-write on the first divergent append), and retire/cancel
+//! return every block — cache memory tracks what requests actually use,
+//! not `bucket × max_seq`.
+//!
+//! The execution kernels are untouched by paging: their contract is a
+//! dense `[b, nhs, max_seq, dh]` cache per shard, so every decode step
+//! runs over dense **step scratch** at the smallest manifest bucket
+//! covering the live rows. Each active row's block-backed prefix is
+//! gathered into its scratch row, the step executes in place there, and
+//! only the newly appended KV entry scatters back into the row's tail
+//! block. Per-row residency tracking ([`StepScratch`]) skips the gather
+//! when a row's prefix is already in place from the previous step, so
+//! the steady state pays one row of copy per step — and row results are
+//! bit-identical to the dense backing (gathers replay exact bytes, and
+//! per-row computation is independent of batch padding).
 //!
 //! **Decode hot path.** Three properties keep the per-token loop lean
 //! (see rust/README.md §Performance):
@@ -34,10 +58,9 @@
 //!   ([`ExecutionBackend::sync_view`]); shard order is preserved at the
 //!   AllReduce, so results are bit-identical to serial execution;
 //! * decode steps are **active-row-aware**: each step runs at the
-//!   smallest manifest bucket covering the live rows, gathering occupied
-//!   cache prefixes into a compact scratch and scattering back only the
-//!   newly appended entries — a session draining from 8 rows to 1 stops
-//!   paying 8-row attention, MLP, and lm_head cost.
+//!   smallest manifest bucket covering the live rows — a session
+//!   draining from 8 rows to 1 stops paying 8-row attention, MLP, and
+//!   lm_head cost.
 //!
 //! All artifact and shard-weight name strings are precomputed at
 //! executor construction ([`NameCache`]); the steady-state loop performs
@@ -48,9 +71,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::runtime::kvcache::{plan_append, AppendOp, PREFIX_HASH_SEED};
 use crate::runtime::{
-    tokenizer, AttnShardWeights, BackendKind, DecodePositions, ExecutionBackend, InputArg, Tensor,
-    WeightStore,
+    tokenizer, AttnShardWeights, BackendKind, BlockPool, BlockTable, DecodePositions,
+    ExecutionBackend, InputArg, KvPolicy, PrefixCache, Tensor, WeightStore,
 };
 
 use super::collective::{add_residual, all_reduce_sum, record_pp_send, CommStats};
@@ -313,20 +337,84 @@ impl PipelineExecutor {
         Ok(caches)
     }
 
+    /// Allocate the zeroed paged-KV block store: per stage/layer/shard
+    /// tensors of `[pool_blocks, nhs, block_tokens, dh]`. Dim 0 is the
+    /// physical block id — one [`BlockPool`] id addresses the matching
+    /// row of every (stage, layer, shard) tensor, so a single logical
+    /// block table per sequence covers the whole model.
+    fn alloc_block_store(
+        &self,
+        pool_blocks: usize,
+        block_tokens: usize,
+    ) -> Result<Vec<StageCaches>> {
+        let info = &self.backend.manifest().model;
+        let mut caches: Vec<StageCaches> = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            if stage.tp == 0 || info.heads % stage.tp != 0 {
+                bail!("tp={} does not divide {} heads", stage.tp, info.heads);
+            }
+            let nhs = info.heads / stage.tp;
+            let dims = vec![pool_blocks, nhs, block_tokens, info.head_dim];
+            let n = pool_blocks * nhs * block_tokens * info.head_dim;
+            let mut stage_caches: StageCaches = Vec::with_capacity(stage.layer_count);
+            for _ in 0..stage.layer_count {
+                let shards: Vec<(Tensor, Tensor)> = (0..stage.tp)
+                    .map(|_| {
+                        (
+                            Tensor { dims: dims.clone(), data: vec![0.0; n] },
+                            Tensor { dims: dims.clone(), data: vec![0.0; n] },
+                        )
+                    })
+                    .collect();
+                stage_caches.push(shards);
+            }
+            caches.push(stage_caches);
+        }
+        Ok(caches)
+    }
+
     /// Open a persistent decode session with `bucket` KV-cache slots
-    /// (`bucket` must be one of the manifest's batch buckets). Caches are
-    /// allocated zeroed; requests are admitted with
-    /// [`DecodeSession::prefill_into_slots`].
+    /// (`bucket` must be one of the manifest's batch buckets) and the
+    /// default paged-KV policy: [`kvcache::DEFAULT_BLOCK_TOKENS`]-row
+    /// blocks and a pool matching the dense capacity, so nothing the
+    /// dense backing would have admitted is ever deferred. Requests are
+    /// admitted with [`DecodeSession::prefill_into_slots`].
+    ///
+    /// [`kvcache::DEFAULT_BLOCK_TOKENS`]: crate::runtime::kvcache::DEFAULT_BLOCK_TOKENS
     pub fn new_session(&self, bucket: usize) -> Result<DecodeSession<'_>> {
+        self.new_session_with(bucket, KvPolicy::default())
+    }
+
+    /// Open a decode session with an explicit paged-KV policy
+    /// ([`KvPolicy`]): `block_tokens` KV rows per physical block and a
+    /// pool of `pool_blocks` blocks shared by all slots. The pool must
+    /// hold at least one full sequence (`ceil(max_seq / block_tokens)`
+    /// blocks); admission reserves each row's worst-case budget and
+    /// defers when the pool cannot cover it.
+    pub fn new_session_with(&self, bucket: usize, kv: KvPolicy) -> Result<DecodeSession<'_>> {
         let m = self.backend.manifest();
         if !m.batch_buckets.contains(&bucket) {
             bail!("session bucket {bucket} not in manifest buckets {:?}", m.batch_buckets);
         }
-        let caches = self.alloc_caches(bucket)?;
+        let info = &m.model;
+        let block_tokens = kv.resolve_block_tokens(info.max_seq);
+        let blocks_per_seq = info.max_seq.div_ceil(block_tokens);
+        let pool_blocks = kv.pool_blocks.unwrap_or(bucket * blocks_per_seq);
+        if pool_blocks < blocks_per_seq {
+            bail!(
+                "kv pool of {pool_blocks} blocks cannot hold one full sequence \
+                 ({blocks_per_seq} blocks of {block_tokens} tokens)"
+            );
+        }
+        let block_store = self.alloc_block_store(pool_blocks, block_tokens)?;
         Ok(DecodeSession {
             exec: self,
             bucket,
-            caches,
+            block_tokens,
+            block_store,
+            pool: BlockPool::new(pool_blocks, block_tokens)?,
+            tables: (0..bucket).map(|_| BlockTable::with_block_capacity(blocks_per_seq)).collect(),
+            prefix: PrefixCache::new(pool_blocks, block_tokens),
             step_caches: Vec::new(),
             slots: (0..bucket).map(|_| None).collect(),
             comm: CommStats::default(),
@@ -337,7 +425,8 @@ impl PipelineExecutor {
             scratch_active: Vec::with_capacity(bucket),
             scratch_tokens: Vec::with_capacity(bucket),
             scratch_positions: Vec::with_capacity(bucket),
-            scratch_prompt: Vec::with_capacity(bucket * m.model.prompt_len),
+            scratch_prompt: Vec::with_capacity(bucket * info.prompt_len),
+            scratch_miss: Vec::with_capacity(bucket * info.prompt_len.div_ceil(block_tokens)),
         })
     }
 
@@ -640,7 +729,8 @@ pub struct StepOutcome {
     /// slot order.
     pub tokens: Vec<(usize, i32)>,
     /// Rows that retired this step: `(slot, full generated sequence)`.
-    /// Their slots are freed (cache rows zeroed) and admissible again.
+    /// Their slots are freed (KV blocks released back to the pool) and
+    /// admissible again.
     pub finished: Vec<(usize, Vec<i32>)>,
 }
 
@@ -677,12 +767,24 @@ struct SlotState {
 pub struct DecodeSession<'a> {
     exec: &'a PipelineExecutor,
     bucket: usize,
-    /// `[stage][layer][shard] -> (k, v)`, each `[bucket, nhs, max_seq, dh]`.
-    caches: Vec<StageCaches>,
-    /// Compact scratch caches for down-shifted decode steps, keyed by
-    /// bucket and allocated lazily on the first step that needs each
-    /// size. Contents are scratch: every step gathers the rows it reads.
-    step_caches: Vec<(usize, Vec<StageCaches>)>,
+    /// KV rows per physical block.
+    block_tokens: usize,
+    /// Paged KV storage of record: `[stage][layer][shard] -> (k, v)`,
+    /// each `[pool_blocks, nhs, block_tokens, dh]` with dim 0 the
+    /// physical block id (the same id addresses every tensor).
+    block_store: Vec<StageCaches>,
+    /// Physical block allocator: free list, refcounts (prefix sharing),
+    /// and the admission reservation ledger.
+    pool: BlockPool,
+    /// Per-slot logical-position → physical-block maps.
+    tables: Vec<BlockTable>,
+    /// Hashed prompt-chunk → block cache backing prefix sharing.
+    prefix: PrefixCache,
+    /// Dense decode scratch (the kernel contract is `[b, nhs, max_seq,
+    /// dh]` per shard), one per bucket a step has run at, allocated
+    /// lazily. Gathers are skipped per row when its residency already
+    /// matches — see [`StepScratch`].
+    step_caches: Vec<StepScratch>,
     slots: Vec<Option<SlotState>>,
     comm: CommStats,
     decode_steps: usize,
@@ -700,6 +802,23 @@ pub struct DecodeSession<'a> {
     scratch_positions: Vec<i32>,
     /// Flattened, padded prompt batch for an admission prefill.
     scratch_prompt: Vec<i32>,
+    /// Flattened `[admitted row][prompt chunk]` prefix-cache miss mask
+    /// for an admission: marks the blocks prefill must hand KV off to.
+    scratch_miss: Vec<bool>,
+}
+
+/// Dense per-bucket decode scratch with per-row residency. `resident[r]
+/// == Some((slot, depth))` records that scratch row `r` holds exactly
+/// rows `[0, depth)` of `slot`'s KV — matching rows skip the gather, so
+/// a steady-state step's block traffic is one scattered row per active
+/// slot. Entries are invalidated whenever their slot releases its
+/// blocks (retire/cancel/rollback) and for pad rows each step (the
+/// kernel writes the filler position into them).
+struct StepScratch {
+    bucket: usize,
+    /// `[stage][layer][shard] -> (k, v)`, each `[bucket, nhs, max_seq, dh]`.
+    caches: Vec<StageCaches>,
+    resident: Vec<Option<(usize, usize)>>,
 }
 
 impl<'a> DecodeSession<'a> {
@@ -723,6 +842,64 @@ impl<'a> DecodeSession<'a> {
             .collect()
     }
 
+    /// KV rows per physical block in this session.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Physical blocks in the session's KV pool.
+    pub fn kv_blocks_total(&self) -> usize {
+        self.pool.num_blocks()
+    }
+
+    /// Blocks currently referenced by in-flight rows.
+    pub fn kv_blocks_used(&self) -> usize {
+        self.pool.used_blocks()
+    }
+
+    /// High-water mark of [`Self::kv_blocks_used`] over the session's
+    /// lifetime — what a right-sized pool would have needed.
+    pub fn kv_blocks_peak(&self) -> usize {
+        self.pool.peak_used_blocks()
+    }
+
+    /// Free blocks not yet promised to an admitted row: the budget the
+    /// service's admission gate spends against.
+    pub fn free_block_budget(&self) -> usize {
+        self.pool.available()
+    }
+
+    /// Worst-case blocks an admission with this `max_new` must reserve:
+    /// the prompt rows plus every decode append, before any prefix
+    /// sharing (shared full blocks hand their reservation back at
+    /// admission). This is exactly what
+    /// [`Self::prefill_into_slots`] reserves, so gating admission on it
+    /// against [`Self::free_block_budget`] never over-commits.
+    pub fn blocks_needed(&self, max_new: usize) -> usize {
+        let info = &self.exec.backend.manifest().model;
+        let mn = max_new.min(info.max_seq - info.prompt_len).max(1);
+        // The final generated token is returned without a KV append, so
+        // a row's deepest written position is prompt_len + mn - 2.
+        self.pool.blocks_for(info.prompt_len + mn - 1)
+    }
+
+    /// Prefix-cache chunk hits since session creation.
+    pub fn prefix_cache_hits(&self) -> u64 {
+        self.prefix.hits()
+    }
+
+    /// Prefix-cache chunk misses since session creation.
+    pub fn prefix_cache_misses(&self) -> u64 {
+        self.prefix.misses()
+    }
+
+    /// True when no block is referenced and no reservation is
+    /// outstanding — every retire/cancel/rollback path returned its
+    /// blocks (the leak-check invariant for a drained session).
+    pub fn kv_pool_fully_free(&self) -> bool {
+        self.pool.is_fully_free()
+    }
+
     /// True decode iterations executed so far.
     pub fn decode_steps(&self) -> usize {
         self.decode_steps
@@ -741,13 +918,23 @@ impl<'a> DecodeSession<'a> {
         std::mem::take(&mut self.comm)
     }
 
-    /// Admit requests into free slots: run their prefill (at the smallest
-    /// bucket that fits the admission batch) and scatter the resulting KV
-    /// rows into the slots' cache rows. Callable between any two decode
-    /// steps; in-flight rows are untouched. The outcome's `tokens` carry
-    /// each admitted row's prefill-produced token; `finished` the rows
-    /// that already completed at prefill (`max_new == 1` or stop token
-    /// emitted), whose slots are freed again.
+    /// Admit requests into free slots: reserve each row's worst-case
+    /// block budget, resolve its prompt chunk-by-chunk against the
+    /// prefix cache (shared chunks reuse live blocks refcounted), run
+    /// the prefill (at the smallest bucket that fits the admission
+    /// batch), and hand the resulting KV rows directly off into the
+    /// freshly allocated blocks — shared chunks are not copied at all.
+    /// Callable between any two decode steps; in-flight rows are
+    /// untouched. The outcome's `tokens` carry each admitted row's
+    /// prefill-produced token; `finished` the rows that already
+    /// completed at prefill (`max_new == 1` or stop token emitted),
+    /// whose slots and blocks are freed again.
+    ///
+    /// Errors release everything the failed admission acquired: block
+    /// exhaustion (the caller should gate on [`Self::blocks_needed`] /
+    /// [`Self::free_block_budget`] and defer instead) and model failures
+    /// both leave the pool exactly as it was, with in-flight rows
+    /// untouched.
     ///
     /// Admitting while other rows are mid-decode leaves rows at different
     /// cache depths, which requires
@@ -778,39 +965,37 @@ impl<'a> DecodeSession<'a> {
         }
         let pb = exec.backend.manifest().bucket_for(reqs.len())?;
         let bidx = exec.names.bucket_idx(pb)?;
-
         let t0 = Instant::now();
-        let mut tokens = std::mem::take(&mut self.scratch_prompt);
-        tokens.clear();
-        tokens.reserve(pb * info.prompt_len);
-        for (_, r) in &reqs {
-            tokens.extend_from_slice(&r.prompt);
-        }
-        tokens.resize(pb * info.prompt_len, tokenizer::PAD);
 
-        let mut x = exec.embed(&tokens, pb, info.prompt_len, true, bidx)?;
-        for (si, stage) in exec.stages.iter().enumerate() {
-            for li in 0..stage.layer_count {
-                let (h, layer_caches) = exec.layer_prefill(&x, si, li, bidx, &mut self.comm)?;
-                x = h;
-                for (shard, (kc, vc)) in layer_caches.iter().enumerate() {
-                    for (row, (slot, _)) in reqs.iter().enumerate() {
-                        let (dst_k, dst_v) = &mut self.caches[si][li][shard];
-                        dst_k.copy_slot_from(*slot, kc, row)?;
-                        dst_v.copy_slot_from(*slot, vc, row)?;
-                    }
-                }
-            }
-            if si + 1 < exec.stages.len() {
-                record_pp_send(&x, &mut self.comm);
+        // Phase 1 — logical admission: reserve block budgets and build
+        // block tables against the prefix cache, before any model work.
+        // `miss[row * cpp + chunk]` marks the blocks phase 2 must fill.
+        let cpp = info.prompt_len.div_ceil(self.block_tokens);
+        let mut miss = std::mem::take(&mut self.scratch_miss);
+        miss.clear();
+        miss.resize(reqs.len() * cpp, false);
+        for (ri, (slot, r)) in reqs.iter().enumerate() {
+            if let Err(e) = self.admit_row(*slot, r, ri, cpp, &mut miss) {
+                self.rollback_admission(&reqs[..=ri])?;
+                return Err(e);
             }
         }
-        self.scratch_prompt = tokens;
-        let logits = exec.lm_head(&x, true, bidx)?;
+
+        // Phase 2 — model prefill, handing each row's missed chunks
+        // straight off into its blocks (shared chunks copy nothing).
+        let logits = match self.prefill_run(&reqs, pb, bidx, &miss, cpp) {
+            Ok(l) => l,
+            Err(e) => {
+                self.rollback_admission(&reqs)?;
+                return Err(e);
+            }
+        };
         let next = argmax_rows(&logits, info.vocab);
         self.prefill_seconds += t0.elapsed().as_secs_f64();
         self.prefill_tokens += reqs.len();
 
+        // Phase 3 — commit slot states; rows done at prefill free their
+        // blocks immediately.
         let max_decode = info.max_seq - info.prompt_len;
         let mut out = StepOutcome::default();
         for (row, (slot, r)) in reqs.into_iter().enumerate() {
@@ -825,30 +1010,161 @@ impl<'a> DecodeSession<'a> {
             };
             st.generated.push(tok);
             if st.generated.len() >= st.max_new || Some(tok) == st.stop {
-                self.evict(slot, st.pos);
+                self.release_slot_blocks(slot)?;
                 out.finished.push((slot, st.generated));
             } else {
                 self.slots[slot] = Some(st);
             }
         }
+        self.scratch_miss = miss;
         Ok(out)
         // lint: hot-path-end
+    }
+
+    /// Phase 1 of admission for one row: reserve its worst-case block
+    /// budget ([`Self::blocks_needed`]) and resolve its prompt chunks
+    /// against the prefix cache, building its block table. Marks freshly
+    /// allocated chunks in `miss` for the prefill hand-off. On error the
+    /// row's partial state is released by the caller's rollback.
+    fn admit_row(
+        &mut self,
+        slot: usize,
+        r: &SlotRequest,
+        row_idx: usize,
+        cpp: usize,
+        miss: &mut [bool],
+    ) -> Result<()> {
+        let need = self.blocks_needed(r.max_new);
+        if !self.pool.try_reserve(need) {
+            bail!(
+                "kv block pool exhausted admitting slot {slot}: need {need} blocks, {} available",
+                self.pool.available()
+            );
+        }
+        if let Err(e) = self.tables[slot].begin(need) {
+            self.pool.release_reservation(need)?;
+            return Err(e);
+        }
+        let mut chain = PREFIX_HASH_SEED;
+        let mut parent: Option<usize> = None;
+        for (ci, chunk) in r.prompt.chunks(self.block_tokens).enumerate() {
+            let key = PrefixCache::chain_key(chain, ci, chunk);
+            if let Some(bid) = self.prefix.lookup(key, parent, chunk) {
+                self.pool.retain(bid)?;
+                self.tables[slot].push(bid);
+                self.tables[slot].use_reservation()?;
+                if chunk.len() == self.block_tokens {
+                    // Shared full blocks are never written again: hand
+                    // the reservation straight back to the admission
+                    // budget.
+                    self.pool.release_reservation(1)?;
+                } else {
+                    // Shared partial tail: pledge the reservation to the
+                    // block as a copy-on-write credit. *Either* sharer —
+                    // including the row that materialized the block,
+                    // whose own budget is exactly sized — may be the
+                    // first to append into it, and the first divergence
+                    // spends this credit ([`BlockPool::alloc_cow`]).
+                    self.pool.earmark_cow(bid)?;
+                }
+                parent = Some(bid);
+            } else {
+                self.tables[slot].use_reservation()?;
+                let bid = self.pool.alloc_reserved()?;
+                self.tables[slot].push(bid);
+                self.prefix.insert(key, bid, parent, chunk);
+                miss[row_idx * cpp + ci] = true;
+                parent = Some(bid);
+            }
+            chain = key;
+        }
+        Ok(())
+    }
+
+    /// Undo phase-1 admissions after a failure: release every listed
+    /// row's blocks and reservations. Rows that never reached phase 1
+    /// (empty tables) are no-ops, so the slice may include the row that
+    /// failed mid-way.
+    fn rollback_admission(&mut self, reqs: &[(usize, SlotRequest)]) -> Result<()> {
+        for (slot, _) in reqs {
+            self.release_slot_blocks(*slot)?;
+        }
+        Ok(())
+    }
+
+    /// Phase 2 of admission: run the model prefill over the padded
+    /// batch and hand each row's freshly-allocated (missed) chunks off
+    /// into its blocks as each layer's caches materialize. Shared chunks
+    /// (prefix-cache hits) already hold identical bytes — causal
+    /// attention makes a position's KV a function of the tokens at and
+    /// before it — so they are skipped entirely; that is the prefill
+    /// cache hand-off that makes shared-prefix admission cheaper than
+    /// dense copying. Returns the prefill logits.
+    fn prefill_run(
+        &mut self,
+        reqs: &[(usize, SlotRequest)],
+        pb: usize,
+        bidx: usize,
+        miss: &[bool],
+        cpp: usize,
+    ) -> Result<Tensor> {
+        let exec = self.exec;
+        let info = &exec.backend.manifest().model;
+        let mut tokens = std::mem::take(&mut self.scratch_prompt);
+        tokens.clear();
+        tokens.reserve(pb * info.prompt_len);
+        for (_, r) in reqs {
+            tokens.extend_from_slice(&r.prompt);
+        }
+        tokens.resize(pb * info.prompt_len, tokenizer::PAD);
+
+        let bt = self.block_tokens;
+        let mut x = exec.embed(&tokens, pb, info.prompt_len, true, bidx)?;
+        for (si, stage) in exec.stages.iter().enumerate() {
+            for li in 0..stage.layer_count {
+                let (h, layer_caches) = exec.layer_prefill(&x, si, li, bidx, &mut self.comm)?;
+                x = h;
+                for (shard, (kc, vc)) in layer_caches.iter().enumerate() {
+                    let (dst_k, dst_v) = &mut self.block_store[si][li][shard];
+                    for (ri, (slot, _)) in reqs.iter().enumerate() {
+                        for (ci, &bid) in self.tables[*slot].blocks().iter().enumerate() {
+                            if !miss[ri * cpp + ci] {
+                                continue;
+                            }
+                            let start = ci * bt;
+                            let n = (info.prompt_len - start).min(bt);
+                            dst_k.copy_cache_rows_between(bid, 0, kc, ri, start, n)?;
+                            dst_v.copy_cache_rows_between(bid, 0, vc, ri, start, n)?;
+                        }
+                    }
+                }
+            }
+            if si + 1 < exec.stages.len() {
+                record_pp_send(&x, &mut self.comm);
+            }
+        }
+        self.scratch_prompt = tokens;
+        exec.lm_head(&x, true, bidx)
     }
 
     /// Run one decode iteration for every active row, reporting each
     /// row's new token in the outcome's `tokens`. Rows that hit their own
     /// `max_new` or stop token retire into `finished`: their slots are
-    /// freed (cache rows zeroed) and their full token sequences returned.
-    /// A no-op returning an empty outcome when nothing is active.
+    /// freed (KV blocks released) and their full token sequences
+    /// returned. A no-op returning an empty outcome when nothing is
+    /// active.
     ///
     /// The step is **active-row-aware**: it executes at the smallest
-    /// manifest bucket covering the live rows. When that is smaller than
-    /// the session bucket, the occupied cache prefixes are gathered into
-    /// a compact scratch, the step runs there, and only each row's newly
-    /// appended entry is scattered back — so a draining session's
-    /// attention, MLP, and lm_head cost tracks its live rows, not its
-    /// slot count. Row results are bit-identical either way (every
-    /// per-row computation is independent of batch padding).
+    /// manifest bucket covering the live rows, with active rows packed
+    /// into scratch rows `[0, n)` — so a draining session's attention,
+    /// MLP, and lm_head cost tracks its live rows, not its slot count.
+    /// The kernels run over dense per-bucket scratch (their contract);
+    /// each row's block-backed prefix is gathered in (skipped when its
+    /// residency already matches from the previous step) and only the
+    /// newly appended KV entry scatters back into the row's tail block.
+    /// Row results are bit-identical to a dense backing: gathers replay
+    /// exact bytes and every per-row computation is independent of batch
+    /// padding and row index.
     pub fn decode_step(&mut self) -> Result<StepOutcome> {
         if self.active() == 0 {
             return Ok(StepOutcome::default());
@@ -867,13 +1183,10 @@ impl<'a> DecodeSession<'a> {
             }
         }
         let sb = exec.backend.manifest().bucket_for(active_slots.len())?.min(self.bucket);
-        let compact = sb < self.bucket;
         let bidx = exec.names.bucket_idx(sb)?;
-        let step_idx =
-            if compact { Some(self.gather_step_caches(&active_slots, sb)?) } else { None };
+        let ci = self.gather_step_caches(&active_slots, sb)?;
 
-        // Row layout: compact steps pack active rows into [0, n); full
-        // steps keep row == slot.
+        // Row layout: active rows pack into scratch rows [0, n).
         let mut tok_batch = std::mem::take(&mut self.scratch_tokens);
         tok_batch.clear();
         tok_batch.resize(sb, tokenizer::PAD);
@@ -885,37 +1198,27 @@ impl<'a> DecodeSession<'a> {
             let Some(st) = self.slots[slot].as_ref() else {
                 bail!("internal: active slot {slot} lost its state mid-step");
             };
-            let ridx = if compact { row } else { slot };
-            tok_batch[ridx] = st.next;
-            positions[ridx] = st.pos as i32;
+            tok_batch[row] = st.next;
+            positions[row] = st.pos as i32;
             filler_pos = st.pos as i32;
         }
         // Pad rows mirror an active row's position so a uniform batch
         // keeps the scalar-position artifact signature available.
-        for ridx in 0..sb {
-            let occupied =
-                if compact { ridx < active_slots.len() } else { self.slots[ridx].is_some() };
-            if !occupied {
-                positions[ridx] = filler_pos;
-            }
+        for row in active_slots.len()..sb {
+            positions[row] = filler_pos;
         }
 
         let mut x = exec.embed(&tok_batch, sb, 1, false, bidx)?;
         for (si, stage) in exec.stages.iter().enumerate() {
             for li in 0..stage.layer_count {
-                let caches = match step_idx {
-                    Some(ci) => &mut self.step_caches[ci].1[si][li],
-                    None => &mut self.caches[si][li],
-                };
+                let caches = &mut self.step_caches[ci].caches[si][li];
                 x = exec.layer_decode(&x, si, li, bidx, &positions, caches, &mut self.comm)?;
             }
             if si + 1 < exec.stages.len() {
                 record_pp_send(&x, &mut self.comm);
             }
         }
-        if let Some(ci) = step_idx {
-            self.scatter_step_caches(&active_slots, ci)?;
-        }
+        self.scatter_step_caches(&active_slots, ci)?;
         let logits = exec.lm_head(&x, false, bidx)?;
         let next = argmax_rows(&logits, info.vocab);
         self.decode_steps += 1;
@@ -923,12 +1226,11 @@ impl<'a> DecodeSession<'a> {
 
         let mut out = StepOutcome::default();
         for (row, &slot) in active_slots.iter().enumerate() {
-            let ridx = if compact { row } else { slot };
             let done = {
                 let Some(st) = self.slots[slot].as_mut() else {
                     bail!("internal: active slot {slot} lost its state mid-step");
                 };
-                let tok = next[ridx];
+                let tok = next[row];
                 st.generated.push(tok);
                 st.next = tok;
                 st.pos += 1;
@@ -939,7 +1241,7 @@ impl<'a> DecodeSession<'a> {
                 let Some(st) = self.slots[slot].take() else {
                     bail!("internal: active slot {slot} lost its state mid-step");
                 };
-                self.evict(slot, st.pos);
+                self.release_slot_blocks(slot)?;
                 out.finished.push((slot, st.generated));
             }
         }
@@ -950,91 +1252,157 @@ impl<'a> DecodeSession<'a> {
         // lint: hot-path-end
     }
 
-    /// Cancel the request occupying `slot`: drop its decode state, zero
-    /// its KV-cache rows, and free the slot for admission. Returns the
-    /// tokens generated so far, or `None` when the slot was already free
-    /// (the request may have retired in the same step it was cancelled).
-    /// The serving loop calls this at decode-step boundaries, so
-    /// cancellation never tears a step in half.
-    pub fn cancel_slot(&mut self, slot: usize) -> Option<Vec<i32>> {
-        let st = self.slots.get_mut(slot).and_then(Option::take)?;
-        self.evict(slot, st.pos);
-        Some(st.generated)
+    /// Cancel the request occupying `slot`: drop its decode state,
+    /// release its KV blocks back to the pool, and free the slot for
+    /// admission. Returns the tokens generated so far, or `None` when
+    /// the slot was already free (the request may have retired in the
+    /// same step it was cancelled). An `Err` means the block pool's
+    /// bookkeeping is corrupt — the serving loop surfaces it as a
+    /// replica error and rebuilds the session (previously eviction
+    /// failures were silently swallowed). The serving loop calls this at
+    /// decode-step boundaries, so cancellation never tears a step in
+    /// half.
+    pub fn cancel_slot(&mut self, slot: usize) -> Result<Option<Vec<i32>>> {
+        let Some(st) = self.slots.get_mut(slot).and_then(Option::take) else {
+            return Ok(None);
+        };
+        self.release_slot_blocks(slot)?;
+        Ok(Some(st.generated))
     }
 
-    /// Ensure compact scratch caches exist for bucket `sb` and gather
-    /// each active row's occupied prefix `[0, pos)` into its compact row.
-    /// The scratch persists across steps and is never zeroed: every cache
-    /// row a step reads is gathered here first, and pad rows' leftover
-    /// contents are never observed (per-row attention reads only that
-    /// row's entries, and pad-row outputs are discarded).
+    /// Ensure dense step scratch exists for bucket `sb` and gather each
+    /// active row's block-backed prefix `[0, pos)` into its scratch row
+    /// — skipped per row when the residency entry already records
+    /// exactly `(slot, pos)` from the previous step's scatter, which is
+    /// the steady state. The scratch persists across steps and is never
+    /// zeroed: every cache row a step reads is gathered (or resident)
+    /// first, and pad rows' leftover contents are never observed
+    /// (per-row attention reads only that row's entries, and pad-row
+    /// outputs are discarded).
     fn gather_step_caches(&mut self, active_slots: &[usize], sb: usize) -> Result<usize> {
-        let ci = match self.step_caches.iter().position(|(b, _)| *b == sb) {
+        let ci = match self.step_caches.iter().position(|s| s.bucket == sb) {
             Some(i) => i,
             None => {
+                // Scratch pool refill — outside the marked hot regions.
                 let fresh = self.exec.alloc_caches(sb)?;
-                self.step_caches.push((sb, fresh));
+                self.step_caches.push(StepScratch {
+                    bucket: sb,
+                    caches: fresh,
+                    resident: vec![None; sb],
+                });
                 self.step_caches.len() - 1
             }
         };
-        let (_, step) = &mut self.step_caches[ci];
-        for (si, stage_caches) in self.caches.iter().enumerate() {
-            for (li, layer) in stage_caches.iter().enumerate() {
-                for (shard, (sk, sv)) in layer.iter().enumerate() {
-                    let (dk, dv) = &mut step[si][li][shard];
-                    for (row, &slot) in active_slots.iter().enumerate() {
-                        let Some(st) = self.slots[slot].as_ref() else {
-                            bail!("internal: gathering inactive slot {slot}");
-                        };
-                        let depth = st.pos;
-                        dk.copy_cache_rows(row, sk, slot, 0..depth)?;
-                        dv.copy_cache_rows(row, sv, slot, 0..depth)?;
+        let bt = self.block_tokens;
+        let DecodeSession { step_caches, block_store, tables, slots, .. } = self;
+        let scratch = &mut step_caches[ci];
+        // The kernel writes the filler position into pad rows, so any
+        // residency they carried is stale after this step.
+        for r in scratch.resident[active_slots.len()..].iter_mut() {
+            *r = None;
+        }
+        for (row, &slot) in active_slots.iter().enumerate() {
+            let Some(st) = slots[slot].as_ref() else {
+                bail!("internal: gathering inactive slot {slot}");
+            };
+            let depth = st.pos;
+            if scratch.resident[row] == Some((slot, depth)) {
+                continue;
+            }
+            scratch.resident[row] = None;
+            let table = &tables[slot];
+            for (si, stage_caches) in block_store.iter().enumerate() {
+                for (li, layer) in stage_caches.iter().enumerate() {
+                    for (shard, (bk, bv)) in layer.iter().enumerate() {
+                        let (dk, dv) = &mut scratch.caches[si][li][shard];
+                        for (bi, &bid) in table.blocks().iter().enumerate() {
+                            let start = bi * bt;
+                            if start >= depth {
+                                break;
+                            }
+                            let n = (depth - start).min(bt);
+                            dk.copy_cache_rows_between(row, start, bk, bid, 0, n)?;
+                            dv.copy_cache_rows_between(row, start, bv, bid, 0, n)?;
+                        }
                     }
                 }
             }
+            scratch.resident[row] = Some((slot, depth));
         }
         Ok(ci)
     }
 
     /// Write each active row's newly appended cache entry (at its `pos`)
-    /// back into its session slot. A decode step mutates nothing else:
-    /// the rest of the scratch row is byte-identical to what gather
-    /// copied in.
+    /// back into its tail block, planning the append through the block
+    /// table: extend with a fresh block at a block boundary, or
+    /// copy-on-write a shared tail before the first divergent write
+    /// (which copies the tail's `[0, pos % block_tokens)` rows across
+    /// every storage tensor — the sibling sequence keeps the original
+    /// block untouched). A decode step mutates nothing else: the rest of
+    /// the scratch row is byte-identical to what gather copied in, so
+    /// residency advances to `(slot, pos + 1)`.
     fn scatter_step_caches(&mut self, active_slots: &[usize], ci: usize) -> Result<()> {
-        let (_, step) = &self.step_caches[ci];
-        for (si, stage_caches) in self.caches.iter_mut().enumerate() {
-            for (li, layer) in stage_caches.iter_mut().enumerate() {
-                for (shard, (dk, dv)) in layer.iter_mut().enumerate() {
-                    let (sk, sv) = &step[si][li][shard];
-                    for (row, &slot) in active_slots.iter().enumerate() {
-                        let Some(st) = self.slots[slot].as_ref() else {
-                            bail!("internal: scattering inactive slot {slot}");
-                        };
-                        let pos = st.pos;
-                        dk.copy_cache_rows(slot, sk, row, pos..pos + 1)?;
-                        dv.copy_cache_rows(slot, sv, row, pos..pos + 1)?;
+        let DecodeSession { step_caches, block_store, tables, slots, pool, .. } = self;
+        let scratch = &mut step_caches[ci];
+        for (row, &slot) in active_slots.iter().enumerate() {
+            let Some(st) = slots[slot].as_ref() else {
+                bail!("internal: scattering inactive slot {slot}");
+            };
+            let pos = st.pos;
+            let op = plan_append(pool, &mut tables[slot], pos)?;
+            let (block, block_row) = match op {
+                AppendOp::Write { block, row: block_row } => (block, block_row),
+                AppendOp::CowWrite { src, block, copy_rows, row: block_row } => {
+                    for stage_caches in block_store.iter_mut() {
+                        for layer in stage_caches.iter_mut() {
+                            for (bk, bv) in layer.iter_mut() {
+                                bk.copy_cache_rows_within(block, src, copy_rows)?;
+                                bv.copy_cache_rows_within(block, src, copy_rows)?;
+                            }
+                        }
+                    }
+                    (block, block_row)
+                }
+            };
+            for (si, stage_caches) in block_store.iter_mut().enumerate() {
+                for (li, layer) in stage_caches.iter_mut().enumerate() {
+                    for (shard, (bk, bv)) in layer.iter_mut().enumerate() {
+                        let (sk, sv) = &scratch.caches[si][li][shard];
+                        bk.copy_cache_rows_between(block, block_row, sk, row, pos, 1)?;
+                        bv.copy_cache_rows_between(block, block_row, sv, row, pos, 1)?;
                     }
                 }
             }
+            scratch.resident[row] = Some((slot, pos + 1));
         }
         Ok(())
     }
 
-    /// Zero `[0, depth)` of a slot's cache rows across all
-    /// stages/layers/shards (evict). Rows at and beyond the slot's
-    /// written depth never hold live data — decode reads `[0, pos]` and
-    /// admission rewrites the whole slot — so evict cost tracks what the
-    /// request actually used instead of `max_seq`
-    /// (`tests/reference_parity.rs` pins cancel→readmit parity on this).
-    fn evict(&mut self, slot: usize, depth: usize) {
-        for stage in self.caches.iter_mut() {
-            for layer in stage.iter_mut() {
-                for (k, v) in layer.iter_mut() {
-                    let _ = k.clear_cache_rows(slot, depth);
-                    let _ = v.clear_cache_rows(slot, depth);
+    /// Release every block a slot's table references (freed blocks drop
+    /// their prefix-cache entries), hand its unused reservation back to
+    /// the admission budget, and invalidate its step-scratch residency.
+    /// Errors are surfaced, not swallowed: a failed release means the
+    /// pool's refcounts are corrupt, and the serving loop must fail the
+    /// replica's rows and rebuild the session rather than keep decoding
+    /// over a leaking pool.
+    fn release_slot_blocks(&mut self, slot: usize) -> Result<()> {
+        let DecodeSession { pool, prefix, tables, step_caches, .. } = self;
+        let table = &mut tables[slot];
+        for &bid in table.blocks() {
+            if pool.release(bid).with_context(|| format!("evicting slot {slot}"))? {
+                prefix.forget(bid);
+            }
+        }
+        let left = table.finish();
+        pool.release_reservation(left).with_context(|| format!("evicting slot {slot}"))?;
+        for sc in step_caches.iter_mut() {
+            for r in sc.resident.iter_mut() {
+                if r.is_some_and(|(s, _)| s == slot) {
+                    *r = None;
                 }
             }
         }
+        Ok(())
     }
 
     /// Fold the session's counters into a [`GenerationResult`].

@@ -279,6 +279,11 @@ fn metrics_json(service: &HexGenService) -> Json {
         .set("failed", Json::from(stats.failed))
         .set("cancelled", Json::from(stats.cancelled))
         .set("tokens_out", Json::from(stats.tokens_out));
+    let mut kv = Json::obj();
+    kv.set("blocks_total", Json::from(stats.kv_blocks_total))
+        .set("blocks_used", Json::from(stats.kv_blocks_used))
+        .set("prefix_cache_hits", Json::from(stats.prefix_cache_hits))
+        .set("prefix_cache_misses", Json::from(stats.prefix_cache_misses));
     let c = service.comm_stats();
     let mut comm = Json::obj();
     comm.set("allreduce_ops", Json::from(c.allreduce_ops))
@@ -289,6 +294,7 @@ fn metrics_json(service: &HexGenService) -> Json {
     j.set("replicas", Json::from(service.replicas()))
         .set("router", router)
         .set("requests", requests)
+        .set("kv", kv)
         .set("comm", comm);
     j
 }

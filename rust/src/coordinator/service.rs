@@ -7,7 +7,7 @@
 //! batching** admission loop over a persistent
 //! [`DecodeSession`](super::pipeline::DecodeSession): at every
 //! decode-step boundary it retires rows that hit their own `max_new` (or
-//! stop token), frees their KV-cache slots, honours cancellations
+//! stop token), frees their KV blocks, honours cancellations
 //! ([`RequestHandle::cancel`] / handle drop), and prefills queued
 //! requests into the free slots — so a late request joins the in-flight
 //! batch instead of waiting behind it.
@@ -29,7 +29,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{make_backend, tokenizer, BackendKind, Manifest, Utf8Stream, WeightStore};
+use crate::runtime::{
+    make_backend, tokenizer, BackendKind, KvPolicy, Manifest, Utf8Stream, WeightStore,
+};
 use crate::util::sync::{locks, OrderedMutex};
 
 use super::api::{
@@ -69,6 +71,10 @@ pub struct ServiceConfig {
     /// Default stop token: rows retire early when they emit it
     /// (overridable per request via [`GenRequest::stop`]).
     pub stop_token: Option<i32>,
+    /// Paged-KV sizing for each replica's decode session (block
+    /// granularity and pool capacity); the default sizes the pool to
+    /// hold every slot at full depth.
+    pub kv: KvPolicy,
 }
 
 /// Monotonic lifetime counters of a running service (`GET /metrics`).
@@ -80,6 +86,16 @@ pub struct ServiceStats {
     pub cancelled: u64,
     /// Total generated tokens across completed requests.
     pub tokens_out: u64,
+    /// KV block capacity summed over every replica's pool.
+    pub kv_blocks_total: u64,
+    /// KV blocks currently referenced by in-flight rows across all
+    /// replicas (a gauge, not a monotonic counter).
+    pub kv_blocks_used: u64,
+    /// Prefix-cache chunk hits (prompt blocks shared instead of
+    /// recomputed) across all replicas.
+    pub prefix_cache_hits: u64,
+    /// Prefix-cache chunk misses across all replicas.
+    pub prefix_cache_misses: u64,
 }
 
 #[derive(Debug, Default)]
@@ -89,6 +105,10 @@ struct Counters {
     failed: AtomicU64,
     cancelled: AtomicU64,
     tokens_out: AtomicU64,
+    kv_blocks_total: AtomicU64,
+    kv_blocks_used: AtomicU64,
+    prefix_cache_hits: AtomicU64,
+    prefix_cache_misses: AtomicU64,
 }
 
 impl Counters {
@@ -99,6 +119,10 @@ impl Counters {
             failed: self.failed.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
             tokens_out: self.tokens_out.load(Ordering::Relaxed),
+            kv_blocks_total: self.kv_blocks_total.load(Ordering::Relaxed),
+            kv_blocks_used: self.kv_blocks_used.load(Ordering::Relaxed),
+            prefix_cache_hits: self.prefix_cache_hits.load(Ordering::Relaxed),
+            prefix_cache_misses: self.prefix_cache_misses.load(Ordering::Relaxed),
         }
     }
 
@@ -191,6 +215,7 @@ impl HexGenService {
             let manifest = manifest.clone();
             let weights = weights.clone();
             let batch = cfg.batch;
+            let kv = cfg.kv;
             let backend = cfg.backend;
             let adapt_speeds = cfg.adapt_speeds;
             let router = router.clone();
@@ -199,8 +224,8 @@ impl HexGenService {
             let ready_tx = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    rid, backend, dir, manifest, weights, plan, batch, adapt_speeds, rx, router,
-                    counters, comm_tx, ready_tx,
+                    rid, backend, dir, manifest, weights, plan, batch, kv, adapt_speeds, rx,
+                    router, counters, comm_tx, ready_tx,
                 )
             }));
         }
@@ -368,6 +393,7 @@ fn worker_loop(
     weights: Arc<WeightStore>,
     plan: Vec<StagePlan>,
     batch: BatchPolicy,
+    kv: KvPolicy,
     adapt_speeds: bool,
     rx: Receiver<WorkItem>,
     router: Arc<Router>,
@@ -386,16 +412,24 @@ fn worker_loop(
         }
     };
     let bucket = session_bucket(&exec.manifest().batch_buckets, batch.max_batch);
-    let mut session = match exec.new_session(bucket) {
-        Ok(s) => {
-            let _ = ready_tx.send(Ok(()));
-            s
-        }
+    let mut session = match exec.new_session_with(bucket, kv) {
+        Ok(s) => s,
         Err(e) => {
             let _ = ready_tx.send(Err(format!("{e:#}")));
             return;
         }
     };
+    // Pool capacity is fixed for the worker's lifetime (rebuilds reuse
+    // the same policy), so its share of the fleet-wide capacity posts
+    // once — before the ready signal, so `stats()` is never mid-startup.
+    counters.kv_blocks_total.fetch_add(session.kv_blocks_total() as u64, Ordering::Relaxed);
+    let _ = ready_tx.send(Ok(()));
+    // Last-published values of the per-session KV stats: the shared
+    // counters accumulate deltas so they stay correct across replicas
+    // and session rebuilds.
+    let mut kv_used_last: u64 = 0;
+    let mut kv_hits_last: u64 = 0;
+    let mut kv_misses_last: u64 = 0;
     // Continuous admission co-batches rows at different cache depths,
     // which needs per-row decode positions; backends bound to the
     // scalar-position AOT artifact signature degrade to
@@ -455,9 +489,55 @@ fn worker_loop(
         a.emitted += 1;
     };
 
+    // When a session operation reports a replica fault (decode failure,
+    // KV bookkeeping corruption on cancel), the fault message lands here
+    // and the top of the next iteration fails the in-flight rows and
+    // rebuilds the session before anything else touches it.
+    let mut rebuild: Option<String> = None;
+
     loop {
+        // ---- rebuild after a replica fault ----------------------------
+        // The session's slot/pool state may be inconsistent after a
+        // mid-step failure: fail every in-flight row and start from a
+        // fresh session. If even the rebuild fails, the replica is dead
+        // — fail everything still buffered in its queue instead of
+        // dropping the requests silently (their senders would hang
+        // forever).
+        if let Some(message) = rebuild.take() {
+            for slot_item in active.iter_mut() {
+                if let Some(a) = slot_item.take() {
+                    fail_item(
+                        a.item,
+                        ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
+                    );
+                }
+            }
+            // Retract the dead session's gauge contribution; the fresh
+            // session's stats restart from zero.
+            counters.kv_blocks_used.fetch_sub(kv_used_last, Ordering::Relaxed);
+            kv_used_last = 0;
+            kv_hits_last = 0;
+            kv_misses_last = 0;
+            session = match exec.new_session_with(bucket, kv) {
+                Ok(s) => s,
+                Err(e2) => {
+                    let message = format!("session rebuild failed: {e2:#}");
+                    crate::log_error!(
+                        "replica {rid} {message}; failing queued requests and exiting"
+                    );
+                    for item in queue.drain_all() {
+                        fail_item(
+                            item,
+                            ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
+                        );
+                    }
+                    return;
+                }
+            };
+        }
+
         // ---- cancellation sweep at the step boundary ------------------
-        // Cancelled active rows release their KV slots (admissible again
+        // Cancelled active rows release their KV blocks (admissible again
         // below) and the router's load count; cancelled queued requests
         // never run at all.
         for slot in 0..bucket {
@@ -466,12 +546,22 @@ fn worker_loop(
                 continue;
             }
             if let Some(a) = active[slot].take() {
-                let _ = session.cancel_slot(slot);
+                if let Err(e) = session.cancel_slot(slot) {
+                    // The row is cancelled either way, but a release
+                    // failure means the block pool can no longer be
+                    // trusted: surface it as a replica fault.
+                    let message = format!("cancel failed releasing slot {slot}: {e:#}");
+                    crate::log_error!("replica {rid} {message}");
+                    rebuild = Some(message);
+                }
                 fail_item(a.item, ServiceError::Cancelled);
             }
         }
         for item in queue.drain_where(|it| it.cancel.is_cancelled()) {
             fail_item(item, ServiceError::Cancelled);
+        }
+        if rebuild.is_some() {
+            continue;
         }
 
         // ---- block when idle (waking periodically for the sweep) ------
@@ -485,11 +575,20 @@ fn worker_loop(
 
         // ---- admission at a step boundary -----------------------------
         // In run-to-completion mode slots only open once the whole batch
-        // retired; continuous mode admits into any freed slot.
+        // retired; continuous mode admits into any freed slot. Slots and
+        // KV blocks gate independently: a freed slot admits nothing while
+        // the pool lacks the worst-case blocks its request must reserve
+        // (the request defers, it is never failed or over-committed).
         let free = session.free_slots();
         let avail = if continuous || session.active() == 0 { free.len() } else { 0 };
         let mut admitted = Vec::new();
-        for item in queue.admit(avail, session.active() == 0, &batch) {
+        for item in queue.admit_budgeted(
+            avail,
+            session.active() == 0,
+            &batch,
+            session.free_block_budget(),
+            |it| session.blocks_needed(it.max_new),
+        ) {
             // Cancelled between the sweep and the admit: never runs.
             if item.cancel.is_cancelled() {
                 fail_item(item, ServiceError::Cancelled);
@@ -593,41 +692,25 @@ fn worker_loop(
                 Err(e) => {
                     let message = format!("decode failed: {e:#}");
                     crate::log_error!("replica {rid} {message}");
-                    for slot_item in active.iter_mut() {
-                        if let Some(a) = slot_item.take() {
-                            fail_item(
-                                a.item,
-                                ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
-                            );
-                        }
-                    }
-                    // The session's slot state may be inconsistent after a
-                    // mid-step failure: start from a fresh one. If even the
-                    // rebuild fails, the replica is dead — fail everything
-                    // still buffered in its queue instead of dropping the
-                    // requests silently (their senders would hang forever).
-                    session = match exec.new_session(bucket) {
-                        Ok(s) => s,
-                        Err(e2) => {
-                            let message = format!("session rebuild failed: {e2:#}");
-                            crate::log_error!(
-                                "replica {rid} {message}; failing queued requests and exiting"
-                            );
-                            for item in queue.drain_all() {
-                                fail_item(
-                                    item,
-                                    ServiceError::ReplicaFailed {
-                                        replica: rid,
-                                        message: message.clone(),
-                                    },
-                                );
-                            }
-                            return;
-                        }
-                    };
+                    rebuild = Some(message);
                 }
             }
         }
+
+        // ---- publish per-iteration KV stats as deltas -----------------
+        let used = session.kv_blocks_used() as u64;
+        if used >= kv_used_last {
+            counters.kv_blocks_used.fetch_add(used - kv_used_last, Ordering::Relaxed);
+        } else {
+            counters.kv_blocks_used.fetch_sub(kv_used_last - used, Ordering::Relaxed);
+        }
+        kv_used_last = used;
+        let hits = session.prefix_cache_hits();
+        counters.prefix_cache_hits.fetch_add(hits - kv_hits_last, Ordering::Relaxed);
+        kv_hits_last = hits;
+        let misses = session.prefix_cache_misses();
+        counters.prefix_cache_misses.fetch_add(misses - kv_misses_last, Ordering::Relaxed);
+        kv_misses_last = misses;
 
         let comm = session.take_comm();
         if comm != CommStats::default() {
@@ -659,6 +742,7 @@ mod tests {
             adapt_speeds: true,
             max_new_tokens: 4,
             stop_token: None,
+            kv: KvPolicy::default(),
         }
     }
 

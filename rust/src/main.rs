@@ -175,6 +175,7 @@ fn serve(args: &Args) -> Result<()> {
         adapt_speeds: true,
         max_new_tokens: args.get_usize("max-new", 16),
         stop_token: None,
+        kv: Default::default(),
     })?;
 
     // Long-running mode: expose the service over HTTP and block.

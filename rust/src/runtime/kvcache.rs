@@ -1,0 +1,842 @@
+//! Paged KV-cache bookkeeping: the logical layer of the block-pool KV
+//! subsystem (vLLM-style paging, SNIPPETS §4 "KV Cache Optimization").
+//!
+//! This module owns *where cache rows live*, never their contents:
+//!
+//! * [`BlockPool`] — a fixed set of physical blocks (`block_tokens` KV
+//!   rows each) with an explicit free list, per-block refcounts, and a
+//!   reservation ledger so admission can promise a sequence its
+//!   worst-case block budget up front (no mid-decode exhaustion, no
+//!   over-commit).
+//! * [`BlockTable`] — one per in-flight sequence: logical token
+//!   positions → physical blocks (`pos / block_tokens` indexes the
+//!   table, `pos % block_tokens` the row within the block). The same
+//!   block id addresses every (stage, layer, shard) storage tensor.
+//! * [`PrefixCache`] — maps hashed token-prefix chunks to already
+//!   materialized blocks so concurrent requests sharing a prompt prefix
+//!   share its first N blocks refcounted, with copy-on-write on the
+//!   first divergent append ([`plan_append`]).
+//!
+//! The physical storage tensors (`[pool_blocks, heads, block_tokens,
+//! head_dim]` per stage/layer/shard) live with the pipeline executor;
+//! every function here returns plain bookkeeping (block ids, [`AppendOp`]
+//! instructions) for the tensor layer to apply. That keeps this module
+//! fully unit-testable without tensors and keeps the execution-kernel
+//! contract untouched — paging changes block residency, and the dense
+//! per-step gather in `coordinator::pipeline` feeds the kernels exactly
+//! the caches they saw before.
+//!
+//! **Sharing correctness.** A KV row at position `i` depends only on
+//! `tokens[0..=i]` (causal attention), and per-row decode computation is
+//! independent of co-batched rows, so two sequences with identical token
+//! prefixes have bit-identical KV for the shared positions — sharing the
+//! backing blocks is invisible to the kernels. Shared *full* blocks are
+//! never written again (appends only ever target the tail); a shared
+//! partial tail block is copy-on-write before its first append. Cache
+//! entries are verified token-by-token against a slab (plus parent-block
+//! chaining), so a hash collision degrades to a miss, never a false
+//! share. The cache holds no refcounts of its own: sharing happens among
+//! concurrently live sequences, entries die with the last referencing
+//! sequence, and the pool returns to fully-free when the session drains.
+//!
+//! **Who pays for a copy-on-write.** Either side of a share may be the
+//! first to append into a shared partial tail — including the sequence
+//! that originally materialized it, whose own block budget is exactly
+//! sized and has no spare. So the COW block is earmarked on the *shared
+//! block* rather than on any one sequence: each sharer converts one of
+//! its reserved blocks into a [`BlockPool::earmark_cow`] credit at
+//! admission, and whichever sequence diverges first spends a credit
+//! ([`BlockPool::alloc_cow`]). Credits never run short (credit count ≥
+//! refcount − 1 is an invariant: sharing adds one of each, a COW removes
+//! one of each), and credits left over when the block frees return to
+//! the admission budget automatically.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Default KV rows per block when [`KvPolicy::block_tokens`] is unset
+/// (clamped to the model's `max_seq`).
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Seed for the first chunk's [`PrefixCache::chain_key`] (FNV-1a offset
+/// basis).
+pub const PREFIX_HASH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Paged-KV configuration carried by a service / session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPolicy {
+    /// KV rows per block; `None` → [`DEFAULT_BLOCK_TOKENS`] clamped to
+    /// `max_seq`. Smaller blocks waste fewer rows on short requests and
+    /// share shorter prefixes, at more table entries per sequence.
+    pub block_tokens: Option<usize>,
+    /// Physical blocks in the session pool; `None` → the dense
+    /// equivalent (`bucket * ceil(max_seq / block_tokens)`), which never
+    /// defers an admission the dense backing would have accepted. Must
+    /// hold at least one full sequence.
+    pub pool_blocks: Option<usize>,
+}
+
+impl KvPolicy {
+    /// The effective rows-per-block for a model context of `max_seq`.
+    pub fn resolve_block_tokens(&self, max_seq: usize) -> usize {
+        self.block_tokens.unwrap_or(DEFAULT_BLOCK_TOKENS).min(max_seq).max(1)
+    }
+}
+
+/// Fixed-size physical block allocator with refcounts and a reservation
+/// ledger. Blocks are identified by their dim-0 index into the storage
+/// tensors. All methods are O(1); the free list is LIFO.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_tokens: usize,
+    /// Per-block reference count; 0 ⇔ on the free list.
+    rc: Vec<u32>,
+    free: Vec<usize>,
+    /// Blocks promised to admitted sequences but not yet allocated.
+    /// Invariant: `reserved <= free.len()`, and `reserved` equals the
+    /// sum of every live table's `reserved_left` plus every block's
+    /// `cow_credit`.
+    reserved: usize,
+    /// Per-block copy-on-write earmarks: reserved blocks pledged to
+    /// whichever sharer of this block diverges first. Invariant for a
+    /// live block: `cow_credit >= rc - 1`.
+    cow_credit: Vec<u32>,
+    peak_used: usize,
+}
+
+impl BlockPool {
+    pub fn new(num_blocks: usize, block_tokens: usize) -> Result<BlockPool> {
+        if num_blocks == 0 || block_tokens == 0 {
+            bail!("block pool needs >= 1 block of >= 1 tokens, got {num_blocks}x{block_tokens}");
+        }
+        Ok(BlockPool {
+            block_tokens,
+            rc: vec![0; num_blocks],
+            // Reversed so allocation hands out block 0 first (LIFO pop):
+            // deterministic layouts for tests and debugging.
+            free: (0..num_blocks).rev().collect(),
+            reserved: 0,
+            cow_credit: vec![0; num_blocks],
+            peak_used: 0,
+        })
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.rc.len()
+    }
+
+    /// Blocks currently referenced by at least one sequence.
+    pub fn used_blocks(&self) -> usize {
+        self.rc.len() - self.free.len()
+    }
+
+    /// High-water mark of [`Self::used_blocks`] over the pool's lifetime
+    /// (the capacity a right-sized pool would have needed).
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Free blocks not yet promised to anyone — the admission budget.
+    pub fn available(&self) -> usize {
+        self.free.len().saturating_sub(self.reserved)
+    }
+
+    /// Blocks needed to hold `tokens` KV rows.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens).max(1)
+    }
+
+    /// True when every block is unreferenced and no reservation is
+    /// outstanding — the leak-test invariant after a session drains.
+    pub fn is_fully_free(&self) -> bool {
+        self.free.len() == self.rc.len() && self.reserved == 0
+    }
+
+    /// Refcount of `block` (0 ⇔ free).
+    pub fn refcount(&self, block: usize) -> u32 {
+        self.rc.get(block).copied().unwrap_or(0)
+    }
+
+    // lint: hot-path — pool bookkeeping runs per admission chunk and per
+    // decode-step append; everything below is O(1) on preallocated
+    // storage.
+
+    /// Promise `n` blocks to a sequence being admitted. Returns `false`
+    /// (and reserves nothing) when the unpromised free space cannot
+    /// cover it — the caller defers admission instead of over-committing.
+    pub fn try_reserve(&mut self, n: usize) -> bool {
+        if self.available() >= n {
+            self.reserved += n;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return `n` promised-but-unallocated blocks to the admission
+    /// budget (sequence retired, was cancelled, or shared its blocks).
+    pub fn release_reservation(&mut self, n: usize) -> Result<()> {
+        if n > self.reserved {
+            bail!("releasing {n} reserved blocks but only {} are outstanding", self.reserved);
+        }
+        self.reserved -= n;
+        Ok(())
+    }
+
+    /// Allocate one block against an outstanding reservation (rc = 1).
+    pub fn alloc_reserved(&mut self) -> Result<usize> {
+        if self.reserved == 0 {
+            bail!("block allocation without a reservation");
+        }
+        let Some(block) = self.free.pop() else {
+            bail!("pool corrupt: {} blocks reserved with an empty free list", self.reserved);
+        };
+        self.reserved -= 1;
+        self.rc[block] = 1;
+        let used = self.used_blocks();
+        if used > self.peak_used {
+            self.peak_used = used;
+        }
+        Ok(block)
+    }
+
+    /// Convert one reserved block into a copy-on-write credit on `block`.
+    /// Called when an admission shares a live partial tail block: the
+    /// sharer has consumed one slot of its own budget
+    /// ([`BlockTable::use_reservation`]) and pledges it here, where any
+    /// sharer's first divergent append can spend it ([`Self::alloc_cow`]).
+    pub fn earmark_cow(&mut self, block: usize) -> Result<()> {
+        if self.refcount(block) == 0 {
+            bail!("copy-on-write earmark on free or out-of-range block {block}");
+        }
+        if self.reserved == 0 {
+            bail!("copy-on-write earmark without an outstanding reservation");
+        }
+        self.cow_credit[block] += 1;
+        Ok(())
+    }
+
+    /// Copy-on-write credits currently earmarked on `block`.
+    pub fn cow_credits(&self, block: usize) -> u32 {
+        self.cow_credit.get(block).copied().unwrap_or(0)
+    }
+
+    /// Allocate the copy-on-write destination for shared block `src`,
+    /// spending one of `src`'s earmarked credits (rc = 1). A shared
+    /// block always carries at least `rc - 1` credits, so this cannot
+    /// fail for a genuinely shared tail — an empty purse means corrupted
+    /// bookkeeping.
+    pub fn alloc_cow(&mut self, src: usize) -> Result<usize> {
+        if self.cow_credits(src) == 0 {
+            bail!("copy-on-write of block {src} without an earmarked credit");
+        }
+        if self.reserved == 0 {
+            bail!("pool corrupt: cow credit on block {src} with no reservation backing it");
+        }
+        let Some(block) = self.free.pop() else {
+            bail!("pool corrupt: {} blocks reserved with an empty free list", self.reserved);
+        };
+        self.cow_credit[src] -= 1;
+        self.reserved -= 1;
+        self.rc[block] = 1;
+        let used = self.used_blocks();
+        if used > self.peak_used {
+            self.peak_used = used;
+        }
+        Ok(block)
+    }
+
+    /// Add a reference to a live block (prefix-cache share).
+    pub fn retain(&mut self, block: usize) -> Result<()> {
+        if self.refcount(block) == 0 {
+            bail!("retain of free or out-of-range block {block}");
+        }
+        self.rc[block] += 1;
+        Ok(())
+    }
+
+    /// Drop a reference; returns `true` when the block was freed back to
+    /// the pool (the caller must then forget any prefix-cache entry).
+    /// Unspent copy-on-write credits on a freed block return to the
+    /// admission budget (the divergence they covered can no longer
+    /// happen).
+    pub fn release(&mut self, block: usize) -> Result<bool> {
+        if self.refcount(block) == 0 {
+            bail!("double free of block {block}");
+        }
+        self.rc[block] -= 1;
+        if self.rc[block] == 0 {
+            let leftover = std::mem::take(&mut self.cow_credit[block]) as usize;
+            if leftover > self.reserved {
+                bail!("pool corrupt: {leftover} cow credits on block {block} exceed the ledger");
+            }
+            self.reserved -= leftover;
+            self.free.push(block);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    // lint: hot-path-end
+}
+
+/// Logical-position → physical-block map for one in-flight sequence,
+/// plus the sequence's remaining block reservation. `pos /
+/// block_tokens` indexes [`Self::blocks`]; appends only ever extend or
+/// rewrite the tail.
+#[derive(Debug, Default)]
+pub struct BlockTable {
+    blocks: Vec<usize>,
+    /// Reserved-but-unallocated blocks still owed to this sequence.
+    reserved_left: usize,
+}
+
+impl BlockTable {
+    /// A table with room for `cap` blocks (one full sequence), so
+    /// steady-state admission pushes never reallocate.
+    pub fn with_block_capacity(cap: usize) -> BlockTable {
+        BlockTable { blocks: Vec::with_capacity(cap), reserved_left: 0 }
+    }
+
+    pub fn blocks(&self) -> &[usize] {
+        &self.blocks
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn reserved_left(&self) -> usize {
+        self.reserved_left
+    }
+
+    /// Start a sequence with a `reserved` block budget. The table must
+    /// be empty (the previous occupant fully released).
+    pub fn begin(&mut self, reserved: usize) -> Result<()> {
+        if !self.blocks.is_empty() || self.reserved_left != 0 {
+            bail!(
+                "table still holds {} blocks / {} reservations from the previous occupant",
+                self.blocks.len(),
+                self.reserved_left
+            );
+        }
+        self.reserved_left = reserved;
+        Ok(())
+    }
+
+    /// Record one block of the budget as allocated (or as permanently
+    /// shared, for full prefix-cache hits that can never be written).
+    pub fn use_reservation(&mut self) -> Result<()> {
+        if self.reserved_left == 0 {
+            bail!("sequence exceeded its reserved block budget");
+        }
+        self.reserved_left -= 1;
+        Ok(())
+    }
+
+    pub fn push(&mut self, block: usize) {
+        self.blocks.push(block);
+    }
+
+    /// Replace the tail block (copy-on-write divergence).
+    pub fn set_tail(&mut self, block: usize) -> Result<()> {
+        match self.blocks.last_mut() {
+            Some(tail) => {
+                *tail = block;
+                Ok(())
+            }
+            None => bail!("copy-on-write on an empty block table"),
+        }
+    }
+
+    /// Clear the table and hand back the unused reservation count (the
+    /// caller releases the blocks themselves first, via the pool).
+    pub fn finish(&mut self) -> usize {
+        self.blocks.clear();
+        std::mem::take(&mut self.reserved_left)
+    }
+}
+
+/// Data movement the tensor layer must perform for one decode append
+/// (planned by [`plan_append`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppendOp {
+    /// Write the new KV row at `row` of `block` (in place).
+    Write { block: usize, row: usize },
+    /// Copy-on-write: duplicate rows `[0, copy_rows)` of `src` into the
+    /// freshly owned `block` in every storage tensor, then write the new
+    /// row at `row` of `block`. `src` stays live for its other refs.
+    CowWrite { src: usize, block: usize, copy_rows: usize, row: usize },
+}
+
+// lint: hot-path — the per-row per-step block-table append path: O(1)
+// bookkeeping, no allocation (tables are pre-sized, the free list pops).
+
+/// Plan the append of one KV row at logical position `pos`: extend the
+/// table with a fresh block at a block boundary, write the tail in
+/// place when this sequence owns it, or copy-on-write a shared tail
+/// before its first divergent append. Fresh blocks draw on the
+/// sequence's own reservation; a COW block draws on the credits
+/// earmarked on the shared tail at admission. Either way a planned
+/// append cannot fail for lack of blocks — exhaustion here means
+/// corrupted bookkeeping and is surfaced as an error.
+pub fn plan_append(pool: &mut BlockPool, table: &mut BlockTable, pos: usize) -> Result<AppendOp> {
+    let bt = pool.block_tokens();
+    let idx = pos / bt;
+    let row = pos % bt;
+    if idx == table.len() {
+        if row != 0 {
+            bail!("append at position {pos} would skip rows in a fresh block");
+        }
+        table.use_reservation()?;
+        let block = pool.alloc_reserved()?;
+        table.push(block);
+        return Ok(AppendOp::Write { block, row });
+    }
+    if idx + 1 != table.len() {
+        bail!("append at position {pos} is not at the tail of a {}-block table", table.len());
+    }
+    let Some(&tail) = table.blocks().last() else {
+        bail!("append at position {pos} into an empty block table");
+    };
+    if pool.refcount(tail) > 1 {
+        // Shared tail: diverge onto an owned copy, spending one of the
+        // credits the sharers earmarked on the block at admission — the
+        // diverger's own budget never covered this (the original
+        // materializer's budget is exactly sized), which is why the
+        // earmark lives on the block and not in any one table.
+        let fresh = pool.alloc_cow(tail)?;
+        if pool.release(tail)? {
+            bail!("copy-on-write source block {tail} freed under a shared refcount");
+        }
+        table.set_tail(fresh)?;
+        Ok(AppendOp::CowWrite { src: tail, block: fresh, copy_rows: row, row })
+    } else {
+        Ok(AppendOp::Write { block: tail, row })
+    }
+}
+
+// lint: hot-path-end
+
+#[derive(Debug, Clone, Copy)]
+struct PrefixEntry {
+    block: usize,
+    /// The block backing the previous chunk of the same prefix (`None`
+    /// for chunk 0). Verified on lookup so an entry can only hit for the
+    /// exact full prefix it was inserted under.
+    parent: Option<usize>,
+}
+
+/// Token-prefix → block cache. Keys are chained FNV-1a hashes of the
+/// prompt's `block_tokens`-sized chunks; every hit is verified against
+/// the stored tokens (slab-backed, no allocation) and the parent-block
+/// chain, so collisions degrade to misses. Entries are evicted the
+/// moment their block returns to the free list ([`Self::forget`]); the
+/// cache itself holds no references.
+#[derive(Debug)]
+pub struct PrefixCache {
+    block_tokens: usize,
+    map: HashMap<u64, PrefixEntry>,
+    /// Reverse map: block id → its cache key, for O(1) invalidation.
+    by_block: Vec<Option<u64>>,
+    /// Verification slab: `block * block_tokens ..` holds the chunk's
+    /// tokens (length in `lens`).
+    tokens: Vec<i32>,
+    lens: Vec<u32>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new(num_blocks: usize, block_tokens: usize) -> PrefixCache {
+        PrefixCache {
+            block_tokens,
+            // At most one entry per block: with_capacity up front keeps
+            // steady-state inserts rehash-free.
+            map: HashMap::with_capacity(num_blocks),
+            by_block: vec![None; num_blocks],
+            tokens: vec![0; num_blocks * block_tokens],
+            lens: vec![0; num_blocks],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Chained chunk key: fold `chunk_idx`, the chunk length, and every
+    /// token into the previous chunk's key (FNV-1a). Seed chunk 0 with
+    /// [`PREFIX_HASH_SEED`].
+    pub fn chain_key(prev: u64, chunk_idx: usize, chunk: &[i32]) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = prev;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        mix(chunk_idx as u64);
+        mix(chunk.len() as u64);
+        for &t in chunk {
+            mix(t as u32 as u64);
+        }
+        h
+    }
+
+    // lint: hot-path — per-chunk admission lookup: one hash-map probe
+    // plus a slab compare, no allocation.
+
+    /// Resolve `chunk` (at chain key `key`, following the block that
+    /// backed the previous chunk) to a live shared block. Token and
+    /// parent verification make a hit exact; the caller must `retain`
+    /// the returned block.
+    pub fn lookup(&mut self, key: u64, parent: Option<usize>, chunk: &[i32]) -> Option<usize> {
+        let found = match self.map.get(&key) {
+            Some(e)
+                if e.parent == parent
+                    && self.lens[e.block] as usize == chunk.len()
+                    && {
+                        let start = e.block * self.block_tokens;
+                        &self.tokens[start..start + chunk.len()] == chunk
+                    } =>
+            {
+                Some(e.block)
+            }
+            _ => None,
+        };
+        if found.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        found
+    }
+
+    // lint: hot-path-end
+
+    /// Publish `block` as the backing of `chunk` under `key`. Called at
+    /// admission for freshly materialized prompt blocks (copy-on-write
+    /// copies are deliberately not re-published; the original entry
+    /// stays valid).
+    pub fn insert(&mut self, key: u64, block: usize, parent: Option<usize>, chunk: &[i32]) {
+        debug_assert!(chunk.len() <= self.block_tokens);
+        if let Some(old_key) = self.by_block[block] {
+            if old_key != key && self.map.get(&old_key).is_some_and(|e| e.block == block) {
+                self.map.remove(&old_key);
+            }
+        }
+        if let Some(prev) = self.map.insert(key, PrefixEntry { block, parent }) {
+            if prev.block != block && self.by_block[prev.block] == Some(key) {
+                self.by_block[prev.block] = None;
+                self.lens[prev.block] = 0;
+            }
+        }
+        self.by_block[block] = Some(key);
+        self.lens[block] = chunk.len() as u32;
+        let start = block * self.block_tokens;
+        self.tokens[start..start + chunk.len()].copy_from_slice(chunk);
+    }
+
+    /// Invalidate whatever entry `block` backs — called when the pool
+    /// frees it, before the block can be recycled with new contents.
+    pub fn forget(&mut self, block: usize) {
+        if let Some(key) = self.by_block[block].take() {
+            if self.map.get(&key).is_some_and(|e| e.block == block) {
+                self.map.remove(&key);
+            }
+        }
+        self.lens[block] = 0;
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Lifetime chunk-lookup hits.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lifetime chunk-lookup misses.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_resolves_block_tokens() {
+        assert_eq!(KvPolicy::default().resolve_block_tokens(160), DEFAULT_BLOCK_TOKENS);
+        assert_eq!(KvPolicy::default().resolve_block_tokens(8), 8);
+        let p = KvPolicy { block_tokens: Some(4), pool_blocks: None };
+        assert_eq!(p.resolve_block_tokens(160), 4);
+        let zero = KvPolicy { block_tokens: Some(0), pool_blocks: None };
+        assert_eq!(zero.resolve_block_tokens(160), 1, "zero clamps up, never panics");
+    }
+
+    #[test]
+    fn pool_reserve_alloc_release_roundtrip() {
+        let mut p = BlockPool::new(4, 8).unwrap();
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(8), 1);
+        assert_eq!(p.blocks_for(9), 2);
+        assert_eq!(p.blocks_for(0), 1, "even an empty sequence charges one block");
+        assert!(p.is_fully_free());
+        assert_eq!(p.available(), 4);
+
+        assert!(p.try_reserve(3));
+        assert_eq!(p.available(), 1);
+        assert!(!p.try_reserve(2), "over-reservation must be refused, not panic");
+        assert!(p.try_reserve(1));
+        assert_eq!(p.available(), 0);
+
+        let a = p.alloc_reserved().unwrap();
+        let b = p.alloc_reserved().unwrap();
+        assert_eq!((a, b), (0, 1), "deterministic low-first allocation");
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.refcount(a), 1);
+
+        // Sharing: rc 2, releases in either order; only the last frees.
+        p.retain(a).unwrap();
+        assert_eq!(p.refcount(a), 2);
+        assert!(!p.release(a).unwrap());
+        assert!(p.release(a).unwrap());
+        assert!(p.release(a).is_err(), "double free is surfaced");
+
+        assert!(p.release(b).unwrap());
+        p.release_reservation(2).unwrap();
+        assert!(p.release_reservation(1).is_err(), "reservation ledger underflow is surfaced");
+        assert!(p.is_fully_free());
+        assert_eq!(p.peak_used_blocks(), 2);
+    }
+
+    #[test]
+    fn alloc_requires_reservation_and_retain_requires_live_block() {
+        let mut p = BlockPool::new(2, 4).unwrap();
+        assert!(p.alloc_reserved().is_err());
+        assert!(p.retain(0).is_err(), "free block cannot be retained");
+        assert!(p.retain(99).is_err());
+        assert!(BlockPool::new(0, 4).is_err());
+        assert!(BlockPool::new(4, 0).is_err());
+    }
+
+    /// Drive a sequence's whole block lifecycle through [`plan_append`]:
+    /// boundary allocation, in-place tail writes, and exact reservation
+    /// accounting, ending with the pool fully free.
+    #[test]
+    fn plan_append_extends_and_writes_in_place() {
+        let mut pool = BlockPool::new(4, 4).unwrap();
+        let mut table = BlockTable::with_block_capacity(4);
+        // "Prompt" of 6 tokens (1 full + 1 partial block), budget for 3.
+        assert!(pool.try_reserve(3));
+        table.begin(3).unwrap();
+        for _ in 0..2 {
+            table.use_reservation().unwrap();
+            let b = pool.alloc_reserved().unwrap();
+            table.push(b);
+        }
+        // Appends at 6, 7 land in the owned tail; 8 opens a new block.
+        assert_eq!(plan_append(&mut pool, &mut table, 6).unwrap(), AppendOp::Write {
+            block: 1,
+            row: 2
+        });
+        assert_eq!(plan_append(&mut pool, &mut table, 7).unwrap(), AppendOp::Write {
+            block: 1,
+            row: 3
+        });
+        assert_eq!(plan_append(&mut pool, &mut table, 8).unwrap(), AppendOp::Write {
+            block: 2,
+            row: 0
+        });
+        assert_eq!(table.reserved_left(), 0);
+        assert!(
+            plan_append(&mut pool, &mut table, 9).is_ok(),
+            "in-place tail writes need no reservation"
+        );
+        // Off-tail and row-skipping appends are corrupted bookkeeping.
+        assert!(plan_append(&mut pool, &mut table, 2).is_err());
+        assert!(plan_append(&mut pool, &mut table, 17).is_err());
+
+        for &b in table.blocks() {
+            assert!(pool.release(b).unwrap());
+        }
+        pool.release_reservation(table.finish()).unwrap();
+        assert!(pool.is_fully_free(), "no leaked blocks or reservations");
+    }
+
+    #[test]
+    fn plan_append_cow_diverges_shared_tail_without_freeing_source() {
+        let mut pool = BlockPool::new(4, 4).unwrap();
+        // Owner A materializes a partial tail block (2 of 4 rows) with an
+        // exactly-sized budget: 1 block for the prompt + 1 fresh append
+        // block, no spare for a copy-on-write it cannot foresee.
+        let mut a = BlockTable::with_block_capacity(4);
+        assert!(pool.try_reserve(2));
+        a.begin(2).unwrap();
+        a.use_reservation().unwrap();
+        let shared = pool.alloc_reserved().unwrap();
+        a.push(shared);
+        // B shares it (prefix hit): B consumes one of its own reserved
+        // blocks and pledges it to the block as the COW credit.
+        let mut b = BlockTable::with_block_capacity(4);
+        assert!(pool.try_reserve(2));
+        b.begin(2).unwrap();
+        pool.retain(shared).unwrap();
+        b.push(shared);
+        b.use_reservation().unwrap();
+        pool.earmark_cow(shared).unwrap();
+        assert_eq!(pool.cow_credits(shared), 1);
+
+        // A appends first — the forced-COW case: A's own budget never
+        // covered this divergence, so the block's credit pays for it.
+        let op = plan_append(&mut pool, &mut a, 2).unwrap();
+        let AppendOp::CowWrite { src, block, copy_rows, row } = op else {
+            panic!("shared tail must copy-on-write, got {op:?}");
+        };
+        assert_eq!((src, copy_rows, row), (shared, 2, 2));
+        assert_ne!(block, shared);
+        assert_eq!(a.blocks(), &[block]);
+        assert_eq!(pool.refcount(shared), 1, "B still holds the source");
+        assert_eq!(pool.refcount(block), 1);
+        assert_eq!(pool.cow_credits(shared), 0, "the divergence spent the credit");
+        assert_eq!(a.reserved_left(), 1, "A's own budget is untouched by the COW");
+
+        // B appends next: sole owner now, writes in place.
+        assert_eq!(plan_append(&mut pool, &mut b, 2).unwrap(), AppendOp::Write {
+            block: shared,
+            row: 2
+        });
+
+        // Retire both; every block and reservation comes back.
+        for t in [&mut a, &mut b] {
+            for &blk in t.blocks() {
+                pool.release(blk).unwrap();
+            }
+            pool.release_reservation(t.finish()).unwrap();
+        }
+        assert!(pool.is_fully_free());
+    }
+
+    #[test]
+    fn cow_credit_lifecycle_and_leftover_release() {
+        let mut pool = BlockPool::new(3, 4).unwrap();
+        assert!(pool.earmark_cow(0).is_err(), "free block cannot carry a credit");
+        assert!(pool.try_reserve(2));
+        let mut owner = BlockTable::with_block_capacity(2);
+        owner.begin(2).unwrap();
+        owner.use_reservation().unwrap();
+        let shared = pool.alloc_reserved().unwrap();
+        owner.push(shared);
+        assert!(
+            pool.alloc_cow(shared).is_err(),
+            "a COW without an earmarked credit is corrupted bookkeeping"
+        );
+        // A sharer pledges its reservation to the block, then retires
+        // without ever diverging: the credit outlives the sharer...
+        let mut sharer = BlockTable::with_block_capacity(2);
+        assert!(pool.try_reserve(1));
+        sharer.begin(1).unwrap();
+        pool.retain(shared).unwrap();
+        sharer.push(shared);
+        sharer.use_reservation().unwrap();
+        pool.earmark_cow(shared).unwrap();
+        assert!(!pool.release(shared).unwrap());
+        pool.release_reservation(sharer.finish()).unwrap();
+        assert_eq!(pool.cow_credits(shared), 1, "credit survives the sharer");
+        assert_eq!(pool.available(), 0, "the credit still holds a block hostage");
+        // ...and returns to the admission budget when the block frees.
+        assert!(pool.release(shared).unwrap());
+        assert_eq!(pool.cow_credits(shared), 0);
+        pool.release_reservation(owner.finish()).unwrap();
+        assert!(pool.is_fully_free(), "leftover credits must not leak reservations");
+    }
+
+    #[test]
+    fn table_begin_rejects_dirty_state() {
+        let mut t = BlockTable::with_block_capacity(2);
+        t.begin(2).unwrap();
+        assert!(t.begin(1).is_err(), "reservation left over");
+        t.finish();
+        t.begin(1).unwrap();
+        t.use_reservation().unwrap();
+        assert!(t.use_reservation().is_err(), "budget exceeded is surfaced");
+        t.push(0);
+        t.set_tail(3).unwrap();
+        assert_eq!(t.blocks(), &[3]);
+        assert!(t.begin(1).is_err(), "blocks left over");
+        assert_eq!(t.finish(), 0);
+        assert!(t.is_empty());
+        let mut empty = BlockTable::default();
+        assert!(empty.set_tail(0).is_err());
+    }
+
+    #[test]
+    fn prefix_cache_verifies_tokens_parent_and_length() {
+        let mut c = PrefixCache::new(4, 4);
+        let chunk0 = [1, 2, 3, 4];
+        let chunk1 = [5, 6];
+        let k0 = PrefixCache::chain_key(PREFIX_HASH_SEED, 0, &chunk0);
+        let k1 = PrefixCache::chain_key(k0, 1, &chunk1);
+        assert!(c.lookup(k0, None, &chunk0).is_none(), "cold cache misses");
+        c.insert(k0, 0, None, &chunk0);
+        c.insert(k1, 1, Some(0), &chunk1);
+        assert_eq!(c.len(), 2);
+
+        assert_eq!(c.lookup(k0, None, &chunk0), Some(0));
+        assert_eq!(c.lookup(k1, Some(0), &chunk1), Some(1));
+        // Same key, different parent: a different prefix reached the
+        // same hash — must miss, never falsely share.
+        assert!(c.lookup(k1, Some(2), &chunk1).is_none());
+        assert!(c.lookup(k1, None, &chunk1).is_none());
+        // Key collision with different tokens: verification catches it.
+        assert!(c.lookup(k0, None, &[9, 9, 9, 9]).is_none());
+        assert!(c.lookup(k0, None, &[1, 2, 3]).is_none(), "length mismatch");
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 5);
+
+        // Chain keys are position- and length-sensitive.
+        assert_ne!(PrefixCache::chain_key(PREFIX_HASH_SEED, 0, &chunk0), k1);
+        assert_ne!(PrefixCache::chain_key(PREFIX_HASH_SEED, 1, &chunk0), k0);
+    }
+
+    #[test]
+    fn prefix_cache_forget_and_reinsert_recycled_block() {
+        let mut c = PrefixCache::new(4, 4);
+        let chunk = [7, 8, 9];
+        let k = PrefixCache::chain_key(PREFIX_HASH_SEED, 0, &chunk);
+        c.insert(k, 2, None, &chunk);
+        assert_eq!(c.lookup(k, None, &chunk), Some(2));
+        c.forget(2);
+        assert!(c.lookup(k, None, &chunk).is_none(), "freed block's entry is gone");
+        assert!(c.is_empty());
+        // The recycled block can back a different chunk.
+        let other = [1, 1];
+        let k2 = PrefixCache::chain_key(PREFIX_HASH_SEED, 0, &other);
+        c.insert(k2, 2, None, &other);
+        assert_eq!(c.lookup(k2, None, &other), Some(2));
+        // Re-keying the same block drops its old entry.
+        c.insert(k, 2, None, &chunk);
+        assert!(c.lookup(k2, None, &other).is_none());
+        assert_eq!(c.lookup(k, None, &chunk), Some(2));
+        assert_eq!(c.len(), 1);
+        // forget of a block with no entry is a no-op.
+        c.forget(3);
+    }
+}

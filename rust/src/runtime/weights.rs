@@ -106,16 +106,101 @@ impl Tensor {
         if rows.start > rows.end || rows.end > depth {
             bail!("cache rows {rows:?} outside depth {depth}");
         }
-        if rows.is_empty() {
+        self.copy_cache_rows_between(dst_slot, rows.start, src, src_slot, rows.start, rows.end - rows.start)
+    }
+
+    /// Copy `n_rows` cache rows between rank-4 KV tensors whose depth
+    /// (`dims[2]`) may differ, per head: rows `[src_row, src_row +
+    /// n_rows)` of `src_slot` in `src` land at `[dst_row, dst_row +
+    /// n_rows)` of `dst_slot` in `self`. This is the block-granular
+    /// engine of the paged KV cache — the same primitive moves a block's
+    /// row prefix into dense step scratch (`dst_row = block_index *
+    /// block_tokens`), scatters a decode step's newest row back
+    /// (`n_rows = 1`), and hands freshly prefilled rows off into blocks.
+    /// Heads and head_dim must match; slot counts and depths may not.
+    pub fn copy_cache_rows_between(
+        &mut self,
+        dst_slot: usize,
+        dst_row: usize,
+        src: &Tensor,
+        src_slot: usize,
+        src_row: usize,
+        n_rows: usize,
+    ) -> Result<()> {
+        if self.dims.len() != 4
+            || src.dims.len() != 4
+            || self.dims[1] != src.dims[1]
+            || self.dims[3] != src.dims[3]
+        {
+            bail!(
+                "cache-row copy between incompatible shapes {:?} and {:?}",
+                self.dims,
+                src.dims
+            );
+        }
+        let (heads, dst_depth, dh) = (self.dims[1], self.dims[2], self.dims[3]);
+        let src_depth = src.dims[2];
+        if dst_slot >= self.dims[0] || src_slot >= src.dims[0] {
+            bail!(
+                "cache-row copy {src_slot}->{dst_slot} out of range ({} src, {} dst slots)",
+                src.dims[0],
+                self.dims[0]
+            );
+        }
+        if dst_row + n_rows > dst_depth || src_row + n_rows > src_depth {
+            bail!(
+                "cache rows src {src_row}+{n_rows} / dst {dst_row}+{n_rows} outside depths {src_depth} / {dst_depth}"
+            );
+        }
+        if n_rows == 0 {
+            return Ok(());
+        }
+        let dst_slot_elems = heads * dst_depth * dh;
+        let src_slot_elems = heads * src_depth * dh;
+        let len = n_rows * dh;
+        for head in 0..heads {
+            let d = dst_slot * dst_slot_elems + head * dst_depth * dh + dst_row * dh;
+            let s = src_slot * src_slot_elems + head * src_depth * dh + src_row * dh;
+            self.data[d..d + len].copy_from_slice(&src.data[s..s + len]);
+        }
+        Ok(())
+    }
+
+    /// Copy rows `[0, n_rows)` of dim-0 slot `src_slot` into `dst_slot`
+    /// of the *same* rank-4 tensor, per head — the copy-on-write
+    /// duplication of a shared KV block's occupied prefix onto a freshly
+    /// owned block before a divergent append.
+    pub fn copy_cache_rows_within(
+        &mut self,
+        dst_slot: usize,
+        src_slot: usize,
+        n_rows: usize,
+    ) -> Result<()> {
+        if self.dims.len() != 4 {
+            bail!("within-tensor cache-row copy needs rank 4, got {:?}", self.dims);
+        }
+        let (heads, depth, dh) = (self.dims[1], self.dims[2], self.dims[3]);
+        if dst_slot >= self.dims[0] || src_slot >= self.dims[0] {
+            bail!(
+                "within-tensor cache-row copy {src_slot}->{dst_slot} out of range ({} slots)",
+                self.dims[0]
+            );
+        }
+        if dst_slot == src_slot {
+            bail!("within-tensor cache-row copy onto itself (slot {dst_slot})");
+        }
+        if n_rows > depth {
+            bail!("within-tensor cache-row copy of {n_rows} rows exceeds depth {depth}");
+        }
+        if n_rows == 0 {
             return Ok(());
         }
         let slot_elems = heads * depth * dh;
-        let len = (rows.end - rows.start) * dh;
+        let len = n_rows * dh;
         for head in 0..heads {
-            let head_off = head * depth * dh + rows.start * dh;
-            let dst = dst_slot * slot_elems + head_off;
-            let so = src_slot * slot_elems + head_off;
-            self.data[dst..dst + len].copy_from_slice(&src.data[so..so + len]);
+            let s = src_slot * slot_elems + head * depth * dh;
+            let d = dst_slot * slot_elems + head * depth * dh;
+            self.data.copy_within(s..s + len, d);
         }
         Ok(())
     }
@@ -389,6 +474,57 @@ mod tests {
         let mut r3 = rank3.clone();
         assert!(r3.copy_cache_rows(0, &rank3, 0, 0..1).is_err());
         assert!(r3.clear_cache_rows(0, 1).is_err());
+    }
+
+    #[test]
+    fn cache_row_copy_between_different_depths() {
+        // Block store: 3 blocks, 2 heads, block_tokens 2, head_dim 2
+        // (8 elements per block). Step scratch: 2 slots of depth 4.
+        let blocks = Tensor { dims: vec![3, 2, 2, 2], data: (0..24).map(|i| i as f32).collect() };
+        let mut scratch = Tensor { dims: vec![2, 2, 4, 2], data: vec![-1.0; 32] };
+        // Gather: block 1's full 2 rows land at scratch slot 0, row 2.
+        scratch.copy_cache_rows_between(0, 2, &blocks, 1, 0, 2).unwrap();
+        // block 1 starts at 8: head0 rows = 8..12, head1 rows = 12..16.
+        assert_eq!(scratch.data[4..8], [8.0, 9.0, 10.0, 11.0], "head 0 rows 2..4");
+        assert_eq!(scratch.data[0..4], [-1.0; 4], "head 0 rows 0..2 untouched");
+        assert_eq!(scratch.data[12..16], [12.0, 13.0, 14.0, 15.0], "head 1 rows 2..4");
+        assert_eq!(scratch.data[8..12], [-1.0; 4], "head 1 rows 0..2 untouched");
+        assert_eq!(scratch.data[16..], [-1.0; 16], "slot 1 untouched");
+        // Scatter: one row from scratch back into a block interior row.
+        let mut store = blocks.clone();
+        store.copy_cache_rows_between(2, 1, &scratch, 0, 3, 1).unwrap();
+        assert_eq!(store.data[18..20], [10.0, 11.0], "head 0 row 1 of block 2");
+        assert_eq!(store.data[22..24], [14.0, 15.0], "head 1 row 1 of block 2");
+        assert_eq!(store.data[16..18], blocks.data[16..18], "row 0 untouched");
+        // Zero rows is a no-op; bounds and head mismatches are surfaced.
+        scratch.copy_cache_rows_between(0, 0, &blocks, 0, 0, 0).unwrap();
+        assert!(scratch.copy_cache_rows_between(0, 3, &blocks, 0, 0, 2).is_err());
+        assert!(scratch.copy_cache_rows_between(0, 0, &blocks, 0, 1, 2).is_err());
+        assert!(scratch.copy_cache_rows_between(2, 0, &blocks, 0, 0, 1).is_err());
+        assert!(scratch.copy_cache_rows_between(0, 0, &blocks, 3, 0, 1).is_err());
+        let one_head = Tensor { dims: vec![1, 1, 2, 2], data: vec![0.0; 4] };
+        assert!(scratch.copy_cache_rows_between(0, 0, &one_head, 0, 0, 1).is_err());
+    }
+
+    #[test]
+    fn cache_row_copy_within_duplicates_block_prefix() {
+        // 3 blocks, 2 heads, block_tokens 2, head_dim 2.
+        let mut t = Tensor { dims: vec![3, 2, 2, 2], data: (0..24).map(|i| i as f32).collect() };
+        // COW: copy row 0 of block 0 into block 2, leave row 1 alone.
+        t.copy_cache_rows_within(2, 0, 1).unwrap();
+        assert_eq!(t.data[16..18], [0.0, 1.0], "head 0 row 0 copied");
+        assert_eq!(t.data[18..20], [18.0, 19.0], "head 0 row 1 untouched");
+        assert_eq!(t.data[20..22], [4.0, 5.0], "head 1 row 0 copied");
+        assert_eq!(t.data[22..24], [22.0, 23.0], "head 1 row 1 untouched");
+        assert_eq!(t.data[0..8], (0..8).map(|i| i as f32).collect::<Vec<_>>()[..], "source intact");
+        t.copy_cache_rows_within(1, 0, 0).unwrap(); // no-op
+        assert_eq!(t.data[8..10], [8.0, 9.0]);
+        assert!(t.copy_cache_rows_within(0, 0, 1).is_err(), "self-copy rejected");
+        assert!(t.copy_cache_rows_within(3, 0, 1).is_err());
+        assert!(t.copy_cache_rows_within(0, 3, 1).is_err());
+        assert!(t.copy_cache_rows_within(0, 1, 3).is_err(), "depth exceeded");
+        let mut r3 = Tensor { dims: vec![2, 3, 2], data: vec![0.0; 12] };
+        assert!(r3.copy_cache_rows_within(0, 1, 1).is_err());
     }
 
     #[test]

@@ -32,6 +32,7 @@ fn start() -> (Arc<HexGenService>, HttpServer) {
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
+        kv: Default::default(),
     };
     let service = Arc::new(HexGenService::start(cfg).unwrap());
     let server = HttpServer::serve(service.clone(), "127.0.0.1:0").unwrap();

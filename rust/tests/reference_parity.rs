@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use hexgen::coordinator::{add_residual, plan_from_strategy, PipelineExecutor};
 use hexgen::runtime::{
     load_backend, tokenizer, BackendKind, ExecutionBackend, FunctionalBackend, InputArg,
-    ReferenceBackend, Tensor, WeightStore,
+    KvPolicy, ReferenceBackend, Tensor, WeightStore,
 };
 use hexgen::util::json::Json;
 
@@ -266,7 +266,7 @@ fn threaded_staggered_admission_and_cancel_match_functional_path() {
             let step = session.decode_step().unwrap();
             record(101, step.tokens.iter().map(|&(_, t)| t).collect());
         }
-        record(102, session.cancel_slot(0).unwrap());
+        record(102, session.cancel_slot(0).unwrap().unwrap());
         // Survivor alone: the hot path down-shifts this step to bucket 1.
         let step = session.decode_step().unwrap();
         record(101, step.tokens.iter().map(|&(_, t)| t).collect());
@@ -433,13 +433,13 @@ fn cancel_slot_frees_mid_decode_and_readmits() {
     assert_eq!(session.active(), 2);
 
     // Cancel A at the step boundary: prefill token + 2 decode tokens so
-    // far, slot 0 freed for admission. The evict zeroes only A's written
-    // depth — the cancel→readmit parity below pins that this is enough.
-    let partial = session.cancel_slot(0).expect("active row must cancel");
+    // far, slot 0 freed for admission. The cancel releases only A's KV
+    // blocks — the cancel→readmit parity below pins that this is enough.
+    let partial = session.cancel_slot(0).unwrap().expect("active row must cancel");
     assert_eq!(partial.len(), 3, "partial tokens generated before cancellation");
     assert_eq!(session.active(), 1);
     assert_eq!(session.free_slots(), vec![0]);
-    assert!(session.cancel_slot(0).is_none(), "double-cancel is a no-op");
+    assert!(session.cancel_slot(0).unwrap().is_none(), "double-cancel is a no-op");
 
     // Let the survivor decode on with the slot idle before readmitting
     // (the freed slot must stay clean across intervening steps).
@@ -512,6 +512,131 @@ fn stop_token_retires_row_early() {
     }
     assert_eq!(got.unwrap(), want[..3].to_vec());
     assert_eq!(session.decode_steps(), 2);
+}
+
+#[test]
+fn paged_backing_matches_golden_at_odd_block_sizes() {
+    // Paged KV backing is a storage change, not a numeric one: decoding
+    // over 3-, 5-, and 16-token blocks (misaligned and aligned with the
+    // 8-token fixture prompt) must reproduce the golden greedy tokens
+    // bit-for-bit, and the drained session must return every block.
+    use hexgen::coordinator::SlotRequest;
+    let g = golden();
+    let prompt = golden_tokens(&g, "prompt_tokens");
+    let want = golden_tokens(&g, "greedy_tokens");
+    for bt in [3usize, 5, 16] {
+        let exec = exec_with(false, &[2], &[2]);
+        let mut session = exec
+            .new_session_with(2, KvPolicy { block_tokens: Some(bt), pool_blocks: None })
+            .unwrap();
+        assert_eq!(session.block_tokens(), bt);
+        session
+            .prefill_into_slots(vec![(
+                0,
+                SlotRequest { prompt: prompt.clone(), max_new: want.len(), stop: None },
+            )])
+            .unwrap();
+        let mut got = None;
+        while session.active() > 0 {
+            for (_, toks) in session.decode_step().unwrap().finished {
+                got = Some(toks);
+            }
+        }
+        assert_eq!(got.unwrap(), want, "paged decode at block_tokens={bt} diverged from golden");
+        assert!(session.kv_pool_fully_free(), "pool leaked blocks at block_tokens={bt}");
+    }
+}
+
+#[test]
+fn shared_prefix_cow_staggered_rows_match_solo_runs() {
+    // Prefix sharing across staggered admissions: a late row with the
+    // same prompt reuses the in-flight row's prompt blocks (refcounted,
+    // zero copies at admission) and copy-on-writes the shared partial
+    // tail at its first own append. Both rows must still match their
+    // solo greedy runs exactly.
+    use hexgen::coordinator::SlotRequest;
+    let exec = exec_with(false, &[2], &[2]);
+    let prompt_len = exec.manifest().model.prompt_len;
+    let p = tokenizer::encode("shared prefix", prompt_len);
+    let solo8 = exec.generate(&[p.clone()], 8).unwrap().tokens[0].clone();
+    let solo4 = exec.generate(&[p.clone()], 4).unwrap().tokens[0].clone();
+
+    // block_tokens=5 splits the 8-token prompt into one full shared
+    // chunk and one partial tail chunk.
+    let mut session =
+        exec.new_session_with(2, KvPolicy { block_tokens: Some(5), pool_blocks: None }).unwrap();
+    session
+        .prefill_into_slots(vec![(0, SlotRequest { prompt: p.clone(), max_new: 8, stop: None })])
+        .unwrap();
+    for _ in 0..2 {
+        session.decode_step().unwrap();
+    }
+    assert_eq!(session.prefix_cache_hits(), 0);
+    session
+        .prefill_into_slots(vec![(1, SlotRequest { prompt: p.clone(), max_new: 4, stop: None })])
+        .unwrap();
+    assert_eq!(session.prefix_cache_hits(), 2, "late same-prompt row must hit both chunks");
+    // Both rows resident, yet the prompt occupies one set of blocks: the
+    // late row added no physical blocks at admission.
+    assert_eq!(session.kv_blocks_used(), 2, "shared prompt must not duplicate blocks");
+
+    let mut done = std::collections::BTreeMap::new();
+    while session.active() > 0 {
+        for (slot, toks) in session.decode_step().unwrap().finished {
+            done.insert(slot, toks);
+        }
+    }
+    assert_eq!(done[&0], solo8, "in-flight row perturbed by prefix sharing");
+    assert_eq!(done[&1], solo4, "shared-prefix row diverged from its solo run");
+    assert!(session.kv_pool_fully_free(), "retired rows must return every shared block");
+}
+
+#[test]
+fn block_pool_drains_to_fully_free_on_every_exit_path() {
+    // The leak invariant: retirement (including max_new=1 insta-finish
+    // at prefill), cancellation, and readmission into a freed slot all
+    // return their blocks and reservations — the pool is fully free
+    // whenever the session is drained.
+    use hexgen::coordinator::SlotRequest;
+    let exec = exec_with(false, &[2], &[2]);
+    let prompt_len = exec.manifest().model.prompt_len;
+    let pa = tokenizer::encode("retire path", prompt_len);
+    let pb = tokenizer::encode("cancel path", prompt_len);
+    let mut session =
+        exec.new_session_with(2, KvPolicy { block_tokens: Some(3), pool_blocks: None }).unwrap();
+    assert!(session.kv_pool_fully_free());
+
+    session
+        .prefill_into_slots(vec![
+            (0, SlotRequest { prompt: pa.clone(), max_new: 3, stop: None }),
+            (1, SlotRequest { prompt: pb.clone(), max_new: 1, stop: None }),
+        ])
+        .unwrap();
+    while session.active() > 0 {
+        session.decode_step().unwrap();
+    }
+    assert!(session.kv_pool_fully_free(), "retired rows leaked blocks");
+
+    // Cancel mid-decode, readmit into the freed slot (sharing the live
+    // neighbour's identical prompt), and drain.
+    session
+        .prefill_into_slots(vec![
+            (0, SlotRequest { prompt: pa.clone(), max_new: 8, stop: None }),
+            (1, SlotRequest { prompt: pb.clone(), max_new: 8, stop: None }),
+        ])
+        .unwrap();
+    session.decode_step().unwrap();
+    session.cancel_slot(0).unwrap().unwrap();
+    session
+        .prefill_into_slots(vec![(0, SlotRequest { prompt: pb.clone(), max_new: 2, stop: None })])
+        .unwrap();
+    assert!(session.prefix_cache_hits() > 0, "readmitted prompt must share live blocks");
+    while session.active() > 0 {
+        session.decode_step().unwrap();
+    }
+    assert_eq!(session.kv_blocks_used(), 0);
+    assert!(session.kv_blocks_peak() > 0);
+    assert!(session.kv_pool_fully_free(), "cancel/readmit leaked blocks or reservations");
 }
 
 #[test]

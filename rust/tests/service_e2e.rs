@@ -14,8 +14,8 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, RequestEvent,
-    RoutePolicy, ServiceConfig, ServiceError,
+    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, KvPolicy,
+    RequestEvent, RoutePolicy, ServiceConfig, ServiceError,
 };
 use hexgen::runtime::BackendKind;
 use hexgen::util::json::Json;
@@ -40,6 +40,7 @@ fn two_replica_config(dir: PathBuf) -> ServiceConfig {
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
+        kv: KvPolicy::default(),
     }
 }
 
@@ -56,6 +57,7 @@ fn one_replica_config(dir: PathBuf, window: Duration) -> ServiceConfig {
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
+        kv: KvPolicy::default(),
     }
 }
 
@@ -107,6 +109,49 @@ fn service_serves_batched_requests() {
     assert_eq!(stats.completed, 6);
     assert_eq!(stats.failed + stats.cancelled, 0);
     assert_eq!(stats.tokens_out, 24);
+    // Paged-KV stats: pool capacity posts at startup; each of the six
+    // distinct prompts missed the prefix cache once; and every block
+    // drains once the batch retires. Workers publish at step boundaries,
+    // so poll briefly rather than asserting instantaneously.
+    assert!(stats.kv_blocks_total > 0, "no KV pool capacity reported");
+    let t0 = Instant::now();
+    loop {
+        let s = service.stats();
+        if s.prefix_cache_misses >= 6 && s.kv_blocks_used == 0 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "kv stats never drained: {s:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    service.shutdown();
+}
+
+#[test]
+fn exhausted_block_pool_defers_admission_instead_of_failing() {
+    // A one-block pool can hold exactly one in-flight row (the fixture's
+    // whole context fits one block). Two concurrent requests therefore
+    // cannot co-batch: the second must wait in the queue for the first
+    // to retire and release its block — and then complete normally.
+    // Nothing fails, nothing over-commits.
+    let mut cfg = one_replica_config(fixture_dir(), Duration::from_millis(20));
+    cfg.kv = KvPolicy { block_tokens: None, pool_blocks: Some(1) };
+    let service = HexGenService::start(cfg).unwrap();
+    assert_eq!(service.stats().kv_blocks_total, 1);
+
+    let h_a = service.submit(req("block budget a", 4));
+    let h_b = service.submit(req("block budget b", 4));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let a = h_a.wait_deadline(deadline).unwrap();
+    let b = h_b.wait_deadline(deadline).unwrap();
+    assert_eq!(a.tokens.len(), 4);
+    assert_eq!(b.tokens.len(), 4);
+    // Both slots were free, but the block budget admitted one at a time.
+    assert_eq!(a.batch_size, 1, "block-gated rows must not co-batch");
+    assert_eq!(b.batch_size, 1, "block-gated rows must not co-batch");
+
+    let stats = service.stats();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed + stats.cancelled, 0);
     service.shutdown();
 }
 
@@ -186,6 +231,7 @@ fn startup_fails_cleanly_on_bad_plan() {
         adapt_speeds: true,
         max_new_tokens: 2,
         stop_token: None,
+        kv: KvPolicy::default(),
     };
     assert!(HexGenService::start(cfg).is_err());
 }
@@ -542,6 +588,7 @@ fn scheduler_plan_lowers_and_serves_end_to_end() {
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
+        kv: KvPolicy::default(),
     })
     .unwrap();
     let c = service.generate("plan served prompt", Some(4)).unwrap();
