@@ -37,13 +37,19 @@ bench-decode-quick:
 # Close the plan→serve loop end-to-end on the checked-in fixture model:
 # schedule the §3.1 case-study pool (small search budget), emit the
 # deployment plan, then boot the live service from it with the reference
-# backend. This is the CI smoke test.
+# backend; then boot the checked-in v2 mixed-role plan, where a
+# prefill-only replica hands block-granular KV segments to a decode-only
+# replica. This is the CI smoke test.
 PLAN_FILE ?= /tmp/hexgen-plan.json
 plan-serve:
 	cargo run --release -p hexgen -- schedule --cluster case-study \
 		--population 4 --iterations 6 --patience 3 \
 		--fitness-requests 40 --emit-plan $(PLAN_FILE)
 	cargo run --release -p hexgen -- serve --plan $(PLAN_FILE) \
+		--artifacts rust/tests/fixtures/ref_demo \
+		--prompt "the quick brown fox" --max-new 8
+	cargo run --release -p hexgen -- serve \
+		--plan rust/tests/fixtures/plan_golden_v2.json \
 		--artifacts rust/tests/fixtures/ref_demo \
 		--prompt "the quick brown fox" --max-new 8
 

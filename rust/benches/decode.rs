@@ -17,6 +17,15 @@
 //! shared-prefix workload — the same prompt admitted across all slots —
 //! measuring the prefix-cache prefill speedup and block dedup.
 //!
+//! A disaggregated-serving section compares the fused (hybrid) path —
+//! prefill and decode on one session — against the split path: prefill
+//! on one session, block-granular KV export/import, decode on another.
+//! It reports TTFT, decode TPOT, the hand-off latency, and the KV bytes
+//! shipped per batch, asserting greedy-token parity between the two
+//! paths. A prefill-skip probe pins the full-prefix-hit TTFT win: a
+//! prompt re-admitted while a live row still holds its blocks must skip
+//! the prefill forward pass and beat a cold admission.
+//!
 //! Configs sweep `tp ∈ {1, 2} × bucket ∈ {1, 4, 8}`; the headline number
 //! is `(tp=2, bucket=8)`. Results are printed and written as JSON to
 //! `BENCH_decode.json` at the repository root (override with `--out`),
@@ -223,6 +232,187 @@ fn measure_shared_prefix(exec: &PipelineExecutor, bucket: usize, iters: usize) -
     }
 }
 
+struct DisaggStats {
+    hybrid_ttft_ms: f64,
+    hybrid_tpot_ms: f64,
+    disagg_ttft_ms: f64,
+    disagg_tpot_ms: f64,
+    /// Export + retire + import for the whole batch, per iteration.
+    handoff_ms: f64,
+    /// KV bytes shipped prefill→decode per iteration (whole batch).
+    kv_transfer_bytes: f64,
+    kv_transfers: usize,
+}
+
+/// Fused (hybrid) serving vs disaggregated serving over the same batch:
+/// the hybrid session prefills and decodes in place; the disaggregated
+/// pair prefills on one session, exports each row as a [`KvSegment`],
+/// retires the prefill slot, imports into a second session, and decodes
+/// there. Both sessions run the same plan so the TPOT delta isolates
+/// the hand-off itself. The first token streams from the prefill side
+/// before the hand-off (as the service does), so TTFT is measured to
+/// the end of prefill on both paths. Greedy token streams must match.
+///
+/// [`KvSegment`]: hexgen::coordinator::KvSegment
+fn measure_disagg(
+    exec: &PipelineExecutor,
+    bucket: usize,
+    steps: usize,
+    iters: usize,
+) -> DisaggStats {
+    let m = exec.manifest().model.clone();
+    let reqs = || -> Vec<(usize, SlotRequest)> {
+        (0..bucket)
+            .map(|i| {
+                let prompt: Vec<i32> =
+                    (0..m.prompt_len).map(|j| ((i * 17 + j * 11) % 255 + 1) as i32).collect();
+                (i, SlotRequest { prompt, max_new: steps + 1, stop: None })
+            })
+            .collect()
+    };
+    let mut hybrid_ttft = 0.0;
+    let mut hybrid_samples = Vec::with_capacity(iters * steps);
+    let mut hybrid_tokens: Vec<Vec<i32>> = vec![Vec::new(); bucket];
+    for it in 0..iters {
+        let mut session = exec.new_session(bucket).expect("hybrid session");
+        let t0 = Instant::now();
+        let out = session.prefill_into_slots(reqs()).expect("hybrid prefill");
+        hybrid_ttft += t0.elapsed().as_secs_f64();
+        if it == 0 {
+            for &(s, tok) in &out.tokens {
+                hybrid_tokens[s].push(tok);
+            }
+        }
+        for _ in 0..steps {
+            let t = Instant::now();
+            let out = session.decode_step().expect("hybrid decode");
+            hybrid_samples.push(t.elapsed().as_secs_f64());
+            assert_eq!(out.tokens.len(), bucket);
+            if it == 0 {
+                for &(s, tok) in &out.tokens {
+                    hybrid_tokens[s].push(tok);
+                }
+            }
+        }
+        assert_eq!(session.active(), 0);
+    }
+    let mut disagg_ttft = 0.0;
+    let mut handoff = 0.0;
+    let mut disagg_samples = Vec::with_capacity(iters * steps);
+    let mut disagg_tokens: Vec<Vec<i32>> = vec![Vec::new(); bucket];
+    let mut kv_bytes = 0.0;
+    let mut kv_transfers = 0usize;
+    for it in 0..iters {
+        let mut prefiller = exec.new_session(bucket).expect("prefill session");
+        let mut decoder = exec.new_session(bucket).expect("decode session");
+        let t0 = Instant::now();
+        let out = prefiller.prefill_into_slots(reqs()).expect("disagg prefill");
+        disagg_ttft += t0.elapsed().as_secs_f64();
+        if it == 0 {
+            for &(s, tok) in &out.tokens {
+                disagg_tokens[s].push(tok);
+            }
+        }
+        let t1 = Instant::now();
+        for slot in 0..bucket {
+            let seg = prefiller.export_rows(slot).expect("export");
+            prefiller.cancel_slot(slot).expect("retire prefill slot");
+            decoder.import_rows(slot, &seg, steps + 1, None).expect("import");
+        }
+        handoff += t1.elapsed().as_secs_f64();
+        let comm = prefiller.take_comm();
+        kv_bytes += comm.kv_transfer_bytes;
+        kv_transfers += comm.kv_transfers;
+        for _ in 0..steps {
+            let t = Instant::now();
+            let out = decoder.decode_step().expect("disagg decode");
+            disagg_samples.push(t.elapsed().as_secs_f64());
+            assert_eq!(out.tokens.len(), bucket);
+            if it == 0 {
+                for &(s, tok) in &out.tokens {
+                    disagg_tokens[s].push(tok);
+                }
+            }
+        }
+        assert_eq!(decoder.active(), 0);
+    }
+    assert_eq!(
+        hybrid_tokens, disagg_tokens,
+        "disaggregated decode must reproduce the hybrid greedy streams"
+    );
+    DisaggStats {
+        hybrid_ttft_ms: hybrid_ttft / iters as f64 * 1e3,
+        hybrid_tpot_ms: percentile(&hybrid_samples, 0.50) * 1e3,
+        disagg_ttft_ms: disagg_ttft / iters as f64 * 1e3,
+        disagg_tpot_ms: percentile(&disagg_samples, 0.50) * 1e3,
+        handoff_ms: handoff / iters as f64 * 1e3,
+        kv_transfer_bytes: kv_bytes / iters as f64,
+        kv_transfers: kv_transfers / iters,
+    }
+}
+
+struct PrefillSkipStats {
+    /// Fastest cold admission (full prefill forward pass), ms.
+    cold_ttft_ms: f64,
+    /// Fastest full-prefix-hit admission (forward pass skipped), ms.
+    skip_ttft_ms: f64,
+    skips: usize,
+}
+
+/// Pin the prefill-compute skip: an anchor row computes a prompt once
+/// (memoizing its first token) and stays active so its blocks — and the
+/// prefix-cache entries they carry — remain live. Re-admitting the same
+/// prompt then skips the forward pass entirely, while a distinct prompt
+/// (whose blocks free on retirement each round) recomputes every time.
+/// Min-of-iters TTFTs make the comparison robust to scheduler noise.
+fn measure_prefill_skip(exec: &PipelineExecutor, iters: usize) -> PrefillSkipStats {
+    let m = exec.manifest().model.clone();
+    let shared: Vec<i32> = (0..m.prompt_len).map(|j| ((j * 13) % 255 + 1) as i32).collect();
+    let distinct: Vec<i32> = (0..m.prompt_len).map(|j| ((j * 29 + 5) % 255 + 1) as i32).collect();
+    assert_ne!(shared, distinct);
+    let mut session = exec.new_session(4).expect("session");
+    let out = session
+        .prefill_into_slots(vec![(
+            0,
+            SlotRequest { prompt: shared.clone(), max_new: 2, stop: None },
+        )])
+        .expect("anchor prefill");
+    let anchor_tok = out.tokens[0].1;
+    let mut cold = f64::INFINITY;
+    let mut skip = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Instant::now();
+        let out = session
+            .prefill_into_slots(vec![(
+                1,
+                SlotRequest { prompt: distinct.clone(), max_new: 1, stop: None },
+            )])
+            .expect("cold prefill");
+        cold = cold.min(t.elapsed().as_secs_f64());
+        assert_eq!(out.finished.len(), 1, "max_new=1 rows finish at prefill");
+
+        let t = Instant::now();
+        let out = session
+            .prefill_into_slots(vec![(
+                1,
+                SlotRequest { prompt: shared.clone(), max_new: 1, stop: None },
+            )])
+            .expect("probe prefill");
+        skip = skip.min(t.elapsed().as_secs_f64());
+        assert_eq!(out.finished.len(), 1);
+        assert_eq!(out.finished[0].1, vec![anchor_tok], "memoized first token must match");
+    }
+    let skips = session.prefill_skips();
+    assert_eq!(skips, iters, "every shared-prefix probe must skip the prefill forward pass");
+    assert!(
+        skip < cold,
+        "skipped admission ({:.1}us) must beat a cold prefill ({:.1}us)",
+        skip * 1e6,
+        cold * 1e6
+    );
+    PrefillSkipStats { cold_ttft_ms: cold * 1e3, skip_ttft_ms: skip * 1e3, skips }
+}
+
 fn stats_json(s: &RunStats) -> Json {
     let mut j = Json::obj();
     j.set("decode_tok_s", Json::from(s.decode_tok_s))
@@ -342,6 +532,28 @@ fn main() {
         sp.prefix_cache_hits
     );
 
+    // ---- disaggregated vs hybrid serving (tp=2, b=8) -------------------
+    hexgen::util::bench::group("disaggregated serving: KV hand-off vs fused prefill+decode");
+    let disagg_iters = if quick { 2 } else { 4 };
+    let dg = measure_disagg(&shared_exec, headline_bucket, steps, disagg_iters);
+    println!(
+        "hybrid:        ttft {:.3}ms  tpot p50 {:.3}ms",
+        dg.hybrid_ttft_ms, dg.hybrid_tpot_ms
+    );
+    println!(
+        "disaggregated: ttft {:.3}ms  tpot p50 {:.3}ms  handoff {:.3}ms  \
+         ({} segments, {:.0} KV bytes/batch)",
+        dg.disagg_ttft_ms, dg.disagg_tpot_ms, dg.handoff_ms, dg.kv_transfers, dg.kv_transfer_bytes
+    );
+    let sk = measure_prefill_skip(&shared_exec, if quick { 4 } else { 16 });
+    println!(
+        "prefill skip: {:.3}ms cold vs {:.3}ms full-prefix hit ({:.2}x, {} skips)",
+        sk.cold_ttft_ms,
+        sk.skip_ttft_ms,
+        sk.cold_ttft_ms / sk.skip_ttft_ms,
+        sk.skips
+    );
+
     let mut model = Json::obj();
     model
         .set("layers", Json::from(LAYERS))
@@ -372,6 +584,28 @@ fn main() {
         .set("sessions_per_gb_dense", Json::from(sessions_per_gb_dense))
         .set("capacity_gain", Json::from(sessions_per_gb_paged / sessions_per_gb_dense))
         .set("shared_prefix", shared_j);
+    let mut hybrid_j = Json::obj();
+    hybrid_j.set("ttft_ms", Json::from(dg.hybrid_ttft_ms)).set("tpot_ms", Json::from(dg.hybrid_tpot_ms));
+    let mut split_j = Json::obj();
+    split_j
+        .set("ttft_ms", Json::from(dg.disagg_ttft_ms))
+        .set("tpot_ms", Json::from(dg.disagg_tpot_ms))
+        .set("handoff_ms", Json::from(dg.handoff_ms))
+        .set("kv_transfer_bytes", Json::from(dg.kv_transfer_bytes))
+        .set("kv_transfers", Json::from(dg.kv_transfers));
+    let mut skip_j = Json::obj();
+    skip_j
+        .set("cold_ttft_ms", Json::from(sk.cold_ttft_ms))
+        .set("skip_ttft_ms", Json::from(sk.skip_ttft_ms))
+        .set("ttft_speedup", Json::from(sk.cold_ttft_ms / sk.skip_ttft_ms))
+        .set("prefill_skips", Json::from(sk.skips));
+    let mut disagg_j = Json::obj();
+    disagg_j
+        .set("bucket", Json::from(headline_bucket))
+        .set("steps", Json::from(steps))
+        .set("hybrid", hybrid_j)
+        .set("disaggregated", split_j)
+        .set("prefill_skip", skip_j);
     let mut j = Json::obj();
     j.set("bench", Json::from("decode"))
         .set("quick", Json::from(quick))
@@ -379,7 +613,8 @@ fn main() {
         .set("model", model)
         .set("configs", Json::Arr(configs))
         .set("headline", headline_j)
-        .set("paged_kv", paged);
+        .set("paged_kv", paged)
+        .set("disaggregated_serving", disagg_j);
     std::fs::write(&out_path, format!("{j}\n")).expect("write BENCH_decode.json");
     println!("wrote {}", out_path.display());
 }

@@ -19,6 +19,10 @@ pub struct CommStats {
     pub pp_sends: usize,
     /// Bytes handed between pipeline stages.
     pub pp_bytes: f64,
+    /// Prefill→decode KV-segment transfers (disaggregated hand-offs).
+    pub kv_transfers: usize,
+    /// KV rows shipped between replicas, in bytes.
+    pub kv_transfer_bytes: f64,
 }
 
 impl CommStats {
@@ -27,6 +31,8 @@ impl CommStats {
         self.allreduce_bytes += other.allreduce_bytes;
         self.pp_sends += other.pp_sends;
         self.pp_bytes += other.pp_bytes;
+        self.kv_transfers += other.kv_transfers;
+        self.kv_transfer_bytes += other.kv_transfer_bytes;
     }
 }
 
@@ -60,6 +66,13 @@ pub fn add_residual(x: &mut Tensor, delta: &Tensor) {
 pub fn record_pp_send(t: &Tensor, stats: &mut CommStats) {
     stats.pp_sends += 1;
     stats.pp_bytes += (t.data.len() * 4) as f64;
+}
+
+/// Record a prefill→decode KV-segment hand-off of `bytes` (metered on
+/// the exporting side, like [`record_pp_send`]).
+pub fn record_kv_transfer(bytes: f64, stats: &mut CommStats) {
+    stats.kv_transfers += 1;
+    stats.kv_transfer_bytes += bytes;
 }
 
 #[cfg(test)]
@@ -111,9 +124,34 @@ mod tests {
 
     #[test]
     fn merge_accumulates() {
-        let mut a = CommStats { allreduce_ops: 1, allreduce_bytes: 8.0, pp_sends: 2, pp_bytes: 16.0 };
-        a.merge(&CommStats { allreduce_ops: 3, allreduce_bytes: 24.0, pp_sends: 1, pp_bytes: 4.0 });
+        let mut a = CommStats {
+            allreduce_ops: 1,
+            allreduce_bytes: 8.0,
+            pp_sends: 2,
+            pp_bytes: 16.0,
+            kv_transfers: 1,
+            kv_transfer_bytes: 32.0,
+        };
+        a.merge(&CommStats {
+            allreduce_ops: 3,
+            allreduce_bytes: 24.0,
+            pp_sends: 1,
+            pp_bytes: 4.0,
+            kv_transfers: 2,
+            kv_transfer_bytes: 64.0,
+        });
         assert_eq!(a.allreduce_ops, 4);
         assert_eq!(a.pp_bytes, 20.0);
+        assert_eq!(a.kv_transfers, 3);
+        assert_eq!(a.kv_transfer_bytes, 96.0);
+    }
+
+    #[test]
+    fn kv_transfer_accounting() {
+        let mut stats = CommStats::default();
+        record_kv_transfer(128.0, &mut stats);
+        record_kv_transfer(64.0, &mut stats);
+        assert_eq!(stats.kv_transfers, 2);
+        assert_eq!(stats.kv_transfer_bytes, 192.0);
     }
 }

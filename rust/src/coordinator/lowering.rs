@@ -21,7 +21,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::parallelism::DeploymentPlan;
+use crate::parallelism::{DeploymentPlan, PhaseRole};
 use crate::runtime::Manifest;
 
 use super::pipeline::StagePlan;
@@ -32,10 +32,16 @@ use super::pipeline::StagePlan;
 pub struct LoweredPlan {
     /// One stage plan per replica.
     pub replicas: Vec<Vec<StagePlan>>,
+    /// Phase role per replica (v1 plans lower as all-hybrid).
+    pub roles: Vec<PhaseRole>,
     /// Relative routing speed seed per replica, from the plan's Eq. 2
     /// cost estimates (normalized to mean 1.0; replicas without an
-    /// estimate get 1.0).
+    /// estimate get 1.0). These are the *decode*-side seeds when the
+    /// plan carries per-phase costs.
     pub speeds: Vec<f64>,
+    /// Prefill-phase routing seeds (from `prefill_cost`, falling back
+    /// to `cost_estimate`), normalized like [`Self::speeds`].
+    pub prefill_speeds: Vec<f64>,
     /// Human-readable report of every merge/rescale/clamp applied.
     pub adjustments: Vec<String>,
 }
@@ -43,6 +49,7 @@ pub struct LoweredPlan {
 /// Lower `plan` onto `manifest` (see module docs).
 pub fn lower_plan(plan: &DeploymentPlan, manifest: &Manifest) -> Result<LoweredPlan> {
     plan.validate()?;
+    validate_role_mix(plan)?;
     let m_layers = manifest.model.layers;
     if m_layers == 0 {
         bail!("manifest model has zero layers");
@@ -135,24 +142,51 @@ pub fn lower_plan(plan: &DeploymentPlan, manifest: &Manifest) -> Result<LoweredP
         replicas.push(out);
     }
 
-    Ok(LoweredPlan { replicas, speeds: plan_speeds(plan), adjustments })
+    let decode_costs: Vec<Option<f64>> =
+        plan.replicas.iter().map(|r| r.decode_cost.or(r.cost_estimate)).collect();
+    let prefill_costs: Vec<Option<f64>> =
+        plan.replicas.iter().map(|r| r.prefill_cost.or(r.cost_estimate)).collect();
+    Ok(LoweredPlan {
+        replicas,
+        roles: plan.replicas.iter().map(|r| r.phase_role).collect(),
+        speeds: speeds_from_costs(&decode_costs),
+        prefill_speeds: speeds_from_costs(&prefill_costs),
+        adjustments,
+    })
 }
 
-/// Normalized relative speed seeds from the plan's Eq. 2 cost estimates:
-/// speed ∝ 1/cost, scaled so the mean over estimated replicas is 1.0;
-/// replicas without an estimate default to 1.0.
-fn plan_speeds(plan: &DeploymentPlan) -> Vec<f64> {
-    let raw: Vec<Option<f64>> = plan
-        .replicas
+/// Reject role mixes the service cannot serve: a deployment needs at
+/// least one decode-capable replica (every request must finish its
+/// tokens somewhere) and at least one prefill-capable replica (every
+/// request must enter somewhere); a prefill-only replica in particular
+/// needs a decode partner to ship its KV segments to.
+fn validate_role_mix(plan: &DeploymentPlan) -> Result<()> {
+    let n_decode = plan.replicas.iter().filter(|r| r.phase_role.can_decode()).count();
+    let n_prefill = plan.replicas.iter().filter(|r| r.phase_role.can_prefill()).count();
+    if n_decode == 0 {
+        bail!(
+            "plan has no decode-capable replica ({} prefill-only): \
+             prefill-only replicas need a decode partner for the KV hand-off",
+            plan.replicas.len()
+        );
+    }
+    if n_prefill == 0 {
+        bail!("plan has no prefill-capable replica: no replica can admit prompts");
+    }
+    Ok(())
+}
+
+/// Normalized relative speed seeds from per-replica Eq. 2 cost
+/// estimates: speed ∝ 1/cost, scaled so the mean over estimated
+/// replicas is 1.0; replicas without an estimate default to 1.0.
+fn speeds_from_costs(costs: &[Option<f64>]) -> Vec<f64> {
+    let raw: Vec<Option<f64>> = costs
         .iter()
-        .map(|r| {
-            r.cost_estimate
-                .and_then(|c| if c.is_finite() && c > 0.0 { Some(1.0 / c) } else { None })
-        })
+        .map(|c| c.and_then(|c| if c.is_finite() && c > 0.0 { Some(1.0 / c) } else { None }))
         .collect();
     let known: Vec<f64> = raw.iter().flatten().copied().collect();
     if known.is_empty() {
-        return vec![1.0; plan.replicas.len()];
+        return vec![1.0; costs.len()];
     }
     let mean = known.iter().sum::<f64>() / known.len() as f64;
     raw.iter().map(|o| o.map(|v| v / mean).unwrap_or(1.0)).collect()
@@ -216,7 +250,7 @@ mod tests {
             })
             .collect();
         NEXT_DEVICE.with(|n| *n.borrow_mut() = next);
-        ReplicaPlan { stages, cost_estimate: cost }
+        ReplicaPlan { stages, cost_estimate: cost, ..Default::default() }
     }
 
     thread_local! {
@@ -324,5 +358,46 @@ mod tests {
         let mut p = plan(6, vec![replica(vec![(2, 4), (1, 2)], None)]);
         p.replicas[0].stages[0].layers = 3; // sum 5 != 6
         assert!(lower_plan(&p, &manifest_6l()).is_err());
+    }
+
+    #[test]
+    fn role_mix_needs_a_decode_and_a_prefill_capable_replica() {
+        use crate::parallelism::PhaseRole;
+        reset_devices();
+        let mut p = plan(6, vec![replica(vec![(1, 6)], None), replica(vec![(1, 6)], None)]);
+        // prefill-only + decode-only is a valid disaggregated pair...
+        p.replicas[0].phase_role = PhaseRole::Prefill;
+        p.replicas[1].phase_role = PhaseRole::Decode;
+        let l = lower_plan(&p, &manifest_6l()).unwrap();
+        assert_eq!(l.roles, vec![PhaseRole::Prefill, PhaseRole::Decode]);
+        // ...but all-prefill has nowhere to ship KV, and all-decode has
+        // no entry point for prompts.
+        p.replicas[1].phase_role = PhaseRole::Prefill;
+        let err = lower_plan(&p, &manifest_6l()).unwrap_err().to_string();
+        assert!(err.contains("decode partner"), "{err}");
+        p.replicas[0].phase_role = PhaseRole::Decode;
+        p.replicas[1].phase_role = PhaseRole::Decode;
+        let err = lower_plan(&p, &manifest_6l()).unwrap_err().to_string();
+        assert!(err.contains("prefill-capable"), "{err}");
+    }
+
+    #[test]
+    fn per_phase_speeds_fall_back_to_the_fused_estimate() {
+        reset_devices();
+        let mut p = plan(
+            6,
+            vec![replica(vec![(1, 6)], Some(1.0)), replica(vec![(1, 6)], Some(1.0))],
+        );
+        // Replica 0: fast prefill (0.25), slow decode (2.0); replica 1
+        // has only the fused estimate, which both phases fall back to.
+        p.replicas[0].prefill_cost = Some(0.25);
+        p.replicas[0].decode_cost = Some(2.0);
+        let l = lower_plan(&p, &manifest_6l()).unwrap();
+        // decode raw 1/cost = [0.5, 1.0], mean 0.75 → [2/3, 4/3]
+        assert!((l.speeds[0] - 0.5 / 0.75).abs() < 1e-12, "{:?}", l.speeds);
+        assert!((l.speeds[1] - 1.0 / 0.75).abs() < 1e-12, "{:?}", l.speeds);
+        // prefill raw 1/cost = [4.0, 1.0], mean 2.5 → [1.6, 0.4]
+        assert!((l.prefill_speeds[0] - 1.6).abs() < 1e-12, "{:?}", l.prefill_speeds);
+        assert!((l.prefill_speeds[1] - 0.4).abs() < 1e-12, "{:?}", l.prefill_speeds);
     }
 }

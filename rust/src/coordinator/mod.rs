@@ -23,10 +23,10 @@ pub use batcher::{AdmissionQueue, BatchPolicy};
 pub use collective::{add_residual, all_reduce_sum, CommStats};
 pub use lowering::{lower_plan, LoweredPlan};
 pub use pipeline::{
-    argmax_rows, plan_from_strategy, DecodeSession, GenerationResult, PipelineExecutor,
-    SlotRequest, StagePlan, StepOutcome,
+    argmax_rows, plan_from_strategy, DecodeSession, GenerationResult, KvSegment,
+    PipelineExecutor, SlotRequest, StagePlan, StepOutcome,
 };
-pub use router::{RoutePolicy, Router};
+pub use router::{RoutePolicy, Router, ServePhase};
 pub use server::HttpServer;
 pub use service::{HexGenService, ServiceConfig, ServiceStats};
 

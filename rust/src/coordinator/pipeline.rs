@@ -77,7 +77,7 @@ use crate::runtime::{
     ExecutionBackend, InputArg, KvPolicy, PrefixCache, Tensor, WeightStore,
 };
 
-use super::collective::{add_residual, all_reduce_sum, record_pp_send, CommStats};
+use super::collective::{add_residual, all_reduce_sum, record_kv_transfer, record_pp_send, CommStats};
 
 /// One stage of the serving plan: a contiguous layer range at a TP degree.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -420,6 +420,7 @@ impl PipelineExecutor {
             comm: CommStats::default(),
             decode_steps: 0,
             prefill_tokens: 0,
+            prefill_skips: 0,
             prefill_seconds: 0.0,
             decode_seconds: 0.0,
             scratch_active: Vec::with_capacity(bucket),
@@ -427,6 +428,8 @@ impl PipelineExecutor {
             scratch_positions: Vec::with_capacity(bucket),
             scratch_prompt: Vec::with_capacity(bucket * info.prompt_len),
             scratch_miss: Vec::with_capacity(bucket * info.prompt_len.div_ceil(block_tokens)),
+            scratch_keys: Vec::with_capacity(bucket),
+            scratch_compute: Vec::with_capacity(bucket),
         })
     }
 
@@ -734,6 +737,37 @@ pub struct StepOutcome {
     pub finished: Vec<(usize, Vec<i32>)>,
 }
 
+/// A serialized KV hand-off for one request: the populated cache rows
+/// `[0, pos)` exported from a prefill replica's slot
+/// ([`DecodeSession::export_rows`]) and imported into a decode replica's
+/// fresh slot ([`DecodeSession::import_rows`]) — the block-granular
+/// transfer that disaggregated prefill/decode serving ships between
+/// phase roles. The layout is plan-agnostic: one `(k, v)` pair of
+/// `[1, heads, pos, head_dim]` tensors per model layer, with every TP
+/// shard's head window assembled in head order, so the exporting and
+/// importing replicas may run different TP/PP plans over the same model.
+#[derive(Debug, Clone)]
+pub struct KvSegment {
+    /// Populated KV rows (the request's cache depth at hand-off).
+    pub pos: usize,
+    /// The token the prefill pass produced — the decode side's first
+    /// input token and the head of its `generated` sequence.
+    pub first_token: i32,
+    /// Per-model-layer `(k, v)` tensors of `[1, heads, pos, head_dim]`.
+    pub layers: Vec<(Tensor, Tensor)>,
+}
+
+impl KvSegment {
+    /// Bytes this segment ships between replicas (f32 storage), the
+    /// quantity metered as `kv_transfer_bytes`.
+    pub fn num_bytes(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|(k, v)| ((k.data.len() + v.data.len()) * 4) as f64)
+            .sum()
+    }
+}
+
 /// A request to admit into a [`DecodeSession`] slot.
 #[derive(Debug, Clone)]
 pub struct SlotRequest {
@@ -789,6 +823,10 @@ pub struct DecodeSession<'a> {
     comm: CommStats,
     decode_steps: usize,
     prefill_tokens: usize,
+    /// Admissions whose forward pass was skipped: every prompt chunk hit
+    /// the prefix cache and the full-prompt chain carried a memoized
+    /// first token, so the row was served from cached KV alone.
+    prefill_skips: usize,
     prefill_seconds: f64,
     decode_seconds: f64,
     // Step-scoped scratch, reused across calls so the `lint: hot-path`
@@ -805,6 +843,12 @@ pub struct DecodeSession<'a> {
     /// Flattened `[admitted row][prompt chunk]` prefix-cache miss mask
     /// for an admission: marks the blocks prefill must hand KV off to.
     scratch_miss: Vec<bool>,
+    /// Per-admitted-row final prompt-chain keys (full-prompt identity
+    /// for the first-token memo).
+    scratch_keys: Vec<u64>,
+    /// Original indices of the admitted rows that need the forward pass
+    /// (rows absent here were full-prefix hits with a memoized token).
+    scratch_compute: Vec<usize>,
 }
 
 /// Dense per-bucket decode scratch with per-row residency. `resident[r]
@@ -876,11 +920,20 @@ impl<'a> DecodeSession<'a> {
     /// [`Self::prefill_into_slots`] reserves, so gating admission on it
     /// against [`Self::free_block_budget`] never over-commits.
     pub fn blocks_needed(&self, max_new: usize) -> usize {
+        let prompt_len = self.exec.backend.manifest().model.prompt_len;
+        self.blocks_needed_at(prompt_len, max_new)
+    }
+
+    /// [`Self::blocks_needed`] for a row whose cache is already `pos`
+    /// rows deep — what [`Self::import_rows`] reserves for a handed-off
+    /// KV segment, so a decode-role serving loop can gate imports on it
+    /// against [`Self::free_block_budget`].
+    pub fn blocks_needed_at(&self, pos: usize, max_new: usize) -> usize {
         let info = &self.exec.backend.manifest().model;
-        let mn = max_new.min(info.max_seq - info.prompt_len).max(1);
+        let mn = max_new.min(info.max_seq.saturating_sub(pos)).max(1);
         // The final generated token is returned without a KV append, so
-        // a row's deepest written position is prompt_len + mn - 2.
-        self.pool.blocks_for(info.prompt_len + mn - 1)
+        // a row's deepest written position is pos + mn - 2.
+        self.pool.blocks_for(pos + mn - 1)
     }
 
     /// Prefix-cache chunk hits since session creation.
@@ -903,6 +956,14 @@ impl<'a> DecodeSession<'a> {
     /// True decode iterations executed so far.
     pub fn decode_steps(&self) -> usize {
         self.decode_steps
+    }
+
+    /// Admissions served without a forward pass: every prompt chunk hit
+    /// the prefix cache and the full-prompt chain had a memoized first
+    /// token (greedy prefill is deterministic, so the cached rows and
+    /// token are exactly what the pass would have produced).
+    pub fn prefill_skips(&self) -> usize {
+        self.prefill_skips
     }
 
     pub fn prefill_seconds(&self) -> f64 {
@@ -963,43 +1024,83 @@ impl<'a> DecodeSession<'a> {
                 bail!("max_new must be >= 1");
             }
         }
-        let pb = exec.backend.manifest().bucket_for(reqs.len())?;
-        let bidx = exec.names.bucket_idx(pb)?;
+        // Validates the admission count fits a manifest bucket even when
+        // every row ends up skipping the forward pass below.
+        exec.backend.manifest().bucket_for(reqs.len())?;
         let t0 = Instant::now();
 
         // Phase 1 — logical admission: reserve block budgets and build
         // block tables against the prefix cache, before any model work.
         // `miss[row * cpp + chunk]` marks the blocks phase 2 must fill.
+        // Rows whose every chunk hit *and* whose full-prompt chain has a
+        // memoized first token skip the forward pass entirely: the
+        // chained verified lookups prove this exact prompt was prefilled
+        // before, and greedy decoding is deterministic.
         let cpp = info.prompt_len.div_ceil(self.block_tokens);
         let mut miss = std::mem::take(&mut self.scratch_miss);
         miss.clear();
         miss.resize(reqs.len() * cpp, false);
+        let mut keys = std::mem::take(&mut self.scratch_keys);
+        keys.clear();
+        let mut compute = std::mem::take(&mut self.scratch_compute);
+        compute.clear();
         for (ri, (slot, r)) in reqs.iter().enumerate() {
-            if let Err(e) = self.admit_row(*slot, r, ri, cpp, &mut miss) {
-                self.rollback_admission(&reqs[..=ri])?;
-                return Err(e);
+            match self.admit_row(*slot, r, ri, cpp, &mut miss) {
+                Ok((key, all_hit)) => {
+                    keys.push(key);
+                    if !(all_hit && self.prefix.first_token(key).is_some()) {
+                        compute.push(ri);
+                    }
+                }
+                Err(e) => {
+                    self.rollback_admission(&reqs[..=ri])?;
+                    return Err(e);
+                }
             }
         }
 
-        // Phase 2 — model prefill, handing each row's missed chunks
-        // straight off into its blocks (shared chunks copy nothing).
-        let logits = match self.prefill_run(&reqs, pb, bidx, &miss, cpp) {
-            Ok(l) => l,
-            Err(e) => {
-                self.rollback_admission(&reqs)?;
-                return Err(e);
+        // Phase 2 — model prefill over the rows that need computing,
+        // handing each one's missed chunks straight off into its blocks
+        // (shared chunks copy nothing; skipped rows have none). The
+        // batch runs at the smallest bucket covering the computed rows,
+        // and is elided entirely when every row was a full-prefix hit.
+        let next = if compute.is_empty() {
+            None
+        } else {
+            let pb = exec.backend.manifest().bucket_for(compute.len())?;
+            let bidx = exec.names.bucket_idx(pb)?;
+            match self.prefill_run(&reqs, &compute, pb, bidx, &miss, cpp) {
+                Ok(logits) => Some(argmax_rows(&logits, info.vocab)),
+                Err(e) => {
+                    self.rollback_admission(&reqs)?;
+                    return Err(e);
+                }
             }
         };
-        let next = argmax_rows(&logits, info.vocab);
         self.prefill_seconds += t0.elapsed().as_secs_f64();
         self.prefill_tokens += reqs.len();
 
         // Phase 3 — commit slot states; rows done at prefill free their
-        // blocks immediately.
+        // blocks immediately. Computed rows memoize their first token on
+        // their full-prompt chain; skipped rows replay the memo.
         let max_decode = info.max_seq - info.prompt_len;
         let mut out = StepOutcome::default();
+        let mut next_i = 0usize;
         for (row, (slot, r)) in reqs.into_iter().enumerate() {
-            let tok = next[row];
+            let tok = if compute.get(next_i) == Some(&row) {
+                let toks = next
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("internal: missing prefill logits for computed rows"))?;
+                let tok = toks[next_i];
+                next_i += 1;
+                self.prefix.memo_first_token(keys[row], tok);
+                tok
+            } else {
+                self.prefill_skips += 1;
+                self.prefix
+                    .first_token(keys[row])
+                    .ok_or_else(|| anyhow!("internal: full-prefix skip lost its memoized token"))?
+            };
             out.tokens.push((slot, tok));
             let mut st = SlotState {
                 max_new: r.max_new.min(max_decode).max(1),
@@ -1017,6 +1118,8 @@ impl<'a> DecodeSession<'a> {
             }
         }
         self.scratch_miss = miss;
+        self.scratch_keys = keys;
+        self.scratch_compute = compute;
         Ok(out)
         // lint: hot-path-end
     }
@@ -1024,8 +1127,11 @@ impl<'a> DecodeSession<'a> {
     /// Phase 1 of admission for one row: reserve its worst-case block
     /// budget ([`Self::blocks_needed`]) and resolve its prompt chunks
     /// against the prefix cache, building its block table. Marks freshly
-    /// allocated chunks in `miss` for the prefill hand-off. On error the
-    /// row's partial state is released by the caller's rollback.
+    /// allocated chunks in `miss` for the prefill hand-off. Returns the
+    /// final chain key (the full prompt's verified identity) and whether
+    /// every chunk hit — the inputs to the prefill-compute skip. On
+    /// error the row's partial state is released by the caller's
+    /// rollback.
     fn admit_row(
         &mut self,
         slot: usize,
@@ -1033,7 +1139,7 @@ impl<'a> DecodeSession<'a> {
         row_idx: usize,
         cpp: usize,
         miss: &mut [bool],
-    ) -> Result<()> {
+    ) -> Result<(u64, bool)> {
         let need = self.blocks_needed(r.max_new);
         if !self.pool.try_reserve(need) {
             bail!(
@@ -1047,6 +1153,7 @@ impl<'a> DecodeSession<'a> {
         }
         let mut chain = PREFIX_HASH_SEED;
         let mut parent: Option<usize> = None;
+        let mut all_hit = true;
         for (ci, chunk) in r.prompt.chunks(self.block_tokens).enumerate() {
             let key = PrefixCache::chain_key(chain, ci, chunk);
             if let Some(bid) = self.prefix.lookup(key, parent, chunk) {
@@ -1074,11 +1181,12 @@ impl<'a> DecodeSession<'a> {
                 self.tables[slot].push(bid);
                 self.prefix.insert(key, bid, parent, chunk);
                 miss[row_idx * cpp + ci] = true;
+                all_hit = false;
                 parent = Some(bid);
             }
             chain = key;
         }
-        Ok(())
+        Ok((chain, all_hit))
     }
 
     /// Undo phase-1 admissions after a failure: release every listed
@@ -1093,16 +1201,20 @@ impl<'a> DecodeSession<'a> {
     }
 
     /// Phase 2 of admission: run the model prefill over the padded
-    /// batch and hand each row's freshly-allocated (missed) chunks off
-    /// into its blocks as each layer's caches materialize. Shared chunks
+    /// batch of computed rows (`rows` indexes into `reqs`; full-prefix
+    /// skipped rows are excluded and batch row `i` is `reqs[rows[i]]`)
+    /// and hand each row's freshly-allocated (missed) chunks off into
+    /// its blocks as each layer's caches materialize. Shared chunks
     /// (prefix-cache hits) already hold identical bytes — causal
     /// attention makes a position's KV a function of the tokens at and
     /// before it — so they are skipped entirely; that is the prefill
     /// cache hand-off that makes shared-prefix admission cheaper than
-    /// dense copying. Returns the prefill logits.
+    /// dense copying. Returns the prefill logits (one row per entry of
+    /// `rows`, then padding).
     fn prefill_run(
         &mut self,
         reqs: &[(usize, SlotRequest)],
+        rows: &[usize],
         pb: usize,
         bidx: usize,
         miss: &[bool],
@@ -1113,8 +1225,8 @@ impl<'a> DecodeSession<'a> {
         let mut tokens = std::mem::take(&mut self.scratch_prompt);
         tokens.clear();
         tokens.reserve(pb * info.prompt_len);
-        for (_, r) in reqs {
-            tokens.extend_from_slice(&r.prompt);
+        for &ri in rows {
+            tokens.extend_from_slice(&reqs[ri].1.prompt);
         }
         tokens.resize(pb * info.prompt_len, tokenizer::PAD);
 
@@ -1126,15 +1238,16 @@ impl<'a> DecodeSession<'a> {
                 x = h;
                 for (shard, (kc, vc)) in layer_caches.iter().enumerate() {
                     let (dst_k, dst_v) = &mut self.block_store[si][li][shard];
-                    for (ri, (slot, _)) in reqs.iter().enumerate() {
-                        for (ci, &bid) in self.tables[*slot].blocks().iter().enumerate() {
+                    for (bri, &ri) in rows.iter().enumerate() {
+                        let slot = reqs[ri].0;
+                        for (ci, &bid) in self.tables[slot].blocks().iter().enumerate() {
                             if !miss[ri * cpp + ci] {
                                 continue;
                             }
                             let start = ci * bt;
                             let n = (info.prompt_len - start).min(bt);
-                            dst_k.copy_cache_rows_between(bid, 0, kc, ri, start, n)?;
-                            dst_v.copy_cache_rows_between(bid, 0, vc, ri, start, n)?;
+                            dst_k.copy_cache_rows_between(bid, 0, kc, bri, start, n)?;
+                            dst_v.copy_cache_rows_between(bid, 0, vc, bri, start, n)?;
                         }
                     }
                 }
@@ -1268,6 +1381,165 @@ impl<'a> DecodeSession<'a> {
         };
         self.release_slot_blocks(slot)?;
         Ok(Some(st.generated))
+    }
+
+    /// Serialize the populated KV rows `[0, pos)` of the request in
+    /// `slot` into a plan-agnostic [`KvSegment`] — the prefill side of a
+    /// disaggregated hand-off. Each model layer's TP-sharded block rows
+    /// are assembled into one `[1, heads, pos, head_dim]` tensor per
+    /// `(k, v)`, so a decode replica running a different TP/PP plan can
+    /// land them. The slot stays intact (the caller retires it with
+    /// [`Self::cancel_slot`] once the segment is safely handed off), and
+    /// the shipped bytes are metered into the session's comm counters as
+    /// a KV transfer.
+    pub fn export_rows(&mut self, slot: usize) -> Result<KvSegment> {
+        let exec = self.exec;
+        let info = &exec.backend.manifest().model;
+        let Some(st) = self.slots.get(slot).and_then(Option::as_ref) else {
+            bail!("exporting KV from free slot {slot}");
+        };
+        let (pos, first_token) = (st.pos, st.next);
+        if pos == 0 {
+            bail!("slot {slot} has no populated KV rows to export");
+        }
+        let (heads, dh) = (info.heads, info.head_dim);
+        let bt = self.block_tokens;
+        let dims = vec![1, heads, pos, dh];
+        let elems = heads * pos * dh;
+        let mut layers: Vec<(Tensor, Tensor)> = (0..info.layers)
+            .map(|_| {
+                (
+                    Tensor { dims: dims.clone(), data: vec![0.0; elems] },
+                    Tensor { dims: dims.clone(), data: vec![0.0; elems] },
+                )
+            })
+            .collect();
+        let table = &self.tables[slot];
+        for (si, stage) in exec.stages.iter().enumerate() {
+            let nhs = heads / stage.tp;
+            for li in 0..stage.layer_count {
+                let (seg_k, seg_v) = &mut layers[stage.layer_start + li];
+                for (shard, (bk, bv)) in self.block_store[si][li].iter().enumerate() {
+                    let h0 = shard * nhs;
+                    for (bi, &bid) in table.blocks().iter().enumerate() {
+                        let start = bi * bt;
+                        if start >= pos {
+                            break;
+                        }
+                        let n = (pos - start).min(bt);
+                        seg_k.copy_cache_head_rows(0, h0, start, bk, bid, 0, 0, nhs, n)?;
+                        seg_v.copy_cache_head_rows(0, h0, start, bv, bid, 0, 0, nhs, n)?;
+                    }
+                }
+            }
+        }
+        let seg = KvSegment { pos, first_token, layers };
+        record_kv_transfer(seg.num_bytes(), &mut self.comm);
+        Ok(seg)
+    }
+
+    /// Land a handed-off [`KvSegment`] into the free `slot`, admitting
+    /// it as a decode-ready row — the decode side of a disaggregated
+    /// hand-off. Reserves the row's worst-case block budget
+    /// ([`Self::blocks_needed_at`]`(seg.pos, max_new)` — gate on it
+    /// against [`Self::free_block_budget`] to defer instead of failing),
+    /// copies each prompt chunk into freshly allocated blocks, and
+    /// commits a slot state whose `generated` already holds the prefill
+    /// side's first token. Imported blocks are deliberately **not**
+    /// published to the prefix cache: a segment carries no verifiable
+    /// token identity, so its blocks stay private to this row. Errors
+    /// release everything the partial import acquired.
+    pub fn import_rows(
+        &mut self,
+        slot: usize,
+        seg: &KvSegment,
+        max_new: usize,
+        stop: Option<i32>,
+    ) -> Result<()> {
+        let info = &self.exec.backend.manifest().model;
+        if slot >= self.bucket {
+            bail!("slot {slot} outside session bucket {}", self.bucket);
+        }
+        if self.slots[slot].is_some() {
+            bail!("importing KV into occupied slot {slot}");
+        }
+        if max_new == 0 {
+            bail!("max_new must be >= 1");
+        }
+        if seg.pos == 0 || seg.pos >= info.max_seq {
+            bail!(
+                "segment depth {} leaves no room to decode within max_seq {}",
+                seg.pos,
+                info.max_seq
+            );
+        }
+        if seg.layers.len() != info.layers {
+            bail!("segment has {} layers, model has {}", seg.layers.len(), info.layers);
+        }
+        let want = [1, info.heads, seg.pos, info.head_dim];
+        for (li, (k, v)) in seg.layers.iter().enumerate() {
+            for t in [k, v] {
+                if t.dims != want {
+                    bail!(
+                        "segment layer {li} has shape {:?}, serving model expects {:?}",
+                        t.dims,
+                        want
+                    );
+                }
+            }
+        }
+        let mn = max_new.min(info.max_seq - seg.pos).max(1);
+        let need = self.blocks_needed_at(seg.pos, max_new);
+        if !self.pool.try_reserve(need) {
+            bail!(
+                "kv block pool exhausted importing into slot {slot}: need {need} blocks, {} available",
+                self.pool.available()
+            );
+        }
+        if let Err(e) = self.tables[slot].begin(need) {
+            self.pool.release_reservation(need)?;
+            return Err(e);
+        }
+        if let Err(e) = self.import_rows_inner(slot, seg) {
+            self.release_slot_blocks(slot)?;
+            return Err(e);
+        }
+        self.slots[slot] = Some(SlotState {
+            max_new: mn,
+            stop,
+            generated: vec![seg.first_token],
+            next: seg.first_token,
+            pos: seg.pos,
+        });
+        Ok(())
+    }
+
+    /// Block allocation and row landing for [`Self::import_rows`],
+    /// separated so a mid-copy failure can be rolled back by releasing
+    /// the slot's partial table.
+    fn import_rows_inner(&mut self, slot: usize, seg: &KvSegment) -> Result<()> {
+        let exec = self.exec;
+        let heads = exec.backend.manifest().model.heads;
+        let bt = self.block_tokens;
+        for ci in 0..seg.pos.div_ceil(bt) {
+            self.tables[slot].use_reservation()?;
+            let bid = self.pool.alloc_reserved()?;
+            self.tables[slot].push(bid);
+            let start = ci * bt;
+            let n = (seg.pos - start).min(bt);
+            for (si, stage) in exec.stages.iter().enumerate() {
+                let nhs = heads / stage.tp;
+                for li in 0..stage.layer_count {
+                    let (seg_k, seg_v) = &seg.layers[stage.layer_start + li];
+                    for (shard, (bk, bv)) in self.block_store[si][li].iter_mut().enumerate() {
+                        let h0 = shard * nhs;
+                        bk.copy_cache_head_rows(bid, 0, 0, seg_k, 0, h0, start, nhs, n)?;
+                        bv.copy_cache_head_rows(bid, 0, 0, seg_v, 0, h0, start, nhs, n)?;
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Ensure dense step scratch exists for bucket `sb` and gather each

@@ -16,7 +16,17 @@
 //!   route by their EWMA; replicas not yet measured route by their seed,
 //!   calibrated onto the measured scale (mean measured/seed ratio), so
 //!   relative plan estimates and absolute token rates mix consistently.
+//!
+//! Disaggregated serving prices the two phases **independently**: each
+//! replica carries separate prefill-side and decode-side seeds (the
+//! per-phase Eq. 2 estimates of a v2 plan) and separate measured EWMAs
+//! (prefill tokens/s vs decode steps/s), and [`Router::route_phase`]
+//! restricts the candidate set to the replicas whose
+//! [`PhaseRole`] can serve the phase. The phase-less entry points
+//! ([`Router::route`], [`Router::speeds`], [`Router::observe_rate`])
+//! remain the decode-side view — the fused path hybrid deployments use.
 
+use crate::parallelism::PhaseRole;
 use crate::util::sync::{locks, OrderedMutex, OrderedMutexGuard};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -32,14 +42,74 @@ pub enum RoutePolicy {
     LeastLoaded,
 }
 
-/// Per-replica speed accounting (behind the router's ranked mutex).
+/// The serving phase a request needs a replica for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServePhase {
+    Prefill,
+    Decode,
+}
+
+impl ServePhase {
+    fn served_by(self, role: PhaseRole) -> bool {
+        match self {
+            ServePhase::Prefill => role.can_prefill(),
+            ServePhase::Decode => role.can_decode(),
+        }
+    }
+}
+
+/// One phase's speed accounting: relative seeds and measured EWMAs.
 #[derive(Debug)]
-struct SpeedState {
+struct PhaseSpeeds {
     /// Relative seed weight per replica (1.0 = baseline).
     seed: Vec<f64>,
-    /// EWMA of measured decode throughput (tokens/s); `None` until the
-    /// replica reports its first measurement.
+    /// EWMA of measured throughput; `None` until the replica reports
+    /// its first measurement.
     measured: Vec<Option<f64>>,
+}
+
+impl PhaseSpeeds {
+    fn new(replicas: usize) -> PhaseSpeeds {
+        PhaseSpeeds { seed: vec![1.0; replicas], measured: vec![None; replicas] }
+    }
+
+    /// Effective speeds: the measured EWMA where available, otherwise
+    /// the seed calibrated onto the measured scale (mean measured/seed
+    /// ratio over measured replicas).
+    fn effective(&self) -> Vec<f64> {
+        let ratios: Vec<f64> = self
+            .measured
+            .iter()
+            .zip(&self.seed)
+            .filter_map(|(m, &s)| m.map(|m| m / s))
+            .collect();
+        let calib = if ratios.is_empty() {
+            1.0
+        } else {
+            ratios.iter().sum::<f64>() / ratios.len() as f64
+        };
+        self.measured.iter().zip(&self.seed).map(|(m, &s)| m.unwrap_or(s * calib)).collect()
+    }
+
+    fn observe(&mut self, replica: usize, rate: f64) {
+        self.measured[replica] = Some(match self.measured[replica] {
+            None => rate,
+            Some(prev) => (1.0 - SPEED_EWMA_ALPHA) * prev + SPEED_EWMA_ALPHA * rate,
+        });
+    }
+}
+
+/// Per-replica speed and role accounting (behind the router's ranked
+/// mutex).
+#[derive(Debug)]
+struct SpeedState {
+    /// Decode-side speeds — what the phase-less API reads and writes.
+    decode: PhaseSpeeds,
+    /// Prefill-side speeds.
+    prefill: PhaseSpeeds,
+    /// Phase role per replica (all-[`PhaseRole::Hybrid`] until
+    /// [`Router::set_roles`]).
+    roles: Vec<PhaseRole>,
 }
 
 /// Shared per-replica load accounting.
@@ -60,52 +130,92 @@ impl Router {
             speeds: OrderedMutex::new(
                 locks::ROUTER_SPEEDS,
                 "router.speeds",
-                SpeedState { seed: vec![1.0; replicas], measured: vec![None; replicas] },
+                SpeedState {
+                    decode: PhaseSpeeds::new(replicas),
+                    prefill: PhaseSpeeds::new(replicas),
+                    roles: vec![PhaseRole::Hybrid; replicas],
+                },
             ),
             rr_next: AtomicUsize::new(0),
         }
     }
 
     /// Seed relative speed weights (e.g. normalized 1/cost-estimate per
-    /// replica from a lowered deployment plan). Callable on the shared
+    /// replica from a lowered deployment plan) for **both** phases — the
+    /// fused seeding hybrid deployments use. Callable on the shared
     /// router at any time; measured EWMAs, where present, keep
     /// precedence over seeds.
     pub fn set_speeds(&self, speed: Vec<f64>) {
         assert_eq!(speed.len(), self.outstanding.len());
         assert!(speed.iter().all(|&s| s.is_finite() && s > 0.0));
-        self.state().seed = speed;
+        let mut st = self.state();
+        st.prefill.seed.clone_from(&speed);
+        st.decode.seed = speed;
     }
 
-    /// Fold a measured decode throughput sample (tokens/s) for `replica`
-    /// into its EWMA. Non-finite or non-positive samples are ignored.
+    /// Seed one phase's relative speed weights independently (the
+    /// per-phase Eq. 2 estimates of a v2 plan).
+    pub fn set_phase_speeds(&self, phase: ServePhase, speed: Vec<f64>) {
+        assert_eq!(speed.len(), self.outstanding.len());
+        assert!(speed.iter().all(|&s| s.is_finite() && s > 0.0));
+        let mut st = self.state();
+        match phase {
+            ServePhase::Prefill => st.prefill.seed = speed,
+            ServePhase::Decode => st.decode.seed = speed,
+        }
+    }
+
+    /// Declare each replica's phase role. [`Self::route_phase`] skips
+    /// replicas that cannot serve the requested phase; the phase-less
+    /// [`Self::route`]/[`Self::route_excluding`] ignore roles (the fused
+    /// path of an all-hybrid deployment).
+    pub fn set_roles(&self, roles: Vec<PhaseRole>) {
+        assert_eq!(roles.len(), self.outstanding.len());
+        self.state().roles = roles;
+    }
+
+    /// Fold a measured **decode** throughput sample (tokens/s) for
+    /// `replica` into its EWMA. Non-finite or non-positive samples are
+    /// ignored.
     pub fn observe_rate(&self, replica: usize, tokens_per_sec: f64) {
-        if !tokens_per_sec.is_finite() || tokens_per_sec <= 0.0 {
+        self.observe_phase_rate(ServePhase::Decode, replica, tokens_per_sec);
+    }
+
+    /// Fold a measured throughput sample for one phase (prefill
+    /// tokens/s or decode tokens/s) into that phase's EWMA. Non-finite
+    /// or non-positive samples are ignored.
+    pub fn observe_phase_rate(&self, phase: ServePhase, replica: usize, rate: f64) {
+        if !rate.is_finite() || rate <= 0.0 {
             return;
         }
         let mut st = self.state();
-        st.measured[replica] = Some(match st.measured[replica] {
-            None => tokens_per_sec,
-            Some(prev) => (1.0 - SPEED_EWMA_ALPHA) * prev + SPEED_EWMA_ALPHA * tokens_per_sec,
-        });
+        match phase {
+            ServePhase::Prefill => st.prefill.observe(replica, rate),
+            ServePhase::Decode => st.decode.observe(replica, rate),
+        }
     }
 
-    /// Effective per-replica speeds the policy routes by: the measured
-    /// EWMA where available, otherwise the seed calibrated onto the
-    /// measured scale (mean measured/seed ratio over measured replicas).
+    /// Effective per-replica **decode** speeds the phase-less policy
+    /// routes by: the measured EWMA where available, otherwise the seed
+    /// calibrated onto the measured scale (mean measured/seed ratio over
+    /// measured replicas).
     pub fn speeds(&self) -> Vec<f64> {
+        self.phase_speeds(ServePhase::Decode)
+    }
+
+    /// Effective per-replica speeds for one phase (same seed/EWMA
+    /// blending as [`Self::speeds`], per phase).
+    pub fn phase_speeds(&self, phase: ServePhase) -> Vec<f64> {
         let st = self.state();
-        let ratios: Vec<f64> = st
-            .measured
-            .iter()
-            .zip(&st.seed)
-            .filter_map(|(m, &s)| m.map(|m| m / s))
-            .collect();
-        let calib = if ratios.is_empty() {
-            1.0
-        } else {
-            ratios.iter().sum::<f64>() / ratios.len() as f64
-        };
-        st.measured.iter().zip(&st.seed).map(|(m, &s)| m.unwrap_or(s * calib)).collect()
+        match phase {
+            ServePhase::Prefill => st.prefill.effective(),
+            ServePhase::Decode => st.decode.effective(),
+        }
+    }
+
+    /// Phase role per replica (all-hybrid until [`Self::set_roles`]).
+    pub fn roles(&self) -> Vec<PhaseRole> {
+        self.state().roles.clone()
     }
 
     fn state(&self) -> OrderedMutexGuard<'_, SpeedState> {
@@ -135,14 +245,37 @@ impl Router {
     /// must pair each successful pick with [`Self::complete`] — including
     /// when the hand-off to the replica fails afterwards, or the load
     /// counter leaks and the policy keeps favouring a dead replica.
+    /// Roles are ignored: this is the fused path of an all-hybrid
+    /// deployment (it prices by decode-side speeds).
     pub fn route_excluding(&self, excluded: &[usize]) -> Option<usize> {
+        self.route_filtered(excluded, None)
+    }
+
+    /// Pick a replica to serve `phase`, skipping `excluded` and every
+    /// replica whose [`PhaseRole`] cannot serve the phase, pricing
+    /// candidates by that phase's speeds. Returns `None` when no
+    /// eligible replica remains. Pair successful picks with
+    /// [`Self::complete`], exactly as with [`Self::route_excluding`].
+    pub fn route_phase(&self, phase: ServePhase, excluded: &[usize]) -> Option<usize> {
+        self.route_filtered(excluded, Some(phase))
+    }
+
+    fn route_filtered(&self, excluded: &[usize], phase: Option<ServePhase>) -> Option<usize> {
         let n = self.outstanding.len();
+        let roles = match phase {
+            Some(_) => self.state().roles.clone(),
+            None => Vec::new(),
+        };
+        let eligible = |i: usize| match phase {
+            Some(p) => !excluded.contains(&i) && p.served_by(roles[i]),
+            None => !excluded.contains(&i),
+        };
         let r = match self.policy {
             RoutePolicy::RoundRobin => {
                 let mut pick = None;
                 for _ in 0..n {
                     let c = self.rr_next.fetch_add(1, Ordering::Relaxed) % n;
-                    if !excluded.contains(&c) {
+                    if eligible(c) {
                         pick = Some(c);
                         break;
                     }
@@ -150,11 +283,14 @@ impl Router {
                 pick?
             }
             RoutePolicy::LeastLoaded => {
-                let speed = self.speeds();
+                let speed = match phase {
+                    Some(p) => self.phase_speeds(p),
+                    None => self.speeds(),
+                };
                 let mut best = None;
                 let mut best_cost = f64::INFINITY;
                 for (i, o) in self.outstanding.iter().enumerate() {
-                    if excluded.contains(&i) {
+                    if !eligible(i) {
                         continue;
                     }
                     let cost = (o.load(Ordering::Relaxed) as f64 + 1.0) / speed[i];
@@ -343,6 +479,62 @@ mod tests {
         r.set_speeds(vec![2.0, 1.0]);
         assert_eq!(r.speeds(), vec![2.0, 1.0]);
         let _ = r.route();
+    }
+
+    #[test]
+    fn route_phase_respects_roles() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 3);
+        r.set_roles(vec![PhaseRole::Prefill, PhaseRole::Decode, PhaseRole::Hybrid]);
+        // Prefill requests never land on the decode-only replica, decode
+        // requests never on the prefill-only one; hybrid serves both.
+        for _ in 0..6 {
+            let p = r.route_phase(ServePhase::Prefill, &[]).unwrap();
+            assert_ne!(p, 1, "decode-only replica took a prefill");
+            let d = r.route_phase(ServePhase::Decode, &[]).unwrap();
+            assert_ne!(d, 0, "prefill-only replica took a decode");
+        }
+        // Excluding the hybrid leaves exactly one candidate per phase.
+        assert_eq!(r.route_phase(ServePhase::Prefill, &[2]), Some(0));
+        assert_eq!(r.route_phase(ServePhase::Decode, &[2]), Some(1));
+        // No eligible replica left: the pick must fail, not fall back.
+        assert_eq!(r.route_phase(ServePhase::Prefill, &[0, 2]), None);
+
+        let rr = Router::new(RoutePolicy::RoundRobin, 2);
+        rr.set_roles(vec![PhaseRole::Prefill, PhaseRole::Decode]);
+        for _ in 0..4 {
+            assert_eq!(rr.route_phase(ServePhase::Decode, &[]), Some(1));
+        }
+    }
+
+    #[test]
+    fn phase_speeds_are_priced_independently() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        // Replica 0 is the fast prefiller, replica 1 the fast decoder.
+        r.set_phase_speeds(ServePhase::Prefill, vec![4.0, 1.0]);
+        r.set_phase_speeds(ServePhase::Decode, vec![1.0, 4.0]);
+        assert_eq!(r.phase_speeds(ServePhase::Prefill), vec![4.0, 1.0]);
+        assert_eq!(r.speeds(), vec![1.0, 4.0], "phase-less view is the decode side");
+        let p = r.route_phase(ServePhase::Prefill, &[]).unwrap();
+        r.complete(p);
+        assert_eq!(p, 0, "prefill prices by prefill speeds");
+        let d = r.route_phase(ServePhase::Decode, &[]).unwrap();
+        r.complete(d);
+        assert_eq!(d, 1, "decode prices by decode speeds");
+
+        // Per-phase EWMAs stay separate: a prefill sample must not
+        // disturb the decode estimate.
+        r.observe_phase_rate(ServePhase::Prefill, 1, 100.0);
+        assert_eq!(r.phase_speeds(ServePhase::Prefill)[1], 100.0);
+        assert_eq!(r.speeds(), vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn set_speeds_seeds_both_phases() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_speeds(vec![3.0, 1.0]);
+        assert_eq!(r.phase_speeds(ServePhase::Prefill), vec![3.0, 1.0]);
+        assert_eq!(r.phase_speeds(ServePhase::Decode), vec![3.0, 1.0]);
+        assert_eq!(r.roles(), vec![PhaseRole::Hybrid; 2], "default roles are hybrid");
     }
 
     #[test]

@@ -283,13 +283,16 @@ fn metrics_json(service: &HexGenService) -> Json {
     kv.set("blocks_total", Json::from(stats.kv_blocks_total))
         .set("blocks_used", Json::from(stats.kv_blocks_used))
         .set("prefix_cache_hits", Json::from(stats.prefix_cache_hits))
-        .set("prefix_cache_misses", Json::from(stats.prefix_cache_misses));
+        .set("prefix_cache_misses", Json::from(stats.prefix_cache_misses))
+        .set("prefill_skips", Json::from(stats.prefill_skips));
     let c = service.comm_stats();
     let mut comm = Json::obj();
     comm.set("allreduce_ops", Json::from(c.allreduce_ops))
         .set("allreduce_bytes", Json::from(c.allreduce_bytes))
         .set("pp_sends", Json::from(c.pp_sends))
-        .set("pp_bytes", Json::from(c.pp_bytes));
+        .set("pp_bytes", Json::from(c.pp_bytes))
+        .set("kv_transfers_total", Json::from(c.kv_transfers))
+        .set("kv_transfer_bytes", Json::from(c.kv_transfer_bytes));
     let mut j = Json::obj();
     j.set("replicas", Json::from(service.replicas()))
         .set("router", router)
@@ -300,10 +303,12 @@ fn metrics_json(service: &HexGenService) -> Json {
 }
 
 fn plan_json(service: &HexGenService) -> Json {
+    let roles = service.roles();
     let replicas: Vec<Json> = service
         .stage_plans()
         .iter()
-        .map(|plan| {
+        .enumerate()
+        .map(|(i, plan)| {
             let stages: Vec<Json> = plan
                 .iter()
                 .map(|s| {
@@ -317,13 +322,18 @@ fn plan_json(service: &HexGenService) -> Json {
             let tps: Vec<String> = plan.iter().map(|s| s.tp.to_string()).collect();
             let mut j = Json::obj();
             j.set("strategy", Json::from(format!("[{}]", tps.join(","))))
+                .set("phase_role", Json::from(roles.get(i).copied().unwrap_or_default().as_str()))
                 .set("stages", Json::Arr(stages));
             j
         })
         .collect();
     let mut j = Json::obj();
     j.set("replicas", Json::Arr(replicas))
-        .set("speeds", Json::Arr(service.router_speeds().into_iter().map(Json::from).collect()));
+        .set("speeds", Json::Arr(service.router_speeds().into_iter().map(Json::from).collect()))
+        .set(
+            "prefill_speeds",
+            Json::Arr(service.router_prefill_speeds().into_iter().map(Json::from).collect()),
+        );
     j
 }
 

@@ -18,6 +18,18 @@
 //! typed [`ServiceError`] failures, cancellation). The blocking
 //! [`HexGenService::generate`] is a thin wrapper that drains the stream.
 //!
+//! **Disaggregated prefill/decode.** When [`ServiceConfig::roles`]
+//! assigns non-hybrid phase roles, the request lifecycle splits:
+//! `submit` routes among prefill-capable replicas
+//! ([`Router::route_phase`]); a prefill-only worker admits and prefills
+//! the request, streams its first token, then exports the populated KV
+//! rows as a [`KvSegment`], frees the slot, and hands the segment to a
+//! decode-capable replica priced by decode-side speeds, where it is
+//! imported into a fresh slot and decoded to completion. All-hybrid
+//! deployments (the default) take exactly the fused path below —
+//! byte-for-byte the same admission, routing, and decode flow as before
+//! roles existed.
+//!
 //! [`ExecutionBackend`]: crate::runtime::ExecutionBackend
 
 use std::path::PathBuf;
@@ -29,6 +41,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::parallelism::PhaseRole;
 use crate::runtime::{
     make_backend, tokenizer, BackendKind, KvPolicy, Manifest, Utf8Stream, WeightStore,
 };
@@ -40,8 +53,8 @@ use super::api::{
 use super::batcher::{AdmissionQueue, BatchPolicy, WaitOutcome};
 use super::collective::CommStats;
 
-use super::pipeline::{PipelineExecutor, SlotRequest, StagePlan};
-use super::router::{RoutePolicy, Router};
+use super::pipeline::{KvSegment, PipelineExecutor, SlotRequest, StagePlan};
+use super::router::{RoutePolicy, Router, ServePhase};
 
 /// How often an idle worker wakes from its request-channel wait to sweep
 /// cancelled requests out of its queue.
@@ -62,9 +75,21 @@ pub struct ServiceConfig {
     /// [`super::lowering::LoweredPlan::speeds`]). Length must match
     /// `replicas`; `None` routes every replica at weight 1.0.
     pub speeds: Option<Vec<f64>>,
+    /// Optional per-replica **prefill-side** routing speed seeds
+    /// ([`super::lowering::LoweredPlan::prefill_speeds`]). When `None`,
+    /// the prefill side is seeded from `speeds` (the fused estimate).
+    pub prefill_speeds: Option<Vec<f64>>,
+    /// Phase role per replica for disaggregated prefill/decode serving.
+    /// Empty means all-hybrid — every replica runs the fused
+    /// prefill+decode path, exactly as before roles existed. When
+    /// non-empty it must match `replicas` in length, contain at least
+    /// one prefill-capable and one decode-capable replica, and requests
+    /// flow prefill-replica → KV hand-off → decode-replica.
+    pub roles: Vec<PhaseRole>,
     /// Keep router speeds fresh at runtime from an EWMA of each
     /// replica's measured decode throughput
-    /// ([`Router::observe_rate`]).
+    /// ([`Router::observe_rate`]), and of its measured prefill
+    /// throughput on the prefill side.
     pub adapt_speeds: bool,
     /// Default generation length (≤ max_seq − prompt_len).
     pub max_new_tokens: usize,
@@ -96,6 +121,9 @@ pub struct ServiceStats {
     pub prefix_cache_hits: u64,
     /// Prefix-cache chunk misses across all replicas.
     pub prefix_cache_misses: u64,
+    /// Admissions served without a prefill forward pass (full-prefix
+    /// cache hit with a memoized first token) across all replicas.
+    pub prefill_skips: u64,
 }
 
 #[derive(Debug, Default)]
@@ -109,6 +137,7 @@ struct Counters {
     kv_blocks_used: AtomicU64,
     prefix_cache_hits: AtomicU64,
     prefix_cache_misses: AtomicU64,
+    prefill_skips: AtomicU64,
 }
 
 impl Counters {
@@ -123,6 +152,7 @@ impl Counters {
             kv_blocks_used: self.kv_blocks_used.load(Ordering::Relaxed),
             prefix_cache_hits: self.prefix_cache_hits.load(Ordering::Relaxed),
             prefix_cache_misses: self.prefix_cache_misses.load(Ordering::Relaxed),
+            prefill_skips: self.prefill_skips.load(Ordering::Relaxed),
         }
     }
 
@@ -150,6 +180,50 @@ struct WorkItem {
     cancel: Arc<CancelFlag>,
 }
 
+/// A handed-off request travelling from a prefill-only replica to a
+/// decode-capable one, carrying its exported KV rows and the streaming
+/// state accumulated so far (the prefill token was already emitted).
+struct DecodeWork {
+    item: WorkItem,
+    seg: KvSegment,
+    /// When the prefill replica admitted the request (queued-time
+    /// accounting stays anchored to the original admission).
+    admitted: Instant,
+    /// Rows in flight when the request was admitted on the prefill side.
+    cohort: usize,
+    prefill_seconds: f64,
+    /// Token events emitted so far (1: the prefill-produced token).
+    emitted: usize,
+    /// The in-flight UTF-8 decoder state, carried across the hand-off so
+    /// a multi-byte character split over the phase boundary still
+    /// renders exactly once.
+    text: Utf8Stream,
+}
+
+/// What travels on a replica worker's queue: a fresh routed request
+/// (prefill side of its lifecycle) or a handed-off KV segment (decode
+/// side). Hybrid deployments only ever see `Prefill`.
+enum WorkMsg {
+    Prefill(WorkItem),
+    Decode(DecodeWork),
+}
+
+impl WorkMsg {
+    fn cancel_flag(&self) -> &CancelFlag {
+        match self {
+            WorkMsg::Prefill(it) => &it.cancel,
+            WorkMsg::Decode(dw) => &dw.item.cancel,
+        }
+    }
+
+    fn into_item(self) -> WorkItem {
+        match self {
+            WorkMsg::Prefill(it) => it,
+            WorkMsg::Decode(dw) => dw.item,
+        }
+    }
+}
+
 /// A request occupying a decode-session slot.
 struct ActiveItem {
     item: WorkItem,
@@ -169,7 +243,7 @@ struct ActiveItem {
 /// Handle to a running service.
 pub struct HexGenService {
     router: Arc<Router>,
-    queues: Vec<Sender<WorkItem>>,
+    queues: Vec<Sender<WorkMsg>>,
     workers: Vec<JoinHandle<()>>,
     manifest: Manifest,
     cfg: ServiceConfig,
@@ -201,16 +275,63 @@ impl HexGenService {
             }
             router.set_speeds(speeds.clone());
         }
+        if let Some(speeds) = &cfg.prefill_speeds {
+            if speeds.len() != cfg.replicas.len() {
+                bail!("{} prefill speed seeds for {} replicas", speeds.len(), cfg.replicas.len());
+            }
+            if speeds.iter().any(|&s| !s.is_finite() || s <= 0.0) {
+                bail!("prefill speed seeds must be positive and finite, got {speeds:?}");
+            }
+            router.set_phase_speeds(ServePhase::Prefill, speeds.clone());
+        }
+        if !cfg.roles.is_empty() {
+            if cfg.roles.len() != cfg.replicas.len() {
+                bail!("{} phase roles for {} replicas", cfg.roles.len(), cfg.replicas.len());
+            }
+            if !cfg.roles.iter().any(|r| r.can_decode()) {
+                bail!(
+                    "no decode-capable replica: prefill-only replicas need a decode partner \
+                     for the KV hand-off"
+                );
+            }
+            if !cfg.roles.iter().any(|r| r.can_prefill()) {
+                bail!("no prefill-capable replica: no replica can admit prompts");
+            }
+            router.set_roles(cfg.roles.clone());
+        }
+        let roles: Vec<PhaseRole> = (0..cfg.replicas.len())
+            .map(|i| cfg.roles.get(i).copied().unwrap_or_default())
+            .collect();
 
         let counters = Arc::new(Counters::default());
         let (comm_tx, comm_rx) = channel::<CommStats>();
         let mut queues = Vec::with_capacity(cfg.replicas.len());
+        let mut receivers = Vec::with_capacity(cfg.replicas.len());
+        for _ in 0..cfg.replicas.len() {
+            let (tx, rx) = channel::<WorkMsg>();
+            queues.push(tx);
+            receivers.push(rx);
+        }
         let mut workers = Vec::with_capacity(cfg.replicas.len());
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        for (rid, plan) in cfg.replicas.iter().enumerate() {
-            let (tx, rx) = channel::<WorkItem>();
-            queues.push(tx);
-            let plan = plan.clone();
+        for (rid, rx) in receivers.into_iter().enumerate() {
+            let plan = cfg.replicas[rid].clone();
+            let role = roles[rid];
+            // Hand-off senders, prefill-only workers only, and only
+            // toward decode-capable replicas. Holding no other senders
+            // keeps the shutdown chain acyclic: dropping the service's
+            // senders closes the prefill queues, the exiting prefill
+            // workers drop these clones, and the decode queues close in
+            // turn.
+            let handoff: Vec<Option<Sender<WorkMsg>>> = if role == PhaseRole::Prefill {
+                queues
+                    .iter()
+                    .zip(&roles)
+                    .map(|(tx, r)| if r.can_decode() { Some(tx.clone()) } else { None })
+                    .collect()
+            } else {
+                (0..cfg.replicas.len()).map(|_| None).collect()
+            };
             let dir = cfg.artifacts_dir.clone();
             let manifest = manifest.clone();
             let weights = weights.clone();
@@ -224,8 +345,8 @@ impl HexGenService {
             let ready_tx = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(
-                    rid, backend, dir, manifest, weights, plan, batch, kv, adapt_speeds, rx,
-                    router, counters, comm_tx, ready_tx,
+                    rid, backend, dir, manifest, weights, plan, batch, kv, adapt_speeds, role,
+                    handoff, rx, router, counters, comm_tx, ready_tx,
                 )
             }));
         }
@@ -270,6 +391,21 @@ impl HexGenService {
     /// measured decode-throughput EWMAs as replicas report in).
     pub fn router_speeds(&self) -> Vec<f64> {
         self.router.speeds()
+    }
+
+    /// Effective per-replica **prefill-side** routing speeds.
+    pub fn router_prefill_speeds(&self) -> Vec<f64> {
+        self.router.phase_speeds(ServePhase::Prefill)
+    }
+
+    /// Phase role per replica (`GET /v1/plan`); all-hybrid when the
+    /// configuration left roles unset.
+    pub fn roles(&self) -> Vec<PhaseRole> {
+        if self.cfg.roles.is_empty() {
+            vec![PhaseRole::Hybrid; self.cfg.replicas.len()]
+        } else {
+            self.cfg.roles.clone()
+        }
     }
 
     /// Per-replica `(outstanding requests, effective speed)` snapshot.
@@ -321,22 +457,42 @@ impl HexGenService {
         };
         // Queued is emitted before the worker can race an Admitted in.
         let _ = item.events.send(RequestEvent::Queued);
+        // All-hybrid deployments route phase-lessly — the exact pre-role
+        // code path; mixed-role plans route the prefill leg among
+        // prefill-capable replicas only.
+        let disagg = self.cfg.roles.iter().any(|&r| r != PhaseRole::Hybrid);
         let mut dead: Vec<usize> = Vec::new();
         loop {
-            let Some(replica) = self.router.route_excluding(&dead) else {
+            let replica = if disagg {
+                self.router.route_phase(ServePhase::Prefill, &dead)
+            } else {
+                self.router.route_excluding(&dead)
+            };
+            let Some(replica) = replica else {
                 self.counters.failed.fetch_add(1, Ordering::Relaxed);
                 let _ = item.events.send(RequestEvent::Failed(ServiceError::AllReplicasDown));
                 return handle;
             };
-            match self.queues[replica].send(item) {
+            match self.queues[replica].send(WorkMsg::Prefill(item)) {
                 Ok(()) => return handle,
-                Err(SendError(returned)) => {
+                Err(SendError(WorkMsg::Prefill(returned))) => {
                     // The worker hung up: release the routed load count so
                     // the policy stops charging the dead replica, then try
                     // the remaining ones.
                     self.router.complete(replica);
                     dead.push(replica);
                     item = returned;
+                }
+                Err(SendError(returned)) => {
+                    // Unreachable (a Prefill send returns a Prefill), but
+                    // fail the request cleanly rather than trusting it.
+                    self.router.complete(replica);
+                    self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = returned
+                        .into_item()
+                        .events
+                        .send(RequestEvent::Failed(ServiceError::AllReplicasDown));
+                    return handle;
                 }
             }
         }
@@ -395,7 +551,9 @@ fn worker_loop(
     batch: BatchPolicy,
     kv: KvPolicy,
     adapt_speeds: bool,
-    rx: Receiver<WorkItem>,
+    role: PhaseRole,
+    handoff: Vec<Option<Sender<WorkMsg>>>,
+    rx: Receiver<WorkMsg>,
     router: Arc<Router>,
     counters: Arc<Counters>,
     comm_tx: Sender<CommStats>,
@@ -430,6 +588,8 @@ fn worker_loop(
     let mut kv_used_last: u64 = 0;
     let mut kv_hits_last: u64 = 0;
     let mut kv_misses_last: u64 = 0;
+    let mut kv_skips_last: u64 = 0;
+    let prompt_len = exec.manifest().model.prompt_len;
     // Continuous admission co-batches rows at different cache depths,
     // which needs per-row decode positions; backends bound to the
     // scalar-position AOT artifact signature degrade to
@@ -449,7 +609,7 @@ fn worker_loop(
         if continuous { "continuous batching" } else { "run-to-completion batching" },
     );
 
-    let mut queue: AdmissionQueue<WorkItem> = AdmissionQueue::new(rx);
+    let mut queue: AdmissionQueue<WorkMsg> = AdmissionQueue::new(rx);
     let mut active: Vec<Option<ActiveItem>> = (0..bucket).map(|_| None).collect();
 
     let fail_item = |item: WorkItem, err: ServiceError| {
@@ -518,6 +678,7 @@ fn worker_loop(
             kv_used_last = 0;
             kv_hits_last = 0;
             kv_misses_last = 0;
+            kv_skips_last = 0;
             session = match exec.new_session_with(bucket, kv) {
                 Ok(s) => s,
                 Err(e2) => {
@@ -525,9 +686,9 @@ fn worker_loop(
                     crate::log_error!(
                         "replica {rid} {message}; failing queued requests and exiting"
                     );
-                    for item in queue.drain_all() {
+                    for msg in queue.drain_all() {
                         fail_item(
-                            item,
+                            msg.into_item(),
                             ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
                         );
                     }
@@ -557,8 +718,8 @@ fn worker_loop(
                 fail_item(a.item, ServiceError::Cancelled);
             }
         }
-        for item in queue.drain_where(|it| it.cancel.is_cancelled()) {
-            fail_item(item, ServiceError::Cancelled);
+        for msg in queue.drain_where(|m| m.cancel_flag().is_cancelled()) {
+            fail_item(msg.into_item(), ServiceError::Cancelled);
         }
         if rebuild.is_some() {
             continue;
@@ -582,18 +743,23 @@ fn worker_loop(
         let free = session.free_slots();
         let avail = if continuous || session.active() == 0 { free.len() } else { 0 };
         let mut admitted = Vec::new();
-        for item in queue.admit_budgeted(
+        for msg in queue.admit_budgeted(
             avail,
             session.active() == 0,
             &batch,
             session.free_block_budget(),
-            |it| session.blocks_needed(it.max_new),
+            |m| match m {
+                WorkMsg::Prefill(it) => session.blocks_needed(it.max_new),
+                // A handed-off row already holds `seg.pos` tokens of
+                // context: budget from that depth, not the prompt's.
+                WorkMsg::Decode(dw) => session.blocks_needed_at(dw.seg.pos, dw.item.max_new),
+            },
         ) {
             // Cancelled between the sweep and the admit: never runs.
-            if item.cancel.is_cancelled() {
-                fail_item(item, ServiceError::Cancelled);
+            if msg.cancel_flag().is_cancelled() {
+                fail_item(msg.into_item(), ServiceError::Cancelled);
             } else {
-                admitted.push(item);
+                admitted.push(msg);
             }
         }
         if !admitted.is_empty() {
@@ -601,61 +767,195 @@ fn worker_loop(
             let cohort = session.active() + admitted.len();
             let mut reqs = Vec::with_capacity(admitted.len());
             let mut slots_used = Vec::with_capacity(admitted.len());
-            for (item, &slot) in admitted.into_iter().zip(free.iter()) {
-                reqs.push((
-                    slot,
-                    SlotRequest {
-                        prompt: item.prompt_tokens.clone(),
-                        max_new: item.max_new,
-                        stop: item.stop,
-                    },
-                ));
-                let _ = item
-                    .events
-                    .send(RequestEvent::Admitted { replica: rid, batch_size: cohort });
-                active[slot] = Some(ActiveItem {
-                    item,
-                    admitted: now,
-                    cohort,
-                    prefill_seconds: 0.0,
-                    decode_start: now,
-                    emitted: 0,
-                    text: Utf8Stream::new(),
-                });
-                slots_used.push(slot);
-            }
-            let t0 = Instant::now();
-            match session.prefill_into_slots(reqs) {
-                Ok(out) => {
-                    let pf = t0.elapsed().as_secs_f64();
-                    let end = Instant::now();
-                    for &slot in &slots_used {
-                        if let Some(a) = active[slot].as_mut() {
-                            a.prefill_seconds = pf;
-                            a.decode_start = end;
-                        }
+            for (msg, &slot) in admitted.into_iter().zip(free.iter()) {
+                match msg {
+                    WorkMsg::Prefill(item) => {
+                        reqs.push((
+                            slot,
+                            SlotRequest {
+                                prompt: item.prompt_tokens.clone(),
+                                max_new: item.max_new,
+                                stop: item.stop,
+                            },
+                        ));
+                        let _ = item
+                            .events
+                            .send(RequestEvent::Admitted { replica: rid, batch_size: cohort });
+                        active[slot] = Some(ActiveItem {
+                            item,
+                            admitted: now,
+                            cohort,
+                            prefill_seconds: 0.0,
+                            decode_start: now,
+                            emitted: 0,
+                            text: Utf8Stream::new(),
+                        });
+                        slots_used.push(slot);
                     }
-                    for &(slot, tok) in &out.tokens {
-                        if let Some(a) = active[slot].as_mut() {
-                            let last = out.finished.iter().any(|&(s, _)| s == slot);
-                            emit_token(a, tok, last);
-                        }
-                    }
-                    for (slot, tokens) in out.finished {
-                        if let Some(a) = active[slot].take() {
-                            deliver(a, tokens);
+                    WorkMsg::Decode(dw) => {
+                        // Import the handed-off KV rows into the free slot
+                        // and resume the request mid-lifecycle: Admitted
+                        // and the first Token were already emitted on the
+                        // prefill side. `import_rows` rolls its block
+                        // allocations back on failure, so the session
+                        // stays consistent without a rebuild.
+                        match session.import_rows(slot, &dw.seg, dw.item.max_new, dw.item.stop) {
+                            Ok(()) => {
+                                active[slot] = Some(ActiveItem {
+                                    item: dw.item,
+                                    admitted: dw.admitted,
+                                    cohort: dw.cohort,
+                                    prefill_seconds: dw.prefill_seconds,
+                                    decode_start: Instant::now(),
+                                    emitted: dw.emitted,
+                                    text: dw.text,
+                                });
+                            }
+                            Err(e) => {
+                                let message = format!("kv import failed: {e:#}");
+                                crate::log_error!("replica {rid} {message}");
+                                fail_item(
+                                    dw.item,
+                                    ServiceError::ReplicaFailed { replica: rid, message },
+                                );
+                            }
                         }
                     }
                 }
-                Err(e) => {
-                    let message = format!("prefill failed: {e:#}");
-                    crate::log_error!("replica {rid} {message}");
-                    for slot in slots_used {
-                        if let Some(a) = active[slot].take() {
-                            fail_item(
-                                a.item,
-                                ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
+            }
+            if !reqs.is_empty() {
+                let reqs_len = reqs.len();
+                let t0 = Instant::now();
+                match session.prefill_into_slots(reqs) {
+                    Ok(out) => {
+                        let pf = t0.elapsed().as_secs_f64();
+                        let end = Instant::now();
+                        if adapt_speeds && pf > 0.0 {
+                            // Fold the measured prefill throughput
+                            // (prompt tokens per second) into the
+                            // prefill-side speed EWMA. Hybrid routing
+                            // never reads the prefill view, so the fused
+                            // path is unaffected.
+                            router.observe_phase_rate(
+                                ServePhase::Prefill,
+                                rid,
+                                (reqs_len * prompt_len) as f64 / pf,
                             );
+                        }
+                        for &slot in &slots_used {
+                            if let Some(a) = active[slot].as_mut() {
+                                a.prefill_seconds = pf;
+                                a.decode_start = end;
+                            }
+                        }
+                        for &(slot, tok) in &out.tokens {
+                            if let Some(a) = active[slot].as_mut() {
+                                let last = out.finished.iter().any(|&(s, _)| s == slot);
+                                emit_token(a, tok, last);
+                            }
+                        }
+                        for (slot, tokens) in out.finished {
+                            if let Some(a) = active[slot].take() {
+                                deliver(a, tokens);
+                            }
+                        }
+                        // ---- prefill-only: export and hand off --------
+                        // Every row still active after prefill leaves
+                        // this replica: export its KV rows, free the
+                        // slot, and send the segment to a decode-capable
+                        // replica priced by decode-side speeds. Rows that
+                        // finished at the first token were delivered
+                        // above and have nothing to hand off.
+                        if role == PhaseRole::Prefill {
+                            for &slot in &slots_used {
+                                let Some(a) = active[slot].take() else { continue };
+                                let seg = match session.export_rows(slot) {
+                                    Ok(seg) => seg,
+                                    Err(e) => {
+                                        let message = format!("kv export failed: {e:#}");
+                                        crate::log_error!("replica {rid} {message}");
+                                        fail_item(
+                                            a.item,
+                                            ServiceError::ReplicaFailed {
+                                                replica: rid,
+                                                message: message.clone(),
+                                            },
+                                        );
+                                        rebuild = Some(message);
+                                        continue;
+                                    }
+                                };
+                                if let Err(e) = session.cancel_slot(slot) {
+                                    let message =
+                                        format!("hand-off failed releasing slot {slot}: {e:#}");
+                                    crate::log_error!("replica {rid} {message}");
+                                    rebuild = Some(message);
+                                }
+                                let mut dw = DecodeWork {
+                                    item: a.item,
+                                    seg,
+                                    admitted: a.admitted,
+                                    cohort: a.cohort,
+                                    prefill_seconds: a.prefill_seconds,
+                                    emitted: a.emitted,
+                                    text: a.text,
+                                };
+                                let mut dead: Vec<usize> = Vec::new();
+                                loop {
+                                    let Some(target) =
+                                        router.route_phase(ServePhase::Decode, &dead)
+                                    else {
+                                        fail_item(dw.item, ServiceError::AllReplicasDown);
+                                        break;
+                                    };
+                                    let Some(q) = handoff[target].as_ref() else {
+                                        // Decode-capable per the roles but
+                                        // no sender wired: treat as dead.
+                                        router.complete(target);
+                                        dead.push(target);
+                                        continue;
+                                    };
+                                    match q.send(WorkMsg::Decode(dw)) {
+                                        Ok(()) => {
+                                            // The routed count moved with
+                                            // the segment: release ours.
+                                            router.complete(rid);
+                                            break;
+                                        }
+                                        Err(SendError(WorkMsg::Decode(returned))) => {
+                                            router.complete(target);
+                                            dead.push(target);
+                                            dw = returned;
+                                        }
+                                        Err(SendError(returned)) => {
+                                            // Unreachable (a Decode send
+                                            // returns a Decode); fail the
+                                            // request cleanly.
+                                            router.complete(target);
+                                            fail_item(
+                                                returned.into_item(),
+                                                ServiceError::AllReplicasDown,
+                                            );
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        let message = format!("prefill failed: {e:#}");
+                        crate::log_error!("replica {rid} {message}");
+                        for slot in slots_used {
+                            if let Some(a) = active[slot].take() {
+                                fail_item(
+                                    a.item,
+                                    ServiceError::ReplicaFailed {
+                                        replica: rid,
+                                        message: message.clone(),
+                                    },
+                                );
+                            }
                         }
                     }
                 }
@@ -711,6 +1011,9 @@ fn worker_loop(
         let misses = session.prefix_cache_misses();
         counters.prefix_cache_misses.fetch_add(misses - kv_misses_last, Ordering::Relaxed);
         kv_misses_last = misses;
+        let skips = session.prefill_skips() as u64;
+        counters.prefill_skips.fetch_add(skips - kv_skips_last, Ordering::Relaxed);
+        kv_skips_last = skips;
 
         let comm = session.take_comm();
         if comm != CommStats::default() {
@@ -739,6 +1042,8 @@ mod tests {
             batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(5), continuous: true },
             route: RoutePolicy::LeastLoaded,
             speeds: None,
+            prefill_speeds: None,
+            roles: Vec::new(),
             adapt_speeds: true,
             max_new_tokens: 4,
             stop_token: None,

@@ -32,12 +32,16 @@ Experiments (regenerate the paper's evaluation):
 
 Serving & tools:
   serve [--listen ADDR] [--prompt <text>] [--plan FILE] [--replicas N]
-        [--max-new N] [--artifacts DIR]
+        [--disagg] [--max-new N] [--artifacts DIR]
                      serve the demo model; --plan boots the replicas from
                      a scheduler --emit-plan file (lowered onto the
                      artifact manifest, with plan cost estimates seeding
-                     the router's per-replica speeds), otherwise toy
-                     presets via --replicas.
+                     the router's per-phase speeds and phase roles
+                     driving disaggregated prefill/decode serving),
+                     otherwise toy presets via --replicas. --disagg makes
+                     the toy presets disaggregated: even replicas
+                     prefill-only, odd replicas decode-only (needs
+                     --replicas >= 2).
                      --listen ADDR (e.g. 127.0.0.1:8080; port 0 picks an
                      ephemeral port) runs a long-lived HTTP/1.1 front-end:
                        POST /v1/completions   {"prompt": ..., "max_new": N,
@@ -111,7 +115,7 @@ fn serve(args: &Args) -> Result<()> {
         lower_plan, plan_from_strategy, BatchPolicy, HexGenService, HttpServer, RoutePolicy,
         ServiceConfig, StagePlan,
     };
-    use hexgen::parallelism::DeploymentPlan;
+    use hexgen::parallelism::{DeploymentPlan, PhaseRole};
     use hexgen::runtime::Manifest;
 
     /// Toy replica presets shaped to whatever model the artifacts serve:
@@ -141,7 +145,7 @@ fn serve(args: &Args) -> Result<()> {
         bail!("artifacts not found in {dir:?}; run `make artifacts` first");
     }
     let manifest = Manifest::load(&dir.join("manifest.json"))?;
-    let (plans, speeds) = if let Some(path) = args.get("plan") {
+    let (plans, speeds, prefill_speeds, roles) = if let Some(path) = args.get("plan") {
         let plan = DeploymentPlan::load(std::path::Path::new(path))?;
         let lowered = lower_plan(&plan, &manifest)?;
         println!(
@@ -155,14 +159,26 @@ fn serve(args: &Args) -> Result<()> {
             let tps: Vec<String> = p.iter().map(|sp| sp.tp.to_string()).collect();
             let lay: Vec<String> = p.iter().map(|sp| sp.layer_count.to_string()).collect();
             println!(
-                "  replica {i}: [{}] layers {} routing speed {s:.3}",
+                "  replica {i}: [{}] layers {} role {} routing speed {s:.3}",
                 tps.join(","),
-                lay.join("/")
+                lay.join("/"),
+                lowered.roles.get(i).copied().unwrap_or_default(),
             );
         }
-        (lowered.replicas, Some(lowered.speeds))
+        (lowered.replicas, Some(lowered.speeds), Some(lowered.prefill_speeds), lowered.roles)
     } else {
-        (toy_plans(&manifest, args.get_usize("replicas", 2))?, None)
+        let n = args.get_usize("replicas", 2);
+        let roles = if args.flag("disagg") {
+            if n < 2 {
+                bail!("--disagg needs --replicas >= 2 (a prefill and a decode replica)");
+            }
+            (0..n)
+                .map(|i| if i % 2 == 0 { PhaseRole::Prefill } else { PhaseRole::Decode })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        (toy_plans(&manifest, n)?, None, None, roles)
     };
     println!("starting service with {} replica(s)...", plans.len());
     let service = HexGenService::start(ServiceConfig {
@@ -172,6 +188,8 @@ fn serve(args: &Args) -> Result<()> {
         batch: BatchPolicy::default(),
         route: RoutePolicy::LeastLoaded,
         speeds,
+        prefill_speeds,
+        roles,
         adapt_speeds: true,
         max_new_tokens: args.get_usize("max-new", 16),
         stop_token: None,
@@ -215,6 +233,15 @@ fn serve(args: &Args) -> Result<()> {
         hexgen::util::fmt_bytes(comm.allreduce_bytes),
         comm.pp_sends,
         hexgen::util::fmt_bytes(comm.pp_bytes),
+    );
+    println!(
+        "kv xfer  : {} prefill->decode segment(s) ({})",
+        comm.kv_transfers,
+        hexgen::util::fmt_bytes(comm.kv_transfer_bytes),
+    );
+    println!(
+        "roles    : [{}]",
+        service.roles().iter().map(|r| r.to_string()).collect::<Vec<_>>().join(","),
     );
     println!(
         "routing  : effective replica speeds {:?}",

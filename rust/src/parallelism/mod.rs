@@ -10,7 +10,7 @@ pub mod group;
 pub mod plan;
 
 pub use group::TypeVec;
-pub use plan::{DeploymentPlan, PlanStage, ReplicaPlan};
+pub use plan::{DeploymentPlan, PhaseRole, PlanStage, ReplicaPlan};
 
 use std::collections::BTreeSet;
 

@@ -3,7 +3,7 @@
 //!
 //! The §4 scheduler's output is a [`Deployment`] — per-replica stage TP
 //! degrees, layer counts and device bindings. A [`DeploymentPlan`] is
-//! that assignment σ written down (`util::json`-based, schema v1) so a
+//! that assignment σ written down (`util::json`-based, schema v2) so a
 //! separate serving process can pick it up: `hexgen schedule --emit-plan
 //! plan.json` writes one, `hexgen serve --plan plan.json` lowers it onto
 //! the artifact manifest (see [`crate::coordinator::lowering`]) and
@@ -11,17 +11,21 @@
 //! Eq. 2 end-to-end latency estimate for a reference task, which seeds
 //! the live router's per-replica speed weights.
 //!
-//! Schema (all keys required unless noted):
+//! Schema v2 (all keys required unless noted):
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
 //!   "cluster": "heterogeneous-full-price",
 //!   "model": {"name": "llama2-70b", "layers": 80},
 //!   "fitness": 0.93,                       // optional: scheduler fitness
 //!   "replicas": [
 //!     {
-//!       "cost_estimate": 1.25,             // optional: Eq. 2 seconds
+//!       "phase_role": "hybrid",            // "prefill" | "decode" | "hybrid"
+//!       "cost_estimate": 1.25,             // optional: Eq. 2 seconds, both phases
+//!       "prefill_cost": 0.31,              // optional: Eq. 2 seconds, prefill only
+//!       "decode_cost": 0.94,               // optional: Eq. 2 seconds, decode only
+//!       "kv_block_budget": 256,            // optional: KV blocks this replica holds
 //!       "stages": [
 //!         {"tp": 4, "layers": 48, "devices": [0, 1, 2, 3]},
 //!         {"tp": 2, "layers": 32, "devices": [4, 5]}
@@ -30,6 +34,11 @@
 //!   ]
 //! }
 //! ```
+//!
+//! **Migration.** v1 plans (no `phase_role` / per-phase costs) still
+//! load: every replica migrates to `hybrid` with per-phase costs unset,
+//! which lowers and serves exactly as before disaggregation existed.
+//! Future versions (> 2) are rejected.
 
 use std::path::Path;
 
@@ -42,8 +51,59 @@ use crate::util::json::Json;
 
 use super::{Deployment, Pipeline, Stage};
 
-/// Plan schema version this build reads and writes.
-pub const PLAN_VERSION: u64 = 1;
+/// Plan schema version this build writes (it reads v1 and v2).
+pub const PLAN_VERSION: u64 = 2;
+
+/// Serving phase(s) a replica participates in (HexGen-2 style
+/// disaggregation). `Hybrid` is the pre-v2 behavior: the replica runs
+/// prefill and decode fused, with no KV hand-off.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum PhaseRole {
+    /// Prefill-only: runs prompt prefill, then ships the KV rows to a
+    /// decode-capable partner.
+    Prefill,
+    /// Decode-only: admits imported KV segments and decodes them; never
+    /// receives fresh prompts directly.
+    Decode,
+    /// Fused prefill + decode (the only pre-v2 mode).
+    #[default]
+    Hybrid,
+}
+
+impl PhaseRole {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PhaseRole::Prefill => "prefill",
+            PhaseRole::Decode => "decode",
+            PhaseRole::Hybrid => "hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PhaseRole> {
+        match s {
+            "prefill" => Ok(PhaseRole::Prefill),
+            "decode" => Ok(PhaseRole::Decode),
+            "hybrid" => Ok(PhaseRole::Hybrid),
+            other => bail!("unknown phase_role '{other}' (expected prefill|decode|hybrid)"),
+        }
+    }
+
+    /// Can this replica run prompt prefill?
+    pub fn can_prefill(&self) -> bool {
+        matches!(self, PhaseRole::Prefill | PhaseRole::Hybrid)
+    }
+
+    /// Can this replica run decode steps?
+    pub fn can_decode(&self) -> bool {
+        matches!(self, PhaseRole::Decode | PhaseRole::Hybrid)
+    }
+}
+
+impl std::fmt::Display for PhaseRole {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Reference task for the per-replica Eq. 2 cost estimates — the same
 /// single-request task the simulator uses for its routing estimates.
@@ -63,13 +123,25 @@ pub struct PlanStage {
 }
 
 /// One model replica (an independent pipeline) of a serialized plan.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ReplicaPlan {
     pub stages: Vec<PlanStage>,
     /// Eq. 2 end-to-end latency estimate (seconds) of
     /// [`plan_reference_task`] on this replica; `None` when the cost
     /// model flags the replica memory-infeasible.
     pub cost_estimate: Option<f64>,
+    /// Serving phase(s) this replica runs (v1 plans migrate to
+    /// [`PhaseRole::Hybrid`]).
+    pub phase_role: PhaseRole,
+    /// Eq. 2 prefill-phase latency estimate (seconds) of
+    /// [`plan_reference_task`]; seeds the router's prefill pricing.
+    pub prefill_cost: Option<f64>,
+    /// Eq. 2 decode-phase latency estimate (seconds) of
+    /// [`plan_reference_task`]; seeds the router's decode pricing.
+    pub decode_cost: Option<f64>,
+    /// KV blocks this replica should provision (`None` → the serving
+    /// default: one full sequence per batch slot).
+    pub kv_block_budget: Option<usize>,
 }
 
 impl ReplicaPlan {
@@ -129,6 +201,10 @@ impl DeploymentPlan {
                     })
                     .collect(),
                 cost_estimate: p.cost(&cm, &task, Phase::Both),
+                phase_role: PhaseRole::Hybrid,
+                prefill_cost: p.cost(&cm, &task, Phase::Prefill),
+                decode_cost: p.cost(&cm, &task, Phase::Decode),
+                kv_block_budget: None,
             })
             .collect();
         DeploymentPlan {
@@ -179,10 +255,19 @@ impl DeploymentPlan {
                     self.model_layers
                 );
             }
-            if let Some(c) = r.cost_estimate {
-                if !c.is_finite() || c <= 0.0 {
-                    bail!("replica {i}: cost estimate {c} is not a positive finite number");
+            for (name, c) in [
+                ("cost estimate", r.cost_estimate),
+                ("prefill cost", r.prefill_cost),
+                ("decode cost", r.decode_cost),
+            ] {
+                if let Some(c) = c {
+                    if !c.is_finite() || c <= 0.0 {
+                        bail!("replica {i}: {name} {c} is not a positive finite number");
+                    }
                 }
+            }
+            if r.kv_block_budget == Some(0) {
+                bail!("replica {i}: kv_block_budget must be >= 1 when set");
             }
             for (j, s) in r.stages.iter().enumerate() {
                 if s.layers == 0 {
@@ -223,8 +308,20 @@ impl DeploymentPlan {
             .iter()
             .map(|r| {
                 let mut rep = Json::obj();
+                // phase_role is always emitted — hybrid explicitly, never
+                // implied by omission (satellite: hybrid shown, not omitted).
+                rep.set("phase_role", Json::from(r.phase_role.as_str()));
                 if let Some(c) = r.cost_estimate {
                     rep.set("cost_estimate", Json::from(c));
+                }
+                if let Some(c) = r.prefill_cost {
+                    rep.set("prefill_cost", Json::from(c));
+                }
+                if let Some(c) = r.decode_cost {
+                    rep.set("decode_cost", Json::from(c));
+                }
+                if let Some(b) = r.kv_block_budget {
+                    rep.set("kv_block_budget", Json::from(b));
                 }
                 let stages: Vec<Json> = r
                     .stages
@@ -245,18 +342,42 @@ impl DeploymentPlan {
         root
     }
 
-    /// Parse and validate a plan from its JSON form.
+    /// Parse and validate a plan from its JSON form. Reads the current
+    /// v2 schema and migrates v1 plans (every replica becomes `hybrid`
+    /// with per-phase costs unset); rejects versions beyond v2.
     pub fn from_json(j: &Json) -> Result<DeploymentPlan> {
         let version = j.get("version")?.as_u64()?;
-        if version != PLAN_VERSION {
-            bail!("unsupported plan version {version} (this build reads v{PLAN_VERSION})");
+        if version == 0 || version > PLAN_VERSION {
+            bail!("unsupported plan version {version} (this build reads v1..=v{PLAN_VERSION})");
         }
+        let opt_f64 = |rep: &Json, key: &str, i: usize| -> Result<Option<f64>> {
+            match rep.opt(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => Ok(Some(v.as_f64().with_context(|| format!("replica {i} {key}"))?)),
+            }
+        };
         let model = j.get("model")?;
         let mut replicas = Vec::new();
         for (i, rep) in j.arr("replicas")?.iter().enumerate() {
-            let cost_estimate = match rep.opt("cost_estimate") {
-                None | Some(Json::Null) => None,
-                Some(v) => Some(v.as_f64().with_context(|| format!("replica {i} cost_estimate"))?),
+            let cost_estimate = opt_f64(rep, "cost_estimate", i)?;
+            // v1 → v2 migration: no phase fields existed, every replica
+            // served fused — load as hybrid with per-phase costs unset.
+            let (phase_role, prefill_cost, decode_cost, kv_block_budget) = if version >= 2 {
+                let role = match rep.opt("phase_role") {
+                    None | Some(Json::Null) => PhaseRole::Hybrid,
+                    Some(v) => PhaseRole::parse(
+                        v.as_str().with_context(|| format!("replica {i} phase_role"))?,
+                    )?,
+                };
+                let budget = match rep.opt("kv_block_budget") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_usize().with_context(|| format!("replica {i} kv_block_budget"))?,
+                    ),
+                };
+                (role, opt_f64(rep, "prefill_cost", i)?, opt_f64(rep, "decode_cost", i)?, budget)
+            } else {
+                (PhaseRole::Hybrid, None, None, None)
             };
             let mut stages = Vec::new();
             for (s_idx, st) in rep.arr("stages")?.iter().enumerate() {
@@ -272,7 +393,14 @@ impl DeploymentPlan {
                     devices,
                 });
             }
-            replicas.push(ReplicaPlan { stages, cost_estimate });
+            replicas.push(ReplicaPlan {
+                stages,
+                cost_estimate,
+                phase_role,
+                prefill_cost,
+                decode_cost,
+                kv_block_budget,
+            });
         }
         let plan = DeploymentPlan {
             cluster: j.str("cluster")?.to_string(),
@@ -336,6 +464,13 @@ mod tests {
         assert_eq!(plan.replicas[0].layer_string(), "48/20/12");
         let cost = plan.replicas[0].cost_estimate.expect("feasible replica has a cost");
         assert!(cost.is_finite() && cost > 0.0);
+        // Scheduler output is always hybrid, with both phase costs
+        // captured for the router's per-phase pricing.
+        assert_eq!(plan.replicas[0].phase_role, PhaseRole::Hybrid);
+        let pc = plan.replicas[0].prefill_cost.expect("feasible replica has a prefill cost");
+        let dc = plan.replicas[0].decode_cost.expect("feasible replica has a decode cost");
+        assert!(pc > 0.0 && dc > 0.0);
+        assert!(pc < cost && dc < cost, "each phase costs less than both together");
         assert!(plan.validate().is_ok());
     }
 
@@ -403,8 +538,27 @@ mod tests {
         let c = cluster::case_study();
         let m = ModelSpec::llama2_70b();
         let mut j = DeploymentPlan::from_deployment(&case_deployment(), &c, &m, None).to_json();
-        j.set("version", Json::from(2u64));
+        j.set("version", Json::from(3u64));
         assert!(DeploymentPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn v1_documents_migrate_to_all_hybrid() {
+        let c = cluster::case_study();
+        let m = ModelSpec::llama2_70b();
+        let mut j = DeploymentPlan::from_deployment(&case_deployment(), &c, &m, None).to_json();
+        j.set("version", Json::from(1u64));
+        let back = DeploymentPlan::from_json(&j).unwrap();
+        // Phase fields are v2-only: a v1 document loads as fused hybrid
+        // replicas with per-phase costs unset, even when stray phase
+        // keys are present in the document.
+        for r in &back.replicas {
+            assert_eq!(r.phase_role, PhaseRole::Hybrid);
+            assert_eq!(r.prefill_cost, None);
+            assert_eq!(r.decode_cost, None);
+            assert_eq!(r.kv_block_budget, None);
+        }
+        assert!(back.replicas[0].cost_estimate.is_some());
     }
 
     #[test]

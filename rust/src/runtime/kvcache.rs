@@ -435,6 +435,12 @@ struct PrefixEntry {
     /// for chunk 0). Verified on lookup so an entry can only hit for the
     /// exact full prefix it was inserted under.
     parent: Option<usize>,
+    /// Memoized greedy first token of the prompt whose *final* chunk
+    /// this entry backs ([`PrefixCache::memo_first_token`]). Greedy
+    /// prefill is deterministic, so a later admission whose every chunk
+    /// hits the chain ending at this entry can skip its forward pass
+    /// and emit this token directly.
+    first_token: Option<i32>,
 }
 
 /// Token-prefix → block cache. Keys are chained FNV-1a hashes of the
@@ -534,7 +540,7 @@ impl PrefixCache {
                 self.map.remove(&old_key);
             }
         }
-        if let Some(prev) = self.map.insert(key, PrefixEntry { block, parent }) {
+        if let Some(prev) = self.map.insert(key, PrefixEntry { block, parent, first_token: None }) {
             if prev.block != block && self.by_block[prev.block] == Some(key) {
                 self.by_block[prev.block] = None;
                 self.lens[prev.block] = 0;
@@ -544,6 +550,25 @@ impl PrefixCache {
         self.lens[block] = chunk.len() as u32;
         let start = block * self.block_tokens;
         self.tokens[start..start + chunk.len()].copy_from_slice(chunk);
+    }
+
+    /// Memoize the greedy first token of the prompt whose final chunk
+    /// the entry at `key` backs. No-op if the entry was evicted between
+    /// admission and the prefill pass. A fresh [`Self::insert`] under
+    /// the same key resets the memo, so a stored token always describes
+    /// the entry's current (verified) chain.
+    pub fn memo_first_token(&mut self, key: u64, tok: i32) {
+        if let Some(e) = self.map.get_mut(&key) {
+            e.first_token = Some(tok);
+        }
+    }
+
+    /// The memoized first token for the prompt chain ending at `key`,
+    /// if one was recorded. Only meaningful right after every chunk of
+    /// the prompt hit [`Self::lookup`] — the chained verification is
+    /// what ties `key` to the exact full prompt.
+    pub fn first_token(&self, key: u64) -> Option<i32> {
+        self.map.get(&key).and_then(|e| e.first_token)
     }
 
     /// Invalidate whatever entry `block` backs — called when the pool
@@ -838,5 +863,26 @@ mod tests {
         assert_eq!(c.len(), 1);
         // forget of a block with no entry is a no-op.
         c.forget(3);
+    }
+
+    #[test]
+    fn prefix_cache_first_token_memo_lifecycle() {
+        let mut c = PrefixCache::new(4, 4);
+        let chunk = [1, 2, 3, 4];
+        let k = PrefixCache::chain_key(PREFIX_HASH_SEED, 0, &chunk);
+        c.insert(k, 0, None, &chunk);
+        assert_eq!(c.first_token(k), None, "fresh entry carries no memo");
+        c.memo_first_token(k, 42);
+        assert_eq!(c.first_token(k), Some(42));
+        // Memo on an absent key is a no-op (entry evicted mid-pass).
+        c.memo_first_token(99, 7);
+        assert_eq!(c.first_token(99), None);
+        // Re-inserting the key resets the memo with the new content.
+        c.insert(k, 1, None, &chunk);
+        assert_eq!(c.first_token(k), None, "re-insert resets the memo");
+        // forget drops the memo along with the entry.
+        c.memo_first_token(k, 43);
+        c.forget(1);
+        assert_eq!(c.first_token(k), None);
     }
 }

@@ -166,6 +166,70 @@ impl Tensor {
         Ok(())
     }
 
+    /// Copy `n_rows` cache rows for a span of `head_n` heads between
+    /// rank-4 KV tensors whose *head counts* (`dims[1]`) may differ —
+    /// the cross-layout engine of the disaggregated KV hand-off. A
+    /// prefill replica's per-shard block store holds `heads/tp` heads
+    /// per tensor while a [`KvSegment`](crate::coordinator) carries all
+    /// heads of a layer in one tensor (and the importing replica may
+    /// shard differently), so export/import must address head windows:
+    /// rows `[src_row, src_row + n_rows)` of heads `[src_head, src_head
+    /// + head_n)` in `src_slot` of `src` land at `[dst_row, ..)` of
+    /// heads `[dst_head, ..)` in `dst_slot` of `self`. Only `head_dim`
+    /// must match; slot counts, head counts, and depths may all differ.
+    #[allow(clippy::too_many_arguments)]
+    pub fn copy_cache_head_rows(
+        &mut self,
+        dst_slot: usize,
+        dst_head: usize,
+        dst_row: usize,
+        src: &Tensor,
+        src_slot: usize,
+        src_head: usize,
+        src_row: usize,
+        head_n: usize,
+        n_rows: usize,
+    ) -> Result<()> {
+        if self.dims.len() != 4 || src.dims.len() != 4 || self.dims[3] != src.dims[3] {
+            bail!(
+                "head-windowed cache-row copy between incompatible shapes {:?} and {:?}",
+                self.dims,
+                src.dims
+            );
+        }
+        let (dst_heads, dst_depth, dh) = (self.dims[1], self.dims[2], self.dims[3]);
+        let (src_heads, src_depth) = (src.dims[1], src.dims[2]);
+        if dst_slot >= self.dims[0] || src_slot >= src.dims[0] {
+            bail!(
+                "head-windowed cache-row copy {src_slot}->{dst_slot} out of range ({} src, {} dst slots)",
+                src.dims[0],
+                self.dims[0]
+            );
+        }
+        if dst_head + head_n > dst_heads || src_head + head_n > src_heads {
+            bail!(
+                "head window src {src_head}+{head_n} / dst {dst_head}+{head_n} outside head counts {src_heads} / {dst_heads}"
+            );
+        }
+        if dst_row + n_rows > dst_depth || src_row + n_rows > src_depth {
+            bail!(
+                "cache rows src {src_row}+{n_rows} / dst {dst_row}+{n_rows} outside depths {src_depth} / {dst_depth}"
+            );
+        }
+        if n_rows == 0 || head_n == 0 {
+            return Ok(());
+        }
+        let dst_slot_elems = dst_heads * dst_depth * dh;
+        let src_slot_elems = src_heads * src_depth * dh;
+        let len = n_rows * dh;
+        for h in 0..head_n {
+            let d = dst_slot * dst_slot_elems + (dst_head + h) * dst_depth * dh + dst_row * dh;
+            let s = src_slot * src_slot_elems + (src_head + h) * src_depth * dh + src_row * dh;
+            self.data[d..d + len].copy_from_slice(&src.data[s..s + len]);
+        }
+        Ok(())
+    }
+
     /// Copy rows `[0, n_rows)` of dim-0 slot `src_slot` into `dst_slot`
     /// of the *same* rank-4 tensor, per head — the copy-on-write
     /// duplication of a shared KV block's occupied prefix onto a freshly
@@ -504,6 +568,39 @@ mod tests {
         assert!(scratch.copy_cache_rows_between(0, 0, &blocks, 3, 0, 1).is_err());
         let one_head = Tensor { dims: vec![1, 1, 2, 2], data: vec![0.0; 4] };
         assert!(scratch.copy_cache_rows_between(0, 0, &one_head, 0, 0, 1).is_err());
+    }
+
+    #[test]
+    fn head_windowed_copy_bridges_different_head_counts() {
+        // Shard store: 2 blocks × 2 heads × 2 rows × dh 2 (8 elems/block).
+        // Segment: 1 slot × 4 heads × 3 rows × dh 2 — a full-layer KV
+        // segment assembled from two 2-head shards.
+        let shard = Tensor { dims: vec![2, 2, 2, 2], data: (0..16).map(|i| i as f32).collect() };
+        let mut seg = Tensor { dims: vec![1, 4, 3, 2], data: vec![-1.0; 24] };
+        // Export: shard block 1's 2 rows land at segment heads 2..4, row 0.
+        seg.copy_cache_head_rows(0, 2, 0, &shard, 1, 0, 0, 2, 2).unwrap();
+        // shard block 1 = elems 8..16: head0 rows 8..12, head1 rows 12..16.
+        assert_eq!(seg.data[12..16], [8.0, 9.0, 10.0, 11.0], "segment head 2 rows 0..2");
+        assert_eq!(seg.data[16..18], [-1.0, -1.0], "segment head 2 row 2 untouched");
+        assert_eq!(seg.data[18..22], [12.0, 13.0, 14.0, 15.0], "segment head 3 rows 0..2");
+        assert_eq!(seg.data[0..12], [-1.0; 12], "heads 0..2 untouched");
+        // Import back into a differently-headed store: segment heads 2..4
+        // row 1 → shard block 0 heads 0..2 row 0.
+        let mut back = Tensor { dims: vec![2, 2, 2, 2], data: vec![0.0; 16] };
+        back.copy_cache_head_rows(0, 0, 0, &seg, 0, 2, 1, 2, 1).unwrap();
+        assert_eq!(back.data[0..2], [10.0, 11.0], "head 0 row 0");
+        assert_eq!(back.data[4..6], [14.0, 15.0], "head 1 row 0");
+        // Zero spans are no-ops; bounds violations are surfaced.
+        seg.copy_cache_head_rows(0, 0, 0, &shard, 0, 0, 0, 0, 1).unwrap();
+        seg.copy_cache_head_rows(0, 0, 0, &shard, 0, 0, 0, 1, 0).unwrap();
+        assert!(seg.copy_cache_head_rows(0, 3, 0, &shard, 0, 0, 0, 2, 1).is_err(), "dst heads");
+        assert!(seg.copy_cache_head_rows(0, 0, 0, &shard, 0, 1, 0, 2, 1).is_err(), "src heads");
+        assert!(seg.copy_cache_head_rows(0, 0, 2, &shard, 0, 0, 0, 1, 2).is_err(), "dst depth");
+        assert!(seg.copy_cache_head_rows(0, 0, 0, &shard, 0, 0, 1, 1, 2).is_err(), "src depth");
+        assert!(seg.copy_cache_head_rows(1, 0, 0, &shard, 0, 0, 0, 1, 1).is_err(), "dst slot");
+        assert!(seg.copy_cache_head_rows(0, 0, 0, &shard, 2, 0, 0, 1, 1).is_err(), "src slot");
+        let dh3 = Tensor { dims: vec![1, 1, 1, 3], data: vec![0.0; 3] };
+        assert!(seg.copy_cache_head_rows(0, 0, 0, &dh3, 0, 0, 0, 1, 1).is_err(), "dh mismatch");
     }
 
     #[test]

@@ -7,12 +7,22 @@ use std::path::PathBuf;
 use hexgen::cluster;
 use hexgen::coordinator::{lower_plan, StagePlan};
 use hexgen::model::ModelSpec;
-use hexgen::parallelism::{Deployment, DeploymentPlan, Pipeline, PlanStage, ReplicaPlan, Stage};
+use hexgen::parallelism::{
+    Deployment, DeploymentPlan, PhaseRole, Pipeline, PlanStage, ReplicaPlan, Stage,
+};
 use hexgen::runtime::Manifest;
 use hexgen::util::json::Json;
 
+/// The v1-schema golden: pins the migration path (pre-disaggregation
+/// plans must keep loading, as all-hybrid).
 fn golden_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/plan_golden.json")
+}
+
+/// The v2-schema golden: pins what this build writes (phase roles,
+/// per-phase costs, KV budgets).
+fn golden_v2_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/plan_golden_v2.json")
 }
 
 fn fixture_manifest() -> Manifest {
@@ -22,8 +32,9 @@ fn fixture_manifest() -> Manifest {
     .unwrap()
 }
 
-/// The deployment the golden file serializes: a TP=8 replica and an
-/// 8-stage PP=8 chain on the homogeneous 16×A100 pool.
+/// The deployment the v1 golden file serializes: a TP=8 replica and an
+/// 8-stage PP=8 chain on the homogeneous 16×A100 pool. Phase fields
+/// take their defaults — a v1 document cannot carry them.
 fn golden_plan() -> DeploymentPlan {
     DeploymentPlan {
         cluster: "homogeneous-a100".into(),
@@ -34,29 +45,77 @@ fn golden_plan() -> DeploymentPlan {
             ReplicaPlan {
                 stages: vec![PlanStage { tp: 8, layers: 80, devices: (0..8).collect() }],
                 cost_estimate: Some(0.5),
+                ..Default::default()
             },
             ReplicaPlan {
                 stages: (0..8)
                     .map(|i| PlanStage { tp: 1, layers: 10, devices: vec![8 + i] })
                     .collect(),
                 cost_estimate: Some(2.0),
+                ..Default::default()
+            },
+        ],
+    }
+}
+
+/// The same pool serialized in the v2 schema: a prefill-only TP=8
+/// replica handing KV segments to a decode-only PP=8 chain, with
+/// per-phase Eq. 2 costs and a KV block budget.
+fn golden_plan_v2() -> DeploymentPlan {
+    DeploymentPlan {
+        cluster: "homogeneous-a100".into(),
+        model_name: "llama2-70b".into(),
+        model_layers: 80,
+        fitness: Some(0.875),
+        replicas: vec![
+            ReplicaPlan {
+                stages: vec![PlanStage { tp: 8, layers: 80, devices: (0..8).collect() }],
+                cost_estimate: Some(0.5),
+                phase_role: PhaseRole::Prefill,
+                prefill_cost: Some(0.1),
+                decode_cost: Some(0.4),
+                kv_block_budget: Some(256),
+            },
+            ReplicaPlan {
+                stages: (0..8)
+                    .map(|i| PlanStage { tp: 1, layers: 10, devices: vec![8 + i] })
+                    .collect(),
+                cost_estimate: Some(2.0),
+                phase_role: PhaseRole::Decode,
+                prefill_cost: Some(0.4),
+                decode_cost: Some(0.8),
+                kv_block_budget: None,
             },
         ],
     }
 }
 
 #[test]
-fn golden_file_parses_to_the_expected_plan() {
+fn v1_golden_file_migrates_to_all_hybrid() {
+    // The pre-disaggregation golden keeps loading: every replica comes
+    // back hybrid with per-phase costs unset.
     let plan = DeploymentPlan::load(&golden_path()).unwrap();
     assert_eq!(plan, golden_plan());
+    for r in &plan.replicas {
+        assert_eq!(r.phase_role, PhaseRole::Hybrid);
+        assert_eq!(r.prefill_cost, None);
+        assert_eq!(r.decode_cost, None);
+        assert_eq!(r.kv_block_budget, None);
+    }
 }
 
 #[test]
-fn serialization_matches_the_golden_file() {
+fn v2_golden_file_parses_to_the_expected_plan() {
+    let plan = DeploymentPlan::load(&golden_v2_path()).unwrap();
+    assert_eq!(plan, golden_plan_v2());
+}
+
+#[test]
+fn serialization_matches_the_v2_golden_file() {
     // What this build writes is (JSON-value-)identical to the checked-in
-    // golden file — the schema cannot drift silently.
-    let text = std::fs::read_to_string(golden_path()).unwrap();
-    assert_eq!(golden_plan().to_json(), Json::parse(&text).unwrap());
+    // v2 golden file — the schema cannot drift silently.
+    let text = std::fs::read_to_string(golden_v2_path()).unwrap();
+    assert_eq!(golden_plan_v2().to_json(), Json::parse(&text).unwrap());
 }
 
 #[test]
@@ -78,9 +137,26 @@ fn golden_plan_lowers_onto_the_fixture_manifest() {
     // cost estimates 0.5s vs 2.0s → normalized speeds 1.6 / 0.4.
     assert!((lowered.speeds[0] - 1.6).abs() < 1e-12, "{:?}", lowered.speeds);
     assert!((lowered.speeds[1] - 0.4).abs() < 1e-12, "{:?}", lowered.speeds);
+    // a v1 plan lowers as all-hybrid, with both phases priced from the
+    // fused estimate
+    assert_eq!(lowered.roles, vec![PhaseRole::Hybrid, PhaseRole::Hybrid]);
+    assert_eq!(lowered.prefill_speeds, lowered.speeds);
     // every clamp is reported
     assert!(lowered.adjustments.iter().any(|a| a.contains("tp 8 -> 2")), "{:?}", lowered.adjustments);
     assert!(lowered.adjustments.iter().any(|a| a.contains("merged 8 stages into 2")));
+}
+
+#[test]
+fn v2_golden_lowers_with_roles_and_per_phase_speeds() {
+    let plan = DeploymentPlan::load(&golden_v2_path()).unwrap();
+    let lowered = lower_plan(&plan, &fixture_manifest()).unwrap();
+    assert_eq!(lowered.roles, vec![PhaseRole::Prefill, PhaseRole::Decode]);
+    // decode costs 0.4s vs 0.8s → 1/cost [2.5, 1.25], mean 1.875 → [4/3, 2/3]
+    assert!((lowered.speeds[0] - 4.0 / 3.0).abs() < 1e-12, "{:?}", lowered.speeds);
+    assert!((lowered.speeds[1] - 2.0 / 3.0).abs() < 1e-12, "{:?}", lowered.speeds);
+    // prefill costs 0.1s vs 0.4s → 1/cost [10, 2.5], mean 6.25 → [1.6, 0.4]
+    assert!((lowered.prefill_speeds[0] - 1.6).abs() < 1e-12, "{:?}", lowered.prefill_speeds);
+    assert!((lowered.prefill_speeds[1] - 0.4).abs() < 1e-12, "{:?}", lowered.prefill_speeds);
 }
 
 #[test]

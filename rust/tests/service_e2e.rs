@@ -14,14 +14,25 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, KvPolicy,
+    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, HttpServer, KvPolicy,
     RequestEvent, RoutePolicy, ServiceConfig, ServiceError,
 };
+use hexgen::parallelism::PhaseRole;
 use hexgen::runtime::BackendKind;
 use hexgen::util::json::Json;
 
 fn fixture_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
+}
+
+/// The fixture's golden greedy decode: `(prompt, expected tokens)`.
+fn golden() -> (String, Vec<i32>) {
+    let text = std::fs::read_to_string(fixture_dir().join("golden.json")).unwrap();
+    let g = Json::parse(&text).unwrap();
+    let prompt = g.str("prompt").unwrap().to_string();
+    let want: Vec<i32> =
+        g.arr("greedy_tokens").unwrap().iter().map(|x| x.as_usize().unwrap() as i32).collect();
+    (prompt, want)
 }
 
 /// Two replicas with different asymmetric plans over the 2-layer fixture
@@ -37,6 +48,8 @@ fn two_replica_config(dir: PathBuf) -> ServiceConfig {
         batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(10), continuous: true },
         route: RoutePolicy::LeastLoaded,
         speeds: None,
+        prefill_speeds: None,
+        roles: Vec::new(),
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
@@ -54,6 +67,8 @@ fn one_replica_config(dir: PathBuf, window: Duration) -> ServiceConfig {
         batch: BatchPolicy { max_batch: 2, window, continuous: true },
         route: RoutePolicy::RoundRobin,
         speeds: None,
+        prefill_speeds: None,
+        roles: Vec::new(),
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
@@ -228,6 +243,8 @@ fn startup_fails_cleanly_on_bad_plan() {
         batch: BatchPolicy::default(),
         route: RoutePolicy::RoundRobin,
         speeds: None,
+        prefill_speeds: None,
+        roles: Vec::new(),
         adapt_speeds: true,
         max_new_tokens: 2,
         stop_token: None,
@@ -313,15 +330,7 @@ fn continuous_batching_preserves_greedy_parity() {
     // Serving the golden prompt through the continuous-batching service —
     // co-batched with unrelated traffic of different lengths — must
     // reproduce the ref.py golden greedy tokens exactly.
-    let text = std::fs::read_to_string(fixture_dir().join("golden.json")).unwrap();
-    let g = Json::parse(&text).unwrap();
-    let prompt = g.str("prompt").unwrap().to_string();
-    let want: Vec<i32> = g
-        .arr("greedy_tokens")
-        .unwrap()
-        .iter()
-        .map(|x| x.as_usize().unwrap() as i32)
-        .collect();
+    let (prompt, want) = golden();
 
     let service = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
     let mut golden_handles = Vec::new();
@@ -557,10 +566,12 @@ fn scheduler_plan_lowers_and_serves_end_to_end() {
                     PlanStage { tp: 2, layers: 12, devices: vec![6, 7] },
                 ],
                 cost_estimate: Some(0.5),
+                ..Default::default()
             },
             ReplicaPlan {
                 stages: vec![PlanStage { tp: 1, layers: 80, devices: vec![8] }],
                 cost_estimate: Some(2.0),
+                ..Default::default()
             },
         ],
     };
@@ -585,6 +596,8 @@ fn scheduler_plan_lowers_and_serves_end_to_end() {
         batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(5), continuous: true },
         route: RoutePolicy::LeastLoaded,
         speeds: Some(lowered.speeds),
+        prefill_speeds: Some(lowered.prefill_speeds),
+        roles: lowered.roles,
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
@@ -593,6 +606,153 @@ fn scheduler_plan_lowers_and_serves_end_to_end() {
     .unwrap();
     let c = service.generate("plan served prompt", Some(4)).unwrap();
     assert_eq!(c.tokens.len(), 4);
+    service.shutdown();
+}
+
+#[test]
+fn disaggregated_roles_serve_with_golden_parity_and_kv_transfer() {
+    // The tentpole end-to-end: a mixed-role plan (one prefill-only, one
+    // decode-only replica) serves the golden prompt with greedy-token
+    // parity against the hybrid path, and the KV hand-off is metered.
+    let (prompt, want) = golden();
+    assert!(want.len() >= 2, "golden must decode past the first token");
+
+    // Hybrid baseline: the fused path reproduces the golden tokens.
+    let hybrid = HexGenService::start(two_replica_config(fixture_dir())).unwrap();
+    let base = hybrid.generate(&prompt, Some(want.len())).unwrap();
+    assert_eq!(base.tokens, want, "hybrid baseline diverged from golden");
+    hybrid.shutdown();
+
+    // Same replicas, disaggregated: prefill on the TP=2 stage, decode on
+    // the TP=1 pipeline, KV segments crossing between them.
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.roles = vec![PhaseRole::Prefill, PhaseRole::Decode];
+    let service = HexGenService::start(cfg).unwrap();
+    let handles: Vec<_> = (0..3).map(|_| service.submit(req(&prompt, want.len()))).collect();
+    for r in collect_all(handles, Duration::from_secs(120)) {
+        let c = r.expect("disaggregated request failed");
+        assert_eq!(c.tokens, want, "disaggregated serving diverged from golden greedy tokens");
+        assert_eq!(c.replica, 1, "decode (and delivery) must happen on the decode-only replica");
+    }
+    let comm = service.comm_stats();
+    assert!(comm.kv_transfers >= 3, "every request must ship one KV segment: {comm:?}");
+    assert!(comm.kv_transfer_bytes > 0.0, "KV hand-off bytes must be metered: {comm:?}");
+    let stats = service.stats();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.failed + stats.cancelled, 0);
+    service.shutdown();
+}
+
+#[test]
+fn startup_rejects_unservable_role_mixes() {
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.roles = vec![PhaseRole::Prefill]; // length mismatch
+    assert!(HexGenService::start(cfg).is_err());
+
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.roles = vec![PhaseRole::Prefill, PhaseRole::Prefill]; // no decode partner
+    assert!(HexGenService::start(cfg).is_err());
+
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.roles = vec![PhaseRole::Decode, PhaseRole::Decode]; // no entry point
+    assert!(HexGenService::start(cfg).is_err());
+
+    // ...but an explicit all-hybrid role vector is fine.
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.roles = vec![PhaseRole::Hybrid, PhaseRole::Hybrid];
+    let service = HexGenService::start(cfg).unwrap();
+    let c = service.generate("explicit hybrid roles", Some(3)).unwrap();
+    assert_eq!(c.tokens.len(), 3);
+    service.shutdown();
+}
+
+#[test]
+fn http_surfaces_phase_roles_and_kv_transfers() {
+    use std::io::{Read as _, Write as _};
+
+    fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        write!(conn, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        resp
+    }
+    fn body(resp: &str) -> &str {
+        resp.split("\r\n\r\n").nth(1).expect("response has no body")
+    }
+
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.roles = vec![PhaseRole::Prefill, PhaseRole::Decode];
+    let service = std::sync::Arc::new(HexGenService::start(cfg).unwrap());
+    let c = service.generate("metrics probe", Some(4)).unwrap();
+    assert_eq!(c.tokens.len(), 4);
+
+    let server = HttpServer::serve(service.clone(), "127.0.0.1:0").unwrap();
+    // /metrics: the hand-off shows up under comm.
+    let resp = http_get(server.addr(), "/metrics");
+    let j = Json::parse(body(&resp)).unwrap();
+    let comm = j.get("comm").unwrap();
+    assert!(comm.get("kv_transfer_bytes").unwrap().as_f64().unwrap() > 0.0, "{resp}");
+    assert!(comm.get("kv_transfers_total").unwrap().as_usize().unwrap() >= 1, "{resp}");
+    // /v1/plan: per-replica phase roles and both speed views.
+    let resp = http_get(server.addr(), "/v1/plan");
+    let j = Json::parse(body(&resp)).unwrap();
+    let replicas = j.arr("replicas").unwrap();
+    assert_eq!(replicas[0].str("phase_role").unwrap(), "prefill", "{resp}");
+    assert_eq!(replicas[1].str("phase_role").unwrap(), "decode", "{resp}");
+    assert_eq!(j.arr("prefill_speeds").unwrap().len(), 2, "{resp}");
+    server.shutdown();
+}
+
+#[test]
+fn shared_prefix_probe_skips_prefill_compute() {
+    // A full-prefix cache hit with a memoized first token admits without
+    // a prefill forward pass. Prefix entries live only while their
+    // blocks do, so the probe must overlap the anchor: submit the same
+    // prompt while the anchor is still decoding (its prompt blocks are
+    // live and its first token is memoized). The fixture decodes fast,
+    // so a single attempt can race the anchor to retirement; any skip
+    // within the attempts proves the path — and greedy parity must hold
+    // on every attempt, skipped or computed.
+    let service =
+        HexGenService::start(one_replica_config(fixture_dir(), Duration::from_millis(2))).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut skipped = false;
+    for _ in 0..10 {
+        let anchor = service.submit(req("memoized prefix probe", 8));
+        // Wait for the anchor's first token: prefill is done, the memo
+        // is set, and the prompt blocks stay live while it decodes.
+        loop {
+            match anchor.next_event().unwrap() {
+                RequestEvent::Token { .. } => break,
+                ev if ev.is_terminal() => panic!("terminal before first token: {ev:?}"),
+                _ => {}
+            }
+        }
+        let probe = service.submit(req("memoized prefix probe", 4));
+        let probe = probe.wait_deadline(deadline).unwrap();
+        let anchor = anchor.wait_deadline(deadline).unwrap();
+        assert_eq!(anchor.tokens.len(), 8);
+        assert_eq!(
+            probe.tokens,
+            anchor.tokens[..4],
+            "shared-prefix probe must reproduce the anchor's greedy tokens"
+        );
+        // Stats publish at step boundaries: poll briefly per attempt.
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(500) {
+            if service.stats().prefill_skips > 0 {
+                skipped = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        if skipped {
+            break;
+        }
+    }
+    assert!(skipped, "10 overlapping probes never skipped prefill: {:?}", service.stats());
     service.shutdown();
 }
 
