@@ -11,6 +11,8 @@ artifacts:
 fixture:
 	cd python && python -m compile.make_ref_fixture \
 		--out-dir ../rust/tests/fixtures/ref_demo
+	cd python && python -m compile.make_ref_fixture \
+		--out-dir ../rust/tests/fixtures/ref_demo --draft
 
 build:
 	cargo build --release

@@ -11,7 +11,21 @@ mirrors), and writes:
 * ``golden.json`` — prompt tokens, post-prefill logits, and the greedy
   token sequence the Rust side must reproduce.
 
-Usage: ``python -m compile.make_ref_fixture --out-dir ../rust/tests/fixtures/ref_demo``
+``--draft`` instead emits a **draft** companion model into
+``<out-dir>/draft/`` for the speculative-decoding tests: a 1-layer
+truncation of the target (layer 0 + embeddings + head, same vocabulary /
+prompt length / context), plus a golden that pins the draft's own greedy
+stream and — per (prompt, k) case — the exact propose/verify acceptance
+pattern a `SpeculativeSession` over the two models must reproduce
+(round count, proposed and accepted totals). The simulation here
+teacher-forces the draft on the target's greedy stream, which is exactly
+the state the Rust session maintains via rollback + commit, so the
+patterns are bit-honest, not approximations.
+
+Usage::
+
+    python -m compile.make_ref_fixture --out-dir ../rust/tests/fixtures/ref_demo
+    python -m compile.make_ref_fixture --out-dir ../rust/tests/fixtures/ref_demo --draft
 """
 
 import argparse
@@ -37,8 +51,31 @@ CFG = M.DemoConfig(
     batch_buckets=(1, 2),
 )
 
+# The draft is a 1-layer truncation of the target: same vocabulary,
+# prompt length and max_seq (hard requirements of SpeculativeSession),
+# same width so it can reuse the target's layer-0 / embedding / head
+# weights verbatim.
+DRAFT_CFG = M.DemoConfig(
+    layers=1,
+    hidden=16,
+    heads=2,
+    vocab=256,
+    prompt_len=8,
+    max_seq=16,
+    tp_degrees=(1,),
+    batch_buckets=(1, 2),
+)
+
 PROMPT = "hexgen parity"
 DECODE_STEPS = 6
+
+# Prompts the speculative golden covers. The set is chosen so that the
+# acceptance patterns across SPEC_KS empirically include full accepts
+# (m == k_eff > 0), partial accepts (0 < m < k_eff) and zero accepts
+# (m == 0 with k_eff > 0) — asserted below so a regenerated fixture
+# cannot silently lose coverage of a rollback path.
+SPEC_PROMPTS = (PROMPT, "the quick brown fox", "speculative decode")
+SPEC_KS = (1, 2, 3)
 
 
 def encode(text: str, prompt_len: int) -> list:
@@ -86,46 +123,105 @@ def lm_head(x, params):
     return rmsnorm_ref(x[:, -1, :], params["final_ln"]) @ params["lm_head"]
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out-dir", default="../rust/tests/fixtures/ref_demo")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    os.makedirs(args.out_dir, exist_ok=True)
+def margin_of(logits):
+    srt = np.sort(logits)
+    return float(srt[-1] - srt[-2])
 
-    cfg = CFG
-    params = M.init_params(args.seed, cfg)
 
-    tokens = encode(PROMPT, cfg.prompt_len)
-    x = M.embed(jnp.asarray([tokens], jnp.int32), params["embed"])
-    caches = []
-    for i in range(cfg.layers):
-        x, kc, vc = layer_forward_prefill(x, params, i, cfg)
-        caches.append((kc, vc))
-    logits = lm_head(x, params)
-    prefill_logits = np.asarray(logits[0], np.float64)
+class Decoder:
+    """Prefill-then-feed incremental decode state for one prompt.
 
-    out_tokens = [int(np.argmax(prefill_logits))]
-    margins = [float(np.sort(prefill_logits)[-1] - np.sort(prefill_logits)[-2])]
-    for step in range(1, DECODE_STEPS):
-        pos = cfg.prompt_len + step - 1
-        x = M.embed(jnp.asarray([[out_tokens[-1]]], jnp.int32), params["embed"])
+    ``feed`` consumes one generated token (the j-th fed token lands at
+    KV position ``prompt_len + j``, mirroring the Rust decode loop) and
+    returns the next-token logits as float64.
+    """
+
+    def __init__(self, params, cfg, prompt_tokens):
+        self.params, self.cfg = params, cfg
+        x = M.embed(jnp.asarray([prompt_tokens], jnp.int32), params["embed"])
+        self.caches = []
         for i in range(cfg.layers):
-            kc, vc = caches[i]
-            x, kc, vc = layer_forward_decode(x, params, i, kc, vc, pos, cfg)
-            caches[i] = (kc, vc)
-        step_logits = np.asarray(lm_head(x, params)[0], np.float64)
-        out_tokens.append(int(np.argmax(step_logits)))
-        srt = np.sort(step_logits)
-        margins.append(float(srt[-1] - srt[-2]))
+            x, kc, vc = layer_forward_prefill(x, params, i, cfg)
+            self.caches.append((kc, vc))
+        self.prefill_logits = np.asarray(lm_head(x, params)[0], np.float64)
+        self.consumed = 0
 
-    # Greedy decisions must be robust to f32 reimplementation noise.
-    assert min(margins) > 1e-3, f"argmax margin too small: {margins}"
+    def feed(self, tok):
+        pos = self.cfg.prompt_len + self.consumed
+        x = M.embed(jnp.asarray([[tok]], jnp.int32), self.params["embed"])
+        for i in range(self.cfg.layers):
+            kc, vc = self.caches[i]
+            x, kc, vc = layer_forward_decode(x, self.params, i, kc, vc, pos, self.cfg)
+            self.caches[i] = (kc, vc)
+        self.consumed += 1
+        return np.asarray(lm_head(x, self.params)[0], np.float64)
 
-    aot.write_weights(os.path.join(args.out_dir, "weights.bin"), params, cfg)
+
+def greedy_decode(params, cfg, prompt_tokens, steps):
+    """Prefill + `steps` greedy tokens; returns (tokens, margins, prefill_logits)."""
+    d = Decoder(params, cfg, prompt_tokens)
+    logits = d.prefill_logits
+    out = [int(np.argmax(logits))]
+    margins = [margin_of(logits)]
+    for _ in range(1, steps):
+        logits = d.feed(out[-1])
+        out.append(int(np.argmax(logits)))
+        margins.append(margin_of(logits))
+    return out, margins, d.prefill_logits
+
+
+def draft_propose(params, cfg, prompt_tokens, committed, k):
+    """Draft proposals for one speculative round, teacher-forced.
+
+    ``committed`` is the emitted (target) stream so far; the draft has
+    consumed everything but the last token, which is its pending input —
+    exactly the state SpeculativeSession maintains through rollback and
+    commit. Returns (proposals, argmax margins).
+    """
+    d = Decoder(params, cfg, prompt_tokens)
+    for t in committed[:-1]:
+        d.feed(t)
+    props, margins = [], []
+    cur = committed[-1]
+    for _ in range(k):
+        logits = d.feed(cur)
+        cur = int(np.argmax(logits))
+        props.append(cur)
+        margins.append(margin_of(logits))
+    return props, margins
+
+
+def simulate_spec(dparams, dcfg, prompt_tokens, target_tokens, k, max_new):
+    """Replay the spec_round protocol against a known target stream.
+
+    Greedy verification means every committed token equals the target's
+    own greedy token, so the target side needs no re-execution: round
+    boundaries and acceptance counts depend only on where the draft's
+    proposals diverge from ``target_tokens``. Returns (rounds, margins)
+    with one ``{"k_eff", "m"}`` entry per round.
+    """
+    g, rounds, margins = 1, [], []
+    while g < max_new:
+        k_eff = min(k, max_new - g - 1)
+        if k_eff > 0:
+            props, ms = draft_propose(dparams, dcfg, prompt_tokens, target_tokens[:g], k_eff)
+            margins += ms
+        else:
+            props = []
+        m = 0
+        while m < k_eff and props[m] == target_tokens[g + m]:
+            m += 1
+        rounds.append({"k_eff": k_eff, "m": m})
+        g += m + 1
+    return rounds, margins
+
+
+def write_model(out_dir, name, params, cfg, seed):
+    """weights.bin + manifest.json, exactly like a real artifacts dir."""
+    aot.write_weights(os.path.join(out_dir, "weights.bin"), params, cfg)
     manifest = {
         "model": {
-            "name": "ref-demo-2l-16h",
+            "name": name,
             "layers": cfg.layers,
             "hidden": cfg.hidden,
             "heads": cfg.heads,
@@ -138,19 +234,38 @@ def main():
         "tp_degrees": list(cfg.tp_degrees),
         "batch_buckets": list(cfg.batch_buckets),
         "weight_order": aot.weight_order(cfg),
-        "seed": args.seed,
+        "seed": seed,
         "artifacts": {
-            name: {
-                "file": f"{name}.hlo.txt",
+            aname: {
+                "file": f"{aname}.hlo.txt",
                 "params": [aot.shape_entry(n, s) for n, s in params_spec],
                 "outputs": outputs,
             }
-            for name, _, params_spec, outputs in aot.artifact_defs(cfg)
+            for aname, _, params_spec, outputs in aot.artifact_defs(cfg)
         },
     }
-    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
         json.dump(manifest, fh, indent=1, sort_keys=True)
 
+
+def draft_params_from(params):
+    """Truncate the target to one layer: layer 0 + embeddings + head."""
+    keep = ("embed", "final_ln", "lm_head")
+    return {
+        k: v
+        for k, v in params.items()
+        if k in keep or k.startswith("layers.0.")
+    }
+
+
+def emit_target(out_dir, params, seed):
+    tokens = encode(PROMPT, CFG.prompt_len)
+    out_tokens, margins, prefill_logits = greedy_decode(params, CFG, tokens, DECODE_STEPS)
+
+    # Greedy decisions must be robust to f32 reimplementation noise.
+    assert min(margins) > 1e-3, f"argmax margin too small: {margins}"
+
+    write_model(out_dir, "ref-demo-2l-16h", params, CFG, seed)
     golden = {
         "prompt": PROMPT,
         "prompt_tokens": tokens,
@@ -158,12 +273,101 @@ def main():
         "greedy_tokens": out_tokens,
         "argmax_margins": margins,
     }
-    with open(os.path.join(args.out_dir, "golden.json"), "w") as fh:
+    with open(os.path.join(out_dir, "golden.json"), "w") as fh:
         json.dump(golden, fh, indent=1)
-    print(f"wrote fixture to {args.out_dir}")
+    print(f"wrote fixture to {out_dir}")
     print(f"prompt tokens : {tokens}")
     print(f"greedy tokens : {out_tokens}")
     print(f"min margin    : {min(margins):.4f}")
+
+
+def emit_draft(out_dir, params, seed):
+    dparams = draft_params_from(params)
+    all_margins = []
+
+    # The draft's own greedy stream over the canonical prompt — pins the
+    # draft model solo against the Rust reference backend.
+    tokens = encode(PROMPT, DRAFT_CFG.prompt_len)
+    dtokens, dmargins, dprefill = greedy_decode(dparams, DRAFT_CFG, tokens, DECODE_STEPS)
+    all_margins += dmargins
+
+    # Per (prompt, k): the target stream and the acceptance pattern a
+    # SpeculativeSession must reproduce round for round.
+    cases = []
+    for prompt in SPEC_PROMPTS:
+        ptoks = encode(prompt, CFG.prompt_len)
+        ttokens, tmargins, _ = greedy_decode(params, CFG, ptoks, DECODE_STEPS)
+        all_margins += tmargins
+        for k in SPEC_KS:
+            rounds, smargins = simulate_spec(
+                dparams, DRAFT_CFG, ptoks, ttokens, k, DECODE_STEPS
+            )
+            all_margins += smargins
+            cases.append(
+                {
+                    "prompt": prompt,
+                    "k": k,
+                    "max_new": DECODE_STEPS,
+                    "target_tokens": ttokens,
+                    "rounds": rounds,
+                    "rounds_total": len(rounds),
+                    "proposed": sum(r["k_eff"] for r in rounds),
+                    "accepted": sum(r["m"] for r in rounds),
+                }
+            )
+
+    # Every greedy decision the Rust tests replay must be f32-robust.
+    assert min(all_margins) > 1e-3, f"argmax margin too small: {min(all_margins)}"
+
+    # The golden must cover every acceptance shape or the rollback paths
+    # go untested: full accepts, partial accepts, zero accepts.
+    shapes = [(r["k_eff"], r["m"]) for c in cases for r in c["rounds"]]
+    has_full = any(k > 0 and m == k for k, m in shapes)
+    has_partial = any(0 < m < k for k, m in shapes)
+    has_zero = any(k > 0 and m == 0 for k, m in shapes)
+    assert has_full and has_partial and has_zero, (
+        f"acceptance coverage incomplete (full={has_full}, partial={has_partial}, "
+        f"zero={has_zero}); adjust SPEC_PROMPTS: {shapes}"
+    )
+
+    write_model(out_dir, "ref-demo-draft-1l-16h", dparams, DRAFT_CFG, seed)
+    golden = {
+        "prompt": PROMPT,
+        "prompt_tokens": tokens,
+        "prefill_logits": [float(v) for v in dprefill],
+        "greedy_tokens": dtokens,
+        "argmax_margins": dmargins,
+        "spec_cases": cases,
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as fh:
+        json.dump(golden, fh, indent=1)
+    print(f"wrote draft fixture to {out_dir}")
+    print(f"draft greedy tokens : {dtokens}")
+    for c in cases:
+        pat = " ".join(f"{r['m']}/{r['k_eff']}" for r in c["rounds"])
+        print(f"  k={c['k']} {c['prompt']!r:>24}: rounds [{pat}]")
+    print(f"min margin          : {min(all_margins):.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../rust/tests/fixtures/ref_demo")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--draft",
+        action="store_true",
+        help="emit the speculative-decoding draft fixture into <out-dir>/draft/",
+    )
+    args = ap.parse_args()
+
+    params = M.init_params(args.seed, CFG)
+    if args.draft:
+        out_dir = os.path.join(args.out_dir, "draft")
+        os.makedirs(out_dir, exist_ok=True)
+        emit_draft(out_dir, params, args.seed)
+    else:
+        os.makedirs(args.out_dir, exist_ok=True)
+        emit_target(args.out_dir, params, args.seed)
 
 
 if __name__ == "__main__":

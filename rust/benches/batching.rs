@@ -49,10 +49,13 @@ fn run(continuous: bool) -> RunStats {
         batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(1), continuous },
         route: RoutePolicy::RoundRobin,
         speeds: None,
+        prefill_speeds: None,
+        roles: Vec::new(),
         adapt_speeds: true,
         max_new_tokens: 8,
         stop_token: None,
         kv: Default::default(),
+        spec: None,
     };
     let service = HexGenService::start(cfg).unwrap();
 

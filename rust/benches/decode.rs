@@ -26,6 +26,16 @@
 //! prompt re-admitted while a live row still holds its blocks must skip
 //! the prefill forward pass and beat a cold admission.
 //!
+//! A speculative-decoding section pairs a 1-layer draft with the
+//! 4-layer target, both carrying "successor-chain" weights (the argmax
+//! provably walks `t → t+1`, so draft/target agreement — and thus the
+//! acceptance rate — is pinned at 1.0 by construction while every
+//! matmul still runs at full shape). It reports net tokens/s vs plain
+//! greedy on the same target, the acceptance rate, and per-round
+//! p50/p99, asserting token parity and a > 1x net speedup at tp=2,
+//! where one batched verify pass amortizes the per-step gather/scatter
+//! and TP thread-spawn overheads over k+1 positions.
+//!
 //! Configs sweep `tp ∈ {1, 2} × bucket ∈ {1, 4, 8}`; the headline number
 //! is `(tp=2, bucket=8)`. Results are printed and written as JSON to
 //! `BENCH_decode.json` at the repository root (override with `--out`),
@@ -413,6 +423,192 @@ fn measure_prefill_skip(exec: &PipelineExecutor, iters: usize) -> PrefillSkipSta
     PrefillSkipStats { cold_ttft_ms: cold * 1e3, skip_ttft_ms: skip * 1e3, skips }
 }
 
+// ---- speculative decoding: draft-propose / target-verify ---------------
+
+const SPEC_K: usize = 3;
+const SPEC_DRAFT_LAYERS: usize = 1;
+const SPEC_DRAFT_HIDDEN: usize = 16;
+const SPEC_DRAFT_HEADS: usize = 2;
+const SPEC_DRAFT_FFN: usize = 64;
+
+/// ±1 code vector for token `t`, length `h` (a multiple of 16): the
+/// 8-bit token id and its bit-complement, tiled. Every 16-lane group
+/// holds exactly 8 positive lanes, so all codes share one norm, and
+/// distinct tokens differ in ≥ 2 lanes per group — `code(a)·code(a)`
+/// beats every `code(a)·code(b)` by the Hamming gap.
+fn successor_code(t: usize, h: usize) -> Vec<f32> {
+    (0..h)
+        .map(|i| {
+            let bit = (t >> (i % 8)) & 1;
+            let bit = if i % 16 < 8 { bit } else { 1 - bit };
+            if bit == 1 {
+                0.1
+            } else {
+                -0.1
+            }
+        })
+        .collect()
+}
+
+/// A model that provably decodes the successor chain `t → t+1 (mod V)`:
+/// `embed[t] = code(t+1)`, `lm_head[:, j] = code(j)`, every layer weight
+/// zero (attention and MLP contribute exactly 0 to the residual stream
+/// while still paying their full matmul/attention cost), norms all ones
+/// (RMSNorm only rescales, preserving the argmax). Target and draft
+/// built this way follow the *same* chain, so speculative acceptance is
+/// exactly 1.0 — the bench isolates the per-round cost structure rather
+/// than draft quality.
+fn successor_model(
+    name: &str,
+    layers: usize,
+    hidden: usize,
+    heads: usize,
+    ffn: usize,
+    tps: &[usize],
+) -> (Manifest, Arc<WeightStore>) {
+    let head_dim = hidden / heads;
+    let tps_json: Vec<String> = tps.iter().map(|t| t.to_string()).collect();
+    let text = format!(
+        r#"{{
+          "model": {{"name":"{name}","layers":{layers},"hidden":{hidden},
+                    "heads":{heads},"vocab":{VOCAB},"prompt_len":{PROMPT_LEN},
+                    "max_seq":{MAX_SEQ},"head_dim":{head_dim},"ffn":{ffn}}},
+          "tp_degrees":[{}],
+          "batch_buckets":[1,4,8],
+          "weight_order":[],
+          "artifacts":{{}}
+        }}"#,
+        tps_json.join(",")
+    );
+    let manifest = Manifest::parse(&text).expect("speculative manifest");
+    let mut ws = WeightStore::default();
+    let mut embed = Tensor { dims: vec![VOCAB, hidden], data: vec![0.0; VOCAB * hidden] };
+    let mut lm = Tensor { dims: vec![hidden, VOCAB], data: vec![0.0; hidden * VOCAB] };
+    for t in 0..VOCAB {
+        let succ = successor_code((t + 1) % VOCAB, hidden);
+        embed.data[t * hidden..(t + 1) * hidden].copy_from_slice(&succ);
+        let own = successor_code(t, hidden);
+        for (i, v) in own.iter().enumerate() {
+            lm.data[i * VOCAB + t] = *v;
+        }
+    }
+    ws.insert("embed", embed);
+    ws.insert("final_ln", ones(vec![hidden]));
+    ws.insert("lm_head", lm);
+    let zeros = |dims: Vec<usize>| {
+        let n: usize = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    };
+    for layer in 0..layers {
+        ws.insert(format!("layers.{layer}.ln1"), ones(vec![hidden]));
+        ws.insert(format!("layers.{layer}.ln2"), ones(vec![hidden]));
+        for &tp in tps {
+            let hs = heads / tp * head_dim;
+            let fs = ffn / tp;
+            for rank in 0..tp {
+                for (w, dims) in [
+                    ("wq", vec![hidden, hs]),
+                    ("wk", vec![hidden, hs]),
+                    ("wv", vec![hidden, hs]),
+                    ("wo", vec![hs, hidden]),
+                    ("w1", vec![hidden, fs]),
+                    ("w2", vec![fs, hidden]),
+                ] {
+                    ws.insert(WeightStore::shard_name(layer, w, tp, rank), zeros(dims));
+                }
+            }
+        }
+    }
+    (manifest, Arc::new(ws))
+}
+
+struct SpecRunStats {
+    plain_tok_s: f64,
+    spec_tok_s: f64,
+    speedup: f64,
+    acceptance: f64,
+    rounds: u64,
+    round_p50_ms: f64,
+    round_p99_ms: f64,
+}
+
+/// Plain greedy decode vs a speculative session over the same batch and
+/// the same target model; the streams must be token-identical (the
+/// parity contract), and net tokens/s counts only true decode tokens
+/// (prefill excluded on both paths).
+fn measure_speculative(
+    target: &PipelineExecutor,
+    draft: &PipelineExecutor,
+    bucket: usize,
+    max_new: usize,
+    k: usize,
+) -> SpecRunStats {
+    use hexgen::coordinator::SpeculativeSession;
+    let m = target.manifest().model.clone();
+    let reqs = || -> Vec<(usize, SlotRequest)> {
+        (0..bucket)
+            .map(|i| {
+                let prompt: Vec<i32> =
+                    (0..m.prompt_len).map(|j| ((i * 31 + j * 7) % 255 + 1) as i32).collect();
+                (i, SlotRequest { prompt, max_new, stop: None })
+            })
+            .collect()
+    };
+
+    let mut plain_tokens: Vec<Vec<i32>> = vec![Vec::new(); bucket];
+    let mut session = target.new_session(bucket).expect("plain session");
+    let out = session.prefill_into_slots(reqs()).expect("plain prefill");
+    for &(s, t) in &out.tokens {
+        plain_tokens[s].push(t);
+    }
+    let t0 = Instant::now();
+    while session.active() > 0 {
+        let out = session.decode_step().expect("plain step");
+        for &(s, t) in &out.tokens {
+            plain_tokens[s].push(t);
+        }
+    }
+    let plain_wall = t0.elapsed().as_secs_f64();
+
+    let mut spec_tokens: Vec<Vec<i32>> = vec![Vec::new(); bucket];
+    let mut spec = SpeculativeSession::new(
+        target.new_session(bucket).expect("target session"),
+        draft.new_session(bucket).expect("draft session"),
+        k,
+    )
+    .expect("speculative session");
+    let out = spec.admit(reqs()).expect("spec admit");
+    for &(s, t) in &out.tokens {
+        spec_tokens[s].push(t);
+    }
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while spec.active() > 0 {
+        let t = Instant::now();
+        let out = spec.spec_round().expect("spec round");
+        samples.push(t.elapsed().as_secs_f64());
+        for &(s, t) in &out.tokens {
+            spec_tokens[s].push(t);
+        }
+    }
+    let spec_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        spec_tokens, plain_tokens,
+        "speculative decode must be token-identical to plain greedy"
+    );
+    let stats = spec.stats();
+    let decoded = bucket * (max_new - 1);
+    SpecRunStats {
+        plain_tok_s: decoded as f64 / plain_wall,
+        spec_tok_s: decoded as f64 / spec_wall,
+        speedup: plain_wall / spec_wall,
+        acceptance: stats.acceptance_rate(),
+        rounds: stats.rounds,
+        round_p50_ms: percentile(&samples, 0.50) * 1e3,
+        round_p99_ms: percentile(&samples, 0.99) * 1e3,
+    }
+}
+
 fn stats_json(s: &RunStats) -> Json {
     let mut j = Json::obj();
     j.set("decode_tok_s", Json::from(s.decode_tok_s))
@@ -554,6 +750,74 @@ fn main() {
         sk.skips
     );
 
+    // ---- speculative decoding (draft k=3, successor-chain models) ------
+    hexgen::util::bench::group(&format!(
+        "speculative decoding: {SPEC_DRAFT_LAYERS}-layer h{SPEC_DRAFT_HIDDEN} draft proposing \
+         k={SPEC_K} vs plain greedy on the {LAYERS}-layer target"
+    ));
+    let spec_new = steps;
+    let (dmanifest, dweights) = successor_model(
+        "bench-spec-draft",
+        SPEC_DRAFT_LAYERS,
+        SPEC_DRAFT_HIDDEN,
+        SPEC_DRAFT_HEADS,
+        SPEC_DRAFT_FFN,
+        &[1],
+    );
+    let draft_exec = PipelineExecutor::with_backend(
+        Box::new(ReferenceBackend::with_weights(dmanifest, dweights)),
+        plan_from_strategy(&[1], &[SPEC_DRAFT_LAYERS]).expect("draft plan"),
+    )
+    .expect("draft executor");
+    let mut spec_configs = Vec::new();
+    let mut spec_headline = 0.0;
+    for tp in TPS {
+        let (tmanifest, tweights) =
+            successor_model("bench-spec-target", LAYERS, HIDDEN, HEADS, FFN, &TPS);
+        let target_exec = PipelineExecutor::with_backend(
+            Box::new(ReferenceBackend::with_weights(tmanifest, tweights)),
+            plan_from_strategy(&[tp], &[LAYERS]).expect("target plan"),
+        )
+        .expect("target executor");
+        // Warm both paths (first-touch allocation, thread pools).
+        let _ = measure_speculative(&target_exec, &draft_exec, 8, 8, SPEC_K);
+        let sp = measure_speculative(&target_exec, &draft_exec, 8, spec_new, SPEC_K);
+        println!(
+            "tp{tp} b8: {:>9.0} tok/s speculative vs {:>9.0} plain ({:>5.2}x)  \
+             acceptance {:.2}  {} rounds  round p50 {:.3}ms p99 {:.3}ms",
+            sp.spec_tok_s,
+            sp.plain_tok_s,
+            sp.speedup,
+            sp.acceptance,
+            sp.rounds,
+            sp.round_p50_ms,
+            sp.round_p99_ms
+        );
+        // The successor-chain construction pins draft/target agreement;
+        // anything below ~1.0 means the verify or rollback path drifted.
+        assert!(sp.acceptance >= 0.9, "acceptance collapsed: {:.3}", sp.acceptance);
+        if tp == 2 {
+            spec_headline = sp.speedup;
+            assert!(
+                sp.speedup > 1.0,
+                "speculative decoding must beat plain greedy at tp=2: {:.3}x",
+                sp.speedup
+            );
+        }
+        let mut j = Json::obj();
+        j.set("tp", Json::from(tp))
+            .set("bucket", Json::from(8usize))
+            .set("plain_tok_s", Json::from(sp.plain_tok_s))
+            .set("spec_tok_s", Json::from(sp.spec_tok_s))
+            .set("net_speedup", Json::from(sp.speedup))
+            .set("acceptance_rate", Json::from(sp.acceptance))
+            .set("rounds", Json::from(sp.rounds))
+            .set("round_p50_ms", Json::from(sp.round_p50_ms))
+            .set("round_p99_ms", Json::from(sp.round_p99_ms));
+        spec_configs.push(j);
+    }
+    println!("speculative headline (tp=2, b=8): {spec_headline:.2}x net tokens/s over plain greedy");
+
     let mut model = Json::obj();
     model
         .set("layers", Json::from(LAYERS))
@@ -615,6 +879,19 @@ fn main() {
         .set("headline", headline_j)
         .set("paged_kv", paged)
         .set("disaggregated_serving", disagg_j);
+    let mut spec_j = Json::obj();
+    spec_j
+        .set("k", Json::from(SPEC_K))
+        .set("max_new", Json::from(spec_new))
+        .set(
+            "draft",
+            Json::from(format!(
+                "{SPEC_DRAFT_LAYERS}l-h{SPEC_DRAFT_HIDDEN} successor-chain (tp=1)"
+            )),
+        )
+        .set("configs", Json::Arr(spec_configs))
+        .set("net_speedup", Json::from(spec_headline));
+    j.set("speculative", spec_j);
     std::fs::write(&out_path, format!("{j}\n")).expect("write BENCH_decode.json");
     println!("wrote {}", out_path.display());
 }

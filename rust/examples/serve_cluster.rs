@@ -54,10 +54,13 @@ fn main() -> Result<()> {
         batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(15), continuous: true },
         route: RoutePolicy::LeastLoaded,
         speeds: None,
+        prefill_speeds: None,
+        roles: Vec::new(),
         adapt_speeds: true,
         max_new_tokens: max_new,
         stop_token: None,
         kv: Default::default(),
+        spec: None,
     };
     println!("starting HexGen service: 2 replicas ([2,1] 4/2 and [1,1] 3/3)...");
     let t_start = Instant::now();

@@ -15,6 +15,7 @@ pub mod pipeline;
 pub mod router;
 pub mod server;
 pub mod service;
+pub mod speculative;
 
 pub use api::{
     collect_all, Completion, GenRequest, RequestEvent, RequestHandle, RequestId, ServiceError,
@@ -24,11 +25,12 @@ pub use collective::{add_residual, all_reduce_sum, CommStats};
 pub use lowering::{lower_plan, LoweredPlan};
 pub use pipeline::{
     argmax_rows, plan_from_strategy, DecodeSession, GenerationResult, KvSegment,
-    PipelineExecutor, SlotRequest, StagePlan, StepOutcome,
+    PipelineExecutor, SlotRequest, SlotView, StagePlan, StepOutcome,
 };
 pub use router::{RoutePolicy, Router, ServePhase};
 pub use server::HttpServer;
 pub use service::{HexGenService, ServiceConfig, ServiceStats};
+pub use speculative::{SpecPolicy, SpecStats, SpeculativeSession};
 
 // Convenience: the KV sizing policy lives with the block pool in
 // `runtime::kvcache`, but service configurations are assembled from this

@@ -718,6 +718,91 @@ impl PipelineExecutor {
         add_residual(&mut h, &reduced);
         Ok(h)
     }
+
+    /// One verify layer for speculative decoding: [`Self::layer_decode`]
+    /// over a `[b, s, h]` proposal batch, writing each row's `s` new KV
+    /// entries in place through
+    /// [`ExecutionBackend::execute_attn_score_inplace`]. `positions[row]`
+    /// is the row's cache depth before the call — where its first new
+    /// entry lands. Shard fan-out, rank-order reduction, and the
+    /// residual adds mirror the decode layer exactly, so a verify pass
+    /// is bit-identical to running the proposal token-by-token.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_score(
+        &self,
+        x: &Tensor,
+        si: usize,
+        li: usize,
+        bidx: usize,
+        positions: &[i32],
+        caches: &mut [(Tensor, Tensor)],
+        comm: &mut CommStats,
+    ) -> Result<Tensor> {
+        let tp = self.stages[si].tp;
+        let stage_names = &self.names.stages[si];
+        let layer_names = &stage_names.layers[li];
+        let attn_name = stage_names.attn_decode[bidx].as_str();
+        let uniform = positions.windows(2).all(|w| w[0] == w[1]);
+
+        let exec_attn = |be: &dyn ExecutionBackend,
+                         rank: usize,
+                         k_cache: &mut Tensor,
+                         v_cache: &mut Tensor|
+         -> Result<Tensor> {
+            let sh = &layer_names.shards[rank];
+            let pos = if uniform {
+                DecodePositions::Scalar(positions[0])
+            } else {
+                DecodePositions::PerRow(positions)
+            };
+            let w = AttnShardWeights {
+                ln1: &layer_names.ln1,
+                wq: &sh.wq,
+                wk: &sh.wk,
+                wv: &sh.wv,
+                wo: &sh.wo,
+            };
+            be.execute_attn_score_inplace(attn_name, x, k_cache, v_cache, pos, &w)
+        };
+        let partials: Vec<Tensor> = match self.sync_backend_for(tp) {
+            Some(be) => {
+                let joined: Result<Vec<_>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = caches
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(rank, (k_cache, v_cache))| {
+                            let run = &exec_attn;
+                            scope.spawn(move || run(be, rank, k_cache, v_cache))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| match h.join() {
+                            Ok(res) => res,
+                            Err(payload) => Err(Self::shard_panic_error(payload.as_ref())),
+                        })
+                        .collect()
+                });
+                joined?
+            }
+            None => caches
+                .iter_mut()
+                .enumerate()
+                .map(|(rank, (k_cache, v_cache))| {
+                    exec_attn(self.backend.as_ref(), rank, k_cache, v_cache)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        // Same clone-free residual as layer_decode: reduce, then add x
+        // into the reduction's buffer.
+        let mut h = all_reduce_sum(partials, comm);
+        add_residual(&mut h, x);
+
+        let mlp = self.mlp_partials(&h, tp, layer_names, stage_names.mlp_decode[bidx].as_str())?;
+        let reduced = all_reduce_sum(mlp, comm);
+        add_residual(&mut h, &reduced);
+        Ok(h)
+    }
 }
 
 /// Result of one session step — an admission
@@ -789,6 +874,23 @@ struct SlotState {
     next: i32,
     /// Cache depth = where the next KV entry is written.
     pos: usize,
+}
+
+/// Read-only snapshot of one occupied slot's decode state
+/// ([`DecodeSession::slot_view`]) — what a speculation driver
+/// coordinating two sessions needs to size a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotView {
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// The row's generation limit (already clamped to the cache).
+    pub max_new: usize,
+    /// The row's stop token, if any.
+    pub stop: Option<i32>,
+    /// Next input token for the coming step.
+    pub next: i32,
+    /// Cache depth = where the next KV entry is written.
+    pub pos: usize,
 }
 
 /// Persistent step-granular decode state over a [`PipelineExecutor`]:
@@ -869,6 +971,11 @@ impl<'a> DecodeSession<'a> {
     /// Cache slots in this session (an artifact bucket).
     pub fn bucket(&self) -> usize {
         self.bucket
+    }
+
+    /// The artifact catalog + model architecture this session serves.
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        self.exec.backend.manifest()
     }
 
     /// Rows currently decoding.
@@ -1363,6 +1470,271 @@ impl<'a> DecodeSession<'a> {
         self.scratch_positions = positions;
         Ok(out)
         // lint: hot-path-end
+    }
+
+    /// Score `tokens` for the row in `slot` in **one batched forward** —
+    /// the target-model half of a speculative round. The caller feeds
+    /// the row's pending input token followed by the draft's proposals;
+    /// the pass writes their KV entries at `pos .. pos + tokens.len()`
+    /// (scattered into the row's tail blocks exactly as that many
+    /// sequential decode steps would) and returns the greedy (argmax)
+    /// token **per fed position** — what plain decode would have emitted
+    /// after each of the fed tokens. Unlike [`Self::decode_step`] it
+    /// commits no token state: the caller compares the returned tokens
+    /// against the proposals, rolls the cache back past the rejected
+    /// tail ([`Self::truncate_rows`]), and commits the accepted tokens
+    /// ([`Self::commit_tokens`]).
+    pub fn verify_step(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<i32>> {
+        let exec = self.exec;
+        let info = &exec.backend.manifest().model;
+        let s = tokens.len();
+        if s == 0 {
+            bail!("verify step needs at least one token");
+        }
+        let Some(st) = self.slots.get(slot).and_then(Option::as_ref) else {
+            bail!("verify step on free slot {slot}");
+        };
+        let pos = st.pos;
+        if pos + s > info.max_seq {
+            bail!("verifying {s} tokens at depth {pos} overruns max_seq {}", info.max_seq);
+        }
+        let t0 = Instant::now();
+        let sb = exec.backend.manifest().bucket_for(1)?.min(self.bucket);
+        let bidx = exec.names.bucket_idx(sb)?;
+        let active = [slot];
+        let ci = self.gather_step_caches(&active, sb)?;
+
+        // Row layout: the verified row is scratch row 0; pad rows mirror
+        // its position so a uniform batch keeps the scalar-position
+        // artifact signature available.
+        let mut tok_batch = std::mem::take(&mut self.scratch_tokens);
+        tok_batch.clear();
+        tok_batch.resize(sb * s, tokenizer::PAD);
+        tok_batch[..s].copy_from_slice(tokens);
+        let mut positions = std::mem::take(&mut self.scratch_positions);
+        positions.clear();
+        positions.resize(sb, pos as i32);
+
+        let mut x = exec.embed(&tok_batch, sb, s, false, bidx)?;
+        for (si, stage) in exec.stages.iter().enumerate() {
+            for li in 0..stage.layer_count {
+                let caches = &mut self.step_caches[ci].caches[si][li];
+                x = exec.layer_score(&x, si, li, bidx, &positions, caches, &mut self.comm)?;
+            }
+            if si + 1 < exec.stages.len() {
+                record_pp_send(&x, &mut self.comm);
+            }
+        }
+        self.scatter_score_rows(slot, ci, pos, s)?;
+
+        // Per-position greedy tokens: the lm_head artifact reads only
+        // the last position of its input, so slice each position out as
+        // a [sb, 1, h] view. (A [sb*s, 1, h] reshape would break the
+        // artifact's bucket check.)
+        let h = info.hidden;
+        let mut out = Vec::with_capacity(s);
+        let mut xi = Tensor { dims: vec![sb, 1, h], data: vec![0.0; sb * h] };
+        for i in 0..s {
+            for bi in 0..sb {
+                let src = (bi * s + i) * h;
+                xi.data[bi * h..(bi + 1) * h].copy_from_slice(&x.data[src..src + h]);
+            }
+            let logits = exec.lm_head(&xi, false, bidx)?;
+            out.push(argmax_rows(&logits, info.vocab)[0]);
+        }
+        match self.slots.get_mut(slot).and_then(Option::as_mut) {
+            Some(st) => st.pos += s,
+            None => bail!("internal: verified slot {slot} lost its state mid-step"),
+        }
+        self.decode_steps += 1;
+        self.decode_seconds += t0.elapsed().as_secs_f64();
+        self.scratch_tokens = tok_batch;
+        self.scratch_positions = positions;
+        Ok(out)
+    }
+
+    /// Scatter the `s` KV entries a verify pass appended for `slot`
+    /// (scratch row 0 of scratch `ci`, positions `pos .. pos + s`) back
+    /// into the row's tail blocks, planning each append through the
+    /// block table exactly as sequential decode steps would — fresh
+    /// blocks at block boundaries, copy-on-write on a shared tail.
+    /// Residency advances to `(slot, pos + s)`.
+    fn scatter_score_rows(&mut self, slot: usize, ci: usize, pos: usize, s: usize) -> Result<()> {
+        let DecodeSession { step_caches, block_store, tables, pool, .. } = self;
+        let scratch = &mut step_caches[ci];
+        // lint: hot-path — the verify scatter loop: O(1) bookkeeping per
+        // appended position plus in-place block copies, no allocation.
+        for i in 0..s {
+            let p = pos + i;
+            let op = plan_append(pool, &mut tables[slot], p)?;
+            let (block, block_row) = match op {
+                AppendOp::Write { block, row: block_row } => (block, block_row),
+                AppendOp::CowWrite { src, block, copy_rows, row: block_row } => {
+                    for stage_caches in block_store.iter_mut() {
+                        for layer in stage_caches.iter_mut() {
+                            for (bk, bv) in layer.iter_mut() {
+                                bk.copy_cache_rows_within(block, src, copy_rows)?;
+                                bv.copy_cache_rows_within(block, src, copy_rows)?;
+                            }
+                        }
+                    }
+                    (block, block_row)
+                }
+            };
+            for (si, stage_caches) in block_store.iter_mut().enumerate() {
+                for (li, layer) in stage_caches.iter_mut().enumerate() {
+                    for (shard, (bk, bv)) in layer.iter_mut().enumerate() {
+                        let (sk, sv) = &scratch.caches[si][li][shard];
+                        bk.copy_cache_rows_between(block, block_row, sk, 0, p, 1)?;
+                        bv.copy_cache_rows_between(block, block_row, sv, 0, p, 1)?;
+                    }
+                }
+            }
+        }
+        scratch.resident[0] = Some((slot, pos + s));
+        Ok(())
+        // lint: hot-path-end
+    }
+
+    /// Roll the row in `slot` back to cache depth `depth` (its next KV
+    /// entry will land at `depth`): the paged-KV rollback half of a
+    /// speculative round, discarding the entries of rejected proposal
+    /// tokens. Tail blocks past the kept region pop back to the free
+    /// list with the row's own block budget restored
+    /// ([`BlockTable::pop_tail_reclaim`] →
+    /// [`BlockPool::reclaim_reservation`]), so the row can still grow to
+    /// its admission-time worst case; the kept tail block's deeper rows
+    /// stay in place as dead bytes (attention reads `[0, pos)`) that the
+    /// next append overwrites. Shared prompt blocks are never popped:
+    /// `depth` is at or past the prompt, and generated-region blocks are
+    /// private to the row (appends copy-on-write a shared tail before
+    /// writing, and generated blocks are never published to the prefix
+    /// cache).
+    ///
+    /// Token state (`generated`, `next`) is the caller's to fix up via
+    /// [`Self::commit_tokens`]; this method moves only the cache.
+    pub fn truncate_rows(&mut self, slot: usize, depth: usize) -> Result<()> {
+        let prompt_len = self.exec.backend.manifest().model.prompt_len;
+        let Some(st) = self.slots.get(slot).and_then(Option::as_ref) else {
+            bail!("truncating free slot {slot}");
+        };
+        if depth < prompt_len || depth > st.pos {
+            bail!("truncating slot {slot} to depth {depth} outside [{prompt_len}, {}]", st.pos);
+        }
+        let keep = depth.div_ceil(self.block_tokens);
+        let DecodeSession { pool, prefix, tables, step_caches, slots, .. } = self;
+        let table = &mut tables[slot];
+        // lint: hot-path — the rollback loop: pop → release → reclaim
+        // per rejected tail block, O(1) bookkeeping each.
+        while table.len() > keep {
+            let Some(block) = table.pop_tail_reclaim() else {
+                bail!("internal: rollback of slot {slot} popped an empty table");
+            };
+            if pool.release(block)? {
+                prefix.forget(block);
+            }
+            pool.reclaim_reservation(1)?;
+        }
+        // Scratch rows holding this slot deeper than `depth` still
+        // byte-match rows [0, depth) (gathers and appends never touch
+        // shallower rows), so clamp residency instead of dropping it —
+        // the next gather at this depth is then a no-op.
+        for sc in step_caches.iter_mut() {
+            for r in sc.resident.iter_mut() {
+                if let Some((rslot, rd)) = *r {
+                    if rslot == slot && rd > depth {
+                        *r = Some((slot, depth));
+                    }
+                }
+            }
+        }
+        // lint: hot-path-end
+        match slots[slot].as_mut() {
+            Some(st) => st.pos = depth,
+            None => bail!("internal: truncated slot {slot} lost its state"),
+        }
+        Ok(())
+    }
+
+    /// Replace the row's speculated token tail: truncate `generated` to
+    /// its first `keep` tokens and extend it with `accepted` — the
+    /// commit half of a speculative round, once the cache has been
+    /// rolled back / advanced to `prompt_len + keep + accepted.len() -
+    /// 1` (enforced here; a mismatch means the driver desynchronized
+    /// tokens from cache). The last accepted token becomes the row's
+    /// next input. Rows that hit their `max_new` or end on their stop
+    /// token retire exactly like [`Self::decode_step`] rows: blocks
+    /// released, slot freed, full sequence returned. `None` means the
+    /// row is still decoding.
+    pub fn commit_tokens(
+        &mut self,
+        slot: usize,
+        keep: usize,
+        accepted: &[i32],
+    ) -> Result<Option<Vec<i32>>> {
+        let prompt_len = self.exec.backend.manifest().model.prompt_len;
+        let done = {
+            let Some(st) = self.slots.get_mut(slot).and_then(Option::as_mut) else {
+                bail!("committing tokens into free slot {slot}");
+            };
+            if accepted.is_empty() {
+                bail!("a speculative round must commit at least one token");
+            }
+            if keep > st.generated.len() {
+                bail!("keeping {keep} of {} generated tokens", st.generated.len());
+            }
+            st.generated.truncate(keep);
+            st.generated.extend_from_slice(accepted);
+            let last = accepted[accepted.len() - 1];
+            st.next = last;
+            if st.pos != prompt_len + st.generated.len() - 1 {
+                bail!(
+                    "slot {slot} cache depth {} disagrees with {} committed tokens",
+                    st.pos,
+                    st.generated.len()
+                );
+            }
+            st.generated.len() >= st.max_new || Some(last) == st.stop
+        };
+        if done {
+            let Some(st) = self.slots.get_mut(slot).and_then(Option::take) else {
+                bail!("internal: committed slot {slot} lost its state");
+            };
+            self.release_slot_blocks(slot)?;
+            return Ok(Some(st.generated));
+        }
+        Ok(None)
+    }
+
+    /// Read-only snapshot of the row in `slot`, or `None` when the slot
+    /// is free.
+    pub fn slot_view(&self, slot: usize) -> Option<SlotView> {
+        self.slots.get(slot).and_then(Option::as_ref).map(|st| SlotView {
+            generated: st.generated.len(),
+            max_new: st.max_new,
+            stop: st.stop,
+            next: st.next,
+            pos: st.pos,
+        })
+    }
+
+    /// Overwrite the row's pending token — its last generated token and
+    /// next step input — without touching the cache. A speculation
+    /// driver uses it right after admitting the draft row to align the
+    /// draft's prefill token with the target's (the emitted stream is
+    /// the target's; the draft merely proposes continuations of it). The
+    /// rewritten token's KV entry has not been written yet (`pos` still
+    /// points at it), so no cache state is invalidated.
+    pub fn force_next(&mut self, slot: usize, token: i32) -> Result<()> {
+        let Some(st) = self.slots.get_mut(slot).and_then(Option::as_mut) else {
+            bail!("forcing next token on free slot {slot}");
+        };
+        let Some(last) = st.generated.last_mut() else {
+            bail!("forcing next token on slot {slot} with no generated tokens");
+        };
+        *last = token;
+        st.next = token;
+        Ok(())
     }
 
     /// Cancel the request occupying `slot`: drop its decode state,

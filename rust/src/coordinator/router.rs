@@ -34,6 +34,19 @@ use std::sync::Arc;
 /// EWMA smoothing factor for measured decode throughput.
 const SPEED_EWMA_ALPHA: f64 = 0.2;
 
+/// Routing decisions a replica's measured EWMA survives without a fresh
+/// sample before it starts decaying back toward the plan seed. An idle
+/// replica stops reporting, and its last measurement — possibly taken
+/// under transient load — would otherwise price it forever.
+const SPEED_STALE_AFTER: u32 = 64;
+/// Fraction a stale measurement moves toward its seed-calibrated anchor
+/// on each further routing decision.
+const SPEED_STALE_DECAY: f64 = 0.05;
+/// Once a stale measurement is within this fraction of its anchor it is
+/// dropped entirely, so the replica prices by its plan seed again (and a
+/// later sample restarts the EWMA from scratch).
+const SPEED_STALE_SNAP: f64 = 0.01;
+
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
@@ -66,28 +79,41 @@ struct PhaseSpeeds {
     /// EWMA of measured throughput; `None` until the replica reports
     /// its first measurement.
     measured: Vec<Option<f64>>,
+    /// Routing decisions since the replica's last sample; drives the
+    /// staleness decay of [`Self::tick`].
+    stale: Vec<u32>,
 }
 
 impl PhaseSpeeds {
     fn new(replicas: usize) -> PhaseSpeeds {
-        PhaseSpeeds { seed: vec![1.0; replicas], measured: vec![None; replicas] }
+        PhaseSpeeds {
+            seed: vec![1.0; replicas],
+            measured: vec![None; replicas],
+            stale: vec![0; replicas],
+        }
     }
 
-    /// Effective speeds: the measured EWMA where available, otherwise
-    /// the seed calibrated onto the measured scale (mean measured/seed
-    /// ratio over measured replicas).
-    fn effective(&self) -> Vec<f64> {
+    /// Mean measured/seed ratio over measured replicas: the scale that
+    /// maps relative plan seeds onto absolute measured rates.
+    fn calibration(&self) -> f64 {
         let ratios: Vec<f64> = self
             .measured
             .iter()
             .zip(&self.seed)
             .filter_map(|(m, &s)| m.map(|m| m / s))
             .collect();
-        let calib = if ratios.is_empty() {
+        if ratios.is_empty() {
             1.0
         } else {
             ratios.iter().sum::<f64>() / ratios.len() as f64
-        };
+        }
+    }
+
+    /// Effective speeds: the measured EWMA where available, otherwise
+    /// the seed calibrated onto the measured scale (mean measured/seed
+    /// ratio over measured replicas).
+    fn effective(&self) -> Vec<f64> {
+        let calib = self.calibration();
         self.measured.iter().zip(&self.seed).map(|(m, &s)| m.unwrap_or(s * calib)).collect()
     }
 
@@ -96,6 +122,33 @@ impl PhaseSpeeds {
             None => rate,
             Some(prev) => (1.0 - SPEED_EWMA_ALPHA) * prev + SPEED_EWMA_ALPHA * rate,
         });
+        self.stale[replica] = 0;
+    }
+
+    /// Age every measurement by one routing decision. A replica that has
+    /// not reported for [`SPEED_STALE_AFTER`] decisions decays toward
+    /// its seed-calibrated anchor (what [`Self::effective`] would price
+    /// an *unmeasured* replica at), and snaps back to pure seed pricing
+    /// once it gets close — so a replica idled long enough routes by the
+    /// plan estimate again instead of by a measurement taken under a
+    /// load pattern that no longer exists.
+    fn tick(&mut self) {
+        let calib = self.calibration();
+        for i in 0..self.measured.len() {
+            let Some(m) = self.measured[i] else { continue };
+            self.stale[i] = self.stale[i].saturating_add(1);
+            if self.stale[i] <= SPEED_STALE_AFTER {
+                continue;
+            }
+            let anchor = self.seed[i] * calib;
+            let next = (1.0 - SPEED_STALE_DECAY) * m + SPEED_STALE_DECAY * anchor;
+            if (next - anchor).abs() <= SPEED_STALE_SNAP * anchor.abs() {
+                self.measured[i] = None;
+                self.stale[i] = 0;
+            } else {
+                self.measured[i] = Some(next);
+            }
+        }
     }
 }
 
@@ -261,6 +314,17 @@ impl Router {
     }
 
     fn route_filtered(&self, excluded: &[usize], phase: Option<ServePhase>) -> Option<usize> {
+        // Every routing decision ages the priced phase's measurements:
+        // replicas that keep routing without reporting decay back toward
+        // their plan seeds ([`PhaseSpeeds::tick`]). The phase-less path
+        // prices by decode-side speeds, so it ages the decode side.
+        {
+            let mut st = self.state();
+            match phase {
+                Some(ServePhase::Prefill) => st.prefill.tick(),
+                _ => st.decode.tick(),
+            }
+        }
         let n = self.outstanding.len();
         let roles = match phase {
             Some(_) => self.state().roles.clone(),
@@ -535,6 +599,62 @@ mod tests {
         assert_eq!(r.phase_speeds(ServePhase::Prefill), vec![3.0, 1.0]);
         assert_eq!(r.phase_speeds(ServePhase::Decode), vec![3.0, 1.0]);
         assert_eq!(r.roles(), vec![PhaseRole::Hybrid; 2], "default roles are hybrid");
+    }
+
+    #[test]
+    fn stale_measurements_decay_back_to_plan_seeds() {
+        // Idle-then-resume: replica 1 reports one anomalously slow sample
+        // (say, a transient load spike) and then goes quiet while the
+        // router keeps deciding and replica 0 keeps reporting. Without
+        // decay the stale 1 tok/s would price replica 1 forever.
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_speeds(vec![2.0, 1.0]);
+        r.observe_rate(0, 20.0);
+        r.observe_rate(1, 1.0);
+        assert!((r.speeds()[1] - 1.0).abs() < 1e-9, "{:?}", r.speeds());
+
+        // Within the staleness window the measurement is untouched.
+        for _ in 0..SPEED_STALE_AFTER {
+            let p = r.route();
+            r.complete(p);
+        }
+        assert!((r.speeds()[1] - 1.0).abs() < 1e-9, "decayed too early: {:?}", r.speeds());
+
+        // Past the window it decays toward the seed-calibrated anchor
+        // (seed 1 × the 20/2 measured scale of replica 0 = 10 tok/s)
+        // and eventually snaps back to pure seed pricing.
+        for _ in 0..500 {
+            let p = r.route();
+            r.complete(p);
+            r.observe_rate(0, 20.0); // replica 0 stays fresh
+        }
+        let s = r.speeds();
+        assert!((s[0] - 20.0).abs() < 1e-9, "fresh replica must not decay: {s:?}");
+        assert!((s[1] - 10.0).abs() < 1e-9, "stale replica must revert to its seed: {s:?}");
+
+        // Resume: a fresh sample takes over immediately and restarts the
+        // EWMA from the new rate, not from the decayed remnant.
+        r.observe_rate(1, 30.0);
+        assert!((r.speeds()[1] - 30.0).abs() < 1e-9, "{:?}", r.speeds());
+    }
+
+    #[test]
+    fn staleness_is_tracked_per_phase() {
+        // Prefill routing decisions must not age decode measurements:
+        // a decode-side sample stays live through any number of
+        // prefill-side picks.
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        r.set_speeds(vec![2.0, 1.0]);
+        r.observe_rate(1, 1.0);
+        for _ in 0..(SPEED_STALE_AFTER + 200) {
+            let p = r.route_phase(ServePhase::Prefill, &[]).unwrap();
+            r.complete(p);
+        }
+        assert!(
+            (r.speeds()[1] - 1.0).abs() < 1e-9,
+            "prefill decisions aged the decode EWMA: {:?}",
+            r.speeds()
+        );
     }
 
     #[test]

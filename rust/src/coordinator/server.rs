@@ -285,6 +285,11 @@ fn metrics_json(service: &HexGenService) -> Json {
         .set("prefix_cache_hits", Json::from(stats.prefix_cache_hits))
         .set("prefix_cache_misses", Json::from(stats.prefix_cache_misses))
         .set("prefill_skips", Json::from(stats.prefill_skips));
+    let mut spec = Json::obj();
+    spec.set("rounds", Json::from(stats.spec_rounds))
+        .set("proposed", Json::from(stats.spec_proposed))
+        .set("accepted", Json::from(stats.spec_accepted))
+        .set("acceptance_rate", Json::from(stats.spec_acceptance_rate()));
     let c = service.comm_stats();
     let mut comm = Json::obj();
     comm.set("allreduce_ops", Json::from(c.allreduce_ops))
@@ -298,6 +303,7 @@ fn metrics_json(service: &HexGenService) -> Json {
         .set("router", router)
         .set("requests", requests)
         .set("kv", kv)
+        .set("spec", spec)
         .set("comm", comm);
     j
 }

@@ -53,8 +53,12 @@ use super::api::{
 use super::batcher::{AdmissionQueue, BatchPolicy, WaitOutcome};
 use super::collective::CommStats;
 
-use super::pipeline::{KvSegment, PipelineExecutor, SlotRequest, StagePlan};
+use super::pipeline::{
+    plan_from_strategy, DecodeSession, KvSegment, PipelineExecutor, SlotRequest, StagePlan,
+    StepOutcome,
+};
 use super::router::{RoutePolicy, Router, ServePhase};
+use super::speculative::{SpecPolicy, SpecStats, SpeculativeSession};
 
 /// How often an idle worker wakes from its request-channel wait to sweep
 /// cancelled requests out of its queue.
@@ -100,6 +104,14 @@ pub struct ServiceConfig {
     /// granularity and pool capacity); the default sizes the pool to
     /// hold every slot at full depth.
     pub kv: KvPolicy,
+    /// Opt-in speculative decoding: every replica pairs its session with
+    /// a draft-model session ([`SpeculativeSession`]) proposing
+    /// [`SpecPolicy::k`] tokens per round, verified by the replica's own
+    /// model in one batched forward. Emitted streams stay token-identical
+    /// to plain decoding; only the per-token cost changes. `None` (the
+    /// default) serves exactly as before. Not yet compatible with
+    /// disaggregated phase `roles`.
+    pub spec: Option<SpecPolicy>,
 }
 
 /// Monotonic lifetime counters of a running service (`GET /metrics`).
@@ -124,6 +136,25 @@ pub struct ServiceStats {
     /// Admissions served without a prefill forward pass (full-prefix
     /// cache hit with a memoized first token) across all replicas.
     pub prefill_skips: u64,
+    /// Speculative propose/verify rounds completed across all replicas
+    /// (0 unless [`ServiceConfig::spec`] is set).
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all speculative rounds.
+    pub spec_proposed: u64,
+    /// Proposed tokens the target model accepted into the stream.
+    pub spec_accepted: u64,
+}
+
+impl ServiceStats {
+    /// Fraction of proposed draft tokens accepted (0 when nothing was
+    /// proposed — e.g. speculation disabled).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -138,6 +169,9 @@ struct Counters {
     prefix_cache_hits: AtomicU64,
     prefix_cache_misses: AtomicU64,
     prefill_skips: AtomicU64,
+    spec_rounds: AtomicU64,
+    spec_proposed: AtomicU64,
+    spec_accepted: AtomicU64,
 }
 
 impl Counters {
@@ -153,6 +187,9 @@ impl Counters {
             prefix_cache_hits: self.prefix_cache_hits.load(Ordering::Relaxed),
             prefix_cache_misses: self.prefix_cache_misses.load(Ordering::Relaxed),
             prefill_skips: self.prefill_skips.load(Ordering::Relaxed),
+            spec_rounds: self.spec_rounds.load(Ordering::Relaxed),
+            spec_proposed: self.spec_proposed.load(Ordering::Relaxed),
+            spec_accepted: self.spec_accepted.load(Ordering::Relaxed),
         }
     }
 
@@ -302,6 +339,36 @@ impl HexGenService {
         let roles: Vec<PhaseRole> = (0..cfg.replicas.len())
             .map(|i| cfg.roles.get(i).copied().unwrap_or_default())
             .collect();
+        // Speculative decoding: load the draft model once here (failing
+        // fast, sharing the mmap'd weights across workers) and ship it to
+        // every replica worker alongside the policy.
+        let spec: Option<(SpecPolicy, Manifest, Arc<WeightStore>)> = match &cfg.spec {
+            None => None,
+            Some(policy) => {
+                if policy.k == 0 {
+                    bail!("speculative k must be >= 1");
+                }
+                if roles.iter().any(|&r| r != PhaseRole::Hybrid) {
+                    bail!("speculative decoding is not supported with disaggregated phase roles");
+                }
+                let dm = Manifest::load(&policy.draft_model.join("manifest.json"))?;
+                let dw = Arc::new(WeightStore::load(&policy.draft_model.join("weights.bin"))?);
+                let (t, d) = (&manifest.model, &dm.model);
+                if t.vocab != d.vocab || t.prompt_len != d.prompt_len || t.max_seq != d.max_seq {
+                    bail!(
+                        "draft model disagrees with target on (vocab, prompt_len, max_seq): \
+                         ({}, {}, {}) vs ({}, {}, {})",
+                        d.vocab,
+                        d.prompt_len,
+                        d.max_seq,
+                        t.vocab,
+                        t.prompt_len,
+                        t.max_seq
+                    );
+                }
+                Some((policy.clone(), dm, dw))
+            }
+        };
 
         let counters = Arc::new(Counters::default());
         let (comm_tx, comm_rx) = channel::<CommStats>();
@@ -343,10 +410,11 @@ impl HexGenService {
             let counters = counters.clone();
             let comm_tx = comm_tx.clone();
             let ready_tx = ready_tx.clone();
+            let spec = spec.clone();
             workers.push(std::thread::spawn(move || {
                 worker_loop(
                     rid, backend, dir, manifest, weights, plan, batch, kv, adapt_speeds, role,
-                    handoff, rx, router, counters, comm_tx, ready_tx,
+                    spec, handoff, rx, router, counters, comm_tx, ready_tx,
                 )
             }));
         }
@@ -540,6 +608,181 @@ fn session_bucket(buckets: &[usize], max_batch: usize) -> usize {
         .unwrap_or(1)
 }
 
+/// The session a replica worker serves with: a plain [`DecodeSession`],
+/// or a [`SpeculativeSession`] pairing it with a draft model. Both
+/// expose the same step-boundary surface (admit, step, cancel, KV
+/// gauges), so the worker loop is indifferent — a speculative "step" is
+/// one propose/verify round that may emit several tokens per row.
+enum ServeSession<'a> {
+    Plain(DecodeSession<'a>),
+    Spec(SpeculativeSession<'a>),
+}
+
+impl<'a> ServeSession<'a> {
+    fn active(&self) -> usize {
+        match self {
+            ServeSession::Plain(s) => s.active(),
+            ServeSession::Spec(s) => s.active(),
+        }
+    }
+
+    fn free_slots(&self) -> Vec<usize> {
+        match self {
+            ServeSession::Plain(s) => s.free_slots(),
+            ServeSession::Spec(s) => s.free_slots(),
+        }
+    }
+
+    /// Pool capacity; a speculative session's gauge spans both pools.
+    fn kv_blocks_total(&self) -> usize {
+        match self {
+            ServeSession::Plain(s) => s.kv_blocks_total(),
+            ServeSession::Spec(s) => s.target().kv_blocks_total() + s.draft().kv_blocks_total(),
+        }
+    }
+
+    fn kv_blocks_used(&self) -> usize {
+        match self {
+            ServeSession::Plain(s) => s.kv_blocks_used(),
+            ServeSession::Spec(s) => s.target().kv_blocks_used() + s.draft().kv_blocks_used(),
+        }
+    }
+
+    fn prefix_cache_hits(&self) -> u64 {
+        match self {
+            ServeSession::Plain(s) => s.prefix_cache_hits(),
+            ServeSession::Spec(s) => s.target().prefix_cache_hits() + s.draft().prefix_cache_hits(),
+        }
+    }
+
+    fn prefix_cache_misses(&self) -> u64 {
+        match self {
+            ServeSession::Plain(s) => s.prefix_cache_misses(),
+            ServeSession::Spec(s) => {
+                s.target().prefix_cache_misses() + s.draft().prefix_cache_misses()
+            }
+        }
+    }
+
+    fn prefill_skips(&self) -> usize {
+        match self {
+            ServeSession::Plain(s) => s.prefill_skips(),
+            ServeSession::Spec(s) => s.target().prefill_skips() + s.draft().prefill_skips(),
+        }
+    }
+
+    /// Admission gate: blocks still grantable. A speculative admission
+    /// must fit **both** pools, so the budget is the tighter of the two.
+    fn free_block_budget(&self) -> usize {
+        match self {
+            ServeSession::Plain(s) => s.free_block_budget(),
+            ServeSession::Spec(s) => {
+                s.target().free_block_budget().min(s.draft().free_block_budget())
+            }
+        }
+    }
+
+    /// Worst-case blocks one admission reserves. The draft row is
+    /// admitted with the widest limit (it must never retire mid-round),
+    /// so the speculative bound is the larger of the two sessions' needs
+    /// — conservative against the min-budget above.
+    fn blocks_needed(&self, max_new: usize) -> usize {
+        match self {
+            ServeSession::Plain(s) => s.blocks_needed(max_new),
+            ServeSession::Spec(s) => {
+                let info = &s.draft().manifest().model;
+                let draft_max = info.max_seq.saturating_sub(info.prompt_len);
+                s.target().blocks_needed(max_new).max(s.draft().blocks_needed(draft_max))
+            }
+        }
+    }
+
+    fn blocks_needed_at(&self, pos: usize, max_new: usize) -> usize {
+        match self {
+            ServeSession::Plain(s) => s.blocks_needed_at(pos, max_new),
+            // Unreachable in practice: speculative replicas reject
+            // disaggregated roles at startup, so no KV segment is ever
+            // routed here. Price it off the target anyway.
+            ServeSession::Spec(s) => s.target().blocks_needed_at(pos, max_new),
+        }
+    }
+
+    fn prefill(&mut self, reqs: Vec<(usize, SlotRequest)>) -> Result<StepOutcome> {
+        match self {
+            ServeSession::Plain(s) => s.prefill_into_slots(reqs),
+            ServeSession::Spec(s) => s.admit(reqs),
+        }
+    }
+
+    /// One serving iteration: a decode step (one token per row) or a
+    /// speculative round (1 to k+1 tokens per row).
+    fn step(&mut self) -> Result<StepOutcome> {
+        match self {
+            ServeSession::Plain(s) => s.decode_step(),
+            ServeSession::Spec(s) => s.spec_round(),
+        }
+    }
+
+    fn cancel_slot(&mut self, slot: usize) -> Result<Option<Vec<i32>>> {
+        match self {
+            ServeSession::Plain(s) => s.cancel_slot(slot),
+            ServeSession::Spec(s) => s.cancel_slot(slot),
+        }
+    }
+
+    fn export_rows(&mut self, slot: usize) -> Result<KvSegment> {
+        match self {
+            ServeSession::Plain(s) => s.export_rows(slot),
+            ServeSession::Spec(_) => bail!("speculative replicas do not serve KV hand-offs"),
+        }
+    }
+
+    fn import_rows(
+        &mut self,
+        slot: usize,
+        seg: &KvSegment,
+        max_new: usize,
+        stop: Option<i32>,
+    ) -> Result<()> {
+        match self {
+            ServeSession::Plain(s) => s.import_rows(slot, seg, max_new, stop),
+            ServeSession::Spec(_) => bail!("speculative replicas do not serve KV hand-offs"),
+        }
+    }
+
+    fn take_comm(&mut self) -> CommStats {
+        match self {
+            ServeSession::Plain(s) => s.take_comm(),
+            ServeSession::Spec(s) => s.take_comm(),
+        }
+    }
+
+    fn spec_stats(&self) -> SpecStats {
+        match self {
+            ServeSession::Plain(_) => SpecStats::default(),
+            ServeSession::Spec(s) => s.stats(),
+        }
+    }
+}
+
+/// Build the worker's serving session: plain, or target+draft paired
+/// into a [`SpeculativeSession`] when a draft executor is present.
+fn build_serve_session<'a>(
+    exec: &'a PipelineExecutor,
+    draft: Option<&'a (PipelineExecutor, usize)>,
+    bucket: usize,
+    kv: KvPolicy,
+) -> Result<ServeSession<'a>> {
+    let target = exec.new_session_with(bucket, kv)?;
+    match draft {
+        None => Ok(ServeSession::Plain(target)),
+        Some((dexec, k)) => {
+            let dsession = dexec.new_session_with(bucket, kv)?;
+            Ok(ServeSession::Spec(SpeculativeSession::new(target, dsession, *k)?))
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rid: usize,
@@ -552,6 +795,7 @@ fn worker_loop(
     kv: KvPolicy,
     adapt_speeds: bool,
     role: PhaseRole,
+    spec: Option<(SpecPolicy, Manifest, Arc<WeightStore>)>,
     handoff: Vec<Option<Sender<WorkMsg>>>,
     rx: Receiver<WorkMsg>,
     router: Arc<Router>,
@@ -569,8 +813,36 @@ fn worker_loop(
             return;
         }
     };
+    // Speculative decoding: a second thread-confined executor over the
+    // draft model (single stage, tp=1 — drafts are small by design).
+    let draft_exec: Option<(PipelineExecutor, usize)> = match &spec {
+        None => None,
+        Some((policy, dmanifest, dweights)) => {
+            let built = plan_from_strategy(&[1], &[dmanifest.model.layers]).and_then(|dplan| {
+                make_backend(backend, &policy.draft_model, dmanifest.clone(), dweights.clone())
+                    .and_then(|be| PipelineExecutor::with_backend(be, dplan))
+            });
+            match built {
+                Ok(e) => Some((e, policy.k)),
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("draft model: {e:#}")));
+                    return;
+                }
+            }
+        }
+    };
     let bucket = session_bucket(&exec.manifest().batch_buckets, batch.max_batch);
-    let mut session = match exec.new_session_with(bucket, kv) {
+    if let Some((dexec, _)) = &draft_exec {
+        let db = session_bucket(&dexec.manifest().batch_buckets, batch.max_batch);
+        if db != bucket {
+            let _ = ready_tx.send(Err(format!(
+                "draft session bucket {db} != target session bucket {bucket}: \
+                 speculative slots pair one-to-one"
+            )));
+            return;
+        }
+    }
+    let mut session = match build_serve_session(&exec, draft_exec.as_ref(), bucket, kv) {
         Ok(s) => s,
         Err(e) => {
             let _ = ready_tx.send(Err(format!("{e:#}")));
@@ -589,12 +861,19 @@ fn worker_loop(
     let mut kv_hits_last: u64 = 0;
     let mut kv_misses_last: u64 = 0;
     let mut kv_skips_last: u64 = 0;
+    let mut spec_last = SpecStats::default();
     let prompt_len = exec.manifest().model.prompt_len;
     // Continuous admission co-batches rows at different cache depths,
-    // which needs per-row decode positions; backends bound to the
-    // scalar-position AOT artifact signature degrade to
-    // run-to-completion batching instead of failing mid-step.
-    let continuous = batch.continuous && exec.backend().supports_rowwise_decode_positions();
+    // which needs per-row decode positions (on the draft side too, when
+    // speculating); backends bound to the scalar-position AOT artifact
+    // signature degrade to run-to-completion batching instead of failing
+    // mid-step.
+    let draft_rowwise = match &draft_exec {
+        None => true,
+        Some((d, _)) => d.backend().supports_rowwise_decode_positions(),
+    };
+    let continuous =
+        batch.continuous && exec.backend().supports_rowwise_decode_positions() && draft_rowwise;
     if batch.continuous && !continuous {
         crate::log_warn!(
             "replica {rid}: backend {} lacks per-row decode positions; \
@@ -679,7 +958,8 @@ fn worker_loop(
             kv_hits_last = 0;
             kv_misses_last = 0;
             kv_skips_last = 0;
-            session = match exec.new_session_with(bucket, kv) {
+            spec_last = SpecStats::default();
+            session = match build_serve_session(&exec, draft_exec.as_ref(), bucket, kv) {
                 Ok(s) => s,
                 Err(e2) => {
                     let message = format!("session rebuild failed: {e2:#}");
@@ -826,7 +1106,7 @@ fn worker_loop(
             if !reqs.is_empty() {
                 let reqs_len = reqs.len();
                 let t0 = Instant::now();
-                match session.prefill_into_slots(reqs) {
+                match session.prefill(reqs) {
                     Ok(out) => {
                         let pf = t0.elapsed().as_secs_f64();
                         let end = Instant::now();
@@ -963,23 +1243,28 @@ fn worker_loop(
         }
 
         // ---- one decode iteration for every in-flight row -------------
+        // Plain sessions emit one token per active row; a speculative
+        // round emits 1 to k+1 per row (in stream order).
         if session.active() > 0 {
-            let rows = session.active();
             let t0 = Instant::now();
-            match session.decode_step() {
+            match session.step() {
                 Ok(out) => {
                     if adapt_speeds {
-                        // One token per active row per iteration: fold the
-                        // measured decode throughput into the router's
-                        // per-replica speed EWMA.
+                        // Fold the measured decode throughput (emitted
+                        // tokens per second — net of speculation) into the
+                        // router's per-replica speed EWMA.
                         let dt = t0.elapsed().as_secs_f64();
-                        if dt > 0.0 {
-                            router.observe_rate(rid, rows as f64 / dt);
+                        if dt > 0.0 && !out.tokens.is_empty() {
+                            router.observe_rate(rid, out.tokens.len() as f64 / dt);
                         }
                     }
-                    for &(slot, tok) in &out.tokens {
+                    for (i, &(slot, tok)) in out.tokens.iter().enumerate() {
                         if let Some(a) = active[slot].as_mut() {
-                            let last = out.finished.iter().any(|&(s, _)| s == slot);
+                            // `last` only on the row's final token this
+                            // iteration — a speculative round may stream
+                            // several for one slot before it retires.
+                            let last = out.finished.iter().any(|&(s, _)| s == slot)
+                                && !out.tokens[i + 1..].iter().any(|&(s, _)| s == slot);
                             emit_token(a, tok, last);
                         }
                     }
@@ -1014,6 +1299,11 @@ fn worker_loop(
         let skips = session.prefill_skips() as u64;
         counters.prefill_skips.fetch_add(skips - kv_skips_last, Ordering::Relaxed);
         kv_skips_last = skips;
+        let ss = session.spec_stats();
+        counters.spec_rounds.fetch_add(ss.rounds - spec_last.rounds, Ordering::Relaxed);
+        counters.spec_proposed.fetch_add(ss.proposed - spec_last.proposed, Ordering::Relaxed);
+        counters.spec_accepted.fetch_add(ss.accepted - spec_last.accepted, Ordering::Relaxed);
+        spec_last = ss;
 
         let comm = session.take_comm();
         if comm != CommStats::default() {
@@ -1048,6 +1338,7 @@ mod tests {
             max_new_tokens: 4,
             stop_token: None,
             kv: KvPolicy::default(),
+            spec: None,
         }
     }
 

@@ -1,0 +1,370 @@
+//! Speculative decoding: a small **draft** model proposes `k` tokens per
+//! round and the **target** model verifies them in one batched forward —
+//! fewer target iterations per emitted token, the biggest per-step
+//! decode-latency lever that needs no new hardware (ROADMAP direction 2,
+//! SNIPPETS §8; it compounds with disaggregated serving, where cheap
+//! replicas can run drafts while strong replicas verify).
+//!
+//! [`SpeculativeSession`] wraps two [`DecodeSession`]s over a two-model
+//! manifest pair (same vocabulary, prompt length, and context; layer
+//! count / width may differ). Per [`SpeculativeSession::spec_round`]:
+//!
+//! 1. the draft runs `k` greedy [`DecodeSession::decode_step`]s,
+//!    proposing `p_1 .. p_k` per row;
+//! 2. the target scores the row's pending token plus all `k` proposals
+//!    in **one** batched forward ([`DecodeSession::verify_step`] →
+//!    [`ExecutionBackend::execute_attn_score_inplace`]), returning the
+//!    greedy token after every fed position;
+//! 3. greedy verification accepts the longest prefix of proposals that
+//!    match the target's tokens, plus the target's one correction token
+//!    — so every round commits at least 1 and at most `k + 1` tokens;
+//! 4. **both** sessions roll their paged KV back past the rejected tail
+//!    ([`DecodeSession::truncate_rows`]: tail blocks pop to the free
+//!    list with the row's reservation restored, no leak, shared prompt
+//!    prefixes untouched) and commit the accepted tokens
+//!    ([`DecodeSession::commit_tokens`]).
+//!
+//! **Parity contract.** Every committed token is either a proposal the
+//! target's own argmax agreed with at that position, or the target's
+//! argmax itself — by induction the emitted stream is *token-identical*
+//! to the target decoding alone, for every acceptance pattern (full,
+//! partial, zero). The draft only decides how many target iterations
+//! that stream costs. Golden tests pin this against the ref_demo
+//! fixtures (`tests/reference_parity.rs`).
+//!
+//! [`ExecutionBackend::execute_attn_score_inplace`]:
+//!     crate::runtime::ExecutionBackend::execute_attn_score_inplace
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::pipeline::{DecodeSession, SlotRequest, StepOutcome};
+
+/// Opt-in speculative-decoding policy carried by a service config: serve
+/// with a draft model proposing `k` tokens per round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecPolicy {
+    /// Draft tokens proposed per round (≥ 1). Each round costs one draft
+    /// step per proposal plus **one** target forward, and commits
+    /// between 1 and `k + 1` tokens.
+    pub k: usize,
+    /// Artifacts directory of the draft model (manifest + weights). Must
+    /// agree with the target on vocabulary, prompt length, and context
+    /// length.
+    pub draft_model: PathBuf,
+}
+
+/// Lifetime speculation counters ([`SpeculativeSession::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Completed propose/verify rounds.
+    pub rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub proposed: u64,
+    /// Proposed tokens the target accepted (committed to the stream).
+    pub accepted: u64,
+}
+
+impl SpecStats {
+    /// Fraction of proposed tokens accepted (0 when nothing proposed).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+/// Draft-propose / target-verify serving session: two [`DecodeSession`]s
+/// in lock-step, slot `i` of the target paired with slot `i` of the
+/// draft. The target is authoritative — its prefill and verify tokens
+/// are the emitted stream; the draft mirrors the target's committed
+/// tokens after every round so its next proposals continue the right
+/// prefix.
+pub struct SpeculativeSession<'a> {
+    target: DecodeSession<'a>,
+    draft: DecodeSession<'a>,
+    k: usize,
+    stats: SpecStats,
+    // Round-scoped scratch, reused so steady-state rounds allocate only
+    // inside the wrapped sessions.
+    scratch_active: Vec<usize>,
+    scratch_feed: Vec<i32>,
+    scratch_acc: Vec<i32>,
+    proposals: Vec<Vec<i32>>,
+}
+
+impl<'a> SpeculativeSession<'a> {
+    /// Pair a target session with a draft session proposing `k` tokens
+    /// per round. The sessions must have the same bucket (slot `i` maps
+    /// to slot `i`) and their models must agree on vocabulary, prompt
+    /// length, and `max_seq` — token streams and cache depths are shared
+    /// between them; layer count, width, and head count may differ
+    /// freely (that asymmetry is the whole point of a draft).
+    pub fn new(
+        target: DecodeSession<'a>,
+        draft: DecodeSession<'a>,
+        k: usize,
+    ) -> Result<SpeculativeSession<'a>> {
+        if k == 0 {
+            bail!("speculative k must be >= 1");
+        }
+        if target.bucket() != draft.bucket() {
+            bail!(
+                "target bucket {} != draft bucket {}: slots pair one-to-one",
+                target.bucket(),
+                draft.bucket()
+            );
+        }
+        let (t, d) = (&target.manifest().model, &draft.manifest().model);
+        if t.vocab != d.vocab {
+            bail!("target vocab {} != draft vocab {}", t.vocab, d.vocab);
+        }
+        if t.prompt_len != d.prompt_len {
+            bail!("target prompt_len {} != draft prompt_len {}", t.prompt_len, d.prompt_len);
+        }
+        if t.max_seq != d.max_seq {
+            bail!("target max_seq {} != draft max_seq {}", t.max_seq, d.max_seq);
+        }
+        if t.max_seq < t.prompt_len + 2 {
+            bail!(
+                "max_seq {} leaves no decode room past prompt_len {} to speculate in",
+                t.max_seq,
+                t.prompt_len
+            );
+        }
+        let bucket = target.bucket();
+        Ok(SpeculativeSession {
+            target,
+            draft,
+            k,
+            stats: SpecStats::default(),
+            scratch_active: Vec::with_capacity(bucket),
+            scratch_feed: Vec::with_capacity(k + 1),
+            scratch_acc: Vec::with_capacity(k + 1),
+            proposals: (0..bucket).map(|_| Vec::with_capacity(k)).collect(),
+        })
+    }
+
+    /// The authoritative (verifying) session.
+    pub fn target(&self) -> &DecodeSession<'a> {
+        &self.target
+    }
+
+    /// The proposing session.
+    pub fn draft(&self) -> &DecodeSession<'a> {
+        &self.draft
+    }
+
+    /// Proposals per round.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Lifetime speculation counters.
+    pub fn stats(&self) -> SpecStats {
+        self.stats
+    }
+
+    /// Rows currently decoding (target view; the draft mirrors it).
+    pub fn active(&self) -> usize {
+        self.target.active()
+    }
+
+    /// Slots available for admission.
+    pub fn free_slots(&self) -> Vec<usize> {
+        self.target.free_slots()
+    }
+
+    /// Drain both sessions' communication counters, merged.
+    pub fn take_comm(&mut self) -> super::collective::CommStats {
+        let mut c = self.target.take_comm();
+        let d = self.draft.take_comm();
+        c.allreduce_ops += d.allreduce_ops;
+        c.allreduce_bytes += d.allreduce_bytes;
+        c.pp_sends += d.pp_sends;
+        c.pp_bytes += d.pp_bytes;
+        c.kv_transfers += d.kv_transfers;
+        c.kv_transfer_bytes += d.kv_transfer_bytes;
+        c
+    }
+
+    /// Admit requests into paired free slots: the target prefills first
+    /// (its tokens are the emitted stream — the outcome is exactly what
+    /// [`DecodeSession::prefill_into_slots`] reports), then the draft
+    /// prefills the same prompts into its own paired slots with the
+    /// widest limit and no stop token (the driver retires draft rows in
+    /// lock-step with the target, so a draft row must never retire on
+    /// its own mid-round). Each surviving draft row's pending token is
+    /// forced to the target's prefill token; draft rows whose target row
+    /// already finished at prefill are released immediately. A draft
+    /// admission failure rolls the target rows back and surfaces the
+    /// error — the caller should gate on **both** sessions' block
+    /// budgets to defer instead.
+    pub fn admit(&mut self, reqs: Vec<(usize, SlotRequest)>) -> Result<StepOutcome> {
+        if reqs.is_empty() {
+            return Ok(StepOutcome::default());
+        }
+        let info = &self.draft.manifest().model;
+        let draft_max = info.max_seq - info.prompt_len;
+        let draft_reqs: Vec<(usize, SlotRequest)> = reqs
+            .iter()
+            .map(|(slot, r)| {
+                (*slot, SlotRequest { prompt: r.prompt.clone(), max_new: draft_max, stop: None })
+            })
+            .collect();
+        let out = self.target.prefill_into_slots(reqs)?;
+        if let Err(e) = self.draft.prefill_into_slots(draft_reqs) {
+            for &(slot, _) in &out.tokens {
+                self.target.cancel_slot(slot)?;
+            }
+            return Err(e);
+        }
+        for &(slot, tok) in &out.tokens {
+            if out.finished.iter().any(|(s, _)| *s == slot) {
+                self.draft.cancel_slot(slot)?;
+            } else {
+                self.draft.force_next(slot, tok)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Cancel the paired rows in `slot`, releasing both sessions' KV
+    /// blocks. Returns the target's tokens generated so far (`None` when
+    /// the slot was already free), like [`DecodeSession::cancel_slot`].
+    pub fn cancel_slot(&mut self, slot: usize) -> Result<Option<Vec<i32>>> {
+        let toks = self.target.cancel_slot(slot)?;
+        self.draft.cancel_slot(slot)?;
+        Ok(toks)
+    }
+
+    /// Run one propose/verify/commit round for every active row. The
+    /// outcome streams **all** tokens committed this round (1 to `k + 1`
+    /// per row, in acceptance order) through `tokens`, and retired rows
+    /// through `finished` — the same shape as
+    /// [`DecodeSession::decode_step`], so the serving loop treats a
+    /// speculative round as a decode step that may emit several tokens
+    /// per row.
+    ///
+    /// The round size is `k` clamped so no row's verify pass writes past
+    /// its admission-time block reservation (`max_new - generated - 1`
+    /// over the active rows); near a row's limit it degrades to 0
+    /// proposals — a verify-only round that is plain greedy decode
+    /// through the scoring path.
+    pub fn spec_round(&mut self) -> Result<StepOutcome> {
+        if self.target.active() == 0 {
+            return Ok(StepOutcome::default());
+        }
+        let mut active = std::mem::take(&mut self.scratch_active);
+        active.clear();
+        let mut k_round = self.k;
+        for slot in 0..self.target.bucket() {
+            if let Some(v) = self.target.slot_view(slot) {
+                active.push(slot);
+                k_round = k_round.min(v.max_new.saturating_sub(v.generated + 1));
+            }
+        }
+
+        // Phase 1 — draft proposes k_round tokens per row (batched
+        // decode steps across all active rows).
+        for p in self.proposals.iter_mut() {
+            p.clear();
+        }
+        for _ in 0..k_round {
+            let out = self.draft.decode_step()?;
+            if !out.finished.is_empty() {
+                bail!("internal: draft row retired mid-round (limits should prevent this)");
+            }
+            for (slot, tok) in out.tokens {
+                self.proposals[slot].push(tok);
+            }
+        }
+
+        // Phase 2 — per row: one batched target verify, greedy-prefix
+        // acceptance, rollback of the rejected tail in both sessions,
+        // and the token commit.
+        let mut outcome = StepOutcome::default();
+        let mut feed = std::mem::take(&mut self.scratch_feed);
+        let mut acc = std::mem::take(&mut self.scratch_acc);
+        for &slot in &active {
+            let v = self
+                .target
+                .slot_view(slot)
+                .ok_or_else(|| anyhow!("internal: active slot {slot} lost its target row"))?;
+            let (g, pos0) = (v.generated, v.pos);
+            if self.proposals[slot].len() != k_round {
+                bail!(
+                    "internal: draft proposed {} tokens for slot {slot}, round wants {k_round}",
+                    self.proposals[slot].len()
+                );
+            }
+            // The verify feed is the row's pending token followed by the
+            // proposals; `scored[i]` is the target's greedy token after
+            // feed position i.
+            feed.clear();
+            feed.push(v.next);
+            feed.extend_from_slice(&self.proposals[slot]);
+            let scored = self.target.verify_step(slot, &feed)?;
+
+            // Longest matching prefix, then the target's correction.
+            let mut m = 0;
+            while m < k_round && self.proposals[slot][m] == scored[m] {
+                m += 1;
+            }
+            acc.clear();
+            acc.extend_from_slice(&self.proposals[slot][..m]);
+            acc.push(scored[m]);
+            // A stop token anywhere in the accepted run ends the row
+            // there — tokens past it were never part of the stream.
+            if let Some(stop) = v.stop {
+                if let Some(i) = acc.iter().position(|&t| t == stop) {
+                    acc.truncate(i + 1);
+                }
+            }
+            let e = acc.len();
+            self.stats.proposed += k_round as u64;
+            self.stats.accepted += m.min(e) as u64;
+
+            // Target: drop the KV of rejected positions, commit tokens.
+            self.target.truncate_rows(slot, pos0 + e)?;
+            let finished = self.target.commit_tokens(slot, g, &acc)?;
+
+            // Draft: mirror the target exactly. A fully accepted round
+            // leaves the draft one KV entry *short* (its last proposal
+            // was never fed back), so it catches up with a one-token
+            // scoring pass; otherwise it rolls back like the target.
+            if finished.is_some() {
+                self.draft.cancel_slot(slot)?;
+            } else {
+                let dv = self
+                    .draft
+                    .slot_view(slot)
+                    .ok_or_else(|| anyhow!("internal: active slot {slot} lost its draft row"))?;
+                if e == k_round + 1 {
+                    let catch = [dv.next];
+                    self.draft.verify_step(slot, &catch)?;
+                } else {
+                    self.draft.truncate_rows(slot, pos0 + e)?;
+                }
+                if self.draft.commit_tokens(slot, g, &acc)?.is_some() {
+                    bail!("internal: draft row retired ahead of its target row");
+                }
+            }
+
+            for &t in &acc {
+                outcome.tokens.push((slot, t));
+            }
+            if let Some(toks) = finished {
+                outcome.finished.push((slot, toks));
+            }
+        }
+        self.stats.rounds += 1;
+        self.scratch_active = active;
+        self.scratch_feed = feed;
+        self.scratch_acc = acc;
+        Ok(outcome)
+    }
+}

@@ -33,6 +33,7 @@ Experiments (regenerate the paper's evaluation):
 Serving & tools:
   serve [--listen ADDR] [--prompt <text>] [--plan FILE] [--replicas N]
         [--disagg] [--max-new N] [--artifacts DIR]
+        [--spec-draft DIR] [--spec-k K]
                      serve the demo model; --plan boots the replicas from
                      a scheduler --emit-plan file (lowered onto the
                      artifact manifest, with plan cost estimates seeding
@@ -48,6 +49,10 @@ Serving & tools:
                                                "stream": true -> SSE tokens}
                        GET  /healthz | /metrics | /v1/plan
                      Without --listen, serves --prompt once and exits.
+                     --spec-draft DIR enables speculative decoding with
+                     the draft model in DIR (--spec-k proposals per
+                     round, default 3); emitted tokens stay identical to
+                     plain decoding.
   schedule [--cluster NAME] [--emit-plan FILE]
                      run the two-phase scheduler on a cluster preset and
                      print the deployment (presets: homogeneous,
@@ -113,7 +118,7 @@ fn main() -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     use hexgen::coordinator::{
         lower_plan, plan_from_strategy, BatchPolicy, HexGenService, HttpServer, RoutePolicy,
-        ServiceConfig, StagePlan,
+        ServiceConfig, SpecPolicy, StagePlan,
     };
     use hexgen::parallelism::{DeploymentPlan, PhaseRole};
     use hexgen::runtime::Manifest;
@@ -194,6 +199,10 @@ fn serve(args: &Args) -> Result<()> {
         max_new_tokens: args.get_usize("max-new", 16),
         stop_token: None,
         kv: Default::default(),
+        spec: args.get("spec-draft").map(|d| SpecPolicy {
+            k: args.get_usize("spec-k", 3),
+            draft_model: std::path::PathBuf::from(d),
+        }),
     })?;
 
     // Long-running mode: expose the service over HTTP and block.

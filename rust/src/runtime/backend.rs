@@ -151,6 +151,80 @@ pub trait ExecutionBackend {
         }
     }
 
+    /// Multi-position attention **scoring** with in-place KV writes: the
+    /// verify half of speculative decoding. `x` is `[b, s, h]` — `s`
+    /// proposed tokens per row appended after that row's cached prefix —
+    /// and `positions[row]` is where row `row`'s *first* new KV entry
+    /// lands (its cache depth before the call). The kernel writes all
+    /// `s` new K/V slices per row at `positions[row] .. positions[row] +
+    /// s` and attends each query token `i` causally over `[0,
+    /// positions[row] + i]`, returning the `[b, s, h]` attention partial
+    /// — one prefill-shaped pass instead of `s` decode iterations, which
+    /// is what lets a target model score a whole draft proposal in one
+    /// forward.
+    ///
+    /// The default implementation keeps every backend in contract by
+    /// looping the proposal through [`Self::execute_attn_decode_inplace`]
+    /// one position at a time — bit-identical results (each single-token
+    /// step sees exactly the cache state the batched kernel would), just
+    /// without the batching win. Hot backends (the reference backend)
+    /// override it with a true multi-position kernel.
+    fn execute_attn_score_inplace(
+        &self,
+        artifact: &str,
+        x: &Tensor,
+        k_cache: &mut Tensor,
+        v_cache: &mut Tensor,
+        positions: DecodePositions<'_>,
+        w: &AttnShardWeights<'_>,
+    ) -> Result<Tensor> {
+        if x.dims.len() != 3 {
+            bail!("score input must be [b, s, h], got {:?}", x.dims);
+        }
+        let (b, s, h) = (x.dims[0], x.dims[1], x.dims[2]);
+        if s == 0 {
+            bail!("score input has zero proposed tokens");
+        }
+        let starts: Vec<i32> = match positions {
+            DecodePositions::Scalar(p) => vec![p; b],
+            DecodePositions::PerRow(p) => {
+                if p.len() != b {
+                    bail!("score positions: {} values for batch {b}", p.len());
+                }
+                p.to_vec()
+            }
+        };
+        let uniform = starts.windows(2).all(|w| w[0] == w[1]);
+        let mut out = Tensor { dims: vec![b, s, h], data: vec![0.0; b * s * h] };
+        let mut xi = Tensor { dims: vec![b, 1, h], data: vec![0.0; b * h] };
+        let mut step_pos = vec![0i32; b];
+        for i in 0..s {
+            for bi in 0..b {
+                let src = (bi * s + i) * h;
+                xi.data[bi * h..(bi + 1) * h].copy_from_slice(&x.data[src..src + h]);
+                step_pos[bi] = starts[bi] + i as i32;
+            }
+            let pos = if uniform {
+                DecodePositions::Scalar(step_pos[0])
+            } else {
+                DecodePositions::PerRow(&step_pos)
+            };
+            let partial =
+                self.execute_attn_decode_inplace(artifact, &xi, k_cache, v_cache, pos, w)?;
+            if partial.dims != [b, 1, h] {
+                bail!(
+                    "score adapter: decode step returned shape {:?}, expected [{b}, 1, {h}]",
+                    partial.dims
+                );
+            }
+            for bi in 0..b {
+                let dst = (bi * s + i) * h;
+                out.data[dst..dst + h].copy_from_slice(&partial.data[bi * h..(bi + 1) * h]);
+            }
+        }
+        Ok(out)
+    }
+
     /// Cumulative stage executions (hot-path metric).
     fn exec_count(&self) -> usize;
 }

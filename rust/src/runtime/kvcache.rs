@@ -188,6 +188,28 @@ impl BlockPool {
         Ok(())
     }
 
+    /// Re-promise `n` blocks to a sequence that just popped tail blocks
+    /// in a speculative rollback — the inverse of
+    /// [`Self::release_reservation`]. Unlike [`Self::try_reserve`] this
+    /// must succeed: the rollback released the very blocks that back the
+    /// renewed promise (a popped owned block returns to the free list
+    /// before its slot is reclaimed). A shortfall means the caller
+    /// truncated into blocks another sequence still shares — its budget
+    /// for that region was handed back at admission — and is surfaced as
+    /// corruption rather than silently over-committing the pool.
+    pub fn reclaim_reservation(&mut self, n: usize) -> Result<()> {
+        if self.reserved + n > self.free.len() {
+            bail!(
+                "reclaiming {n} reserved blocks would over-commit the pool \
+                 ({} free, {} already reserved): rollback truncated into shared blocks",
+                self.free.len(),
+                self.reserved
+            );
+        }
+        self.reserved += n;
+        Ok(())
+    }
+
     /// Allocate one block against an outstanding reservation (rc = 1).
     pub fn alloc_reserved(&mut self) -> Result<usize> {
         if self.reserved == 0 {
@@ -357,6 +379,19 @@ impl BlockTable {
             }
             None => bail!("copy-on-write on an empty block table"),
         }
+    }
+
+    /// Pop the tail block during a speculative rollback, restoring one
+    /// slot of the sequence's own budget (a truncated sequence may grow
+    /// back to its admission-time worst case). The caller must mirror
+    /// the restore on the pool side: release the popped block and then
+    /// [`BlockPool::reclaim_reservation`] in that order, so the freed
+    /// block re-enters the free list before the promise against it is
+    /// renewed.
+    pub fn pop_tail_reclaim(&mut self) -> Option<usize> {
+        let block = self.blocks.pop()?;
+        self.reserved_left += 1;
+        Some(block)
     }
 
     /// Clear the table and hand back the unused reservation count (the
@@ -660,6 +695,59 @@ mod tests {
         assert!(p.retain(99).is_err());
         assert!(BlockPool::new(0, 4).is_err());
         assert!(BlockPool::new(4, 0).is_err());
+    }
+
+    /// The speculative-rollback primitives: popping a tail block restores
+    /// the sequence's own budget slot, release-then-reclaim restores the
+    /// pool ledger, and reclaiming without free backing (a shared block
+    /// that stayed live) is refused as corruption.
+    #[test]
+    fn rollback_pop_release_reclaim_restores_budget() {
+        let mut pool = BlockPool::new(2, 4).unwrap();
+        let mut table = BlockTable::with_block_capacity(2);
+        assert!(pool.try_reserve(2));
+        table.begin(2).unwrap();
+        for _ in 0..2 {
+            table.use_reservation().unwrap();
+            let b = pool.alloc_reserved().unwrap();
+            table.push(b);
+        }
+        assert_eq!(table.reserved_left(), 0);
+        assert_eq!(pool.available(), 0);
+
+        // Roll the tail block back: pop → release → reclaim.
+        let popped = table.pop_tail_reclaim().unwrap();
+        assert_eq!(popped, 1);
+        assert_eq!(table.reserved_left(), 1);
+        assert!(pool.release(popped).unwrap(), "owned tail frees on release");
+        pool.reclaim_reservation(1).unwrap();
+        assert_eq!(pool.available(), 0, "the freed block backs the renewed promise");
+
+        // The budget is spendable again: re-extend into a fresh block.
+        table.use_reservation().unwrap();
+        let again = pool.alloc_reserved().unwrap();
+        table.push(again);
+        assert_eq!(table.len(), 2);
+
+        // Full teardown drains the pool.
+        for &b in table.blocks() {
+            pool.release(b).unwrap();
+        }
+        pool.release_reservation(table.finish()).unwrap();
+        assert!(pool.is_fully_free());
+        assert!(table.pop_tail_reclaim().is_none(), "empty table has no tail");
+
+        // Reclaim without free backing is surfaced, not over-committed:
+        // both blocks allocated and one still live elsewhere.
+        let mut p2 = BlockPool::new(1, 4).unwrap();
+        assert!(p2.try_reserve(1));
+        let b0 = p2.alloc_reserved().unwrap();
+        p2.retain(b0).unwrap();
+        assert!(!p2.release(b0).unwrap(), "still shared, stays live");
+        assert!(
+            p2.reclaim_reservation(1).is_err(),
+            "no free block backs the promise while the popped block is shared"
+        );
     }
 
     /// Drive a sequence's whole block lifecycle through [`plan_append`]:

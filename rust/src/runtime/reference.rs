@@ -361,6 +361,120 @@ impl ReferenceBackend {
         Ok(Tensor { dims: vec![b, 1, h], data: partial })
     }
 
+    /// Multi-position scoring kernel (the speculative-decoding verify
+    /// pass): writes each row's `s` new K/V entries at `positions[bi]
+    /// .. positions[bi] + s` and attends query token `i` causally over
+    /// `[0, positions[bi] + i]` — one batched pass over a proposed
+    /// suffix instead of `s` decode iterations. All writes land before
+    /// any query runs, so query `i` sees exactly the cache a sequential
+    /// decode would have built (entries of proposal tokens `0..=i` and
+    /// nothing later), and every per-row accumulation order matches
+    /// [`Self::attn_decode_core`] — results are bit-identical to looping
+    /// the single-token kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_score_core(
+        &self,
+        st: &StageName,
+        x: &Tensor,
+        kc: &mut Tensor,
+        vc: &mut Tensor,
+        positions: DecodePositions<'_>,
+        ln: &Tensor,
+        wq: &Tensor,
+        wk: &Tensor,
+        wv: &Tensor,
+        wo: &Tensor,
+    ) -> Result<Tensor> {
+        let m = &self.manifest.model;
+        let (b, s, h) = dims3(x, "attn x")?;
+        check_bucket(b, st)?;
+        if s == 0 {
+            bail!("attn score expects at least one proposed token");
+        }
+        let shard = self.shard_dims(st.tp, h, wq, wk, wv, wo)?;
+        let (nhs, dh, hs) = (shard.nhs, shard.dh, shard.hs);
+        let s_max = m.max_seq;
+        let cache_dims = vec![b, nhs, s_max, dh];
+        if kc.dims != cache_dims || vc.dims != cache_dims {
+            bail!(
+                "score caches have shapes {:?}/{:?}, expected {cache_dims:?}",
+                kc.dims,
+                vc.dims
+            );
+        }
+        let starts = resolve_positions(positions, b, s_max)?;
+        for (bi, &p) in starts.iter().enumerate() {
+            if p + s > s_max {
+                bail!("scoring {s} tokens at position {p} overruns cache of length {s_max} (row {bi})");
+            }
+        }
+
+        let xn = rmsnorm_rows(&x.data, h, &ln.data)?;
+        let q = matmul(&xn, b * s, h, wq, "wq")?;
+        let k_new = matmul(&xn, b * s, h, wk, "wk")?;
+        let v_new = matmul(&xn, b * s, h, wv, "wv")?;
+
+        // lint: hot-path — land every row's s new K/V entries in place
+        // (the only cache bytes the verify pass touches).
+        for bi in 0..b {
+            let start = starts[bi];
+            for head in 0..nhs {
+                for i in 0..s {
+                    let dst = ((bi * nhs + head) * s_max + start + i) * dh;
+                    let src = (bi * s + i) * hs + head * dh;
+                    kc.data[dst..dst + dh].copy_from_slice(&k_new[src..src + dh]);
+                    vc.data[dst..dst + dh].copy_from_slice(&v_new[src..src + dh]);
+                }
+            }
+        }
+        // lint: hot-path-end — `merged`/`scores` allocate once per call,
+        // outside the per-row loops.
+
+        let mut merged = vec![0f32; b * s * hs];
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut scores: Vec<f32> = Vec::new();
+        // lint: hot-path — the scoring attention loops: reused scratch
+        // and in-place cache reads only.
+        for bi in 0..b {
+            let start = starts[bi];
+            for head in 0..nhs {
+                let base = (bi * nhs + head) * s_max;
+                for i in 0..s {
+                    let qrow = (bi * s + i) * hs + head * dh;
+                    scores.clear();
+                    let mut max_s = f32::NEG_INFINITY;
+                    for j in 0..=(start + i) {
+                        let krow = (base + j) * dh;
+                        let mut dot = 0f32;
+                        for d in 0..dh {
+                            dot += q[qrow + d] * kc.data[krow + d];
+                        }
+                        let sc = dot * scale;
+                        if sc > max_s {
+                            max_s = sc;
+                        }
+                        scores.push(sc);
+                    }
+                    let mut denom = 0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - max_s).exp();
+                        denom += *sc;
+                    }
+                    for d in 0..dh {
+                        let mut acc = 0f32;
+                        for (j, p) in scores.iter().enumerate() {
+                            acc += p * vc.data[(base + j) * dh + d];
+                        }
+                        merged[qrow + d] = acc / denom;
+                    }
+                }
+            }
+        }
+        // lint: hot-path-end
+        let partial = matmul(&merged, b * s, hs, wo, "wo")?;
+        Ok(Tensor { dims: vec![b, s, h], data: partial })
+    }
+
     fn run_mlp(&self, st: &StageName, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
         expect_inputs(inputs, 4, "mlp")?;
         let x = self.tensor_arg(&inputs[0], "mlp x")?;
@@ -511,6 +625,31 @@ impl ExecutionBackend for ReferenceBackend {
         let wv = self.weights.get(w.wv)?;
         let wo = self.weights.get(w.wo)?;
         self.attn_decode_core(&st, x, k_cache, v_cache, positions, ln, wq, wk, wv, wo)
+        // lint: hot-path-end
+    }
+
+    fn execute_attn_score_inplace(
+        &self,
+        artifact: &str,
+        x: &Tensor,
+        k_cache: &mut Tensor,
+        v_cache: &mut Tensor,
+        positions: DecodePositions<'_>,
+        w: &AttnShardWeights<'_>,
+    ) -> Result<Tensor> {
+        // lint: hot-path — weight lookups are by-reference; the kernel
+        // mutates the caller's caches in place.
+        let st = self.validate_stage(artifact)?;
+        if st.op != Op::Attn || st.prefill {
+            bail!("'{artifact}' is not a decode attention artifact");
+        }
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+        let ln = self.weights.get(w.ln1)?;
+        let wq = self.weights.get(w.wq)?;
+        let wk = self.weights.get(w.wk)?;
+        let wv = self.weights.get(w.wv)?;
+        let wo = self.weights.get(w.wo)?;
+        self.attn_score_core(&st, x, k_cache, v_cache, positions, ln, wq, wk, wv, wo)
         // lint: hot-path-end
     }
 
@@ -928,6 +1067,106 @@ mod tests {
         assert_eq!(vc, functional[2], "v caches diverged");
         // Outside each row's written position, the caches are untouched.
         assert_eq!(kc.data[0..4], (0..4).map(|i| i as f32 * 0.1).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn batched_score_matches_sequential_decode_bitwise() {
+        // The multi-position verify kernel must reproduce exactly what
+        // looping the single-token decode kernel produces: same partials,
+        // same cache bytes. (The trait's default adapter IS that loop, so
+        // this also pins override == adapter.)
+        let manifest = Manifest::parse(
+            r#"{
+              "model": {"name":"t","layers":1,"hidden":4,"heads":2,"vocab":4,
+                        "prompt_len":1,"max_seq":8,"head_dim":2,"ffn":8},
+              "tp_degrees":[1],
+              "batch_buckets":[2],
+              "weight_order":[],
+              "artifacts":{}
+            }"#,
+        )
+        .unwrap();
+        let mut ws = WeightStore::default();
+        let mut state = 0x5C02Eu64;
+        let mut rnd = |n: usize| -> Vec<f32> {
+            (0..n)
+                .map(|_| (crate::util::rng::splitmix64(&mut state) % 1000) as f32 / 500.0 - 1.0)
+                .collect()
+        };
+        ws.insert("layers.0.ln1", Tensor { dims: vec![4], data: rnd(4) });
+        for name in ["layers.0.wq", "layers.0.wk", "layers.0.wv", "layers.0.wo"] {
+            ws.insert(name, Tensor { dims: vec![4, 4], data: rnd(16) });
+        }
+        let be = ReferenceBackend::with_weights(manifest, Arc::new(ws));
+        let w = AttnShardWeights {
+            ln1: "layers.0.ln1",
+            wq: "layers.0.wq",
+            wk: "layers.0.wk",
+            wv: "layers.0.wv",
+            wo: "layers.0.wo",
+        };
+        // 3 proposed tokens per row, rows at different cache depths.
+        let (b, s, h) = (2usize, 3usize, 4usize);
+        let x = Tensor { dims: vec![b, s, h], data: rnd(b * s * h) };
+        let cache_init = rnd(2 * 2 * 8 * 2);
+        let starts = [3i32, 1i32];
+
+        let mut kc_seq = Tensor { dims: vec![2, 2, 8, 2], data: cache_init.clone() };
+        let mut vc_seq = Tensor { dims: vec![2, 2, 8, 2], data: cache_init.clone() };
+        let mut seq_partial = vec![0f32; b * s * h];
+        for i in 0..s {
+            let mut xi = Tensor { dims: vec![b, 1, h], data: vec![0.0; b * h] };
+            for bi in 0..b {
+                let src = (bi * s + i) * h;
+                xi.data[bi * h..(bi + 1) * h].copy_from_slice(&x.data[src..src + h]);
+            }
+            let pos: Vec<i32> = starts.iter().map(|&p| p + i as i32).collect();
+            let p = be
+                .execute_attn_decode_inplace(
+                    "attn_decode_tp1_b2",
+                    &xi,
+                    &mut kc_seq,
+                    &mut vc_seq,
+                    DecodePositions::PerRow(&pos),
+                    &w,
+                )
+                .unwrap();
+            for bi in 0..b {
+                let dst = (bi * s + i) * h;
+                seq_partial[dst..dst + h].copy_from_slice(&p.data[bi * h..(bi + 1) * h]);
+            }
+        }
+
+        let mut kc = Tensor { dims: vec![2, 2, 8, 2], data: cache_init.clone() };
+        let mut vc = Tensor { dims: vec![2, 2, 8, 2], data: cache_init };
+        let batched = be
+            .execute_attn_score_inplace(
+                "attn_decode_tp1_b2",
+                &x,
+                &mut kc,
+                &mut vc,
+                DecodePositions::PerRow(&starts),
+                &w,
+            )
+            .unwrap();
+        assert_eq!(batched.dims, vec![b, s, h]);
+        assert!(
+            batched.data.iter().zip(&seq_partial).all(|(a, c)| a.to_bits() == c.to_bits()),
+            "batched score partials diverged from the sequential decode loop"
+        );
+        assert_eq!(kc, kc_seq, "k caches diverged");
+        assert_eq!(vc, vc_seq, "v caches diverged");
+        // Overrunning the cache is rejected up front.
+        assert!(be
+            .execute_attn_score_inplace(
+                "attn_decode_tp1_b2",
+                &x,
+                &mut kc,
+                &mut vc,
+                DecodePositions::Scalar(6),
+                &w,
+            )
+            .is_err());
     }
 
     #[test]

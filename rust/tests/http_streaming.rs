@@ -29,10 +29,13 @@ fn start() -> (Arc<HexGenService>, HttpServer) {
         batch: BatchPolicy { max_batch: 2, window: Duration::from_millis(5), continuous: true },
         route: RoutePolicy::LeastLoaded,
         speeds: None,
+        prefill_speeds: None,
+        roles: Vec::new(),
         adapt_speeds: true,
         max_new_tokens: 4,
         stop_token: None,
         kv: Default::default(),
+        spec: None,
     };
     let service = Arc::new(HexGenService::start(cfg).unwrap());
     let server = HttpServer::serve(service.clone(), "127.0.0.1:0").unwrap();

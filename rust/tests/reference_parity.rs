@@ -17,19 +17,34 @@ fn fixture_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/ref_demo")
 }
 
-/// Executor over the fixture — the hot path (in-place caches, threaded
-/// TP shards, bucket down-shift) or the seed-pinned functional baseline.
-fn exec_with(functional: bool, tps: &[usize], layers: &[usize]) -> PipelineExecutor {
+/// The 1-layer draft companion model for the speculative tests
+/// (`make_ref_fixture.py --draft`).
+fn draft_dir() -> PathBuf {
+    fixture_dir().join("draft")
+}
+
+/// Executor over `dir` — the hot path (in-place caches, threaded TP
+/// shards, bucket down-shift) or the seed-pinned functional baseline.
+fn exec_at(functional: bool, dir: &PathBuf, tps: &[usize], layers: &[usize]) -> PipelineExecutor {
     let be: Box<dyn ExecutionBackend> = if functional {
-        Box::new(FunctionalBackend::load(&fixture_dir()).unwrap())
+        Box::new(FunctionalBackend::load(dir).unwrap())
     } else {
-        Box::new(ReferenceBackend::load(&fixture_dir()).unwrap())
+        Box::new(ReferenceBackend::load(dir).unwrap())
     };
     PipelineExecutor::with_backend(be, plan_from_strategy(tps, layers).unwrap()).unwrap()
 }
 
+fn exec_with(functional: bool, tps: &[usize], layers: &[usize]) -> PipelineExecutor {
+    exec_at(functional, &fixture_dir(), tps, layers)
+}
+
 fn golden() -> Json {
     let text = std::fs::read_to_string(fixture_dir().join("golden.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+fn draft_golden() -> Json {
+    let text = std::fs::read_to_string(draft_dir().join("golden.json")).unwrap();
     Json::parse(&text).unwrap()
 }
 
@@ -637,6 +652,254 @@ fn block_pool_drains_to_fully_free_on_every_exit_path() {
     assert_eq!(session.kv_blocks_used(), 0);
     assert!(session.kv_blocks_peak() > 0);
     assert!(session.kv_pool_fully_free(), "cancel/readmit leaked blocks or reservations");
+}
+
+#[test]
+fn draft_fixture_reproduces_its_golden_greedy_tokens() {
+    // The 1-layer draft model is a real artifacts directory of its own:
+    // solo greedy decode over it must match the ref.py golden stream,
+    // on both the hot path and the functional baseline.
+    let g = draft_golden();
+    let prompt = golden_tokens(&g, "prompt_tokens");
+    let want = golden_tokens(&g, "greedy_tokens");
+    for functional in [false, true] {
+        let exec = exec_at(functional, &draft_dir(), &[1], &[1]);
+        let got = exec.generate(&[prompt.clone()], want.len()).unwrap();
+        assert_eq!(got.tokens[0], want, "draft model diverged from its golden (functional={functional})");
+    }
+}
+
+/// Drive one speculative golden case end to end and pin it three ways:
+/// the emitted stream must be token-identical to the target's plain
+/// greedy stream, the per-round (proposed, accepted) pattern must match
+/// the fixture's simulation exactly, and both sessions' block pools must
+/// drain to fully free.
+fn run_spec_case(
+    target_exec: &PipelineExecutor,
+    draft_exec: &PipelineExecutor,
+    kv: KvPolicy,
+    case: &Json,
+) {
+    use hexgen::coordinator::{SlotRequest, SpeculativeSession};
+    let k = case.usize("k").unwrap();
+    let max_new = case.usize("max_new").unwrap();
+    let want = golden_tokens(case, "target_tokens");
+    let prompt_len = target_exec.manifest().model.prompt_len;
+    let prompt = tokenizer::encode(case.str("prompt").unwrap(), prompt_len);
+
+    let mut spec = SpeculativeSession::new(
+        target_exec.new_session_with(1, kv).unwrap(),
+        draft_exec.new_session_with(1, kv).unwrap(),
+        k,
+    )
+    .unwrap();
+    let out = spec.admit(vec![(0, SlotRequest { prompt, max_new, stop: None })]).unwrap();
+    let mut got: Vec<i32> = out.tokens.iter().map(|&(_, t)| t).collect();
+    let mut finished = None;
+    let mut rounds: Vec<(u64, u64)> = Vec::new();
+    let mut prev = spec.stats();
+    while spec.active() > 0 {
+        let out = spec.spec_round().unwrap();
+        let st = spec.stats();
+        rounds.push((st.proposed - prev.proposed, st.accepted - prev.accepted));
+        prev = st;
+        got.extend(out.tokens.iter().map(|&(_, t)| t));
+        for (_, toks) in out.finished {
+            finished = Some(toks);
+        }
+    }
+    let tag = format!("prompt {:?} k={k}", case.str("prompt").unwrap());
+    // The parity contract: speculative output is token-identical to the
+    // target decoding alone, for this acceptance pattern.
+    assert_eq!(got, want, "speculative stream diverged from plain greedy ({tag})");
+    assert_eq!(finished.expect("row must retire"), want, "retired row tokens ({tag})");
+    let want_rounds: Vec<(u64, u64)> = case
+        .arr("rounds")
+        .unwrap()
+        .iter()
+        .map(|r| (r.usize("k_eff").unwrap() as u64, r.usize("m").unwrap() as u64))
+        .collect();
+    assert_eq!(rounds, want_rounds, "acceptance pattern diverged from fixture ({tag})");
+    assert_eq!(prev.rounds as usize, want_rounds.len(), "round count ({tag})");
+    assert_eq!(prev.proposed, case.usize("proposed").unwrap() as u64, "{tag}");
+    assert_eq!(prev.accepted, case.usize("accepted").unwrap() as u64, "{tag}");
+    assert!(spec.target().kv_pool_fully_free(), "target pool leaked blocks ({tag})");
+    assert!(spec.draft().kv_pool_fully_free(), "draft pool leaked blocks ({tag})");
+}
+
+#[test]
+fn speculative_decode_matches_plain_greedy_for_every_golden_acceptance_pattern() {
+    // The fixture's cases cover full accepts (m == k_eff), partial
+    // accepts, and zero accepts (asserted at generation time), so every
+    // rollback shape runs here. Three executor configurations: the hot
+    // reference path, the same over a TP=2→TP=1 pipeline with an odd
+    // block size (rollbacks cross block boundaries), and the functional
+    // baseline (which verifies through the default
+    // `execute_attn_score_inplace` adapter rather than the reference
+    // backend's batched kernel).
+    let g = draft_golden();
+    let cases = g.arr("spec_cases").unwrap();
+    assert!(!cases.is_empty());
+    let configs: [(bool, Vec<usize>, Vec<usize>, KvPolicy); 3] = [
+        (false, vec![1], vec![2], KvPolicy::default()),
+        (false, vec![2, 1], vec![1, 1], KvPolicy { block_tokens: Some(3), pool_blocks: None }),
+        (true, vec![1], vec![2], KvPolicy::default()),
+    ];
+    for (functional, tps, layers, kv) in configs {
+        let target_exec = exec_at(functional, &fixture_dir(), &tps, &layers);
+        let draft_exec = exec_at(functional, &draft_dir(), &[1], &[1]);
+        for case in cases {
+            run_spec_case(&target_exec, &draft_exec, kv, case);
+        }
+    }
+}
+
+#[test]
+fn speculative_stop_token_retires_mid_round() {
+    // A stop token inside an accepted run must end the row right there —
+    // same contract as plain decode (`stop_token_retires_row_early`),
+    // through the speculative commit path.
+    use hexgen::coordinator::{SlotRequest, SpeculativeSession};
+    let g = golden();
+    let prompt = golden_tokens(&g, "prompt_tokens");
+    let want = golden_tokens(&g, "greedy_tokens");
+    let target_exec = exec_with(false, &[1], &[2]);
+    let draft_exec = exec_at(false, &draft_dir(), &[1], &[1]);
+    let mut spec = SpeculativeSession::new(
+        target_exec.new_session(1).unwrap(),
+        draft_exec.new_session(1).unwrap(),
+        3,
+    )
+    .unwrap();
+    let out = spec
+        .admit(vec![(
+            0,
+            SlotRequest { prompt, max_new: want.len(), stop: Some(want[2]) },
+        )])
+        .unwrap();
+    let mut got: Vec<i32> = out.tokens.iter().map(|&(_, t)| t).collect();
+    let mut finished = None;
+    while spec.active() > 0 {
+        let out = spec.spec_round().unwrap();
+        got.extend(out.tokens.iter().map(|&(_, t)| t));
+        for (_, toks) in out.finished {
+            finished = Some(toks);
+        }
+    }
+    assert_eq!(got, want[..3].to_vec(), "stop token must truncate the accepted run");
+    assert_eq!(finished.unwrap(), want[..3].to_vec());
+    assert!(spec.target().kv_pool_fully_free() && spec.draft().kv_pool_fully_free());
+}
+
+#[test]
+fn randomized_rollback_interleaving_matches_solo_and_drains_pool() {
+    // Fuzz the rollback machinery the way a speculation driver abuses
+    // it: interleave plain decode steps, verify-then-truncate rounds
+    // that write junk KV entries and roll them all back (committing only
+    // the target's own greedy token, so parity is provable), random
+    // cancellations, and staggered admissions with shared-prefix COW
+    // rows — over an odd block size so truncations cross block
+    // boundaries. Every completed request must match its solo greedy
+    // run, and the drained pool must be fully free.
+    use hexgen::coordinator::SlotRequest;
+    use hexgen::util::rng::Xoshiro256pp;
+    let exec = exec_with(false, &[2], &[2]);
+    let prompt_len = exec.manifest().model.prompt_len;
+    let reqs: [(&str, usize); 6] = [
+        ("shared prefix", 8),
+        ("shared prefix", 6),
+        ("rollback torture", 7),
+        ("late join", 5),
+        ("shared prefix", 4),
+        ("final row", 6),
+    ];
+    let solo: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|(p, n)| {
+            exec.generate(&[tokenizer::encode(p, prompt_len)], *n).unwrap().tokens[0].clone()
+        })
+        .collect();
+
+    let mut session = exec
+        .new_session_with(2, KvPolicy { block_tokens: Some(3), pool_blocks: None })
+        .unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(0xB10C);
+    let mut next_req = 0usize;
+    let mut owner: [Option<usize>; 2] = [None, None];
+    let mut done: Vec<Option<Vec<i32>>> = vec![None; reqs.len()];
+    let mut cancels = 0usize;
+    loop {
+        for slot in 0..2 {
+            if owner[slot].is_none() && next_req < reqs.len() {
+                let (p, n) = reqs[next_req];
+                owner[slot] = Some(next_req);
+                next_req += 1;
+                let out = session
+                    .prefill_into_slots(vec![(
+                        slot,
+                        SlotRequest { prompt: tokenizer::encode(p, prompt_len), max_new: n, stop: None },
+                    )])
+                    .unwrap();
+                for (s, toks) in out.finished {
+                    done[owner[s].take().expect("finished slot must be owned")] = Some(toks);
+                }
+            }
+        }
+        if session.active() == 0 {
+            break;
+        }
+        match rng.gen_range(4) {
+            // Verify-then-rollback round on every active row: feed the
+            // pending token plus up to 3 junk tokens (clamped to the
+            // row's reservation), truncate every junk entry back out,
+            // and commit only the target's own greedy token — exactly
+            // one plain decode step's worth of progress.
+            0 => {
+                for slot in 0..2 {
+                    let Some(v) = session.slot_view(slot) else { continue };
+                    let j_max = v.max_new.saturating_sub(v.generated + 1).min(3);
+                    let j = rng.gen_range(j_max + 1);
+                    let mut feed = vec![v.next];
+                    for _ in 0..j {
+                        feed.push(rng.gen_range(256) as i32);
+                    }
+                    let scored = session.verify_step(slot, &feed).unwrap();
+                    session.truncate_rows(slot, v.pos + 1).unwrap();
+                    if let Some(toks) =
+                        session.commit_tokens(slot, v.generated, &scored[..1]).unwrap()
+                    {
+                        done[owner[slot].take().expect("slot must be owned")] = Some(toks);
+                    }
+                }
+            }
+            // Rare cancellation: the request just disappears (no parity
+            // entry), its blocks must still come back.
+            1 if cancels < 2 && rng.gen_bool(0.3) => {
+                let slot = rng.gen_range(2);
+                if session.slot_view(slot).is_some() {
+                    session.cancel_slot(slot).unwrap().expect("active row must cancel");
+                    owner[slot] = None;
+                    cancels += 1;
+                }
+            }
+            // Plain batched decode step.
+            _ => {
+                for (s, toks) in session.decode_step().unwrap().finished {
+                    done[owner[s].take().expect("finished slot must be owned")] = Some(toks);
+                }
+            }
+        }
+    }
+    let mut completed = 0usize;
+    for (i, d) in done.iter().enumerate() {
+        if let Some(toks) = d {
+            assert_eq!(toks, &solo[i], "request {i} ({:?}) diverged from its solo run", reqs[i].0);
+            completed += 1;
+        }
+    }
+    assert!(completed >= reqs.len() - 2, "only {completed} requests completed");
+    assert_eq!(session.kv_blocks_used(), 0);
+    assert!(session.kv_pool_fully_free(), "rollback interleaving leaked blocks or reservations");
 }
 
 #[test]

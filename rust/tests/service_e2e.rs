@@ -54,6 +54,7 @@ fn two_replica_config(dir: PathBuf) -> ServiceConfig {
         max_new_tokens: 4,
         stop_token: None,
         kv: KvPolicy::default(),
+        spec: None,
     }
 }
 
@@ -73,6 +74,7 @@ fn one_replica_config(dir: PathBuf, window: Duration) -> ServiceConfig {
         max_new_tokens: 4,
         stop_token: None,
         kv: KvPolicy::default(),
+        spec: None,
     }
 }
 
@@ -249,6 +251,7 @@ fn startup_fails_cleanly_on_bad_plan() {
         max_new_tokens: 2,
         stop_token: None,
         kv: KvPolicy::default(),
+        spec: None,
     };
     assert!(HexGenService::start(cfg).is_err());
 }
@@ -602,6 +605,7 @@ fn scheduler_plan_lowers_and_serves_end_to_end() {
         max_new_tokens: 4,
         stop_token: None,
         kv: KvPolicy::default(),
+        spec: None,
     })
     .unwrap();
     let c = service.generate("plan served prompt", Some(4)).unwrap();
