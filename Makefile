@@ -57,9 +57,17 @@ plan-serve:
 
 # Boot `serve --listen` on an ephemeral port against the checked-in
 # fixture, run a streaming + a non-streaming completion through the HTTP
-# front-end, and assert token parity with the blocking generate() path.
+# front-end, and assert token parity with the blocking generate() path —
+# then repeat under a fixed-seed fault plan and assert the SSE stream
+# surfaces `retrying` before completing with the same tokens.
 serve-smoke: build
 	bash scripts/serve_smoke.sh
+
+# The fault-tolerance chaos suite (see rust/README.md "Fault
+# tolerance"): failover golden parity, retry-budget exhaustion,
+# breaker quarantine/recovery, deadline expiry, seeded fault storm.
+chaos:
+	cargo test --release -p hexgen --test service_e2e chaos_
 
 # Project-invariant static analysis over rust/src (serving-path panic
 # freedom, hot-path allocation freedom, lock discipline). Zero external
@@ -83,4 +91,4 @@ miri:
 	MIRIFLAGS="-Zmiri-disable-isolation" cargo +nightly miri test \
 		-p hexgen --lib -- util:: runtime::weights
 
-.PHONY: artifacts fixture build test bench-batching bench-decode bench-decode-quick plan-serve serve-smoke lint tsan miri
+.PHONY: artifacts fixture build test bench-batching bench-decode bench-decode-quick plan-serve serve-smoke chaos lint tsan miri

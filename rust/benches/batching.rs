@@ -21,8 +21,8 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, RoutePolicy,
-    ServiceConfig,
+    collect_all, plan_from_strategy, BatchPolicy, FaultPolicy, GenRequest, HexGenService,
+    RoutePolicy, ServiceConfig,
 };
 use hexgen::runtime::BackendKind;
 use hexgen::util::stats::Summary;
@@ -56,6 +56,7 @@ fn run(continuous: bool) -> RunStats {
         stop_token: None,
         kv: Default::default(),
         spec: None,
+        faults: FaultPolicy::default(),
     };
     let service = HexGenService::start(cfg).unwrap();
 

@@ -13,8 +13,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, RoutePolicy,
-    ServiceConfig,
+    collect_all, plan_from_strategy, BatchPolicy, FaultPolicy, GenRequest, HexGenService,
+    RoutePolicy, ServiceConfig,
 };
 use hexgen::util::cli::Args;
 use hexgen::util::rng::Xoshiro256pp;
@@ -61,6 +61,7 @@ fn main() -> Result<()> {
         stop_token: None,
         kv: Default::default(),
         spec: None,
+        faults: FaultPolicy::default(),
     };
     println!("starting HexGen service: 2 replicas ([2,1] 4/2 and [1,1] 3/3)...");
     let t_start = Instant::now();

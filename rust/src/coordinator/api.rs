@@ -12,13 +12,21 @@
 //!                         │
 //!                         ▼
 //!           Token{0} ─ Token{1} ─ … ─┬─▶ Done(Completion)
-//!                                    └─▶ Failed(ServiceError)
+//!                                    ├─▶ Failed(ServiceError)
+//!                                    └─▶ Retrying{replica, attempt}
+//!                                          │ (failover: re-queued on a
+//!                                          ▼  healthy replica)
+//!                                     Admitted{…} ─ Token{…} ─ …
 //! ```
 //!
 //! `Token{0}` is the token argmaxed from the prefill logits; every later
 //! `Token{i}` is one decode iteration, emitted the moment the step
 //! retires — so a consumer sees tokens while the row is still decoding.
-//! Exactly one terminal event (`Done` or `Failed`) is ever sent.
+//! Exactly one terminal event (`Done` or `Failed`) is ever sent. A
+//! replica fault mid-request emits the non-terminal `Retrying` and the
+//! lifecycle re-enters at `Admitted` on another replica; already-sent
+//! `Token` events are never re-sent (the retry resumes exactly where the
+//! stream left off).
 //!
 //! **Cancellation.** [`RequestHandle::cancel`] (or dropping the handle
 //! before a terminal event — e.g. an HTTP client hanging up mid-stream)
@@ -56,11 +64,17 @@ pub struct GenRequest {
     /// Per-request stop token; `None` falls back to
     /// [`ServiceConfig::stop_token`](super::service::ServiceConfig::stop_token).
     pub stop: Option<i32>,
+    /// Per-request deadline, milliseconds from submission. Enforced
+    /// *where work happens*: checked at every admission and decode-step
+    /// boundary next to the cancel flag, so an expired request frees its
+    /// KV blocks and router count instead of burning decode steps. The
+    /// request terminates with [`ServiceError::DeadlineExceeded`].
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenRequest {
     pub fn new(prompt: impl Into<String>) -> GenRequest {
-        GenRequest { prompt: prompt.into(), max_new: None, stop: None }
+        GenRequest { prompt: prompt.into(), max_new: None, stop: None, deadline_ms: None }
     }
 
     pub fn with_max_new(mut self, max_new: usize) -> GenRequest {
@@ -70,6 +84,11 @@ impl GenRequest {
 
     pub fn with_stop(mut self, stop: i32) -> GenRequest {
         self.stop = Some(stop);
+        self
+    }
+
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> GenRequest {
+        self.deadline_ms = Some(deadline_ms);
         self
     }
 }
@@ -86,6 +105,9 @@ pub enum ServiceError {
     ReplicaFailed { replica: usize, message: String },
     /// Cancelled via [`RequestHandle::cancel`] or handle drop.
     Cancelled,
+    /// The request's own `deadline_ms` expired; its KV blocks and router
+    /// count were freed at the admission/decode-step boundary.
+    DeadlineExceeded,
     /// The service (or its worker) dropped the request channel.
     Disconnected,
     /// A caller-imposed deadline expired while waiting.
@@ -101,6 +123,7 @@ impl fmt::Display for ServiceError {
                 write!(f, "replica {replica} failed: {message}")
             }
             ServiceError::Cancelled => write!(f, "request cancelled"),
+            ServiceError::DeadlineExceeded => write!(f, "request deadline exceeded"),
             ServiceError::Disconnected => write!(f, "service dropped the request"),
             ServiceError::Timeout => write!(f, "timed out waiting for the request"),
         }
@@ -158,6 +181,12 @@ pub enum RequestEvent {
     /// flushes the buffer, so the concatenation of all deltas equals
     /// [`Completion::text`] exactly.
     Token { index: usize, token: i32, text_delta: String },
+    /// Non-terminal: the replica serving the request faulted and the
+    /// request was re-queued for another replica (`attempt` counts
+    /// retries, starting at 1). The stream continues with a fresh
+    /// `Admitted` and resumes token emission exactly where it left off —
+    /// already-streamed tokens are never re-sent.
+    Retrying { replica: usize, attempt: u32 },
     /// Terminal: the request finished.
     Done(Completion),
     /// Terminal: the request failed (including cancellation).

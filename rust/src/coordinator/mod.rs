@@ -27,12 +27,13 @@ pub use pipeline::{
     argmax_rows, plan_from_strategy, DecodeSession, GenerationResult, KvSegment,
     PipelineExecutor, SlotRequest, SlotView, StagePlan, StepOutcome,
 };
-pub use router::{RoutePolicy, Router, ServePhase};
+pub use router::{BreakerPolicy, ReplicaHealth, RoutePolicy, Router, ServePhase};
 pub use server::HttpServer;
-pub use service::{HexGenService, ServiceConfig, ServiceStats};
+pub use service::{FaultPolicy, HexGenService, ServiceConfig, ServiceStats};
 pub use speculative::{SpecPolicy, SpecStats, SpeculativeSession};
 
 // Convenience: the KV sizing policy lives with the block pool in
-// `runtime::kvcache`, but service configurations are assembled from this
-// layer — re-export it next to `ServiceConfig`.
-pub use crate::runtime::KvPolicy;
+// `runtime::kvcache`, and the fault-injection plan with its backend
+// wrapper in `runtime::faults`, but service configurations are
+// assembled from this layer — re-export both next to `ServiceConfig`.
+pub use crate::runtime::{FaultPlan, KvPolicy};

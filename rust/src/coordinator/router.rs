@@ -25,23 +25,38 @@
 //! [`PhaseRole`] can serve the phase. The phase-less entry points
 //! ([`Router::route`], [`Router::speeds`], [`Router::observe_rate`])
 //! remain the decode-side view — the fused path hybrid deployments use.
+//!
+//! The router is also where replica **health** lives: a per-replica
+//! circuit breaker (`Healthy → Quarantined(until) → HalfOpen`) fed by
+//! [`Router::report_fault`]/[`Router::report_success`]. Consecutive
+//! faults quarantine a replica (every routing entry point skips it), the
+//! quarantine expires into a half-open state that admits exactly one
+//! canary request at a time, and the canary's outcome closes or re-opens
+//! the breaker. [`Router::health`] snapshots the state machine for
+//! `/healthz`, `/metrics`, and `/v1/plan`.
 
 use crate::parallelism::PhaseRole;
 use crate::util::sync::{locks, OrderedMutex, OrderedMutexGuard};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// EWMA smoothing factor for measured decode throughput.
 const SPEED_EWMA_ALPHA: f64 = 0.2;
 
-/// Routing decisions a replica's measured EWMA survives without a fresh
+/// Wall-clock age a replica's measured EWMA survives without a fresh
 /// sample before it starts decaying back toward the plan seed. An idle
 /// replica stops reporting, and its last measurement — possibly taken
 /// under transient load — would otherwise price it forever.
-const SPEED_STALE_AFTER: u32 = 64;
-/// Fraction a stale measurement moves toward its seed-calibrated anchor
-/// on each further routing decision.
-const SPEED_STALE_DECAY: f64 = 0.05;
+const SPEED_STALE_AFTER: Duration = Duration::from_secs(10);
+/// Time constant (seconds) of the exponential decay a stale measurement
+/// follows toward its seed-calibrated anchor: after `dt` seconds of
+/// routing activity it has closed `1 − exp(−dt/τ)` of the gap. Together
+/// with [`SPEED_STALE_AFTER`] a stale EWMA fully reverts to seed pricing
+/// in under a minute of wall-clock time — a quarantined replica
+/// returning after 60 s re-enters at seed pricing, not at its pre-fault
+/// EWMA.
+const SPEED_STALE_TAU: f64 = 10.0;
 /// Once a stale measurement is within this fraction of its anchor it is
 /// dropped entirely, so the replica prices by its plan seed again (and a
 /// later sample restarts the EWMA from scratch).
@@ -79,9 +94,11 @@ struct PhaseSpeeds {
     /// EWMA of measured throughput; `None` until the replica reports
     /// its first measurement.
     measured: Vec<Option<f64>>,
-    /// Routing decisions since the replica's last sample; drives the
-    /// staleness decay of [`Self::tick`].
-    stale: Vec<u32>,
+    /// When the replica last reported a sample; drives the wall-clock
+    /// staleness decay of [`Self::tick_at`].
+    last_sample: Vec<Option<Instant>>,
+    /// When [`Self::tick_at`] last ran, for the decay's elapsed time.
+    last_tick: Option<Instant>,
 }
 
 impl PhaseSpeeds {
@@ -89,7 +106,8 @@ impl PhaseSpeeds {
         PhaseSpeeds {
             seed: vec![1.0; replicas],
             measured: vec![None; replicas],
-            stale: vec![0; replicas],
+            last_sample: vec![None; replicas],
+            last_tick: None,
         }
     }
 
@@ -117,37 +135,159 @@ impl PhaseSpeeds {
         self.measured.iter().zip(&self.seed).map(|(m, &s)| m.unwrap_or(s * calib)).collect()
     }
 
-    fn observe(&mut self, replica: usize, rate: f64) {
+    fn observe_at(&mut self, replica: usize, rate: f64, now: Instant) {
         self.measured[replica] = Some(match self.measured[replica] {
             None => rate,
             Some(prev) => (1.0 - SPEED_EWMA_ALPHA) * prev + SPEED_EWMA_ALPHA * rate,
         });
-        self.stale[replica] = 0;
+        self.last_sample[replica] = Some(now);
     }
 
-    /// Age every measurement by one routing decision. A replica that has
-    /// not reported for [`SPEED_STALE_AFTER`] decisions decays toward
-    /// its seed-calibrated anchor (what [`Self::effective`] would price
-    /// an *unmeasured* replica at), and snaps back to pure seed pricing
-    /// once it gets close — so a replica idled long enough routes by the
-    /// plan estimate again instead of by a measurement taken under a
-    /// load pattern that no longer exists.
-    fn tick(&mut self) {
+    /// Age every measurement by the wall-clock time since the last tick.
+    /// A replica whose last sample is older than [`SPEED_STALE_AFTER`]
+    /// decays toward its seed-calibrated anchor (what [`Self::effective`]
+    /// would price an *unmeasured* replica at) with time constant
+    /// [`SPEED_STALE_TAU`], and snaps back to pure seed pricing once it
+    /// gets close — so a replica idled (or quarantined) long enough
+    /// routes by the plan estimate again instead of by a measurement
+    /// taken under a load pattern that no longer exists.
+    fn tick_at(&mut self, now: Instant) {
+        let Some(prev) = self.last_tick else {
+            self.last_tick = Some(now);
+            return;
+        };
+        self.last_tick = Some(now);
+        let dt = now.saturating_duration_since(prev).as_secs_f64();
+        if dt <= 0.0 {
+            return;
+        }
+        let gap_closed = 1.0 - (-dt / SPEED_STALE_TAU).exp();
         let calib = self.calibration();
         for i in 0..self.measured.len() {
             let Some(m) = self.measured[i] else { continue };
-            self.stale[i] = self.stale[i].saturating_add(1);
-            if self.stale[i] <= SPEED_STALE_AFTER {
+            let age = self.last_sample[i].map_or(Duration::MAX, |s| now.saturating_duration_since(s));
+            if age <= SPEED_STALE_AFTER {
                 continue;
             }
             let anchor = self.seed[i] * calib;
-            let next = (1.0 - SPEED_STALE_DECAY) * m + SPEED_STALE_DECAY * anchor;
+            let next = m + (anchor - m) * gap_closed;
             if (next - anchor).abs() <= SPEED_STALE_SNAP * anchor.abs() {
                 self.measured[i] = None;
-                self.stale[i] = 0;
+                self.last_sample[i] = None;
             } else {
                 self.measured[i] = Some(next);
             }
+        }
+    }
+}
+
+/// Circuit-breaker thresholds for the per-replica health state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerPolicy {
+    /// Consecutive faults (no intervening success) that trip a replica
+    /// from healthy to quarantined.
+    pub consecutive_faults: u32,
+    /// How long a tripped replica stays excluded from routing before the
+    /// breaker goes half-open.
+    pub quarantine: Duration,
+    /// How long a half-open breaker waits for its canary's verdict
+    /// before admitting a replacement canary (a lost canary — e.g. its
+    /// client hung up — must not wedge the replica half-open forever).
+    pub probe_timeout: Duration,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> BreakerPolicy {
+        BreakerPolicy {
+            consecutive_faults: 3,
+            quarantine: Duration::from_secs(10),
+            probe_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Externally visible breaker state, surfaced in `/healthz`, `/metrics`,
+/// and `/v1/plan`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    Healthy,
+    Quarantined,
+    HalfOpen,
+}
+
+impl ReplicaHealth {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaHealth::Healthy => "healthy",
+            ReplicaHealth::Quarantined => "quarantined",
+            ReplicaHealth::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Internal breaker state (behind the router's ranked mutex).
+#[derive(Debug, Clone, Copy)]
+enum BreakerState {
+    /// Serving normally; counts consecutive faults toward the trip
+    /// threshold.
+    Closed { consecutive: u32 },
+    /// Quarantined: excluded from routing until the deadline.
+    Open { until: Instant },
+    /// Quarantine expired: admit one canary request at a time (`probe`
+    /// is when the in-flight canary was routed, `None` if none is out).
+    HalfOpen { probe: Option<Instant> },
+}
+
+impl BreakerState {
+    /// Whether routing may place a request on this replica now, applying
+    /// the timed `Open → HalfOpen` transition and the lost-canary
+    /// re-arm in passing.
+    fn admits(&mut self, now: Instant, policy: &BreakerPolicy) -> bool {
+        match *self {
+            BreakerState::Closed { .. } => true,
+            BreakerState::Open { until } => {
+                if now >= until {
+                    *self = BreakerState::HalfOpen { probe: None };
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen { probe: None } => true,
+            BreakerState::HalfOpen { probe: Some(sent) } => {
+                if now.saturating_duration_since(sent) >= policy.probe_timeout {
+                    *self = BreakerState::HalfOpen { probe: None };
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record that a request was just routed here: a half-open breaker
+    /// marks its canary in flight.
+    fn note_routed(&mut self, now: Instant) {
+        if let BreakerState::HalfOpen { probe } = self {
+            if probe.is_none() {
+                *probe = Some(now);
+            }
+        }
+    }
+
+    fn health(&self, now: Instant) -> ReplicaHealth {
+        match *self {
+            BreakerState::Closed { .. } => ReplicaHealth::Healthy,
+            // An expired quarantine *is* half-open — `admits` just has
+            // not run yet; report the state routing would see.
+            BreakerState::Open { until } => {
+                if now >= until {
+                    ReplicaHealth::HalfOpen
+                } else {
+                    ReplicaHealth::Quarantined
+                }
+            }
+            BreakerState::HalfOpen { .. } => ReplicaHealth::HalfOpen,
         }
     }
 }
@@ -163,6 +303,9 @@ struct SpeedState {
     /// Phase role per replica (all-[`PhaseRole::Hybrid`] until
     /// [`Router::set_roles`]).
     roles: Vec<PhaseRole>,
+    /// Per-replica circuit breaker.
+    breakers: Vec<BreakerState>,
+    breaker_policy: BreakerPolicy,
 }
 
 /// Shared per-replica load accounting.
@@ -187,6 +330,8 @@ impl Router {
                     decode: PhaseSpeeds::new(replicas),
                     prefill: PhaseSpeeds::new(replicas),
                     roles: vec![PhaseRole::Hybrid; replicas],
+                    breakers: vec![BreakerState::Closed { consecutive: 0 }; replicas],
+                    breaker_policy: BreakerPolicy::default(),
                 },
             ),
             rr_next: AtomicUsize::new(0),
@@ -241,10 +386,11 @@ impl Router {
         if !rate.is_finite() || rate <= 0.0 {
             return;
         }
+        let now = Instant::now();
         let mut st = self.state();
         match phase {
-            ServePhase::Prefill => st.prefill.observe(replica, rate),
-            ServePhase::Decode => st.decode.observe(replica, rate),
+            ServePhase::Prefill => st.prefill.observe_at(replica, rate, now),
+            ServePhase::Decode => st.decode.observe_at(replica, rate, now),
         }
     }
 
@@ -280,17 +426,11 @@ impl Router {
     }
 
     /// Pick a replica for a new request and record the assignment.
-    pub fn route(&self) -> usize {
-        match self.route_excluding(&[]) {
-            Some(r) => r,
-            // Unreachable with nothing excluded (`new` asserts replicas
-            // > 0), but a panic here would kill a handler thread; fall
-            // back to replica 0 and keep the complete() pairing intact.
-            None => {
-                self.outstanding[0].fetch_add(1, Ordering::Relaxed);
-                0
-            }
-        }
+    /// Returns `None` when no replica is admissible (every breaker open)
+    /// — the caller must surface that as `AllReplicasDown`, never queue
+    /// onto a known-dead replica.
+    pub fn route(&self) -> Option<usize> {
+        self.route_excluding(&[])
     }
 
     /// Pick a replica, skipping `excluded` (replicas observed dead by the
@@ -314,25 +454,32 @@ impl Router {
     }
 
     fn route_filtered(&self, excluded: &[usize], phase: Option<ServePhase>) -> Option<usize> {
-        // Every routing decision ages the priced phase's measurements:
-        // replicas that keep routing without reporting decay back toward
-        // their plan seeds ([`PhaseSpeeds::tick`]). The phase-less path
-        // prices by decode-side speeds, so it ages the decode side.
-        {
+        let now = Instant::now();
+        let n = self.outstanding.len();
+        // One lock section: age the priced phase's measurements (replicas
+        // that keep routing without reporting decay back toward their
+        // plan seeds, [`PhaseSpeeds::tick_at`]; the phase-less path
+        // prices by decode-side speeds, so it ages the decode side) and
+        // snapshot what each replica's breaker admits right now.
+        let (admit, roles) = {
             let mut st = self.state();
             match phase {
-                Some(ServePhase::Prefill) => st.prefill.tick(),
-                _ => st.decode.tick(),
+                Some(ServePhase::Prefill) => st.prefill.tick_at(now),
+                _ => st.decode.tick_at(now),
             }
-        }
-        let n = self.outstanding.len();
-        let roles = match phase {
-            Some(_) => self.state().roles.clone(),
-            None => Vec::new(),
+            let policy = st.breaker_policy;
+            let admit: Vec<bool> =
+                (0..n).map(|i| st.breakers[i].admits(now, &policy)).collect();
+            let roles = match phase {
+                Some(_) => st.roles.clone(),
+                None => Vec::new(),
+            };
+            (admit, roles)
         };
-        let eligible = |i: usize| match phase {
-            Some(p) => !excluded.contains(&i) && p.served_by(roles[i]),
-            None => !excluded.contains(&i),
+        let eligible = |i: usize| {
+            admit[i]
+                && !excluded.contains(&i)
+                && phase.map_or(true, |p| p.served_by(roles[i]))
         };
         let r = match self.policy {
             RoutePolicy::RoundRobin => {
@@ -366,6 +513,10 @@ impl Router {
                 best?
             }
         };
+        // Re-lock to mark a half-open canary in flight. (Two concurrent
+        // routes can both see `probe: None` and each send a canary —
+        // tolerable: the breaker still re-opens on the first failure.)
+        self.state().breakers[r].note_routed(now);
         self.outstanding[r].fetch_add(1, Ordering::Relaxed);
         Some(r)
     }
@@ -389,6 +540,53 @@ impl Router {
     pub fn outstanding(&self, replica: usize) -> usize {
         self.outstanding[replica].load(Ordering::Relaxed)
     }
+
+    /// Replace the circuit-breaker thresholds (existing breaker states
+    /// are kept; the new thresholds apply from the next event).
+    pub fn set_breaker_policy(&self, policy: BreakerPolicy) {
+        self.state().breaker_policy = policy;
+    }
+
+    /// Record a replica fault. Consecutive faults reaching the policy
+    /// threshold trip the breaker open (quarantine); a fault observed
+    /// while half-open — the canary failed — re-opens it immediately.
+    pub fn report_fault(&self, replica: usize) {
+        let now = Instant::now();
+        let mut st = self.state();
+        let policy = st.breaker_policy;
+        let b = &mut st.breakers[replica];
+        match *b {
+            BreakerState::Closed { consecutive } => {
+                let c = consecutive.saturating_add(1);
+                *b = if c >= policy.consecutive_faults {
+                    BreakerState::Open { until: now + policy.quarantine }
+                } else {
+                    BreakerState::Closed { consecutive: c }
+                };
+            }
+            BreakerState::HalfOpen { .. } => {
+                *b = BreakerState::Open { until: now + policy.quarantine };
+            }
+            // Already quarantined (e.g. straggler faults from rows that
+            // were in flight when the breaker tripped): keep the
+            // original deadline rather than extending it per fault.
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Record a request served to completion by `replica`: resets the
+    /// consecutive-fault count and closes a half-open breaker (the
+    /// canary came back healthy).
+    pub fn report_success(&self, replica: usize) {
+        self.state().breakers[replica] = BreakerState::Closed { consecutive: 0 };
+    }
+
+    /// Per-replica breaker state snapshot for `/healthz`, `/metrics`,
+    /// and `/v1/plan`.
+    pub fn health(&self) -> Vec<ReplicaHealth> {
+        let now = Instant::now();
+        self.state().breakers.iter().map(|b| b.health(now)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -398,18 +596,18 @@ mod tests {
     #[test]
     fn round_robin_cycles() {
         let r = Router::new(RoutePolicy::RoundRobin, 3);
-        let picks: Vec<usize> = (0..6).map(|_| r.route()).collect();
+        let picks: Vec<usize> = (0..6).map(|_| r.route().unwrap()).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
     }
 
     #[test]
     fn least_loaded_balances() {
         let r = Router::new(RoutePolicy::LeastLoaded, 2);
-        let a = r.route();
-        let b = r.route();
+        let a = r.route().unwrap();
+        let b = r.route().unwrap();
         assert_ne!(a, b, "second request goes to the idle replica");
         r.complete(a);
-        assert_eq!(r.route(), a);
+        assert_eq!(r.route(), Some(a));
     }
 
     #[test]
@@ -418,7 +616,7 @@ mod tests {
         r.set_speeds(vec![4.0, 1.0]);
         // replica 0 is 4× faster: it should absorb the first requests
         // before replica 1 gets one ((q+1)/speed tie at the 5th pick).
-        let picks: Vec<usize> = (0..5).map(|_| r.route()).collect();
+        let picks: Vec<usize> = (0..5).map(|_| r.route().unwrap()).collect();
         assert!(picks[..4].iter().all(|&p| p == 0), "{picks:?}");
         assert_eq!(picks[4], 1, "{picks:?}");
     }
@@ -441,7 +639,7 @@ mod tests {
         let r = Router::new(RoutePolicy::LeastLoaded, 2);
         r.set_speeds(vec![4.0, 1.0]);
         for _ in 0..20 {
-            r.route();
+            r.route().unwrap();
         }
         let (fast, slow) = (r.outstanding(0), r.outstanding(1));
         assert_eq!(fast + slow, 20);
@@ -457,7 +655,7 @@ mod tests {
         let s = r.speeds();
         assert!((s[0] - 40.0).abs() < 1e-9 && (s[1] - 10.0).abs() < 1e-9, "{s:?}");
         // 40 vs 10 tok/s: the fast replica absorbs the first picks.
-        let picks: Vec<usize> = (0..4).map(|_| r.route()).collect();
+        let picks: Vec<usize> = (0..4).map(|_| r.route().unwrap()).collect();
         assert!(picks.iter().all(|&p| p == 0), "{picks:?}");
     }
 
@@ -509,7 +707,7 @@ mod tests {
         // queue send fails must be paired with complete(), restoring the
         // counter so the policy does not keep favouring the dead replica.
         let r = Router::new(RoutePolicy::LeastLoaded, 2);
-        let dead = r.route();
+        let dead = r.route().unwrap();
         r.complete(dead); // hand-off failed: release
         assert_eq!(r.outstanding(dead), 0);
         let alive = r.route_excluding(&[dead]).unwrap();
@@ -520,7 +718,7 @@ mod tests {
     fn load_snapshot_pairs_depth_with_speed() {
         let r = Router::new(RoutePolicy::LeastLoaded, 2);
         r.set_speeds(vec![4.0, 1.0]);
-        r.route();
+        r.route().unwrap();
         let snap = r.load_snapshot();
         assert_eq!(snap.len(), 2);
         assert_eq!(snap[0], (1, 4.0));
@@ -604,38 +802,59 @@ mod tests {
     #[test]
     fn stale_measurements_decay_back_to_plan_seeds() {
         // Idle-then-resume: replica 1 reports one anomalously slow sample
-        // (say, a transient load spike) and then goes quiet while the
-        // router keeps deciding and replica 0 keeps reporting. Without
-        // decay the stale 1 tok/s would price replica 1 forever.
-        let r = Router::new(RoutePolicy::LeastLoaded, 2);
-        r.set_speeds(vec![2.0, 1.0]);
-        r.observe_rate(0, 20.0);
-        r.observe_rate(1, 1.0);
-        assert!((r.speeds()[1] - 1.0).abs() < 1e-9, "{:?}", r.speeds());
+        // (say, a transient load spike) and then goes quiet for a minute
+        // of wall-clock time while replica 0 keeps reporting. Without
+        // decay the stale 1 tok/s would price replica 1 forever. Driven
+        // at the PhaseSpeeds level with synthetic timestamps so the test
+        // does not sleep through the real decay horizon.
+        let t0 = Instant::now();
+        let mut p = PhaseSpeeds::new(2);
+        p.seed = vec![2.0, 1.0];
+        p.observe_at(0, 20.0, t0);
+        p.observe_at(1, 1.0, t0);
+        assert!((p.effective()[1] - 1.0).abs() < 1e-9, "{:?}", p.effective());
 
         // Within the staleness window the measurement is untouched.
-        for _ in 0..SPEED_STALE_AFTER {
-            let p = r.route();
-            r.complete(p);
-        }
-        assert!((r.speeds()[1] - 1.0).abs() < 1e-9, "decayed too early: {:?}", r.speeds());
+        p.tick_at(t0);
+        p.tick_at(t0 + Duration::from_secs(5));
+        assert!((p.effective()[1] - 1.0).abs() < 1e-9, "decayed too early: {:?}", p.effective());
 
         // Past the window it decays toward the seed-calibrated anchor
         // (seed 1 × the 20/2 measured scale of replica 0 = 10 tok/s)
-        // and eventually snaps back to pure seed pricing.
-        for _ in 0..500 {
-            let p = r.route();
-            r.complete(p);
-            r.observe_rate(0, 20.0); // replica 0 stays fresh
+        // and snaps back to pure seed pricing well within two minutes.
+        for s in 6..=120 {
+            let now = t0 + Duration::from_secs(s);
+            p.observe_at(0, 20.0, now); // replica 0 stays fresh
+            p.tick_at(now);
         }
-        let s = r.speeds();
-        assert!((s[0] - 20.0).abs() < 1e-9, "fresh replica must not decay: {s:?}");
-        assert!((s[1] - 10.0).abs() < 1e-9, "stale replica must revert to its seed: {s:?}");
+        let e = p.effective();
+        assert!((e[0] - 20.0).abs() < 1e-9, "fresh replica must not decay: {e:?}");
+        assert!((e[1] - 10.0).abs() < 1e-9, "stale replica must revert to its seed: {e:?}");
+        assert!(p.measured[1].is_none(), "snapped back to pure seed pricing");
 
         // Resume: a fresh sample takes over immediately and restarts the
         // EWMA from the new rate, not from the decayed remnant.
-        r.observe_rate(1, 30.0);
-        assert!((r.speeds()[1] - 30.0).abs() < 1e-9, "{:?}", r.speeds());
+        p.observe_at(1, 30.0, t0 + Duration::from_secs(121));
+        assert!((p.effective()[1] - 30.0).abs() < 1e-9, "{:?}", p.effective());
+    }
+
+    #[test]
+    fn decay_is_wall_clock_not_decision_count() {
+        // Hundreds of routing decisions inside the staleness window must
+        // not move a measurement: only elapsed time does.
+        let t0 = Instant::now();
+        let mut p = PhaseSpeeds::new(2);
+        p.seed = vec![2.0, 1.0];
+        p.observe_at(0, 20.0, t0);
+        p.observe_at(1, 1.0, t0);
+        for _ in 0..500 {
+            p.tick_at(t0 + Duration::from_secs(5));
+        }
+        assert!(
+            (p.effective()[1] - 1.0).abs() < 1e-9,
+            "decision count aged the EWMA: {:?}",
+            p.effective()
+        );
     }
 
     #[test]
@@ -646,7 +865,7 @@ mod tests {
         let r = Router::new(RoutePolicy::LeastLoaded, 2);
         r.set_speeds(vec![2.0, 1.0]);
         r.observe_rate(1, 1.0);
-        for _ in 0..(SPEED_STALE_AFTER + 200) {
+        for _ in 0..200 {
             let p = r.route_phase(ServePhase::Prefill, &[]).unwrap();
             r.complete(p);
         }
@@ -658,11 +877,102 @@ mod tests {
     }
 
     #[test]
+    fn consecutive_faults_quarantine_a_replica() {
+        let r = Router::new(RoutePolicy::RoundRobin, 2);
+        for _ in 0..3 {
+            r.report_fault(1);
+        }
+        assert_eq!(r.health(), vec![ReplicaHealth::Healthy, ReplicaHealth::Quarantined]);
+        for _ in 0..4 {
+            assert_eq!(r.route(), Some(0), "quarantined replica must not route");
+            r.complete(0);
+        }
+        // Phase routing respects the breaker too.
+        assert_eq!(r.route_phase(ServePhase::Decode, &[0]), None);
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_fault_count() {
+        let r = Router::new(RoutePolicy::RoundRobin, 1);
+        r.report_fault(0);
+        r.report_fault(0);
+        r.report_success(0);
+        r.report_fault(0);
+        r.report_fault(0);
+        assert_eq!(r.health(), vec![ReplicaHealth::Healthy]);
+        assert_eq!(r.route(), Some(0));
+    }
+
+    #[test]
+    fn all_replicas_quarantined_routes_none() {
+        let r = Router::new(RoutePolicy::LeastLoaded, 2);
+        for replica in 0..2 {
+            for _ in 0..3 {
+                r.report_fault(replica);
+            }
+        }
+        assert_eq!(r.route(), None);
+        assert_eq!(r.route_excluding(&[]), None);
+        assert_eq!(r.route_phase(ServePhase::Decode, &[]), None);
+    }
+
+    #[test]
+    fn half_open_admits_one_canary_then_closes_or_reopens() {
+        let r = Router::new(RoutePolicy::RoundRobin, 2);
+        r.set_breaker_policy(BreakerPolicy {
+            consecutive_faults: 1,
+            quarantine: Duration::from_millis(0), // expires immediately
+            probe_timeout: Duration::from_secs(60),
+        });
+        r.report_fault(1);
+        // Quarantine already expired: half-open, one canary admitted.
+        assert_eq!(r.route_excluding(&[0]), Some(1));
+        assert_eq!(r.health()[1], ReplicaHealth::HalfOpen);
+        // While the canary is in flight no second probe is admitted.
+        assert_eq!(r.route_excluding(&[0]), None);
+        // Canary succeeds: the breaker closes and traffic resumes.
+        r.complete(1);
+        r.report_success(1);
+        assert_eq!(r.health()[1], ReplicaHealth::Healthy);
+        assert_eq!(r.route_excluding(&[0]), Some(1));
+        r.complete(1);
+
+        // A failed canary re-opens the breaker for a full quarantine.
+        r.set_breaker_policy(BreakerPolicy {
+            consecutive_faults: 1,
+            quarantine: Duration::from_secs(3600),
+            probe_timeout: Duration::from_secs(60),
+        });
+        r.report_fault(1);
+        assert_eq!(r.health()[1], ReplicaHealth::Quarantined);
+        assert_eq!(r.route_excluding(&[0]), None);
+    }
+
+    #[test]
+    fn lost_canary_rearms_after_probe_timeout() {
+        let r = Router::new(RoutePolicy::RoundRobin, 1);
+        r.set_breaker_policy(BreakerPolicy {
+            consecutive_faults: 1,
+            quarantine: Duration::from_millis(0),
+            probe_timeout: Duration::from_millis(200),
+        });
+        r.report_fault(0);
+        assert_eq!(r.route(), Some(0), "half-open admits the first canary");
+        r.complete(0);
+        assert_eq!(r.route(), None, "second canary denied while the first is out");
+        // The canary never reported back (lost worker, hung client):
+        // after probe_timeout a replacement canary is admitted instead of
+        // wedging the replica half-open forever.
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(r.route(), Some(0));
+    }
+
+    #[test]
     fn outstanding_tracks() {
         let r = Router::new(RoutePolicy::LeastLoaded, 1);
         assert_eq!(r.outstanding(0), 0);
-        r.route();
-        r.route();
+        r.route().unwrap();
+        r.route().unwrap();
         assert_eq!(r.outstanding(0), 2);
         r.complete(0);
         assert_eq!(r.outstanding(0), 1);

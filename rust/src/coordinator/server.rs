@@ -9,10 +9,18 @@
 //!
 //! | route | behaviour |
 //! |---|---|
-//! | `POST /v1/completions` | body `{"prompt", "max_new"?, "stop"?, "stream"?}`; `"stream": true` streams the request's [`RequestEvent`]s as Server-Sent Events (`queued` / `admitted` / `token` / `done` / `failed`), otherwise blocks and returns the completion JSON |
-//! | `GET /healthz` | liveness + replica count |
-//! | `GET /metrics` | router speeds & queue depths, request counters, comm stats |
-//! | `GET /v1/plan` | the per-replica stage plans being served |
+//! | `POST /v1/completions` | body `{"prompt", "max_new"?, "stop"?, "stream"?, "deadline_ms"?}`; `"stream": true` streams the request's [`RequestEvent`]s as Server-Sent Events (`queued` / `admitted` / `token` / `retrying` / `done` / `failed`), otherwise blocks and returns the completion JSON |
+//! | `GET /healthz` | liveness (`ok` / `degraded` when replicas are quarantined) + per-replica breaker health |
+//! | `GET /metrics` | router speeds & queue depths, replica health, request counters (incl. retries/failovers/losses), comm stats |
+//! | `GET /v1/plan` | the per-replica stage plans being served, with breaker health |
+//!
+//! Per-request deadlines: the `x-hexgen-deadline-ms` header (overridden
+//! by a `deadline_ms` body field) propagates into
+//! [`GenRequest::deadline_ms`], enforced by the replica workers at every
+//! admission/decode-step boundary — an expired request frees its KV
+//! blocks and fails with 504, it does not burn decode steps until a
+//! wait-side timer notices. Unset, requests get the server default
+//! [`REQUEST_DEADLINE`].
 //!
 //! A client that disconnects mid-stream cancels its request: the SSE
 //! write fails, the handler drops the [`RequestHandle`], and handle drop
@@ -33,8 +41,13 @@ use crate::util::json::Json;
 use super::api::{Completion, GenRequest, RequestEvent, ServiceError};
 use super::service::HexGenService;
 
-/// Hard ceiling on one request's wall time (queue + prefill + decode).
+/// Default per-request deadline (queue + prefill + decode) when the
+/// client sets none; enforced service-side at the step boundary.
 const REQUEST_DEADLINE: Duration = Duration::from_secs(600);
+/// Extra slack the waiting side grants past the service-side deadline,
+/// so the worker's `DeadlineExceeded` (which frees the KV blocks) wins
+/// the race against the client-side `Timeout`.
+const DEADLINE_GRACE: Duration = Duration::from_secs(5);
 /// Socket read timeout while parsing a request head/body.
 const READ_TIMEOUT: Duration = Duration::from_secs(30);
 /// Largest accepted request body — the declared Content-Length is
@@ -108,6 +121,9 @@ struct HttpRequest {
     method: String,
     path: String,
     body: String,
+    /// `x-hexgen-deadline-ms` header, if present (a `deadline_ms` body
+    /// field overrides it).
+    deadline_ms: Option<u64>,
 }
 
 /// Read one request; errors carry the HTTP status to answer with.
@@ -122,6 +138,7 @@ fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, (u16
     let method = parts.next().ok_or_else(|| bad(&"missing method"))?.to_string();
     let path = parts.next().ok_or_else(|| bad(&"missing path"))?.to_string();
     let mut content_length = 0usize;
+    let mut deadline_ms: Option<u64> = None;
     let mut head_bytes = line.len();
     loop {
         let mut header = String::new();
@@ -140,6 +157,12 @@ fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, (u16
             if k.trim().eq_ignore_ascii_case("content-length") {
                 content_length =
                     v.trim().parse().map_err(|_| bad(&format!("bad content-length '{v}'")))?;
+            } else if k.trim().eq_ignore_ascii_case("x-hexgen-deadline-ms") {
+                deadline_ms = Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|_| bad(&format!("bad x-hexgen-deadline-ms '{v}'")))?,
+                );
             }
         }
     }
@@ -149,7 +172,12 @@ fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, (u16
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body).map_err(|e| bad(&e))?;
-    Ok(HttpRequest { method, path, body: String::from_utf8_lossy(&body).into_owned() })
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+        deadline_ms,
+    })
 }
 
 fn handle_connection(service: &HexGenService, mut stream: TcpStream) -> Result<()> {
@@ -165,13 +193,20 @@ fn handle_connection(service: &HexGenService, mut stream: TcpStream) -> Result<(
         ("GET", "/healthz") => respond_json(&mut stream, 200, &health_json(service))?,
         ("GET", "/metrics") => respond_json(&mut stream, 200, &metrics_json(service))?,
         ("GET", "/v1/plan") => respond_json(&mut stream, 200, &plan_json(service))?,
-        ("POST", "/v1/completions") => handle_completions(service, &mut stream, &req.body)?,
+        ("POST", "/v1/completions") => {
+            handle_completions(service, &mut stream, &req.body, req.deadline_ms)?
+        }
         _ => respond_error(&mut stream, 404, &format!("no route {} {}", req.method, req.path))?,
     }
     Ok(())
 }
 
-fn handle_completions(service: &HexGenService, stream: &mut TcpStream, body: &str) -> Result<()> {
+fn handle_completions(
+    service: &HexGenService,
+    stream: &mut TcpStream,
+    body: &str,
+    header_deadline_ms: Option<u64>,
+) -> Result<()> {
     let parsed = match Json::parse(body) {
         Ok(j) => j,
         Err(e) => return respond_error(stream, 400, &format!("bad json body: {e}")),
@@ -199,13 +234,29 @@ fn handle_completions(service: &HexGenService, stream: &mut TcpStream, body: &st
             Err(_) => return respond_error(stream, 400, "'stream' must be a boolean"),
         },
     };
+    req.deadline_ms = header_deadline_ms;
+    if let Some(v) = parsed.opt("deadline_ms") {
+        match v.as_u64() {
+            Ok(ms) => req.deadline_ms = Some(ms),
+            Err(_) => {
+                return respond_error(stream, 400, "'deadline_ms' must be a non-negative integer")
+            }
+        }
+    }
+    // The deadline is enforced by the replica workers at the step
+    // boundary (freeing KV blocks); the wait below is only a backstop,
+    // granted extra grace so the service-side verdict arrives first.
+    let effective = Duration::from_millis(
+        req.deadline_ms.unwrap_or(REQUEST_DEADLINE.as_millis() as u64),
+    );
+    req.deadline_ms = Some(effective.as_millis() as u64);
 
     let handle = service.submit(req);
-    let deadline = Instant::now() + REQUEST_DEADLINE;
+    let deadline = Instant::now() + effective + DEADLINE_GRACE;
     if !streaming {
         return match handle.wait_deadline(deadline) {
             Ok(c) => respond_json(stream, 200, &completion_json(&c)),
-            Err(e) => respond_error(stream, error_status(&e), &e.to_string()),
+            Err(e) => respond_service_error(stream, &e),
         };
     }
 
@@ -244,6 +295,11 @@ fn handle_completions(service: &HexGenService, stream: &mut TcpStream, body: &st
                     .set("text", Json::from(text_delta));
                 write_sse(stream, "token", &j)?;
             }
+            RequestEvent::Retrying { replica, attempt } => {
+                let mut j = Json::obj();
+                j.set("replica", Json::from(replica)).set("attempt", Json::from(attempt as u64));
+                write_sse(stream, "retrying", &j)?;
+            }
             RequestEvent::Done(c) => {
                 write_sse(stream, "done", &completion_json(&c))?;
                 break;
@@ -259,9 +315,19 @@ fn handle_completions(service: &HexGenService, stream: &mut TcpStream, body: &st
 
 // ---- JSON views ---------------------------------------------------------
 
+/// Per-replica breaker states as a JSON array of
+/// `"healthy" | "quarantined" | "half_open"`.
+fn health_array(service: &HexGenService) -> Json {
+    Json::Arr(service.router_health().iter().map(|h| Json::from(h.as_str())).collect())
+}
+
 fn health_json(service: &HexGenService) -> Json {
+    let health = service.router_health();
+    let degraded = health.iter().any(|&h| h != super::router::ReplicaHealth::Healthy);
     let mut j = Json::obj();
-    j.set("status", Json::from("ok")).set("replicas", Json::from(service.replicas()));
+    j.set("status", Json::from(if degraded { "degraded" } else { "ok" }))
+        .set("replicas", Json::from(service.replicas()))
+        .set("health", health_array(service));
     j
 }
 
@@ -270,7 +336,8 @@ fn metrics_json(service: &HexGenService) -> Json {
     let mut router = Json::obj();
     router
         .set("speeds", Json::Arr(snapshot.iter().map(|&(_, s)| Json::from(s)).collect()))
-        .set("outstanding", Json::Arr(snapshot.iter().map(|&(o, _)| Json::from(o)).collect()));
+        .set("outstanding", Json::Arr(snapshot.iter().map(|&(o, _)| Json::from(o)).collect()))
+        .set("health", health_array(service));
     let stats = service.stats();
     let mut requests = Json::obj();
     requests
@@ -278,7 +345,11 @@ fn metrics_json(service: &HexGenService) -> Json {
         .set("completed", Json::from(stats.completed))
         .set("failed", Json::from(stats.failed))
         .set("cancelled", Json::from(stats.cancelled))
-        .set("tokens_out", Json::from(stats.tokens_out));
+        .set("tokens_out", Json::from(stats.tokens_out))
+        .set("retries", Json::from(stats.retries))
+        .set("failovers", Json::from(stats.failovers))
+        .set("requests_lost", Json::from(stats.requests_lost))
+        .set("deadline_expired", Json::from(stats.deadline_expired));
     let mut kv = Json::obj();
     kv.set("blocks_total", Json::from(stats.kv_blocks_total))
         .set("blocks_used", Json::from(stats.kv_blocks_used))
@@ -310,6 +381,7 @@ fn metrics_json(service: &HexGenService) -> Json {
 
 fn plan_json(service: &HexGenService) -> Json {
     let roles = service.roles();
+    let health = service.router_health();
     let replicas: Vec<Json> = service
         .stage_plans()
         .iter()
@@ -329,6 +401,16 @@ fn plan_json(service: &HexGenService) -> Json {
             let mut j = Json::obj();
             j.set("strategy", Json::from(format!("[{}]", tps.join(","))))
                 .set("phase_role", Json::from(roles.get(i).copied().unwrap_or_default().as_str()))
+                .set(
+                    "health",
+                    Json::from(
+                        health
+                            .get(i)
+                            .copied()
+                            .unwrap_or(super::router::ReplicaHealth::Healthy)
+                            .as_str(),
+                    ),
+                )
                 .set("stages", Json::Arr(stages));
             j
         })
@@ -372,8 +454,16 @@ fn error_status(e: &ServiceError) -> u16 {
         ServiceError::Cancelled => 499,
         ServiceError::ReplicaFailed { .. } => 500,
         ServiceError::AllReplicasDown | ServiceError::Disconnected => 503,
-        ServiceError::Timeout => 504,
+        ServiceError::Timeout | ServiceError::DeadlineExceeded => 504,
     }
+}
+
+/// Map a [`ServiceError`] to its HTTP response; 503s carry `Retry-After`
+/// so clients back off instead of hammering a quarantined fleet.
+fn respond_service_error(stream: &mut TcpStream, e: &ServiceError) -> Result<()> {
+    let status = error_status(e);
+    let extra = if status == 503 { "Retry-After: 1\r\n" } else { "" };
+    respond_json_headers(stream, status, extra, &error_json(e))
 }
 
 // ---- wire helpers -------------------------------------------------------
@@ -394,9 +484,19 @@ fn reason_phrase(status: u16) -> &'static str {
 }
 
 fn respond_json(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
+    respond_json_headers(stream, status, "", body)
+}
+
+/// `respond_json` with extra response headers (each `\r\n`-terminated).
+fn respond_json_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    extra_headers: &str,
+    body: &Json,
+) -> Result<()> {
     let body = body.to_string();
     let resp = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{extra_headers}Connection: close\r\n\r\n{body}",
         reason_phrase(status),
         body.len(),
     );

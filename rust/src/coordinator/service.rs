@@ -30,11 +30,29 @@
 //! byte-for-byte the same admission, routing, and decode flow as before
 //! roles existed.
 //!
+//! **Fault tolerance.** A replica fault mid-request no longer fails the
+//! row: the worker emits [`RequestEvent::Retrying`], releases its router
+//! count, and hands the request to a central failover dispatcher thread,
+//! which re-routes it to a healthy replica after an exponential backoff
+//! — up to [`FaultPolicy::max_retries`] times before the request fails
+//! with `ReplicaFailed`. Retries re-prefill the *original* prompt
+//! (greedy decoding makes the token stream deterministic) and replay the
+//! already-streamed tokens silently, so the client-visible stream
+//! continues byte-identically where it left off. Faults also feed the
+//! router's per-replica circuit breaker ([`Router::report_fault`]):
+//! repeatedly faulting replicas are quarantined out of routing until a
+//! timed half-open probe readmits them. Per-request deadlines
+//! ([`GenRequest::deadline_ms`]) are enforced here, at every
+//! admission/decode-step boundary next to the cancel flag, so an expired
+//! request frees its KV blocks instead of burning decode steps. Faults
+//! themselves are injectable deterministically via
+//! [`FaultPolicy::plan`] ([`FaultPlan`]).
+//!
 //! [`ExecutionBackend`]: crate::runtime::ExecutionBackend
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, SendError, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, SendError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -43,7 +61,8 @@ use anyhow::{bail, Result};
 
 use crate::parallelism::PhaseRole;
 use crate::runtime::{
-    make_backend, tokenizer, BackendKind, KvPolicy, Manifest, Utf8Stream, WeightStore,
+    make_backend, make_fault_backend, tokenizer, BackendKind, FaultPlan, KvPolicy, Manifest,
+    Utf8Stream, WeightStore,
 };
 use crate::util::sync::{locks, OrderedMutex};
 
@@ -57,12 +76,41 @@ use super::pipeline::{
     plan_from_strategy, DecodeSession, KvSegment, PipelineExecutor, SlotRequest, StagePlan,
     StepOutcome,
 };
-use super::router::{RoutePolicy, Router, ServePhase};
+use super::router::{BreakerPolicy, ReplicaHealth, RoutePolicy, Router, ServePhase};
 use super::speculative::{SpecPolicy, SpecStats, SpeculativeSession};
 
 /// How often an idle worker wakes from its request-channel wait to sweep
 /// cancelled requests out of its queue.
 const CANCEL_SWEEP_INTERVAL: Duration = Duration::from_millis(25);
+
+/// Fault-tolerance policy: optional deterministic fault injection plus
+/// the retry and circuit-breaker knobs governing automatic failover.
+#[derive(Debug, Clone)]
+pub struct FaultPolicy {
+    /// Deterministic fault-injection plan every replica wraps its
+    /// backend in ([`FaultPlan`]); `None` (the default) injects nothing.
+    pub plan: Option<FaultPlan>,
+    /// Per-request retry budget: a request whose replica faults
+    /// mid-flight is re-routed up to this many times before it fails
+    /// with [`ServiceError::ReplicaFailed`]. `0` disables failover.
+    pub max_retries: u32,
+    /// Base delay before re-dispatching a retried request; attempt `n`
+    /// waits `retry_backoff * 2^(n-1)`.
+    pub retry_backoff: Duration,
+    /// Router circuit-breaker thresholds ([`Router::report_fault`]).
+    pub breaker: BreakerPolicy,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            plan: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(20),
+            breaker: BreakerPolicy::default(),
+        }
+    }
+}
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -112,6 +160,9 @@ pub struct ServiceConfig {
     /// default) serves exactly as before. Not yet compatible with
     /// disaggregated phase `roles`.
     pub spec: Option<SpecPolicy>,
+    /// Fault tolerance: injection plan, retry budget and backoff, and
+    /// circuit-breaker thresholds.
+    pub faults: FaultPolicy,
 }
 
 /// Monotonic lifetime counters of a running service (`GET /metrics`).
@@ -143,6 +194,16 @@ pub struct ServiceStats {
     pub spec_proposed: u64,
     /// Proposed tokens the target model accepted into the stream.
     pub spec_accepted: u64,
+    /// Failover retries dispatched (one per `Retrying` event).
+    pub retries: u64,
+    /// Requests that completed after at least one failover retry.
+    pub failovers: u64,
+    /// Requests lost to replica failure: terminal `ReplicaFailed` (retry
+    /// budget exhausted) or `AllReplicasDown`.
+    pub requests_lost: u64,
+    /// Requests failed by deadline expiry (`DeadlineExceeded`); also
+    /// counted in `failed`.
+    pub deadline_expired: u64,
 }
 
 impl ServiceStats {
@@ -172,6 +233,10 @@ struct Counters {
     spec_rounds: AtomicU64,
     spec_proposed: AtomicU64,
     spec_accepted: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    requests_lost: AtomicU64,
+    deadline_expired: AtomicU64,
 }
 
 impl Counters {
@@ -190,15 +255,28 @@ impl Counters {
             spec_rounds: self.spec_rounds.load(Ordering::Relaxed),
             spec_proposed: self.spec_proposed.load(Ordering::Relaxed),
             spec_accepted: self.spec_accepted.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            requests_lost: self.requests_lost.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
         }
     }
 
     fn count_terminal(&self, err: &ServiceError) {
-        if *err == ServiceError::Cancelled {
-            self.cancelled.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.failed.fetch_add(1, Ordering::Relaxed);
+        match err {
+            ServiceError::Cancelled => {
+                self.cancelled.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            ServiceError::DeadlineExceeded => {
+                self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            }
+            ServiceError::ReplicaFailed { .. } | ServiceError::AllReplicasDown => {
+                self.requests_lost.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
         }
+        self.failed.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -213,6 +291,17 @@ struct WorkItem {
     max_new: usize,
     stop: Option<i32>,
     submitted: Instant,
+    /// Absolute expiry ([`GenRequest::deadline_ms`] past submission):
+    /// checked at every admission/decode-step boundary, not just on the
+    /// waiting side.
+    deadline: Option<Instant>,
+    /// Failover retries consumed so far (0 on first dispatch).
+    attempt: u32,
+    /// Token events already streamed by earlier attempts: a retried
+    /// request re-prefills its original prompt and replays this many
+    /// tokens without re-emitting them (greedy decoding reproduces them
+    /// exactly), so the client stream resumes where it broke.
+    replayed: usize,
     events: Sender<RequestEvent>,
     cancel: Arc<CancelFlag>,
 }
@@ -253,12 +342,49 @@ impl WorkMsg {
         }
     }
 
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            WorkMsg::Prefill(it) => it.deadline,
+            WorkMsg::Decode(dw) => dw.item.deadline,
+        }
+    }
+
     fn into_item(self) -> WorkItem {
         match self {
             WorkMsg::Prefill(it) => it,
             WorkMsg::Decode(dw) => dw.item,
         }
     }
+}
+
+/// A faulted request travelling from a replica worker back to the
+/// failover dispatcher for re-routing.
+enum RetryWork {
+    /// Re-prefill the original prompt on another replica (the common
+    /// path; `item.replayed` tokens are replayed silently).
+    Prefill { item: WorkItem, from: usize },
+    /// Re-import a handed-off KV segment on another decode-capable
+    /// replica (disaggregated path) before falling back to re-prefill.
+    Decode { dw: DecodeWork, from: usize },
+}
+
+impl RetryWork {
+    fn into_item(self) -> WorkItem {
+        match self {
+            RetryWork::Prefill { item, .. } => item,
+            RetryWork::Decode { dw, .. } => dw.item,
+        }
+    }
+}
+
+/// Per-worker fault-tolerance wiring: the injection plan its backend
+/// wraps itself in, the retry budget/backoff, and the channel back to
+/// the failover dispatcher.
+struct Recovery {
+    plan: Option<Arc<FaultPlan>>,
+    max_retries: u32,
+    backoff: Duration,
+    retry_tx: Sender<(Instant, RetryWork)>,
 }
 
 /// A request occupying a decode-session slot.
@@ -282,6 +408,12 @@ pub struct HexGenService {
     router: Arc<Router>,
     queues: Vec<Sender<WorkMsg>>,
     workers: Vec<JoinHandle<()>>,
+    /// The failover dispatcher thread re-routing faulted requests.
+    failover: Option<JoinHandle<()>>,
+    /// Exit signal for the dispatcher, which holds clones of every
+    /// worker queue sender and so must stop before workers can see
+    /// their queues close.
+    failover_stop: Arc<AtomicBool>,
     manifest: Manifest,
     cfg: ServiceConfig,
     // Behind ranked mutexes so the service can be shared
@@ -371,6 +503,9 @@ impl HexGenService {
         };
 
         let counters = Arc::new(Counters::default());
+        router.set_breaker_policy(cfg.faults.breaker);
+        let fault_plan: Option<Arc<FaultPlan>> = cfg.faults.plan.clone().map(Arc::new);
+        let (retry_tx, retry_rx) = channel::<(Instant, RetryWork)>();
         let (comm_tx, comm_rx) = channel::<CommStats>();
         let mut queues = Vec::with_capacity(cfg.replicas.len());
         let mut receivers = Vec::with_capacity(cfg.replicas.len());
@@ -379,6 +514,17 @@ impl HexGenService {
             queues.push(tx);
             receivers.push(rx);
         }
+        let failover_stop = Arc::new(AtomicBool::new(false));
+        let failover = {
+            let queues = queues.clone();
+            let roles = roles.clone();
+            let router = router.clone();
+            let counters = counters.clone();
+            let stop = failover_stop.clone();
+            std::thread::spawn(move || {
+                failover_loop(retry_rx, queues, roles, router, counters, stop)
+            })
+        };
         let mut workers = Vec::with_capacity(cfg.replicas.len());
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         for (rid, rx) in receivers.into_iter().enumerate() {
@@ -411,24 +557,39 @@ impl HexGenService {
             let comm_tx = comm_tx.clone();
             let ready_tx = ready_tx.clone();
             let spec = spec.clone();
+            let recovery = Recovery {
+                plan: fault_plan.clone(),
+                max_retries: cfg.faults.max_retries,
+                backoff: cfg.faults.retry_backoff,
+                retry_tx: retry_tx.clone(),
+            };
             workers.push(std::thread::spawn(move || {
                 worker_loop(
                     rid, backend, dir, manifest, weights, plan, batch, kv, adapt_speeds, role,
-                    spec, handoff, rx, router, counters, comm_tx, ready_tx,
+                    spec, recovery, handoff, rx, router, counters, comm_tx, ready_tx,
                 )
             }));
         }
         // Wait until every replica compiled its pipeline (or failed).
         for _ in 0..cfg.replicas.len() {
-            ready_rx
+            let up = ready_rx
                 .recv()
-                .map_err(|_| anyhow::anyhow!("worker died during startup"))?
-                .map_err(|e| anyhow::anyhow!("replica startup failed: {e}"))?;
+                .map_err(|_| anyhow::anyhow!("worker died during startup"))
+                .and_then(|r| r.map_err(|e| anyhow::anyhow!("replica startup failed: {e}")));
+            if let Err(e) = up {
+                // Unwedge before bailing: the dispatcher holds queue
+                // senders, so it must stop for the already-running
+                // workers to see their queues close and exit.
+                failover_stop.store(true, Ordering::Relaxed);
+                return Err(e);
+            }
         }
         Ok(HexGenService {
             router,
             queues,
             workers,
+            failover: Some(failover),
+            failover_stop,
             manifest,
             cfg,
             comm_rx: OrderedMutex::new(locks::COMM_RX, "service.comm_rx", comm_rx),
@@ -481,6 +642,12 @@ impl HexGenService {
         self.router.load_snapshot()
     }
 
+    /// Per-replica circuit-breaker health (`GET /healthz`, `/metrics`,
+    /// `/v1/plan`).
+    pub fn router_health(&self) -> Vec<ReplicaHealth> {
+        self.router.health()
+    }
+
     /// Lifetime request counters.
     pub fn stats(&self) -> ServiceStats {
         self.counters.snapshot()
@@ -512,6 +679,7 @@ impl HexGenService {
         }
         let prompt_len = self.manifest.model.prompt_len;
         let (prompt_tokens, full) = tokenizer::encode_report(&req.prompt, prompt_len);
+        let submitted = Instant::now();
         let mut item = WorkItem {
             id,
             prompt_tokens,
@@ -519,7 +687,10 @@ impl HexGenService {
             truncated: full > prompt_len,
             max_new,
             stop: req.stop.or(self.cfg.stop_token),
-            submitted: Instant::now(),
+            submitted,
+            deadline: req.deadline_ms.map(|ms| submitted + Duration::from_millis(ms)),
+            attempt: 0,
+            replayed: 0,
             events: tx,
             cancel,
         };
@@ -537,7 +708,7 @@ impl HexGenService {
                 self.router.route_excluding(&dead)
             };
             let Some(replica) = replica else {
-                self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                self.counters.count_terminal(&ServiceError::AllReplicasDown);
                 let _ = item.events.send(RequestEvent::Failed(ServiceError::AllReplicasDown));
                 return handle;
             };
@@ -555,7 +726,7 @@ impl HexGenService {
                     // Unreachable (a Prefill send returns a Prefill), but
                     // fail the request cleanly rather than trusting it.
                     self.router.complete(replica);
-                    self.counters.failed.fetch_add(1, Ordering::Relaxed);
+                    self.counters.count_terminal(&ServiceError::AllReplicasDown);
                     let _ = returned
                         .into_item()
                         .events
@@ -585,13 +756,199 @@ impl HexGenService {
         *total
     }
 
-    /// Shut down: close queues and join workers.
-    pub fn shutdown(self) {
-        drop(self.queues);
-        drop(self.comm_rx);
-        for w in self.workers {
+    /// Shut down: stop the failover dispatcher (it holds clones of every
+    /// worker queue sender, so it must exit first), close the queues,
+    /// and join everything.
+    pub fn shutdown(mut self) {
+        self.failover_stop.store(true, Ordering::Relaxed);
+        self.queues.clear();
+        if let Some(h) = self.failover.take() {
+            let _ = h.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+impl Drop for HexGenService {
+    /// A dropped (rather than shut-down) service — e.g. an
+    /// `Arc<HexGenService>` shared with HTTP handler threads — still
+    /// signals the dispatcher to exit; otherwise its queue-sender clones
+    /// would keep every worker thread parked forever.
+    fn drop(&mut self) {
+        self.failover_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// The failover dispatcher: a single service-lifetime thread receiving
+/// faulted requests from replica workers and re-routing them once their
+/// backoff expires. Centralizing the retry path keeps workers free of
+/// each other's queue senders (which would deadlock the close-on-drop
+/// shutdown chain) and gives retries one place to enforce deadlines,
+/// budgets, and the all-replicas-down verdict.
+fn failover_loop(
+    rx: Receiver<(Instant, RetryWork)>,
+    queues: Vec<Sender<WorkMsg>>,
+    roles: Vec<PhaseRole>,
+    router: Arc<Router>,
+    counters: Arc<Counters>,
+    stop: Arc<AtomicBool>,
+) {
+    let disagg = roles.iter().any(|&r| r != PhaseRole::Hybrid);
+    // Replicas whose queue hung up (worker exited): permanently dead,
+    // unlike quarantined replicas which the breaker may readmit.
+    let mut dead: Vec<usize> = Vec::new();
+    // Not-yet-due retries, scanned linearly (failover volume is tiny).
+    let mut pending: Vec<(Instant, RetryWork)> = Vec::new();
+
+    let fail = |work: RetryWork, err: ServiceError| {
+        counters.count_terminal(&err);
+        let _ = work.into_item().events.send(RequestEvent::Failed(err));
+    };
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let now = Instant::now();
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].0 <= now {
+                due.push(pending.swap_remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        for work in due {
+            // Terminal states first: a retried request may have been
+            // cancelled or expired while it waited out its backoff.
+            {
+                let item = match &work {
+                    RetryWork::Prefill { item, .. } => item,
+                    RetryWork::Decode { dw, .. } => &dw.item,
+                };
+                if item.cancel.is_cancelled() {
+                    fail(work, ServiceError::Cancelled);
+                    continue;
+                }
+                if item.deadline.is_some_and(|d| now >= d) {
+                    fail(work, ServiceError::DeadlineExceeded);
+                    continue;
+                }
+            }
+            // Disaggregated decode-side faults retry the KV import on
+            // another decode-capable replica first; when none is
+            // routable the request falls back to a full re-prefill
+            // (replaying everything streamed so far).
+            let (mut item, from) = match work {
+                RetryWork::Decode { mut dw, from } => {
+                    let mut exclude = dead.clone();
+                    if !exclude.contains(&from) {
+                        exclude.push(from);
+                    }
+                    let mut routed = false;
+                    while let Some(target) = router.route_phase(ServePhase::Decode, &exclude) {
+                        match queues[target].send(WorkMsg::Decode(dw)) {
+                            Ok(()) => {
+                                routed = true;
+                                break;
+                            }
+                            Err(SendError(WorkMsg::Decode(returned))) => {
+                                router.complete(target);
+                                dead.push(target);
+                                exclude.push(target);
+                                dw = returned;
+                            }
+                            Err(SendError(returned)) => {
+                                router.complete(target);
+                                fail(
+                                    RetryWork::Prefill { item: returned.into_item(), from },
+                                    ServiceError::AllReplicasDown,
+                                );
+                                routed = true;
+                                break;
+                            }
+                        }
+                    }
+                    if routed {
+                        continue;
+                    }
+                    let mut item = dw.item;
+                    item.replayed = dw.emitted;
+                    (item, from)
+                }
+                RetryWork::Prefill { item, from } => (item, from),
+            };
+            // Prefer any replica other than the faulted one; if the
+            // faulted replica is the only one admitted by its breaker,
+            // let it try again rather than waiting out the quarantine.
+            let mut exclude = dead.clone();
+            if !exclude.contains(&from) {
+                exclude.push(from);
+            }
+            loop {
+                let route = |excl: &[usize]| {
+                    if disagg {
+                        router.route_phase(ServePhase::Prefill, excl)
+                    } else {
+                        router.route_excluding(excl)
+                    }
+                };
+                let Some(replica) = route(&exclude).or_else(|| route(&dead)) else {
+                    if dead.len() >= queues.len() {
+                        fail(
+                            RetryWork::Prefill { item, from },
+                            ServiceError::AllReplicasDown,
+                        );
+                    } else {
+                        // Every live replica is quarantined right now:
+                        // hold the request until a breaker half-opens.
+                        pending.push((
+                            now + CANCEL_SWEEP_INTERVAL,
+                            RetryWork::Prefill { item, from },
+                        ));
+                    }
+                    break;
+                };
+                match queues[replica].send(WorkMsg::Prefill(item)) {
+                    Ok(()) => break,
+                    Err(SendError(WorkMsg::Prefill(returned))) => {
+                        router.complete(replica);
+                        dead.push(replica);
+                        if !exclude.contains(&replica) {
+                            exclude.push(replica);
+                        }
+                        item = returned;
+                    }
+                    Err(SendError(returned)) => {
+                        router.complete(replica);
+                        fail(
+                            RetryWork::Prefill { item: returned.into_item(), from },
+                            ServiceError::AllReplicasDown,
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+        let wait = pending
+            .iter()
+            .map(|(t, _)| t.saturating_duration_since(now))
+            .min()
+            .unwrap_or(CANCEL_SWEEP_INTERVAL)
+            .min(CANCEL_SWEEP_INTERVAL)
+            .max(Duration::from_millis(1));
+        match rx.recv_timeout(wait) {
+            Ok(msg) => pending.push(msg),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Shutdown (or every worker gone): anything still waiting cannot
+    // complete — fail it instead of hanging its sender forever.
+    for (_, work) in pending.drain(..).chain(std::iter::from_fn(|| rx.try_recv().ok())) {
+        fail(work, ServiceError::AllReplicasDown);
     }
 }
 
@@ -796,6 +1153,7 @@ fn worker_loop(
     adapt_speeds: bool,
     role: PhaseRole,
     spec: Option<(SpecPolicy, Manifest, Arc<WeightStore>)>,
+    recovery: Recovery,
     handoff: Vec<Option<Sender<WorkMsg>>>,
     rx: Receiver<WorkMsg>,
     router: Arc<Router>,
@@ -804,9 +1162,15 @@ fn worker_loop(
     ready_tx: Sender<Result<(), String>>,
 ) {
     // Thread-confined backend instance (backends need not be Send).
-    let exec = match make_backend(backend, &dir, manifest, weights)
-        .and_then(|be| PipelineExecutor::with_backend(be, plan))
-    {
+    // With a fault plan the backend wraps itself in the deterministic
+    // injector — built once, outside the session-rebuild path, so fault
+    // counters persist across rebuilds (a "fail every call after K"
+    // spec keeps failing the rebuilt session too).
+    let built = match &recovery.plan {
+        Some(fp) => make_fault_backend(backend, &dir, manifest, weights, fp.clone(), rid),
+        None => make_backend(backend, &dir, manifest, weights),
+    };
+    let exec = match built.and_then(|be| PipelineExecutor::with_backend(be, plan)) {
         Ok(e) => e,
         Err(e) => {
             let _ = ready_tx.send(Err(format!("{e:#}")));
@@ -899,6 +1263,10 @@ fn worker_loop(
     let deliver = |active_item: ActiveItem, tokens: Vec<i32>| {
         counters.completed.fetch_add(1, Ordering::Relaxed);
         counters.tokens_out.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+        if active_item.item.attempt > 0 {
+            counters.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+        router.report_success(rid);
         let completion = Completion {
             id: active_item.item.id,
             text: tokenizer::decode(&tokens),
@@ -918,14 +1286,76 @@ fn worker_loop(
     };
     // `last` marks the row's final token: any bytes still buffered in
     // its UTF-8 stream flush into this delta, so the concatenation of a
-    // request's deltas equals its completion text exactly.
+    // request's deltas equals its completion text exactly. A failover
+    // retry replays its first `replayed` tokens silently — they were
+    // already streamed by the faulted attempt — but still pushes them
+    // through the fresh UTF-8 decoder so multi-byte characters split
+    // across the fault render exactly once.
     let emit_token = |a: &mut ActiveItem, token: i32, last: bool| {
         let mut text_delta = a.text.push(token);
         if last {
             text_delta.push_str(&a.text.finish());
         }
-        let _ = a.item.events.send(RequestEvent::Token { index: a.emitted, token, text_delta });
+        if a.emitted >= a.item.replayed {
+            let _ = a.item.events.send(RequestEvent::Token { index: a.emitted, token, text_delta });
+        }
         a.emitted += 1;
+    };
+
+    // Failover: instead of failing a row its replica faulted under, send
+    // it back to the dispatcher for re-routing — budget and backoff per
+    // the service's FaultPolicy. The routed count moves with the
+    // request (complete here, re-acquired when the dispatcher routes).
+    let fail_or_retry = |mut a: ActiveItem, message: &str| {
+        if a.item.attempt >= recovery.max_retries || a.item.cancel.is_cancelled() {
+            fail_item(
+                a.item,
+                ServiceError::ReplicaFailed { replica: rid, message: message.to_string() },
+            );
+            return;
+        }
+        a.item.attempt += 1;
+        a.item.replayed = a.emitted;
+        let _ = a
+            .item
+            .events
+            .send(RequestEvent::Retrying { replica: rid, attempt: a.item.attempt });
+        counters.retries.fetch_add(1, Ordering::Relaxed);
+        router.complete(rid);
+        let due = Instant::now() + recovery.backoff * 2u32.saturating_pow(a.item.attempt - 1);
+        let work = RetryWork::Prefill { item: a.item, from: rid };
+        if let Err(SendError((_, work))) = recovery.retry_tx.send((due, work)) {
+            // Dispatcher gone (shutdown): the request cannot complete.
+            let item = work.into_item();
+            counters.count_terminal(&ServiceError::AllReplicasDown);
+            let _ = item.events.send(RequestEvent::Failed(ServiceError::AllReplicasDown));
+        }
+    };
+    // Same, for a handed-off KV segment on the disaggregated path: the
+    // dispatcher retries the import on another decode-capable replica
+    // before falling back to a full re-prefill.
+    let retry_decode = |mut dw: DecodeWork, message: &str| {
+        if dw.item.attempt >= recovery.max_retries || dw.item.cancel.is_cancelled() {
+            fail_item(
+                dw.item,
+                ServiceError::ReplicaFailed { replica: rid, message: message.to_string() },
+            );
+            return;
+        }
+        dw.item.attempt += 1;
+        let _ = dw
+            .item
+            .events
+            .send(RequestEvent::Retrying { replica: rid, attempt: dw.item.attempt });
+        counters.retries.fetch_add(1, Ordering::Relaxed);
+        router.complete(rid);
+        let due = Instant::now() + recovery.backoff * 2u32.saturating_pow(dw.item.attempt - 1);
+        let work = RetryWork::Decode { dw, from: rid };
+        if let Err(SendError((_, work))) = recovery.retry_tx.send((due, work)) {
+            let item = work.into_item();
+            counters.count_terminal(&ServiceError::AllReplicasDown);
+            let _ = item.events.send(RequestEvent::Failed(ServiceError::AllReplicasDown));
+        }
     };
 
     // When a session operation reports a replica fault (decode failure,
@@ -943,12 +1373,12 @@ fn worker_loop(
         // dropping the requests silently (their senders would hang
         // forever).
         if let Some(message) = rebuild.take() {
+            // One incident, one breaker report: repeated rebuilds are
+            // what trip this replica into quarantine.
+            router.report_fault(rid);
             for slot_item in active.iter_mut() {
                 if let Some(a) = slot_item.take() {
-                    fail_item(
-                        a.item,
-                        ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
-                    );
+                    fail_or_retry(a, &message);
                 }
             }
             // Retract the dead session's gauge contribution; the fresh
@@ -964,42 +1394,79 @@ fn worker_loop(
                 Err(e2) => {
                     let message = format!("session rebuild failed: {e2:#}");
                     crate::log_error!(
-                        "replica {rid} {message}; failing queued requests and exiting"
+                        "replica {rid} {message}; re-routing queued requests and exiting"
                     );
+                    // Queued requests never ran here: hand them to the
+                    // dispatcher for immediate re-routing — no budget
+                    // consumed, no Retrying event — exactly like
+                    // `submit` skipping a dead replica.
                     for msg in queue.drain_all() {
-                        fail_item(
-                            msg.into_item(),
-                            ServiceError::ReplicaFailed { replica: rid, message: message.clone() },
-                        );
+                        router.complete(rid);
+                        let work = match msg {
+                            WorkMsg::Prefill(item) => RetryWork::Prefill { item, from: rid },
+                            WorkMsg::Decode(dw) => RetryWork::Decode { dw, from: rid },
+                        };
+                        if let Err(SendError((_, work))) =
+                            recovery.retry_tx.send((Instant::now(), work))
+                        {
+                            let item = work.into_item();
+                            counters.count_terminal(&ServiceError::ReplicaFailed {
+                                replica: rid,
+                                message: message.clone(),
+                            });
+                            let _ = item.events.send(RequestEvent::Failed(
+                                ServiceError::ReplicaFailed {
+                                    replica: rid,
+                                    message: message.clone(),
+                                },
+                            ));
+                        }
                     }
                     return;
                 }
             };
         }
 
-        // ---- cancellation sweep at the step boundary ------------------
-        // Cancelled active rows release their KV blocks (admissible again
-        // below) and the router's load count; cancelled queued requests
-        // never run at all.
+        // ---- cancellation/deadline sweep at the step boundary ---------
+        // Cancelled or expired active rows release their KV blocks
+        // (admissible again below) and the router's load count;
+        // cancelled/expired queued requests never run at all. Checking
+        // deadlines here — where the work happens — is what frees an
+        // expired request's blocks instead of burning decode steps on
+        // output nobody is waiting for.
+        let sweep_now = Instant::now();
         for slot in 0..bucket {
-            let hit = active[slot].as_ref().is_some_and(|a| a.item.cancel.is_cancelled());
-            if !hit {
-                continue;
-            }
+            let verdict = active[slot].as_ref().and_then(|a| {
+                if a.item.cancel.is_cancelled() {
+                    Some(ServiceError::Cancelled)
+                } else if a.item.deadline.is_some_and(|d| sweep_now >= d) {
+                    Some(ServiceError::DeadlineExceeded)
+                } else {
+                    None
+                }
+            });
+            let Some(err) = verdict else { continue };
             if let Some(a) = active[slot].take() {
                 if let Err(e) = session.cancel_slot(slot) {
-                    // The row is cancelled either way, but a release
-                    // failure means the block pool can no longer be
-                    // trusted: surface it as a replica fault.
+                    // The row is done either way, but a release failure
+                    // means the block pool can no longer be trusted:
+                    // surface it as a replica fault.
                     let message = format!("cancel failed releasing slot {slot}: {e:#}");
                     crate::log_error!("replica {rid} {message}");
                     rebuild = Some(message);
                 }
-                fail_item(a.item, ServiceError::Cancelled);
+                fail_item(a.item, err);
             }
         }
-        for msg in queue.drain_where(|m| m.cancel_flag().is_cancelled()) {
-            fail_item(msg.into_item(), ServiceError::Cancelled);
+        for msg in queue.drain_where(|m| {
+            m.cancel_flag().is_cancelled() || m.deadline().is_some_and(|d| sweep_now >= d)
+        }) {
+            let err = if msg.cancel_flag().is_cancelled() {
+                ServiceError::Cancelled
+            } else {
+                ServiceError::DeadlineExceeded
+            };
+            fail_item(msg.into_item(), err);
         }
         if rebuild.is_some() {
             continue;
@@ -1035,9 +1502,12 @@ fn worker_loop(
                 WorkMsg::Decode(dw) => session.blocks_needed_at(dw.seg.pos, dw.item.max_new),
             },
         ) {
-            // Cancelled between the sweep and the admit: never runs.
+            // Cancelled or expired between the sweep and the admit:
+            // never runs.
             if msg.cancel_flag().is_cancelled() {
                 fail_item(msg.into_item(), ServiceError::Cancelled);
+            } else if msg.deadline().is_some_and(|d| Instant::now() >= d) {
+                fail_item(msg.into_item(), ServiceError::DeadlineExceeded);
             } else {
                 admitted.push(msg);
             }
@@ -1092,12 +1562,14 @@ fn worker_loop(
                                 });
                             }
                             Err(e) => {
+                                // `import_rows` rolled its allocations
+                                // back, so the session is consistent —
+                                // no rebuild; retry the import on
+                                // another decode replica.
                                 let message = format!("kv import failed: {e:#}");
                                 crate::log_error!("replica {rid} {message}");
-                                fail_item(
-                                    dw.item,
-                                    ServiceError::ReplicaFailed { replica: rid, message },
-                                );
+                                router.report_fault(rid);
+                                retry_decode(dw, &message);
                             }
                         }
                     }
@@ -1154,13 +1626,7 @@ fn worker_loop(
                                     Err(e) => {
                                         let message = format!("kv export failed: {e:#}");
                                         crate::log_error!("replica {rid} {message}");
-                                        fail_item(
-                                            a.item,
-                                            ServiceError::ReplicaFailed {
-                                                replica: rid,
-                                                message: message.clone(),
-                                            },
-                                        );
+                                        fail_or_retry(a, &message);
                                         rebuild = Some(message);
                                         continue;
                                     }
@@ -1185,7 +1651,12 @@ fn worker_loop(
                                     let Some(target) =
                                         router.route_phase(ServePhase::Decode, &dead)
                                     else {
-                                        fail_item(dw.item, ServiceError::AllReplicasDown);
+                                        // No decode replica routable right
+                                        // now (quarantined or gone): hand
+                                        // the segment to the dispatcher,
+                                        // which retries the import or
+                                        // falls back to re-prefill.
+                                        retry_decode(dw, "no decode-capable replica routable");
                                         break;
                                     };
                                     let Some(q) = handoff[target].as_ref() else {
@@ -1228,15 +1699,13 @@ fn worker_loop(
                         crate::log_error!("replica {rid} {message}");
                         for slot in slots_used {
                             if let Some(a) = active[slot].take() {
-                                fail_item(
-                                    a.item,
-                                    ServiceError::ReplicaFailed {
-                                        replica: rid,
-                                        message: message.clone(),
-                                    },
-                                );
+                                fail_or_retry(a, &message);
                             }
                         }
+                        // A failed prefill may leave partially-written
+                        // slots behind: rebuild so the pool stays clean
+                        // (the rebuild block reports the fault).
+                        rebuild = Some(message);
                     }
                 }
             }
@@ -1339,6 +1808,7 @@ mod tests {
             stop_token: None,
             kv: KvPolicy::default(),
             spec: None,
+            faults: FaultPolicy::default(),
         }
     }
 

@@ -34,6 +34,7 @@ Serving & tools:
   serve [--listen ADDR] [--prompt <text>] [--plan FILE] [--replicas N]
         [--disagg] [--max-new N] [--artifacts DIR]
         [--spec-draft DIR] [--spec-k K]
+        [--fault-plan FILE] [--max-retries N]
                      serve the demo model; --plan boots the replicas from
                      a scheduler --emit-plan file (lowered onto the
                      artifact manifest, with plan cost estimates seeding
@@ -53,6 +54,10 @@ Serving & tools:
                      the draft model in DIR (--spec-k proposals per
                      round, default 3); emitted tokens stay identical to
                      plain decoding.
+                     --fault-plan FILE injects deterministic backend
+                     faults from a JSON plan (see rust/README.md § Fault
+                     tolerance) to exercise failover; --max-retries N
+                     sets the per-request retry budget (default 2).
   schedule [--cluster NAME] [--emit-plan FILE]
                      run the two-phase scheduler on a cluster preset and
                      print the deployment (presets: homogeneous,
@@ -117,11 +122,11 @@ fn main() -> Result<()> {
 /// toy `--replicas` presets.
 fn serve(args: &Args) -> Result<()> {
     use hexgen::coordinator::{
-        lower_plan, plan_from_strategy, BatchPolicy, HexGenService, HttpServer, RoutePolicy,
-        ServiceConfig, SpecPolicy, StagePlan,
+        lower_plan, plan_from_strategy, BatchPolicy, FaultPolicy, HexGenService, HttpServer,
+        RoutePolicy, ServiceConfig, SpecPolicy, StagePlan,
     };
     use hexgen::parallelism::{DeploymentPlan, PhaseRole};
-    use hexgen::runtime::Manifest;
+    use hexgen::runtime::{FaultPlan, Manifest};
 
     /// Toy replica presets shaped to whatever model the artifacts serve:
     /// even replicas get an asymmetric TP(high)→TP1 split (front-loaded
@@ -185,6 +190,12 @@ fn serve(args: &Args) -> Result<()> {
         };
         (toy_plans(&manifest, n)?, None, None, roles)
     };
+    let mut faults = FaultPolicy::default();
+    if let Some(path) = args.get("fault-plan") {
+        faults.plan = Some(FaultPlan::load(std::path::Path::new(path))?);
+        println!("fault injection enabled from {path}");
+    }
+    faults.max_retries = args.get_usize("max-retries", faults.max_retries as usize) as u32;
     println!("starting service with {} replica(s)...", plans.len());
     let service = HexGenService::start(ServiceConfig {
         artifacts_dir: dir,
@@ -203,6 +214,7 @@ fn serve(args: &Args) -> Result<()> {
             k: args.get_usize("spec-k", 3),
             draft_model: std::path::PathBuf::from(d),
         }),
+        faults,
     })?;
 
     // Long-running mode: expose the service over HTTP and block.

@@ -1,0 +1,526 @@
+//! Deterministic fault injection for the serving path.
+//!
+//! HexGen's premise is serving from cheap, decentralized, heterogeneous
+//! pools — exactly the machines that die, stall, and flake under load.
+//! This module makes those failures *reproducible*: a [`FaultPlan`] is a
+//! seeded, serializable schedule of faults, and [`FaultInjectingBackend`]
+//! wraps any [`ExecutionBackend`] and fires them at exact call boundaries
+//! so every recovery path (failover, circuit breaker, deadline expiry)
+//! is testable in plain `cargo test` and from `serve --fault-plan FILE`.
+//!
+//! A plan is a list of [`FaultSpec`]s. Each spec targets a replica (or
+//! all), one backend entry point (or any), and a trigger over that
+//! spec's own 1-based call counter:
+//!
+//! * `nth: N` — fire exactly on the N-th matching call;
+//! * `after: K` — fire on every matching call past the K-th;
+//! * `probability: p` — fire with probability `p`, derived from the plan
+//!   seed + spec index + call number (deterministic regardless of thread
+//!   interleaving);
+//! * `until: U` — bounds `after`/`probability` windows to calls ≤ U, so
+//!   a replica can fault for a while and then recover (what the breaker
+//!   half-open probe needs to observe).
+//!
+//! Fault kinds: `error` (the call fails — the worker sees a replica
+//! fault), `panic` (a TP shard thread panics; degraded to an error on
+//! the session thread, where an uncaught panic would kill the worker
+//! outright instead of exercising recovery), and `stall` (the call
+//! sleeps D ms then proceeds — a slow replica, not a broken one, which
+//! is what deadline enforcement has to absorb).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::ThreadId;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::backend::{
+    AttnShardWeights, BackendKind, DecodePositions, ExecutionBackend, InputArg,
+};
+use super::manifest::Manifest;
+use super::weights::{Tensor, WeightStore};
+
+/// What happens when a fault fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The call returns an error; the worker sees a replica fault.
+    Error,
+    /// The call panics. Only TP shard threads actually panic (the
+    /// pipeline catches the unwind and surfaces it as a typed error);
+    /// on the session thread the panic is degraded to an error, since
+    /// an uncaught panic there kills the worker instead of testing it.
+    Panic,
+    /// The call sleeps for `ms` milliseconds, then proceeds normally.
+    Stall { ms: u64 },
+}
+
+/// Which backend entry point a spec applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOp {
+    /// Every entry point below.
+    Any,
+    /// [`ExecutionBackend::execute`] (prefill and non-attention stages).
+    Execute,
+    /// [`ExecutionBackend::execute_attn_decode_inplace`] (decode steps).
+    Decode,
+    /// [`ExecutionBackend::execute_attn_score_inplace`] (speculative
+    /// verification).
+    Score,
+}
+
+impl FaultOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultOp::Any => "any",
+            FaultOp::Execute => "execute",
+            FaultOp::Decode => "decode",
+            FaultOp::Score => "score",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultOp> {
+        Ok(match s {
+            "any" => FaultOp::Any,
+            "execute" => FaultOp::Execute,
+            "decode" => FaultOp::Decode,
+            "score" => FaultOp::Score,
+            other => bail!("unknown fault op '{other}' (any|execute|decode|score)"),
+        })
+    }
+}
+
+/// One scheduled fault: where it applies and when it fires.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Replica index, or `None` for every replica.
+    pub replica: Option<usize>,
+    /// Which backend entry point this spec counts and faults.
+    pub op: FaultOp,
+    /// Fire exactly on the N-th matching call (1-based).
+    pub nth: Option<u64>,
+    /// Fire on every matching call with number > K.
+    pub after: Option<u64>,
+    /// Upper bound on `after`/`probability` windows: calls past U never
+    /// fire, so a replica can fault and then recover.
+    pub until: Option<u64>,
+    /// Fire with this probability, derived from the plan seed.
+    pub probability: Option<f64>,
+    /// What happens when the spec fires.
+    pub kind: FaultKind,
+    /// Free-form tag carried into the error/panic message.
+    pub message: String,
+}
+
+impl FaultSpec {
+    fn matches(&self, replica: usize, op: FaultOp) -> bool {
+        self.replica.map_or(true, |r| r == replica)
+            && (self.op == FaultOp::Any || self.op == op)
+    }
+
+    /// Whether the spec fires on its `n`-th matching call (1-based).
+    fn fires(&self, n: u64, seed: u64, spec_idx: usize) -> bool {
+        if let Some(nth) = self.nth {
+            if n != nth {
+                return false;
+            }
+        }
+        if let Some(after) = self.after {
+            if n <= after {
+                return false;
+            }
+        }
+        if let Some(until) = self.until {
+            if n > until {
+                return false;
+            }
+        }
+        if let Some(p) = self.probability {
+            if unit_from(seed, spec_idx, n) >= p {
+                return false;
+            }
+        }
+        // A spec with no trigger at all never fires; `FaultPlan::parse`
+        // rejects such specs, but a hand-built one stays inert.
+        self.nth.is_some() || self.after.is_some() || self.probability.is_some()
+    }
+
+    fn from_json(j: &Json) -> Result<FaultSpec> {
+        let kind = match j.opt("kind").map(|k| k.as_str()).transpose()? {
+            None | Some("error") => FaultKind::Error,
+            Some("panic") => FaultKind::Panic,
+            Some("stall") => FaultKind::Stall {
+                ms: j
+                    .get("stall_ms")
+                    .context("fault kind 'stall' needs a 'stall_ms' field")?
+                    .as_u64()?,
+            },
+            Some(other) => bail!("unknown fault kind '{other}' (error|panic|stall)"),
+        };
+        let spec = FaultSpec {
+            replica: j.opt("replica").map(|v| v.as_usize()).transpose()?,
+            op: match j.opt("op") {
+                Some(v) => FaultOp::parse(v.as_str()?)?,
+                None => FaultOp::Any,
+            },
+            nth: j.opt("nth").map(|v| v.as_u64()).transpose()?,
+            after: j.opt("after").map(|v| v.as_u64()).transpose()?,
+            until: j.opt("until").map(|v| v.as_u64()).transpose()?,
+            probability: j.opt("probability").map(|v| v.as_f64()).transpose()?,
+            kind,
+            message: j
+                .opt("message")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "injected fault".to_string()),
+        };
+        if spec.nth.is_none() && spec.after.is_none() && spec.probability.is_none() {
+            bail!("fault spec needs at least one trigger: nth, after, or probability");
+        }
+        if let Some(p) = spec.probability {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fault probability {p} outside [0, 1]");
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        if let Some(r) = self.replica {
+            j.set("replica", Json::from(r));
+        }
+        j.set("op", Json::from(self.op.as_str()));
+        if let Some(n) = self.nth {
+            j.set("nth", Json::from(n));
+        }
+        if let Some(a) = self.after {
+            j.set("after", Json::from(a));
+        }
+        if let Some(u) = self.until {
+            j.set("until", Json::from(u));
+        }
+        if let Some(p) = self.probability {
+            j.set("probability", Json::from(p));
+        }
+        match self.kind {
+            FaultKind::Error => j.set("kind", Json::from("error")),
+            FaultKind::Panic => j.set("kind", Json::from("panic")),
+            FaultKind::Stall { ms } => {
+                j.set("kind", Json::from("stall")).set("stall_ms", Json::from(ms))
+            }
+        };
+        j.set("message", Json::from(self.message.as_str()));
+        j
+    }
+}
+
+/// A seeded, serializable schedule of faults — what `serve --fault-plan`
+/// loads and `ServiceConfig.faults` carries.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Base seed for probabilistic specs.
+    pub seed: u64,
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("fault plan: {e}"))?;
+        let seed = match j.opt("seed") {
+            Some(v) => v.as_u64()?,
+            None => 0,
+        };
+        let faults = j
+            .get("faults")
+            .map_err(|e| anyhow::anyhow!("fault plan: {e}"))?
+            .as_arr()
+            .map_err(|e| anyhow::anyhow!("fault plan: {e}"))?
+            .iter()
+            .map(FaultSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FaultPlan { seed, faults })
+    }
+
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {path:?}"))?;
+        FaultPlan::parse(&text).with_context(|| format!("parsing fault plan {path:?}"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seed", Json::from(self.seed));
+        j.set("faults", Json::Arr(self.faults.iter().map(FaultSpec::to_json).collect()));
+        j
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Uniform sample in [0, 1) keyed on (seed, spec index, call number) —
+/// independent of thread interleaving, so storms replay exactly.
+fn unit_from(seed: u64, spec_idx: usize, n: u64) -> f64 {
+    let h = splitmix64(seed ^ splitmix64(((spec_idx as u64) << 32) ^ n));
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// An [`ExecutionBackend`] wrapper that fires a [`FaultPlan`]'s faults
+/// at exact call boundaries. Per-spec call counters live here and
+/// survive session rebuilds (workers build their executor once), so an
+/// `nth`-call fault fires once, not once per rebuilt session.
+pub struct FaultInjectingBackend<B> {
+    inner: B,
+    replica: usize,
+    plan: Arc<FaultPlan>,
+    counters: Vec<AtomicU64>,
+    /// The constructing (session) thread: `Panic` faults observed here
+    /// degrade to errors; TP shard threads really panic (the pipeline
+    /// catches the unwind and surfaces it as a replica fault).
+    owner: ThreadId,
+}
+
+impl<B: ExecutionBackend + Sync> FaultInjectingBackend<B> {
+    pub fn new(inner: B, plan: Arc<FaultPlan>, replica: usize) -> FaultInjectingBackend<B> {
+        let counters = plan.faults.iter().map(|_| AtomicU64::new(0)).collect();
+        FaultInjectingBackend {
+            inner,
+            replica,
+            plan,
+            counters,
+            owner: std::thread::current().id(),
+        }
+    }
+
+    fn check(&self, op: FaultOp) -> Result<()> {
+        for (i, spec) in self.plan.faults.iter().enumerate() {
+            if !spec.matches(self.replica, op) {
+                continue;
+            }
+            let n = self.counters[i].fetch_add(1, Ordering::Relaxed) + 1;
+            if !spec.fires(n, self.plan.seed, i) {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::Stall { ms } => std::thread::sleep(Duration::from_millis(ms)),
+                FaultKind::Error => bail!(
+                    "injected fault: {} (replica {}, {} call #{n})",
+                    spec.message,
+                    self.replica,
+                    op.as_str()
+                ),
+                FaultKind::Panic => {
+                    if std::thread::current().id() != self.owner {
+                        panic!(
+                            "injected fault: {} (replica {}, {} call #{n})",
+                            spec.message,
+                            self.replica,
+                            op.as_str()
+                        );
+                    }
+                    bail!(
+                        "injected fault: {} (replica {}, {} call #{n}; \
+                         panic degraded to error on the session thread)",
+                        spec.message,
+                        self.replica,
+                        op.as_str()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<B: ExecutionBackend + Sync> ExecutionBackend for FaultInjectingBackend<B> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn weights(&self) -> &Arc<WeightStore> {
+        self.inner.weights()
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[InputArg<'_>]) -> Result<Vec<Tensor>> {
+        self.check(FaultOp::Execute)?;
+        self.inner.execute(artifact, inputs)
+    }
+
+    fn supports_rowwise_decode_positions(&self) -> bool {
+        self.inner.supports_rowwise_decode_positions()
+    }
+
+    fn sync_view(&self) -> Option<&(dyn ExecutionBackend + Sync)> {
+        Some(self)
+    }
+
+    fn execute_attn_decode_inplace(
+        &self,
+        artifact: &str,
+        x: &Tensor,
+        k_cache: &mut Tensor,
+        v_cache: &mut Tensor,
+        positions: DecodePositions<'_>,
+        w: &AttnShardWeights<'_>,
+    ) -> Result<Tensor> {
+        self.check(FaultOp::Decode)?;
+        self.inner
+            .execute_attn_decode_inplace(artifact, x, k_cache, v_cache, positions, w)
+    }
+
+    fn execute_attn_score_inplace(
+        &self,
+        artifact: &str,
+        x: &Tensor,
+        k_cache: &mut Tensor,
+        v_cache: &mut Tensor,
+        positions: DecodePositions<'_>,
+        w: &AttnShardWeights<'_>,
+    ) -> Result<Tensor> {
+        self.check(FaultOp::Score)?;
+        self.inner
+            .execute_attn_score_inplace(artifact, x, k_cache, v_cache, positions, w)
+    }
+
+    fn exec_count(&self) -> usize {
+        self.inner.exec_count()
+    }
+}
+
+/// Construct a fault-injecting backend re-using an already-parsed
+/// manifest and weight store — the fault-plan counterpart of
+/// [`super::backend::make_backend`]. Only the reference backend is
+/// wrappable today: the wrapper fans TP shards out through `sync_view`,
+/// which PJRT's thread-confined handles cannot provide.
+pub fn make_fault_backend(
+    kind: BackendKind,
+    _dir: &Path,
+    manifest: Manifest,
+    weights: Arc<WeightStore>,
+    plan: Arc<FaultPlan>,
+    replica: usize,
+) -> Result<Box<dyn ExecutionBackend>> {
+    match kind {
+        BackendKind::Reference => Ok(Box::new(FaultInjectingBackend::new(
+            super::reference::ReferenceBackend::with_weights(manifest, weights),
+            plan,
+            replica,
+        ))),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => bail!("fault injection requires the reference backend"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(nth: Option<u64>, after: Option<u64>, until: Option<u64>) -> FaultSpec {
+        FaultSpec {
+            replica: None,
+            op: FaultOp::Any,
+            nth,
+            after,
+            until,
+            probability: None,
+            kind: FaultKind::Error,
+            message: "t".to_string(),
+        }
+    }
+
+    #[test]
+    fn nth_fires_exactly_once() {
+        let s = spec(Some(3), None, None);
+        let fired: Vec<u64> = (1..=6).filter(|&n| s.fires(n, 0, 0)).collect();
+        assert_eq!(fired, vec![3]);
+    }
+
+    #[test]
+    fn after_fires_every_call_past_k_until_bound() {
+        let s = spec(None, Some(2), Some(4));
+        let fired: Vec<u64> = (1..=6).filter(|&n| s.fires(n, 0, 0)).collect();
+        assert_eq!(fired, vec![3, 4]);
+        let unbounded = spec(None, Some(2), None);
+        let fired: Vec<u64> = (1..=6).filter(|&n| unbounded.fires(n, 0, 0)).collect();
+        assert_eq!(fired, vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn probability_is_deterministic_and_roughly_calibrated() {
+        let mut s = spec(None, None, None);
+        s.probability = Some(0.25);
+        let a: Vec<bool> = (1..=4000).map(|n| s.fires(n, 42, 1)).collect();
+        let b: Vec<bool> = (1..=4000).map(|n| s.fires(n, 42, 1)).collect();
+        assert_eq!(a, b, "same seed must replay identically");
+        let hits = a.iter().filter(|&&x| x).count();
+        assert!((800..=1200).contains(&hits), "p=0.25 over 4000 draws hit {hits}");
+        let c: Vec<bool> = (1..=4000).map(|n| s.fires(n, 43, 1)).collect();
+        assert_ne!(a, c, "different seed must differ");
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = FaultPlan {
+            seed: 7,
+            faults: vec![
+                FaultSpec {
+                    replica: Some(1),
+                    op: FaultOp::Decode,
+                    nth: Some(5),
+                    after: None,
+                    until: None,
+                    probability: None,
+                    kind: FaultKind::Error,
+                    message: "boom".to_string(),
+                },
+                FaultSpec {
+                    replica: None,
+                    op: FaultOp::Any,
+                    nth: None,
+                    after: Some(10),
+                    until: Some(20),
+                    probability: Some(0.5),
+                    kind: FaultKind::Stall { ms: 30 },
+                    message: "slow".to_string(),
+                },
+            ],
+        };
+        let round = FaultPlan::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(round, plan);
+    }
+
+    #[test]
+    fn parse_rejects_triggerless_and_bad_specs() {
+        assert!(FaultPlan::parse(r#"{"faults": [{"kind": "error"}]}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"faults": [{"nth": 1, "kind": "stall"}]}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"faults": [{"nth": 1, "op": "frobnicate"}]}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"faults": [{"probability": 1.5}]}"#).is_err());
+        assert!(FaultPlan::parse(r#"{"faults": []}"#).unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn spec_scopes_to_replica_and_op() {
+        let s = FaultSpec {
+            replica: Some(2),
+            op: FaultOp::Decode,
+            ..spec(Some(1), None, None)
+        };
+        assert!(s.matches(2, FaultOp::Decode));
+        assert!(!s.matches(1, FaultOp::Decode));
+        assert!(!s.matches(2, FaultOp::Execute));
+        let any = spec(Some(1), None, None);
+        assert!(any.matches(0, FaultOp::Score) && any.matches(7, FaultOp::Execute));
+    }
+}

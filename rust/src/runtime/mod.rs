@@ -9,6 +9,7 @@
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod faults;
 pub mod kvcache;
 pub mod manifest;
 pub mod reference;
@@ -21,6 +22,9 @@ pub use backend::{
 };
 #[cfg(feature = "pjrt")]
 pub use engine::{literal_to_tensor_f32, literal_to_vec_i32, tensor_to_literal, ModelRuntime};
+pub use faults::{
+    make_fault_backend, FaultInjectingBackend, FaultKind, FaultOp, FaultPlan, FaultSpec,
+};
 pub use kvcache::{AppendOp, BlockPool, BlockTable, KvPolicy, PrefixCache};
 pub use manifest::{ArtifactSpec, Manifest, ModelInfo, ParamSpec};
 pub use reference::{FunctionalBackend, ReferenceBackend};

@@ -10,7 +10,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use hexgen::coordinator::{
-    plan_from_strategy, BatchPolicy, HexGenService, HttpServer, RoutePolicy, ServiceConfig,
+    plan_from_strategy, BatchPolicy, FaultPolicy, HexGenService, HttpServer, RoutePolicy,
+    ServiceConfig,
 };
 use hexgen::runtime::BackendKind;
 use hexgen::util::json::Json;
@@ -36,6 +37,7 @@ fn start() -> (Arc<HexGenService>, HttpServer) {
         stop_token: None,
         kv: Default::default(),
         spec: None,
+        faults: FaultPolicy::default(),
     };
     let service = Arc::new(HexGenService::start(cfg).unwrap());
     let server = HttpServer::serve(service.clone(), "127.0.0.1:0").unwrap();

@@ -14,11 +14,12 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use hexgen::coordinator::{
-    collect_all, plan_from_strategy, BatchPolicy, GenRequest, HexGenService, HttpServer, KvPolicy,
-    RequestEvent, RoutePolicy, ServiceConfig, ServiceError,
+    collect_all, plan_from_strategy, BatchPolicy, BreakerPolicy, FaultPolicy, GenRequest,
+    HexGenService, HttpServer, KvPolicy, ReplicaHealth, RequestEvent, RoutePolicy, ServiceConfig,
+    ServiceError,
 };
 use hexgen::parallelism::PhaseRole;
-use hexgen::runtime::BackendKind;
+use hexgen::runtime::{BackendKind, FaultKind, FaultOp, FaultPlan, FaultSpec};
 use hexgen::util::json::Json;
 
 fn fixture_dir() -> PathBuf {
@@ -55,6 +56,7 @@ fn two_replica_config(dir: PathBuf) -> ServiceConfig {
         stop_token: None,
         kv: KvPolicy::default(),
         spec: None,
+        faults: FaultPolicy::default(),
     }
 }
 
@@ -75,6 +77,7 @@ fn one_replica_config(dir: PathBuf, window: Duration) -> ServiceConfig {
         stop_token: None,
         kv: KvPolicy::default(),
         spec: None,
+        faults: FaultPolicy::default(),
     }
 }
 
@@ -252,6 +255,7 @@ fn startup_fails_cleanly_on_bad_plan() {
         stop_token: None,
         kv: KvPolicy::default(),
         spec: None,
+        faults: FaultPolicy::default(),
     };
     assert!(HexGenService::start(cfg).is_err());
 }
@@ -606,6 +610,7 @@ fn scheduler_plan_lowers_and_serves_end_to_end() {
         stop_token: None,
         kv: KvPolicy::default(),
         spec: None,
+        faults: FaultPolicy::default(),
     })
     .unwrap();
     let c = service.generate("plan served prompt", Some(4)).unwrap();
@@ -775,5 +780,310 @@ fn static_mode_still_serves() {
     let b = h_b.wait_deadline(deadline).unwrap();
     assert_eq!(a.tokens.len(), 2);
     assert_eq!(b.tokens.len(), 5);
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------- chaos
+
+/// A trigger-less fault-spec template for the chaos suite: callers fill
+/// in exactly one trigger (`nth`, `after`, or `probability`) via struct
+/// update syntax.
+fn chaos_spec(replica: Option<usize>, op: FaultOp, kind: FaultKind) -> FaultSpec {
+    FaultSpec {
+        replica,
+        op,
+        nth: None,
+        after: None,
+        until: None,
+        probability: None,
+        kind,
+        message: "chaos".to_string(),
+    }
+}
+
+#[test]
+fn chaos_mid_decode_fault_fails_over_with_golden_parity() {
+    // A replica faulting mid-decode must not corrupt the stream: the
+    // request emits Retrying, fails over to the healthy replica, replays
+    // the tokens it already streamed without re-emitting them, and the
+    // completed output is byte-identical to an undisturbed greedy run
+    // (the fixture's golden tokens), with contiguous stream indexes.
+    let (prompt, want) = golden();
+    assert!(want.len() >= 2, "golden must decode past the first token");
+
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.speeds = Some(vec![100.0, 1.0]); // pin the first pick to replica 0
+    cfg.adapt_speeds = false;
+    cfg.faults.plan = Some(FaultPlan {
+        seed: 0,
+        faults: vec![FaultSpec {
+            nth: Some(1),
+            ..chaos_spec(Some(0), FaultOp::Decode, FaultKind::Error)
+        }],
+    });
+    let service = HexGenService::start(cfg).unwrap();
+
+    let handle = service.submit(req(&prompt, want.len()));
+    let mut events = Vec::new();
+    loop {
+        let ev = handle.next_event().unwrap();
+        let terminal = ev.is_terminal();
+        events.push(ev);
+        if terminal {
+            break;
+        }
+    }
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(e, RequestEvent::Retrying { replica: 0, attempt: 1 })),
+        "{events:?}"
+    );
+    let streamed: Vec<i32> = events
+        .iter()
+        .filter_map(|e| match e {
+            RequestEvent::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    let indexes: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            RequestEvent::Token { index, .. } => Some(*index),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        indexes,
+        (0..want.len()).collect::<Vec<_>>(),
+        "token indexes must stay contiguous across the failover"
+    );
+    let RequestEvent::Done(c) = events.last().unwrap() else {
+        panic!("expected Done terminal, got {:?}", events.last());
+    };
+    assert_eq!(c.tokens, want, "failover diverged from the undisturbed greedy run");
+    assert_eq!(streamed, c.tokens, "streamed tokens must match the completion");
+    assert_eq!(c.replica, 1, "delivery must come from the failover replica");
+
+    let stats = service.stats();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.retries, 1);
+    assert_eq!(stats.failovers, 1);
+    assert_eq!(stats.requests_lost, 0);
+    service.shutdown();
+}
+
+#[test]
+fn chaos_retry_budget_exhausts_to_replica_failed() {
+    // A replica that faults on every decode call: the request burns its
+    // full retry budget (exactly max_retries Retrying events, i.e.
+    // max_retries + 1 attempts) and then fails typed — no hang, no
+    // panic. The breaker is set loose so the sole replica stays
+    // routable throughout; what runs out is the per-request budget.
+    let mut cfg = one_replica_config(fixture_dir(), Duration::from_millis(2));
+    cfg.faults = FaultPolicy {
+        plan: Some(FaultPlan {
+            seed: 0,
+            faults: vec![FaultSpec {
+                after: Some(0),
+                ..chaos_spec(Some(0), FaultOp::Decode, FaultKind::Error)
+            }],
+        }),
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(2),
+        breaker: BreakerPolicy { consecutive_faults: 100, ..BreakerPolicy::default() },
+    };
+    let service = HexGenService::start(cfg).unwrap();
+
+    let handle = service.submit(req("doomed request", 4));
+    let mut retrying = 0u32;
+    let outcome = loop {
+        match handle.next_event().unwrap() {
+            RequestEvent::Retrying { replica: 0, attempt } => {
+                retrying += 1;
+                assert_eq!(attempt, retrying, "attempts must count up from 1");
+            }
+            RequestEvent::Failed(e) => break Err(e),
+            RequestEvent::Done(c) => break Ok(c),
+            _ => {}
+        }
+    };
+    match outcome {
+        Err(ServiceError::ReplicaFailed { replica: 0, message }) => {
+            assert!(message.contains("injected fault"), "{message}");
+        }
+        other => panic!("expected ReplicaFailed, got {other:?}"),
+    }
+    assert_eq!(retrying, 2, "exactly max_retries Retrying events, then failure");
+    let stats = service.stats();
+    assert_eq!(stats.retries, 2);
+    assert_eq!(stats.requests_lost, 1);
+    assert_eq!(stats.failed, 1);
+    service.shutdown();
+}
+
+#[test]
+fn chaos_breaker_quarantines_then_recovers_through_half_open_probe() {
+    // The router circuit breaker end-to-end: a one-strike policy
+    // quarantines the faulting replica, traffic drains to the healthy
+    // one, the quarantine lapses into half-open, and a successful
+    // canary closes the breaker again.
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.speeds = Some(vec![100.0, 1.0]); // pin the first pick to replica 0
+    cfg.adapt_speeds = false;
+    cfg.faults = FaultPolicy {
+        plan: Some(FaultPlan {
+            seed: 0,
+            faults: vec![FaultSpec {
+                nth: Some(1),
+                ..chaos_spec(Some(0), FaultOp::Decode, FaultKind::Error)
+            }],
+        }),
+        max_retries: 2,
+        retry_backoff: Duration::from_millis(5),
+        breaker: BreakerPolicy {
+            consecutive_faults: 1,
+            quarantine: Duration::from_secs(1),
+            probe_timeout: Duration::from_secs(60),
+        },
+    };
+    let service = HexGenService::start(cfg).unwrap();
+
+    // The first request trips the one-strike breaker on replica 0 and
+    // completes on replica 1.
+    let c = service.generate("breaker probe", Some(4)).unwrap();
+    assert_eq!(c.tokens.len(), 4);
+    assert_eq!(c.replica, 1, "failover must deliver from the healthy replica");
+    assert_eq!(
+        service.router_health()[0],
+        ReplicaHealth::Quarantined,
+        "one fault must quarantine under the one-strike policy"
+    );
+
+    // While quarantined, traffic keeps landing on replica 1 even though
+    // replica 0 is seeded 100x faster.
+    let c = service.generate("during quarantine", Some(2)).unwrap();
+    assert_eq!(c.replica, 1, "quarantined replica must not be routed to");
+
+    // The quarantine lapses into half-open...
+    std::thread::sleep(Duration::from_millis(1200));
+    assert_eq!(service.router_health()[0], ReplicaHealth::HalfOpen);
+
+    // ...and a successful canary closes the breaker. The canary rides
+    // normal traffic, so generate until replica 0 serves again (its
+    // nth:1 fault is already consumed, so the probe succeeds).
+    let t0 = Instant::now();
+    loop {
+        let c = service.generate("canary traffic", Some(2)).unwrap();
+        if c.replica == 0 && service.router_health()[0] == ReplicaHealth::Healthy {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "breaker never closed: {:?}",
+            service.router_health()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    service.shutdown();
+}
+
+#[test]
+fn chaos_deadline_expiry_frees_kv_blocks() {
+    // A stalling replica (every decode call sleeps) against a short
+    // request deadline: the decode-step boundary notices the lapsed
+    // deadline, fails the request typed, and returns every KV block to
+    // the pool — a deadline is not a lost request.
+    let mut cfg = one_replica_config(fixture_dir(), Duration::from_millis(2));
+    cfg.faults.plan = Some(FaultPlan {
+        seed: 0,
+        faults: vec![FaultSpec {
+            after: Some(0),
+            ..chaos_spec(Some(0), FaultOp::Decode, FaultKind::Stall { ms: 60 })
+        }],
+    });
+    let service = HexGenService::start(cfg).unwrap();
+    assert!(service.stats().kv_blocks_total > 0);
+
+    let handle = service.submit(req("slow boat", 8).with_deadline_ms(150));
+    let outcome = handle.wait_deadline(Instant::now() + Duration::from_secs(60));
+    assert_eq!(outcome, Err(ServiceError::DeadlineExceeded));
+
+    // Stats and the pool gauge publish at step boundaries: poll briefly.
+    let t0 = Instant::now();
+    loop {
+        let s = service.stats();
+        if s.kv_blocks_used == 0 && s.deadline_expired == 1 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "blocks never freed: {s:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(service.stats().requests_lost, 0, "a deadline expiry is not a lost request");
+    service.shutdown();
+}
+
+#[test]
+fn chaos_seeded_fault_storm_loses_no_requests_and_drains_the_pool() {
+    // A seeded storm of random faults — errors and stalls on any call,
+    // plus a one-shot decode panic per replica — over block-starved
+    // pools (one block per replica, so admission serializes and every
+    // retry re-acquires blocks): every request still completes, nothing
+    // is silently lost, and the pools drain back to fully free. The
+    // `until` bound ends the storm after each replica's first 300
+    // backend calls, so late retries always find calm weather, and the
+    // fixed seed makes the fire schedule reproducible.
+    let mut cfg = two_replica_config(fixture_dir());
+    cfg.kv = KvPolicy { block_tokens: None, pool_blocks: Some(1) };
+    cfg.batch = BatchPolicy { max_batch: 2, window: Duration::from_millis(2), continuous: true };
+    cfg.faults = FaultPolicy {
+        plan: Some(FaultPlan {
+            seed: 0xC0FFEE,
+            faults: vec![
+                FaultSpec {
+                    probability: Some(0.01),
+                    until: Some(300),
+                    ..chaos_spec(None, FaultOp::Any, FaultKind::Error)
+                },
+                FaultSpec {
+                    probability: Some(0.02),
+                    until: Some(300),
+                    ..chaos_spec(None, FaultOp::Decode, FaultKind::Stall { ms: 2 })
+                },
+                FaultSpec { nth: Some(7), ..chaos_spec(None, FaultOp::Decode, FaultKind::Panic) },
+            ],
+        }),
+        max_retries: 8,
+        retry_backoff: Duration::from_millis(2),
+        breaker: BreakerPolicy {
+            consecutive_faults: 10,
+            quarantine: Duration::from_millis(100),
+            probe_timeout: Duration::from_secs(60),
+        },
+    };
+    let service = HexGenService::start(cfg).unwrap();
+
+    let handles: Vec<_> =
+        (0..24).map(|i| service.submit(req(&format!("storm {i}"), 3))).collect();
+    let results = collect_all(handles, Duration::from_secs(120));
+    for r in &results {
+        let c = r.as_ref().expect("storm request lost");
+        assert_eq!(c.tokens.len(), 3, "survivors must still be exact");
+    }
+    let stats = service.stats();
+    assert_eq!(stats.completed, 24);
+    assert_eq!(stats.requests_lost, 0, "{stats:?}");
+    assert_eq!(stats.failed + stats.cancelled, 0, "{stats:?}");
+    // Every block returns to the pool once the storm clears (workers
+    // publish at step boundaries, so poll briefly).
+    let t0 = Instant::now();
+    loop {
+        let s = service.stats();
+        if s.kv_blocks_used == 0 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "pool never drained: {s:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
     service.shutdown();
 }

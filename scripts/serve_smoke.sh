@@ -2,7 +2,9 @@
 # serve-smoke: boot `hexgen serve --listen` on an ephemeral port against
 # the checked-in fixture model, run a streaming and a non-streaming
 # completion through the HTTP front-end, and assert token parity with the
-# blocking one-shot `generate()` path. Run via `make serve-smoke`.
+# blocking one-shot `generate()` path — then boot again under a
+# fixed-seed fault plan and assert the SSE stream surfaces `retrying`
+# before completing with the same tokens. Run via `make serve-smoke`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,11 +13,16 @@ FIXTURE=rust/tests/fixtures/ref_demo
 PROMPT="serve smoke prompt"
 MAX_NEW=6
 LOG=$(mktemp)
+FLOG=$(mktemp)
+FAULT_PLAN=$(mktemp)
 cleanup() {
     if [ -n "${SERVER_PID:-}" ]; then
         kill "$SERVER_PID" 2>/dev/null || true
     fi
-    rm -f "$LOG"
+    if [ -n "${FAULT_PID:-}" ]; then
+        kill "$FAULT_PID" 2>/dev/null || true
+    fi
+    rm -f "$LOG" "$FLOG" "$FAULT_PLAN"
 }
 trap cleanup EXIT
 
@@ -71,4 +78,63 @@ assert nonstream == ref, f"non-streaming HTTP diverged: {nonstream} != {ref}"
 assert stream_tokens == ref, f"SSE stream diverged: {stream_tokens} != {ref}"
 assert saw_done_after_token, "done event must follow the token events"
 print(f"serve-smoke OK: {len(ref)} tokens, parity across generate()/HTTP/SSE: {ref}")
+EOF
+
+kill "$SERVER_PID" 2>/dev/null || true
+SERVER_PID=""
+
+# 3) Fault-storm leg: a fixed-seed plan errors the replica's first
+#    decode call, so the request faults mid-stream, fails over (the
+#    sole replica is re-dispatched once the fault is consumed), and
+#    completes. The SSE stream must surface `retrying` and still end
+#    with the undisturbed run's exact tokens.
+cat >"$FAULT_PLAN" <<'JSON'
+{
+  "seed": 7,
+  "faults": [
+    {"replica": 0, "op": "decode", "nth": 1, "kind": "error",
+     "message": "smoke storm"}
+  ]
+}
+JSON
+"$BIN" serve --artifacts "$FIXTURE" --replicas 1 --listen 127.0.0.1:0 \
+    --fault-plan "$FAULT_PLAN" --max-retries 3 >"$FLOG" 2>&1 &
+FAULT_PID=$!
+FADDR=""
+for _ in $(seq 1 100); do
+    FADDR=$(sed -n 's|^listening on http://||p' "$FLOG" | head -n1)
+    [ -n "$FADDR" ] && break
+    kill -0 "$FAULT_PID" 2>/dev/null || { echo "fault-plan server died:" >&2; cat "$FLOG" >&2; exit 1; }
+    sleep 0.1
+done
+[ -n "$FADDR" ] || { echo "fault-plan server never reported its address:" >&2; cat "$FLOG" >&2; exit 1; }
+echo "fault-plan server up at $FADDR"
+
+FSTREAM=$(curl -fsS -N -X POST "http://$FADDR/v1/completions" \
+    -d "{\"prompt\": \"$PROMPT\", \"max_new\": $MAX_NEW, \"stream\": true}")
+FMETRICS=$(curl -fsS "http://$FADDR/metrics")
+
+python3 - "$REF" "$FSTREAM" "$FMETRICS" <<'EOF'
+import json
+import sys
+
+ref = json.loads(sys.argv[1])
+
+tokens, events, event = [], [], None
+for line in sys.argv[2].splitlines():
+    if line.startswith("event: "):
+        event = line[len("event: "):].strip()
+        events.append(event)
+    elif line.startswith("data: ") and event == "token":
+        tokens.append(json.loads(line[len("data: "):])["token"])
+
+assert "retrying" in events, f"SSE never surfaced the failover: {events}"
+assert events.index("retrying") < events.index("done"), f"retrying must precede done: {events}"
+assert tokens == ref, f"failover broke token parity: {tokens} != {ref}"
+
+m = json.loads(sys.argv[3])
+reqs = m["requests"]
+assert reqs["retries"] >= 1, f"metrics never counted the retry: {reqs}"
+assert reqs["requests_lost"] == 0, f"the request must not be lost: {reqs}"
+print(f"fault-storm OK: retrying surfaced, {len(ref)} tokens byte-identical across failover")
 EOF
